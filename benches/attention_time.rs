@@ -1,0 +1,43 @@
+//! Bench behind Table 1 and Figure 9: Flash2 vs DistrAttention across
+//! sequence lengths and head dims on the Rust engines.
+
+use distr_attention::attention::{
+    distr_attention, flash2_attention, standard_attention, DistrParams, FlashParams,
+};
+use distr_attention::util::bench::{bench, BenchConfig};
+use distr_attention::workload::qkv_uniform;
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    let mut summary = Vec::new();
+    for &n in &[1024usize, 2048, 4096] {
+        for &d in &[64usize, 128] {
+            let (q, k, v) = qkv_uniform(n, d, 1);
+            let fp = FlashParams { block_l: 128, block_m: 64 };
+            let t_flash = bench(&cfg, "attention", &format!("flash2_d{d}/{n}"), || {
+                std::hint::black_box(flash2_attention(&q, &k, &v, &fp, false));
+            });
+            for &group in &[2usize, 4] {
+                if d / group < 16 {
+                    continue;
+                }
+                let dp = DistrParams { flash: fp, group, ..Default::default() };
+                let t_distr = bench(&cfg, "attention", &format!("distr_d{d}_g{group}/{n}"), || {
+                    std::hint::black_box(distr_attention(&q, &k, &v, &dp, false));
+                });
+                if group == 2 {
+                    summary.push((n, d, t_flash / t_distr));
+                }
+            }
+        }
+    }
+    // standard attention reference point (O(N^2) memory)
+    let (q, k, v) = qkv_uniform(1024, 64, 2);
+    bench(&cfg, "attention", "standard_d64/1024", || {
+        std::hint::black_box(standard_attention(&q, &k, &v, false));
+    });
+    println!("\nspeedup ours(G*=2) vs flash2 (paper: up to 1.37x):");
+    for (n, d, s) in summary {
+        println!("  N={n:5} d={d:3}: {s:.2}x");
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench behind Table 2: measured cost of (l, m) choices on the Rust
+//! flash2 engine, validating the analytic model's ordering.
+
+use distr_attention::attention::{flash2_attention, FlashParams};
+use distr_attention::simulator::{best_config, flash2_config, ours_config, GpuSpec};
+use distr_attention::util::bench::{bench, BenchConfig};
+use distr_attention::workload::qkv_uniform;
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    let (n, d) = (2048usize, 64usize);
+    let (q, k, v) = qkv_uniform(n, d, 3);
+    let mut measured = Vec::new();
+    for (l, m) in [(16, 16), (64, 64), (128, 32), (128, 128), (256, 64)] {
+        let p = FlashParams { block_l: l, block_m: m };
+        let t = bench(&cfg, "block_select", &format!("flash2_l{l}_m{m}"), || {
+            std::hint::black_box(flash2_attention(&q, &k, &v, &p, false));
+        });
+        measured.push(((l, m), t));
+    }
+    measured.sort_by(|a, b| a.1.total_cmp(&b.1));
+    println!("\nmeasured ordering (fastest first): {:?}", measured.iter().map(|(lm, _)| *lm).collect::<Vec<_>>());
+    let gpu = GpuSpec::RTX4090;
+    println!(
+        "analytic model (d=64): flash={} ours={} best={}",
+        flash2_config(d),
+        ours_config(&gpu, d),
+        best_config(&gpu, d, n)
+    );
+}

@@ -1,0 +1,15 @@
+//! Bench behind §4.8: the LSH grouping step in isolation.
+
+use distr_attention::attention::block_permutations;
+use distr_attention::tensor::Matrix;
+use distr_attention::util::bench::{bench, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    for &n in &[2048usize, 4096, 20480] {
+        let q = Matrix::uniform(n, 128, 9);
+        bench(&cfg, "lsh_grouping", &format!("block_perms_d128/{n}"), || {
+            std::hint::black_box(block_permutations(&q, 128, 0, true));
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench behind Table 9: the head-sharded multi-device scatter with and
+//! without double buffering, flash2 vs distr.
+
+use distr_attention::attention::Variant;
+use distr_attention::config::DeviceCfg;
+use distr_attention::coordinator::{run_scatter, ScatterPlan};
+use distr_attention::util::bench::{bench, BenchConfig};
+
+fn plan(variant: Variant) -> ScatterPlan {
+    ScatterPlan {
+        heads: 8,
+        chunk_heads: 2,
+        n: 1024,
+        d: 128,
+        variant,
+        group: 2,
+        block_l: 128,
+        block_m: 64,
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    for n_dev in [1usize, 2, 4] {
+        for variant in [Variant::Flash2, Variant::Distr] {
+            let dc = DeviceCfg {
+                num_devices: n_dev,
+                link_gbps: 25.0,
+                link_latency_us: 10,
+                double_buffer: true,
+            };
+            bench(&cfg, "multi_device", &format!("scatter_{}/{n_dev}", variant.name()), || {
+                std::hint::black_box(run_scatter(&plan(variant), &dc, 7));
+            });
+        }
+    }
+    let dc = DeviceCfg { num_devices: 2, link_gbps: 25.0, link_latency_us: 10, double_buffer: false };
+    bench(&cfg, "multi_device", "scatter_flash2_no_double_buffer/2", || {
+        std::hint::black_box(run_scatter(&plan(Variant::Flash2), &dc, 7));
+    });
+}

@@ -1,0 +1,7 @@
+//! Boot the full serving coordinator (router + batcher + scheduler +
+//! engines on AOT artifacts) and push a batched prefill workload through
+//! it, reporting TTFT percentiles (paper Table 6's serving-side analogue).
+
+fn main() -> anyhow::Result<()> {
+    distr_attention::experiments::serve_selftest(std::path::Path::new("artifacts"), 64)
+}

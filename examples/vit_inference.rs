@@ -1,0 +1,12 @@
+//! ViT inference with swapped attention (paper §4.6 / Table 8): run the
+//! exact and DistrAttention ViT artifacts over synthetic image batches,
+//! report latency and prediction agreement.
+
+fn main() -> anyhow::Result<()> {
+    let out = distr_attention::experiments::tab6::render_tab8(
+        std::path::Path::new("artifacts"),
+        false,
+    )?;
+    print!("{out}");
+    Ok(())
+}

@@ -1,0 +1,301 @@
+"""AOT compilation: lower every Layer-2 entry point to HLO **text** and
+emit a manifest the Rust runtime consumes. Build-time only — after
+``make artifacts`` the Rust binary is self-contained.
+
+Interchange format is HLO text, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (DESIGN.md §6):
+  * single-head attention microkernels (exact / flash / distr) — the
+    quickstart, runtime tests and PJRT cross-checks,
+  * multi-head chunk kernels — the device-pool scatter path (Table 9),
+  * LM prefill at several sequence lengths/variants — serve_llm + TTFT,
+  * the LM train step — the end-to-end training driver,
+  * ViT forward (exact + distr) — vit_inference / Table 8.
+
+Model parameters are artifact *inputs* (not folded constants) and are
+exported once to ``<name>.params.bin`` + ``.params.json`` so Rust can
+load, feed, and (for the train step) round-trip them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .attention_api import AttentionConfig
+from .kernels import distr, flash, ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides literals as
+    # `constant({...})`, which the text parser happily reads back as
+    # ZEROS — silently corrupting e.g. the LSH projection matrix.
+    return comp.as_hlo_text(True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[np.dtype(dt).name]
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict = {"format": 1, "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        # partial rebuilds (--only ...) merge into the existing manifest
+        existing = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(existing):
+            with open(existing) as f:
+                prev = json.load(f)
+            if prev.get("format") == 1:
+                self.manifest["artifacts"].update(prev.get("artifacts", {}))
+
+    def add(self, name: str, fn, in_specs: list, meta: dict | None = None, params_export=None):
+        """Lower ``fn(*in_specs)`` to HLO text and register it.
+
+        ``params_export``: optional pytree whose flattened leaves are the
+        leading inputs; exported to a sidecar .bin/.json pair.
+        """
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *in_specs)
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in in_specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in jax.tree.leaves(out_tree)
+            ],
+            "meta": meta or {},
+        }
+        if params_export is not None:
+            entry["params"] = self._export_params(name, params_export)
+        self.manifest["artifacts"][name] = entry
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB HLO text")
+
+    def _export_params(self, name: str, pytree) -> dict:
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(pytree)[0]
+        index, blobs, offset = [], [], 0
+        for path, leaf in leaves_with_paths:
+            arr = np.asarray(leaf, dtype=np.float32)
+            index.append(
+                {
+                    "name": jax.tree_util.keystr(path),
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            blobs.append(arr.tobytes())
+            offset += arr.size * 4
+        bin_name, json_name = f"{name}.params.bin", f"{name}.params.json"
+        with open(os.path.join(self.out_dir, bin_name), "wb") as f:
+            f.write(b"".join(blobs))
+        with open(os.path.join(self.out_dir, json_name), "w") as f:
+            json.dump({"leaves": index, "total_bytes": offset}, f, indent=1)
+        return {"bin": bin_name, "index": json_name, "n_leaves": len(index)}
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {len(self.manifest['artifacts'])} artifacts to {self.out_dir}")
+
+
+# ---------------------------------------------------------------------------
+# artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def add_attention_micro(w: ArtifactWriter):
+    """Single-head attention microkernels for the runtime + quickstart."""
+    for n, d in [(256, 64), (512, 64), (256, 128)]:
+        s = [spec((n, d))] * 3
+        w.add(
+            f"attn_exact_{n}x{d}",
+            lambda q, k, v: (ref.exact_attention(q, k, v),),
+            s,
+            meta={"kind": "attention", "variant": "standard", "n": n, "d": d},
+        )
+        w.add(
+            f"attn_flash_{n}x{d}",
+            lambda q, k, v: (flash.flash_attention(q, k, v, block_l=16, block_m=16),),
+            s,
+            meta={"kind": "attention", "variant": "flash", "n": n, "d": d,
+                  "block_l": 16, "block_m": 16},
+        )
+        for g in (2, 4):
+            w.add(
+                f"attn_distr_{n}x{d}_g{g}",
+                lambda q, k, v, g=g: (
+                    distr.distr_attention(q, k, v, block_l=16, block_m=16, group=g),
+                ),
+                s,
+                meta={"kind": "attention", "variant": "distr_flash", "n": n, "d": d,
+                      "block_l": 16, "block_m": 16, "group": g},
+            )
+
+
+def add_multihead_chunk(w: ArtifactWriter):
+    """Head-chunk kernels for the multi-device scatter bench (Table 9)."""
+    h, n, d = 4, 1024, 128
+    s = [spec((h, n, d))] * 3
+    mh = ref.multihead
+
+    w.add(
+        f"attn_mh{h}_{n}x{d}_flash",
+        lambda q, k, v: (mh(lambda a, b, c: flash.flash_attention(a, b, c, 16, 16))(q, k, v),),
+        s,
+        meta={"kind": "attention_mh", "variant": "flash", "h": h, "n": n, "d": d},
+    )
+    w.add(
+        f"attn_mh{h}_{n}x{d}_distr",
+        lambda q, k, v: (
+            mh(lambda a, b, c: distr.distr_attention(a, b, c, 16, 16, group=2))(q, k, v),
+        ),
+        s,
+        meta={"kind": "attention_mh", "variant": "distr_flash", "h": h, "n": n, "d": d,
+              "group": 2},
+    )
+
+
+LM_CFG = model.LMConfig(vocab=512, d_model=256, n_heads=4, n_layers=4, d_ff=512)
+VIT_CFG = model.ViTConfig()
+
+
+def add_lm(w: ArtifactWriter):
+    params = model.lm_init(LM_CFG, seed=0)
+    flat = jax.tree.leaves(params)
+    treedef = jax.tree.structure(params)
+    param_specs = [spec(p.shape) for p in flat]
+
+    for variant in ("standard", "flash", "distr_flash"):
+        acfg = AttentionConfig(variant=variant, block_l=16, block_m=16, group=2)
+        for n in (128, 256):
+            def fwd(*args, acfg=acfg, n=n):
+                ps, toks = args[:-1], args[-1]
+                p = jax.tree.unflatten(treedef, ps)
+                return (model.lm_forward(p, toks, LM_CFG, acfg),)
+
+            w.add(
+                f"lm_prefill_{variant}_{n}",
+                fwd,
+                param_specs + [spec((1, n), jnp.int32)],
+                meta={"kind": "lm_prefill", "variant": variant, "n": n,
+                      "vocab": LM_CFG.vocab, "d_model": LM_CFG.d_model,
+                      "n_layers": LM_CFG.n_layers, "n_heads": LM_CFG.n_heads},
+                params_export=params if variant == "standard" and n == 128 else None,
+            )
+
+
+def add_lm_train(w: ArtifactWriter):
+    params = model.lm_init(LM_CFG, seed=0)
+    opt = train.adamw_init(params)
+    acfg = AttentionConfig(variant="distr_flash", block_l=16, block_m=16, group=2,
+                           trainable=True)
+    step = train.make_lm_train_step(LM_CFG, acfg, lr=3e-4)
+    b, n = 4, 128
+
+    p_tree = jax.tree.structure(params)
+    o_tree = jax.tree.structure(opt)
+    p_flat = jax.tree.leaves(params)
+    o_flat = jax.tree.leaves(opt)
+
+    def step_flat(*args):
+        np_, no_ = len(p_flat), len(o_flat)
+        ps = jax.tree.unflatten(p_tree, args[:np_])
+        os_ = jax.tree.unflatten(o_tree, args[np_: np_ + no_])
+        toks, tgts = args[np_ + no_], args[np_ + no_ + 1]
+        new_p, new_o, loss = step(ps, os_, toks, tgts)
+        return tuple(jax.tree.leaves(new_p)) + tuple(jax.tree.leaves(new_o)) + (loss,)
+
+    in_specs = (
+        [spec(p.shape) for p in p_flat]
+        + [spec(o.shape) for o in o_flat]
+        + [spec((b, n), jnp.int32), spec((b, n), jnp.int32)]
+    )
+    w.add(
+        "lm_train_step",
+        step_flat,
+        in_specs,
+        meta={"kind": "lm_train", "variant": "distr_flash", "batch": b, "n": n,
+              "n_params": len(p_flat), "n_opt": len(o_flat), "vocab": LM_CFG.vocab,
+              "lr": 3e-4},
+        # a TUPLE, not a dict: tree_flatten sorts dict keys, which would
+        # reorder the blob's leaves away from the executable's input order
+        params_export=(params, opt),
+    )
+
+
+def add_vit(w: ArtifactWriter):
+    params = model.vit_init(VIT_CFG, seed=0)
+    flat = jax.tree.leaves(params)
+    treedef = jax.tree.structure(params)
+    param_specs = [spec(p.shape) for p in flat]
+    b = 8
+
+    for variant in ("standard", "distr_flash"):
+        acfg = AttentionConfig(variant=variant, block_l=16, block_m=16, group=2)
+
+        def fwd(*args, acfg=acfg):
+            ps, imgs = args[:-1], args[-1]
+            p = jax.tree.unflatten(treedef, ps)
+            return (model.vit_forward(p, imgs, VIT_CFG, acfg),)
+
+        w.add(
+            f"vit_fwd_{variant}_b{b}",
+            fwd,
+            param_specs + [spec((b, VIT_CFG.image_size, VIT_CFG.image_size, VIT_CFG.channels))],
+            meta={"kind": "vit_fwd", "variant": variant, "batch": b,
+                  "n_classes": VIT_CFG.n_classes, "image_size": VIT_CFG.image_size},
+            params_export=params if variant == "standard" else None,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma list: micro,mh,lm,train,vit")
+    args = ap.parse_args()
+    sel = set(args.only.split(",")) if args.only else None
+    w = ArtifactWriter(args.out)
+    if sel is None or "micro" in sel:
+        add_attention_micro(w)
+    if sel is None or "mh" in sel:
+        add_multihead_chunk(w)
+    if sel is None or "lm" in sel:
+        add_lm(w)
+    if sel is None or "train" in sel:
+        add_lm_train(w)
+    if sel is None or "vit" in sel:
+        add_vit(w)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

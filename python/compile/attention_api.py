@@ -1,0 +1,111 @@
+"""Uniform attention dispatch: every mechanism the paper evaluates
+behind one per-head signature ``fn(q, k, v) -> o`` with shapes (N, d).
+
+This is what makes DistrAttention "flexible" in the paper's sense: the
+variant (and its speed/accuracy trade-off knobs G*, l, m) is a config
+value, not an architecture change — output shapes, token count and
+positions are untouched, so any pre-trained checkpoint can swap
+mechanisms (paper §4.3, §4.6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .kernels import baselines, distr, flash, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """The paper's tunables plus our implementation toggles.
+
+    variant: one of VARIANTS below.
+    block_l / block_m: FlashAttention-2 Q / K+V block sizes (paper l, m).
+    group: the sampling rate G* (columns fused per group).
+    sample: 'mean' (default; matches the paper's error bands) or
+            'first' (the paper's literal single-column sampling).
+    center: center columns before LSH projection (DESIGN.md §5 S2).
+    trainable: use the custom-vjp wrapper so fwd runs the Pallas kernel.
+    """
+
+    variant: str = "distr_flash"
+    block_l: int = 16
+    block_m: int = 16
+    group: int = 2
+    sample: str = "mean"
+    center: bool = True
+    seed: int = 0
+    trainable: bool = False
+
+
+VARIANTS = (
+    "standard",      # exact softmax attention (Attn-Standard)
+    "flash",         # exact, FlashAttention-2 Pallas kernel (Flash2)
+    "distr",         # DistrAttention, jnp reference pipeline (Ours)
+    "distr_flash",   # DistrAttention fused Pallas kernel (Ours-Flash)
+    "hydra",
+    "hyper",
+    "flatten",
+    "primal",
+    "linformer",
+)
+
+
+def make_attention(cfg: AttentionConfig, causal: bool = False) -> Callable:
+    """Build the per-head attention callable for ``cfg``."""
+    v = cfg.variant
+    if v == "standard":
+        return functools.partial(ref.exact_attention, causal=causal)
+    if v == "flash":
+        return functools.partial(
+            flash.flash_attention, block_l=cfg.block_l, block_m=cfg.block_m, causal=causal
+        )
+    if v == "distr":
+        return functools.partial(
+            ref.distr_attention_ref,
+            block_l=cfg.block_l,
+            block_m=cfg.block_m,
+            group=cfg.group,
+            sample=cfg.sample,
+            causal=causal,
+            seed=cfg.seed,
+            center=cfg.center,
+        )
+    if v == "distr_flash":
+        if cfg.trainable:
+            return distr.make_distr_attention_vjp(
+                block_l=cfg.block_l,
+                block_m=cfg.block_m,
+                group=cfg.group,
+                causal=causal,
+                sample=cfg.sample,
+                seed=cfg.seed,
+                center=cfg.center,
+            )
+        return functools.partial(
+            distr.distr_attention,
+            block_l=cfg.block_l,
+            block_m=cfg.block_m,
+            group=cfg.group,
+            causal=causal,
+            sample=cfg.sample,
+            seed=cfg.seed,
+            center=cfg.center,
+        )
+    if v == "hydra":
+        return functools.partial(baselines.hydra_attention, causal=causal)
+    if v == "flatten":
+        return functools.partial(baselines.flatten_attention, causal=causal)
+    if v == "hyper":
+        return functools.partial(baselines.hyper_attention, causal=causal, seed=cfg.seed)
+    if v == "primal":
+        return functools.partial(baselines.primal_attention, causal=causal, seed=cfg.seed)
+    if v == "linformer":
+        if causal:
+            raise ValueError("linformer baseline is non-causal only")
+        return functools.partial(baselines.linformer_attention, seed=cfg.seed)
+    raise ValueError(f"unknown attention variant {v!r}; expected one of {VARIANTS}")

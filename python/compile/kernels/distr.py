@@ -1,0 +1,175 @@
+"""The DistrAttention Pallas kernel (the paper's §3 contribution).
+
+Pipeline per Q block (one grid step):
+
+1. take the block's LSH permutation (computed once per block by
+   ``lsh.block_permutations`` — the separate "lightweight grouping" step
+   the paper measures in §4.8),
+2. *sampling*: permute the block's d columns and keep one column per
+   group of ``G*`` (``q_s``: ``(l, d/G*)``),
+3. inner loop over K blocks: *fusion* — permute the K block's columns
+   (= rows of K^T) and sum each group (``k_f``: ``(m, d/G*)``),
+4. ``Ŝ_blk = q_s @ k_f^T`` — d/G* multiplications per element instead of
+   d — then the standard FlashAttention-2 online softmax and ``P V``
+   accumulation (V is never reduced, so the output shape is unchanged).
+
+The contraction shrinks from d to d/G*, which on the paper's GPUs frees
+tensor-core time and shrinks the SMEM working set; on TPU the analogous
+win is fewer MXU passes and a smaller VMEM Q/K footprint (DESIGN.md §2).
+
+`interpret=True`: see flash.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import lsh
+from .flash import NEG_INF
+
+
+def _distr_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    perm_ref,
+    o_ref,
+    *,
+    block_m: int,
+    group: int,
+    causal: bool,
+    block_l: int,
+    sample: str,
+):
+    iq = pl.program_id(0)
+    q = q_ref[...]                      # (block_l, d)
+    perm = perm_ref[...].reshape(-1)    # (d,) this block's grouping permutation
+    l, d = q.shape
+    n_kv = k_ref.shape[0]
+    dg = d // group
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    # Sampling: one estimate column per group (paper keeps a single
+    # q̂_j; "mean" is the averaged-estimate ablation).
+    qp = jnp.take(q, perm, axis=1).reshape(l, dg, group)
+    q_s = qp.mean(axis=2) if sample == "mean" else qp[:, :, 0]
+
+    def body(jk, carry):
+        o, m_i, l_i = carry
+        kb = pl.load(k_ref, (pl.dslice(jk * block_m, block_m), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(jk * block_m, block_m), slice(None)))
+        # Fusion: sum the K^T rows of each group. Reuses the *same*
+        # permutation for every K block in this row of Ŝ blocks — this
+        # is why the paper samples Q and not K^T (§3.3).
+        k_f = jnp.take(kb, perm, axis=1).reshape(block_m, dg, group).sum(axis=2)
+        s = jnp.dot(q_s, k_f.T) * scale  # (l, m) from a d/G* contraction
+        if causal:
+            rows = iq * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = jk * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1)
+        o_new = alpha[:, None] * o + jnp.dot(p, vb)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((l, d), jnp.float32)
+    m0 = jnp.full((l,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((l,), jnp.float32)
+    n_blocks = (iq + 1) * block_l // block_m if causal else n_kv // block_m
+    o, m_i, l_i = jax.lax.fori_loop(0, n_blocks, body, (o0, m0, l0))
+    o_ref[...] = o / jnp.where(l_i == 0.0, 1.0, l_i)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_l", "block_m", "group", "causal", "sample", "seed", "center"),
+)
+def distr_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_l: int = 16,
+    block_m: int = 16,
+    group: int = 2,
+    causal: bool = False,
+    sample: str = "mean",
+    seed: int = 0,
+    center: bool = True,
+) -> jnp.ndarray:
+    """DistrAttention over single-head (N, d) inputs.
+
+    The LSH permutations are derived outside the kernel (cheap, §4.8)
+    and streamed in per Q block; sampling, fusion, the reduced-d score
+    matmul, online softmax and PV all fuse into one kernel — the paper's
+    "single CUDA kernel" property that the baselines lack (§4.3).
+    """
+    n, d = q.shape
+    n_kv = k.shape[0]
+    assert n % block_l == 0 and n_kv % block_m == 0 and d % group == 0
+    if causal:
+        assert block_l % block_m == 0
+    perms = lsh.block_permutations(q, block_l, seed=seed, center=center).astype(jnp.int32)
+    kernel = functools.partial(
+        _distr_kernel,
+        block_m=block_m,
+        group=group,
+        causal=causal,
+        block_l=block_l,
+        sample=sample,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),  # this block's permutation
+        ],
+        out_specs=pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, perms)
+
+
+def make_distr_attention_vjp(
+    block_l=16, block_m=16, group=2, causal=False, sample="mean", seed=0, center=True
+):
+    """Trainable DistrAttention: Pallas forward, jnp-reference backward.
+
+    The permutation is data-dependent but piecewise constant, so the
+    gradient treats the grouping as fixed (straight-through w.r.t. the
+    gather/sum) — exactly the gradient of the jnp reference, which
+    computes the same Ŝ.
+    """
+    from . import ref
+
+    def ref_fn(q, k, v):
+        return ref.distr_attention_ref(
+            q, k, v, block_l=block_l, block_m=block_m, group=group,
+            sample=sample, causal=causal, seed=seed, center=center,
+        )
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return distr_attention(
+            q, k, v, block_l=block_l, block_m=block_m, group=group,
+            causal=causal, sample=sample, seed=seed, center=center,
+        )
+
+    def fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, pullback = jax.vjp(ref_fn, q, k, v)
+        return pullback(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn

@@ -1,0 +1,97 @@
+"""FlashAttention-2 as a Pallas kernel (the paper's exact-attention baseline).
+
+Schedule (paper §2.2.2, Fig. 3): the grid parallelizes over Q blocks
+(threadblocks on the paper's GPUs); inside the kernel body an inner loop
+iterates over K^T/V blocks with the online softmax rescaling, so S and P
+are never materialized to HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO ops that
+both the pytest oracle checks and the Rust runtime can run. On a real
+TPU the same BlockSpec structure expresses the HBM->VMEM schedule the
+paper implements with shared-memory staging (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() well-defined in-kernel
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_m: int, causal: bool, block_l: int):
+    """One grid step = one Q block. k_ref/v_ref hold the full K/V."""
+    iq = pl.program_id(0)
+    q = q_ref[...]  # (block_l, d)
+    n_kv = k_ref.shape[0]
+    d = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def body(jk, carry):
+        o, m_i, l_i = carry
+        kb = pl.load(k_ref, (pl.dslice(jk * block_m, block_m), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(jk * block_m, block_m), slice(None)))
+        s = jnp.dot(q, kb.T) * scale
+        if causal:
+            rows = iq * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = jk * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1)
+        o_new = alpha[:, None] * o + jnp.dot(p, vb)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros(q.shape, jnp.float32)
+    m0 = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q.shape[0],), jnp.float32)
+    if causal:
+        # Only K blocks up to (and including) the diagonal contribute.
+        n_blocks = (iq + 1) * block_l // block_m
+    else:
+        n_blocks = n_kv // block_m
+    o, m_i, l_i = jax.lax.fori_loop(0, n_blocks, body, (o0, m0, l0))
+    o_ref[...] = o / jnp.where(l_i == 0.0, 1.0, l_i)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "block_m", "causal"))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_l: int = 16,
+    block_m: int = 16,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Exact attention with the FlashAttention-2 block schedule. (N, d)."""
+    n, d = q.shape
+    n_kv = k.shape[0]
+    assert n % block_l == 0 and n_kv % block_m == 0
+    if causal:
+        assert block_l % block_m == 0, "causal kernel needs block_l % block_m == 0"
+    kernel = functools.partial(_flash_kernel, block_m=block_m, causal=causal, block_l=block_l)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_l,),
+        in_specs=[
+            pl.BlockSpec((block_l, d), lambda i: (i, 0)),  # stream one Q block per step
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),     # K resident across steps
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),     # V resident across steps
+        ],
+        out_specs=pl.BlockSpec((block_l, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+flash_attention_mh = jax.vmap(
+    lambda q, k, v, block_l, block_m, causal: flash_attention(
+        q, k, v, block_l=block_l, block_m=block_m, causal=causal
+    ),
+    in_axes=(0, 0, 0, None, None, None),
+)

@@ -1,0 +1,138 @@
+"""Locality-sensitive hashing for DistrAttention column grouping (paper §3.2).
+
+A column ``q`` of a Q block (length ``l``) is mapped to an integer hash:
+
+1. random projection into an ``N' = 16``-dimensional space,
+2. sign binarization (positive -> 1, otherwise 0),
+3. the bit pattern is decoded through a Gray-code table so that bit
+   patterns at small Hamming distance land on nearby integers.
+
+Sorting the ``d`` hashes of a block yields the index permutation that
+places similar columns next to each other; consecutive runs of ``G*``
+indices form the sampling/fusion groups.
+
+Everything here is pure jnp so it lowers into the same HLO module as the
+Pallas kernel (the paper also treats LSH grouping as a separate
+lightweight step, cf. §4.8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# N' in the paper: the projection dimensionality, chosen to match the
+# fixed tile size accepted by the matrix units (tensor cores on the
+# paper's GPUs, MXU tiles here).
+N_PRIME = 16
+
+
+def projection_matrix(block_l: int, seed: int = 0, n_prime: int = N_PRIME) -> jnp.ndarray:
+    """The random projection ``P in R^{N' x l}``, generated once per shape.
+
+    The paper generates the projection "in prior" (fixed at model build
+    time); we derive it deterministically from ``seed`` so the AOT
+    artifact, the reference oracle and the Rust implementation agree.
+    """
+    rng = np.random.RandomState(seed ^ (block_l * 0x9E3779B1 % (2**31)))
+    proj = rng.standard_normal((n_prime, block_l)).astype(np.float32)
+    return jnp.asarray(proj)
+
+
+def gray_decode(g: jnp.ndarray, bits: int = N_PRIME) -> jnp.ndarray:
+    """Decode a binary-reflected Gray code to its integer rank.
+
+    Two Gray codes at Hamming distance 1 decode to integers that are
+    close in value, which is what makes sorting the decoded values group
+    similar sign patterns together.
+    """
+    b = g.astype(jnp.uint32)
+    shift = 1
+    while shift < bits:
+        b = b ^ (b >> shift)
+        shift <<= 1
+    return b.astype(jnp.int32)
+
+
+def hash_columns(block: jnp.ndarray, proj: jnp.ndarray, center: bool = True) -> jnp.ndarray:
+    """Hash each column of ``block`` (shape ``(l, d)``) to an int32.
+
+    Returns shape ``(d,)``: the LSH values of the ``d`` columns.
+
+    ``center=True`` subtracts the per-row mean across columns before
+    projecting, so the hashing hyperplanes pass through the column
+    cloud's centroid. The paper hashes raw columns; for the all-positive
+    activations (and the paper's uniform(0,1) synthetic workload) raw
+    sign bits are weakly discriminative, and centering recovers the
+    error magnitudes Table 3 reports (see EXPERIMENTS.md tab3/tab4).
+    """
+    x = block - block.mean(axis=1, keepdims=True) if center else block
+    # (N', l) @ (l, d) -> (N', d): one projected vector per column.
+    projected = proj @ x
+    bits = (projected > 0).astype(jnp.uint32)
+    weights = (2 ** jnp.arange(proj.shape[0], dtype=jnp.uint32))[:, None]
+    codes = jnp.sum(bits * weights, axis=0)
+    return gray_decode(codes, bits=proj.shape[0])
+
+
+def block_permutation(block: jnp.ndarray, proj: jnp.ndarray, center: bool = True) -> jnp.ndarray:
+    """The sorted-hash index permutation for one Q block (paper Fig. 5).
+
+    Ties are broken by column index (the key is ``hash * d + col``), so
+    the permutation is unique and identical across every backend the HLO
+    runs on — XLA's sort stability flag does not survive all transport
+    paths, and the Rust engine must reproduce the exact grouping.
+    """
+    d = block.shape[1]
+    h = hash_columns(block, proj, center=center)
+    # hash < 2^16 and d <= 2^8, so the combined key fits in int32
+    key = h.astype(jnp.int32) * d + jnp.arange(d, dtype=jnp.int32)
+    return jnp.argsort(key)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "seed", "center"))
+def block_permutations(
+    q: jnp.ndarray, block_l: int, seed: int = 0, center: bool = True
+) -> jnp.ndarray:
+    """Permutations for every Q block: ``(N/block_l, d)`` int32.
+
+    ``q`` has shape ``(N, d)``; each row block of size ``block_l`` gets
+    its own permutation (paper §3.3: re-deriving the permutation per
+    block bounds the LSH error and lets consecutive K blocks reuse it).
+    """
+    n, d = q.shape
+    assert n % block_l == 0, f"N={n} not divisible by block_l={block_l}"
+    proj = projection_matrix(block_l, seed=seed)
+    blocks = q.reshape(n // block_l, block_l, d)
+    return jax.vmap(lambda b: block_permutation(b, proj, center))(blocks)
+
+
+def group_sample_fuse(
+    q_block: jnp.ndarray,
+    k: jnp.ndarray,
+    perm: jnp.ndarray,
+    group: int,
+    sample: str = "first",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the paper's sampling (Q) and fusion (K) along d.
+
+    ``q_block``: (l, d); ``k``: (m, d) (rows of K == columns of K^T);
+    ``perm``: (d,) grouping permutation. Returns ``(q_s, k_f)`` with
+    shapes ``(l, d/group)`` and ``(m, d/group)`` such that
+    ``q_s @ k_f.T`` approximates ``q_block @ k.T``.
+    """
+    l, d = q_block.shape
+    assert d % group == 0, f"d={d} not divisible by group={group}"
+    qp = jnp.take(q_block, perm, axis=1).reshape(l, d // group, group)
+    kp = jnp.take(k, perm, axis=1).reshape(k.shape[0], d // group, group)
+    if sample == "first":
+        q_s = qp[:, :, 0]
+    elif sample == "mean":
+        q_s = qp.mean(axis=2)
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"unknown sample mode {sample!r}")
+    k_f = kp.sum(axis=2)
+    return q_s, k_f

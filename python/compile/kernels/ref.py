@@ -1,0 +1,170 @@
+"""Pure-jnp correctness oracles for every kernel in the stack.
+
+These are the ground-truth implementations the Pallas kernels (and the
+Rust-native engines) are tested against:
+
+* ``exact_attention``       — the standard softmax attention.
+* ``blocked_exact_attention`` — exact attention computed with the
+  FlashAttention-2 double loop + online softmax (numerics oracle for the
+  flash Pallas kernel).
+* ``distr_attention_ref``   — DistrAttention (paper §3) with block-wise
+  LSH grouping, sampling and fusion, written with plain jnp ops.
+* ``distr_scores_ref``      — just the approximated score matrix Ŝ
+  (used by the Table 3/4 error experiments).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import lsh
+
+
+def exact_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = False) -> jnp.ndarray:
+    """Standard self-attention: softmax(Q K^T / sqrt(d)) V. Shapes (N, d)."""
+    n, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((n, k.shape[0]), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def blocked_exact_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_l: int = 16,
+    block_m: int = 16,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Exact attention via the FlashAttention-2 schedule (paper §2.2.2).
+
+    Outer loop over Q blocks of ``block_l`` rows; inner loop over K/V
+    blocks of ``block_m`` rows with the online (m, l) softmax rescaling.
+    Matches ``exact_attention`` to float tolerance.
+    """
+    n, d = q.shape
+    nk = k.shape[0]
+    assert n % block_l == 0 and nk % block_m == 0
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def q_block_body(iq, qb):
+        def kv_body(jk, carry):
+            o, m_i, l_i = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, jk * block_m, block_m)
+            vb = jax.lax.dynamic_slice_in_dim(v, jk * block_m, block_m)
+            s = (qb @ kb.T) * scale
+            if causal:
+                rows = iq * block_l + jnp.arange(block_l)[:, None]
+                cols = jk * block_m + jnp.arange(block_m)[None, :]
+                s = jnp.where(rows >= cols, s, -jnp.inf)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            # Guard fully-masked rows: exp(-inf - -inf) otherwise NaNs.
+            safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - safe_m[:, None])
+            alpha = jnp.exp(jnp.where(jnp.isneginf(m_i), -jnp.inf, m_i) - safe_m)
+            alpha = jnp.where(jnp.isneginf(m_i), 0.0, alpha)
+            l_new = alpha * l_i + p.sum(axis=-1)
+            o_new = alpha[:, None] * o + p @ vb
+            return o_new, m_new, l_new
+
+        o0 = jnp.zeros((block_l, d), jnp.float32)
+        m0 = jnp.full((block_l,), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((block_l,), jnp.float32)
+        o, m_i, l_i = jax.lax.fori_loop(0, nk // block_m, kv_body, (o0, m0, l0))
+        return o / jnp.where(l_i == 0.0, 1.0, l_i)[:, None]
+
+    qb = q.reshape(n // block_l, block_l, d)
+    out = jax.vmap(q_block_body)(jnp.arange(n // block_l), qb)
+    return out.reshape(n, d)
+
+
+def distr_scores_block(
+    q_block: jnp.ndarray,
+    k: jnp.ndarray,
+    perm: jnp.ndarray,
+    group: int,
+    sample: str = "first",
+) -> jnp.ndarray:
+    """Ŝ block: approximated scores of one Q block against all of K."""
+    q_s, k_f = lsh.group_sample_fuse(q_block, k, perm, group, sample=sample)
+    return q_s @ k_f.T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "group", "sample", "seed", "center")
+)
+def distr_scores_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    block_l: int,
+    group: int,
+    sample: str = "mean",
+    seed: int = 0,
+    center: bool = True,
+) -> jnp.ndarray:
+    """The full approximated (unscaled) score matrix Ŝ ≈ Q K^T.
+
+    This is the quantity whose error the paper analyses in Tables 3/4
+    and Figure 7 (no softmax, no 1/sqrt(d) scaling).
+    """
+    n, d = q.shape
+    perms = lsh.block_permutations(q, block_l, seed=seed, center=center)
+    qb = q.reshape(n // block_l, block_l, d)
+    s_blocks = jax.vmap(lambda b, p: distr_scores_block(b, k, p, group, sample))(qb, perms)
+    return s_blocks.reshape(n, k.shape[0])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_l", "block_m", "group", "sample", "causal", "seed", "center"),
+)
+def distr_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_l: int = 16,
+    block_m: int = 16,
+    group: int = 2,
+    sample: str = "mean",
+    causal: bool = False,
+    seed: int = 0,
+    center: bool = True,
+) -> jnp.ndarray:
+    """DistrAttention oracle: Ŝ from block-wise LSH grouping, then the
+    ordinary softmax(·/sqrt(d)) V pipeline (V is never reduced).
+
+    ``block_m`` only affects the iteration structure, not the numerics,
+    so we compute row blocks of Ŝ in one shot here; the Pallas kernel
+    follows the true double loop.
+    """
+    n, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    perms = lsh.block_permutations(q, block_l, seed=seed, center=center)
+    qb = q.reshape(n // block_l, block_l, d)
+
+    def one_block(iq, q_blk, perm):
+        s = distr_scores_block(q_blk, k, perm, group, sample) * scale
+        if causal:
+            rows = iq * block_l + jnp.arange(block_l)[:, None]
+            cols = jnp.arange(k.shape[0])[None, :]
+            s = jnp.where(rows >= cols, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return p @ v
+
+    out = jax.vmap(one_block)(jnp.arange(n // block_l), qb, perms)
+    return out.reshape(n, d)
+
+
+def multihead(fn):
+    """Lift an (N, d) single-head attention fn to (H, N, d)."""
+
+    def wrapped(q, k, v, *args, **kwargs):
+        return jax.vmap(lambda a, b, c: fn(a, b, c, *args, **kwargs))(q, k, v)
+
+    return wrapped

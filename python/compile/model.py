@@ -1,0 +1,232 @@
+"""Layer-2 models: a ViT-style encoder classifier and a Llama-style
+causal decoder, both with pluggable attention (compile.attention_api).
+
+Plain-dict parameters + pure functions (no flax): every forward here is
+lowered once by aot.py to HLO text and then executed from the Rust
+runtime; Python never runs at serve time.
+
+Scale substitutions vs the paper (DESIGN.md §5): ViT-tiny instead of
+ViT-Base (S4), a ~6M-param Llama-style decoder instead of Llama3-1B
+(S6). The per-head dimension d — the axis DistrAttention acts on — is
+kept at the paper's value (64).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention_api import AttentionConfig, make_attention
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image_size: int = 32
+    patch_size: int = 4
+    channels: int = 3
+    d_model: int = 128
+    n_heads: int = 2          # d_head = 64, the paper's per-head dim
+    n_layers: int = 4
+    mlp_ratio: int = 4
+    n_classes: int = 10
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def seq_len(self) -> int:
+        # +1 cls token, padded to a multiple of 16 so every block size
+        # divides it (N' alignment, paper Eq. 4).
+        raw = self.n_patches + 1
+        return (raw + 15) // 16 * 16
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.channels
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_heads: int = 4          # d_head = 64
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 256
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    return x / jnp.sqrt((x**2).mean(axis=-1, keepdims=True) + eps) * gamma
+
+
+def rope(x: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding over (..., N, d)."""
+    n, d = x.shape[-2], x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def multi_head_attention(params, x, attn_fn: Callable, n_heads: int, use_rope: bool = False):
+    """x: (N, D) -> (N, D); heads run the per-head attn_fn via vmap."""
+    n, dm = x.shape
+    dh = dm // n_heads
+    q = (x @ params["wq"]).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ params["wk"]).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ params["wv"]).reshape(n, n_heads, dh).transpose(1, 0, 2)
+    if use_rope:
+        q, k = rope(q), rope(k)
+    o = jax.vmap(attn_fn)(q, k, v)  # (H, N, dh)
+    o = o.transpose(1, 0, 2).reshape(n, dm)
+    return o @ params["wo"]
+
+
+def _dense(rng, n_in, n_out):
+    return (rng.standard_normal((n_in, n_out)) * (1.0 / np.sqrt(n_in))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# ViT-style encoder classifier
+# ---------------------------------------------------------------------------
+
+
+def vit_init(cfg: ViTConfig, seed: int = 0) -> dict:
+    rng = np.random.RandomState(seed)
+    params = {
+        "patch_embed": _dense(rng, cfg.patch_dim, cfg.d_model),
+        "cls_token": (rng.standard_normal((1, cfg.d_model)) * 0.02).astype(np.float32),
+        "pos_embed": (rng.standard_normal((cfg.seq_len, cfg.d_model)) * 0.02).astype(np.float32),
+        "head": _dense(rng, cfg.d_model, cfg.n_classes),
+        "final_gamma": np.ones(cfg.d_model, np.float32),
+        "final_beta": np.zeros(cfg.d_model, np.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1_gamma": np.ones(cfg.d_model, np.float32),
+                "ln1_beta": np.zeros(cfg.d_model, np.float32),
+                "ln2_gamma": np.ones(cfg.d_model, np.float32),
+                "ln2_beta": np.zeros(cfg.d_model, np.float32),
+                "wq": _dense(rng, cfg.d_model, cfg.d_model),
+                "wk": _dense(rng, cfg.d_model, cfg.d_model),
+                "wv": _dense(rng, cfg.d_model, cfg.d_model),
+                "wo": _dense(rng, cfg.d_model, cfg.d_model),
+                "w1": _dense(rng, cfg.d_model, cfg.d_model * cfg.mlp_ratio),
+                "w2": _dense(rng, cfg.d_model * cfg.mlp_ratio, cfg.d_model),
+            }
+        )
+    return jax.tree.map(jnp.asarray, params)
+
+
+def patchify(cfg: ViTConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, n_patches, patch_dim)."""
+    b = images.shape[0]
+    p, s = cfg.patch_size, cfg.image_size // cfg.patch_size
+    x = images.reshape(b, s, p, s, p, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, s * s, cfg.patch_dim)
+
+
+def vit_forward(params, images, cfg: ViTConfig, attn_cfg: AttentionConfig) -> jnp.ndarray:
+    """(B, H, W, C) images -> (B, n_classes) logits."""
+    attn_fn = make_attention(attn_cfg, causal=False)
+
+    def single(img):
+        tokens = patchify(cfg, img[None])[0] @ params["patch_embed"]
+        x = jnp.concatenate([params["cls_token"], tokens], axis=0)
+        pad = cfg.seq_len - x.shape[0]
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad, cfg.d_model), jnp.float32)], axis=0)
+        x = x + params["pos_embed"]
+        for lp in params["layers"]:
+            h = layer_norm(x, lp["ln1_gamma"], lp["ln1_beta"])
+            x = x + multi_head_attention(lp, h, attn_fn, cfg.n_heads)
+            h = layer_norm(x, lp["ln2_gamma"], lp["ln2_beta"])
+            x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+        x = layer_norm(x, params["final_gamma"], params["final_beta"])
+        return x[0] @ params["head"]  # cls token
+
+    return jax.vmap(single)(images)
+
+
+# ---------------------------------------------------------------------------
+# Llama-style causal decoder
+# ---------------------------------------------------------------------------
+
+
+def lm_init(cfg: LMConfig, seed: int = 0) -> dict:
+    rng = np.random.RandomState(seed)
+    params = {
+        "embed": (rng.standard_normal((cfg.vocab, cfg.d_model)) * 0.02).astype(np.float32),
+        "final_gamma": np.ones(cfg.d_model, np.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "rms1_gamma": np.ones(cfg.d_model, np.float32),
+                "rms2_gamma": np.ones(cfg.d_model, np.float32),
+                "wq": _dense(rng, cfg.d_model, cfg.d_model),
+                "wk": _dense(rng, cfg.d_model, cfg.d_model),
+                "wv": _dense(rng, cfg.d_model, cfg.d_model),
+                "wo": _dense(rng, cfg.d_model, cfg.d_model),
+                "w_gate": _dense(rng, cfg.d_model, cfg.d_ff),
+                "w_up": _dense(rng, cfg.d_model, cfg.d_ff),
+                "w_down": _dense(rng, cfg.d_ff, cfg.d_model),
+            }
+        )
+    return jax.tree.map(jnp.asarray, params)
+
+
+def lm_forward(params, tokens, cfg: LMConfig, attn_cfg: AttentionConfig) -> jnp.ndarray:
+    """(B, N) int32 tokens -> (B, N, vocab) logits. Causal."""
+    attn_fn = make_attention(attn_cfg, causal=True)
+
+    def single(toks):
+        x = params["embed"][toks]
+        for lp in params["layers"]:
+            h = rms_norm(x, lp["rms1_gamma"])
+            x = x + multi_head_attention(lp, h, attn_fn, cfg.n_heads, use_rope=True)
+            h = rms_norm(x, lp["rms2_gamma"])
+            x = x + (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+        x = rms_norm(x, params["final_gamma"])
+        return x @ params["embed"].T  # tied head
+
+    return jax.vmap(single)(tokens)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

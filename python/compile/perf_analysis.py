@@ -1,0 +1,159 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+interpret=True gives numpy-backed timings, NOT a TPU proxy, so Layer-1
+performance is assessed *structurally*:
+
+* VMEM footprint per BlockSpec configuration — does the working set fit
+  the ~16 MiB/core budget, and how much headroom does DistrAttention's
+  d/G* shrink buy?
+* MXU utilization estimate — fraction of each (128×128 systolic) pass
+  that carries real data, for the score matmul tiles of flash2 vs distr.
+* the roofline-style FLOP/byte ratio per schedule.
+
+Layer-2 is audited on the lowered HLO text: op histogram per artifact,
+checking for duplicated softmax work and counting fusion-relevant ops.
+
+Run from python/:  python -m compile.perf_analysis
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+VMEM_BYTES = 16 * 1024 * 1024          # per-core VMEM on current TPUs
+MXU = 128                               # systolic tile edge
+BF16 = 2
+
+
+def vmem_footprint(l: int, m: int, n_kv: int, d: int, group: int = 1) -> dict:
+    """Bytes resident per grid step of the (distr-)flash kernel.
+
+    The kernel holds: one Q block (l×d), the full K and V (streamed
+    blocks of m rows are slices of resident buffers under interpret;
+    on real TPU BlockSpec would stream K/V in m-row blocks, so both
+    figures are reported), the sampled Q (l×d/G*), the fused K block
+    (m×d/G*), the S tile (l×m) and the O accumulator (l×d).
+    """
+    dg = d // group
+    resident_stream = (
+        l * d            # Q block
+        + 2 * m * d      # K,V blocks (streamed)
+        + l * dg         # sampled Q
+        + m * dg         # fused K
+        + l * m          # S tile
+        + l * d          # O accumulator + (m,l) stats ~ l*2
+        + 2 * l
+    ) * BF16 * 2         # fp32 accumulation: x2 over bf16 storage
+    resident_full_kv = resident_stream + 2 * (n_kv - m) * d * BF16
+    return {"stream": resident_stream, "full_kv": resident_full_kv}
+
+
+def mxu_utilization(rows: int, cols: int, contraction: int) -> float:
+    """Fraction of MXU capacity used by a rows×contraction @ contraction×cols
+    matmul when tiles are padded up to 128."""
+    pad = lambda x: ((x + MXU - 1) // MXU) * MXU
+    useful = rows * cols * contraction
+    padded = pad(rows) * pad(cols) * pad(contraction)
+    return useful / padded
+
+
+def analyze_kernels() -> str:
+    lines = [
+        "### L1 — Pallas kernel structural analysis",
+        "",
+        "VMEM per grid step (bf16 storage, fp32 accum; 'stream' = BlockSpec",
+        "streams K/V m-row blocks as on TPU; budget 16 MiB/core):",
+        "",
+        "| schedule | l | m | d | G* | VMEM/step | % budget | score-MXU util | flop/byte |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    n_kv = 2048
+    configs = [
+        ("flash2", 128, 128, 64, 1),
+        ("flash2", 128, 32, 128, 1),
+        ("distr", 128, 128, 64, 2),
+        ("distr", 128, 128, 64, 4),
+        ("distr", 128, 32, 128, 2),
+        ("distr", 256, 64, 32, 2),
+    ]
+    for name, l, m, d, g in configs:
+        fp = vmem_footprint(l, m, n_kv, d, g)
+        dg = d // g
+        util = mxu_utilization(l, m, dg)
+        # flops per step: scores 2*l*m*dg + pv 2*l*m*d; bytes: q,k,v blocks
+        flops = 2 * l * m * dg + 2 * l * m * d
+        bytes_moved = (l * d + 2 * m * d) * BF16
+        lines.append(
+            f"| {name} | {l} | {m} | {d} | {g} | {fp['stream']/1024:.0f} KiB "
+            f"| {fp['stream']/VMEM_BYTES*100:.1f}% | {util*100:.0f}% "
+            f"| {flops/bytes_moved:.1f} |"
+        )
+    lines += [
+        "",
+        "Reading: DistrAttention shrinks the score contraction to d/G*, which",
+        "(a) cuts the per-step score FLOPs by (1-1/G*)/2 of the total, and",
+        "(b) keeps the MXU tile fully utilized as long as d/G* >= 128 is not",
+        "required — at d/G* < 128 the contraction dim under-fills one MXU pass",
+        "(64 -> 50%, 32 -> 25%), which is exactly the paper's tensor-core",
+        "constraint: G*=4 is skipped at d=32 (d/G*=8 << N'=16).",
+        "The VMEM saving from the fused K block lets (l, m) grow one notch",
+        "within the same budget — the paper's Table 2 selection lever.",
+    ]
+    return "\n".join(lines)
+
+
+HLO_OPS = ["dot", "exponential", "reduce", "while", "gather", "sort", "divide",
+           "dynamic-slice", "dynamic-update-slice", "broadcast"]
+
+
+def audit_hlo(path: str) -> dict:
+    text = open(path).read()
+    counts = {}
+    for op in HLO_OPS:
+        counts[op] = len(re.findall(rf"= [a-z0-9\[\],{{}}: ]* {re.escape(op)}\(", text)) or \
+                     len(re.findall(rf"\b{re.escape(op)}\(", text))
+    counts["bytes"] = len(text)
+    return counts
+
+
+def analyze_artifacts(art_dir: str) -> str:
+    lines = [
+        "### L2 — HLO audit of lowered artifacts",
+        "",
+        "| artifact | dots | exp | reduce | while | sort | gather | size |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    targets = [
+        "attn_exact_256x64", "attn_flash_256x64", "attn_distr_256x64_g2",
+        "lm_prefill_distr_flash_128", "lm_train_step",
+    ]
+    for name in targets:
+        p = os.path.join(art_dir, f"{name}.hlo.txt")
+        if not os.path.exists(p):
+            continue
+        c = audit_hlo(p)
+        lines.append(
+            f"| {name} | {c['dot']} | {c['exponential']} | {c['reduce']} "
+            f"| {c['while']} | {c['sort']} | {c['gather']} | {c['bytes']//1024} KiB |"
+        )
+    lines += [
+        "",
+        "Checks: one `exponential` cluster per softmax (no duplicated",
+        "normalization); `sort` appears once per LSH grouping; the Pallas",
+        "kernels lower to a single `while` (grid loop) rather than unrolled",
+        "bodies, keeping executable size flat in N.",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    art = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    print(analyze_kernels())
+    print()
+    print(analyze_artifacts(art))
+
+
+if __name__ == "__main__":
+    main()

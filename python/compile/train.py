@@ -1,0 +1,95 @@
+"""Losses, optimizers and AOT-able train steps for the fine-tuning
+experiments (paper §4.3/§4.4) and the end-to-end training driver.
+
+The train step is a pure function ``(params, opt_state, batch) ->
+(params', opt_state', loss)`` so it lowers to a single HLO module the
+Rust runtime executes in a loop, feeding the updated parameter literals
+back in (examples/train_e2e.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .attention_api import AttentionConfig
+
+
+def cross_entropy_lm(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross entropy. logits (B, N, V), targets (B, N)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -picked.mean()
+
+
+def cross_entropy_cls(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# optimizers (plain pytree, no optax: keeps the AOT module dependency-free)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params):
+    return jax.tree.map(jnp.zeros_like, params)  # momentum buffers
+
+
+def sgd_update(params, grads, momentum, lr=0.05, beta=0.9):
+    new_m = jax.tree.map(lambda m, g: beta * m + g, momentum, grads)
+    new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, new_m
+
+
+def adamw_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.float32)}
+
+
+def adamw_update(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda x: x / (1 - b1**t), m)
+    vh = jax.tree.map(lambda x: x / (1 - b2**t), v)
+    new_p = jax.tree.map(
+        lambda p, mh_, vh_: p - lr * (mh_ / (jnp.sqrt(vh_) + eps) + wd * p), params, mh, vh
+    )
+    return new_p, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+
+def make_lm_train_step(cfg: model.LMConfig, attn_cfg: AttentionConfig, lr: float = 3e-4):
+    """AdamW LM train step. batch = (tokens (B,N), targets (B,N))."""
+
+    def loss_fn(params, tokens, targets):
+        logits = model.lm_forward(params, tokens, cfg, attn_cfg)
+        return cross_entropy_lm(logits, targets)
+
+    def step(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_vit_train_step(cfg: model.ViTConfig, attn_cfg: AttentionConfig, lr: float = 1e-3):
+    """AdamW classifier train step. batch = (images (B,H,W,C), labels (B,))."""
+
+    def loss_fn(params, images, labels):
+        logits = model.vit_forward(params, images, cfg, attn_cfg)
+        return cross_entropy_cls(logits, labels)
+
+    def step(params, opt_state, images, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, images, labels)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, loss
+
+    return step

@@ -1,0 +1,73 @@
+"""Shared pieces for the fine-tuning experiments (Tables 5/7, Fig 8).
+
+Synthetic datasets substitute for the paper's ImageNet/CIFAR/iNaturalist
+and MathInstruct/MMLU (DESIGN.md §5 S3/S5): class-prototype images and
+modular-arithmetic token sequences, both deterministic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def ensure_results_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+class ImageDataset:
+    """Class-prototype images: prototype + uniform noise, clamped [0,1]."""
+
+    def __init__(self, classes: int, size: int = 32, channels: int = 3,
+                 noise: float = 0.6, seed: int = 0):
+        rng = np.random.RandomState(seed)
+        self.classes = classes
+        self.size = size
+        self.channels = channels
+        self.noise = noise
+        self.prototypes = rng.rand(classes, size, size, channels).astype(np.float32)
+
+    def batch(self, n: int, seed: int):
+        rng = np.random.RandomState(seed)
+        labels = rng.randint(0, self.classes, size=n)
+        noise = (rng.rand(n, self.size, self.size, self.channels).astype(np.float32) - 0.5)
+        imgs = np.clip(self.prototypes[labels] + self.noise * noise, 0.0, 1.0)
+        return imgs, labels.astype(np.int32)
+
+
+class SeqDataset:
+    """Modular-arithmetic sequences (mirrors rust workload::SeqTask)."""
+
+    def __init__(self, vocab: int, seq_len: int):
+        self.vocab = vocab
+        self.seq_len = seq_len
+
+    def batch(self, n: int, seed: int):
+        rng = np.random.RandomState(seed)
+        toks = np.zeros((n, self.seq_len), np.int32)
+        for i in range(n):
+            a = 1 + (1 + rng.randint(6)) * 2
+            b = rng.randint(self.vocab // 2)
+            x = 8 + rng.randint(self.vocab - 8)
+            toks[i, 0] = a % 8
+            toks[i, 1] = b % 8
+            for t in range(2, self.seq_len):
+                toks[i, t] = x
+                x = (a * x + b) % (self.vocab - 8) + 8
+        targets = np.roll(toks, -1, axis=1)
+        targets[:, -1] = toks[:, 0]
+        return toks, targets
+
+
+def markdown_table(header: list[str], rows: list[list[str]]) -> str:
+    widths = [len(h) for h in header]
+    for row in rows:
+        widths = [max(w, len(c)) for w, c in zip(widths, row)]
+    fmt = lambda cells: "| " + " | ".join(c.ljust(w) for c, w in zip(cells, widths)) + " |"
+    lines = [fmt(header), "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+    lines += [fmt(r) for r in rows]
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,106 @@
+"""Table 7 (+ Table 6 accuracy columns): fine-tune the Llama-style LM
+with each attention mechanism on the synthetic modular-arithmetic task
+and measure next-token exact-match accuracy at different sequence
+lengths.
+
+Paper setup: Llama3-1B on MathInstruct, tested on MMLU-math at token
+lengths 256/512. Here (DESIGN.md §5 S5/S6): the ~3M-param decoder on
+modular-arithmetic sequences at lengths 64/128 — the same question
+(how much accuracy does each approximate attention give up vs exact?)
+with an exactly measurable answer.
+
+Outputs: results/tab7.md.
+
+Run from python/:  python -m experiments.lm_finetune [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, train
+from compile.attention_api import AttentionConfig
+
+from .common import SeqDataset, ensure_results_dir, markdown_table
+
+VARIANTS = ["flatten", "primal", "hydra", "hyper", "flash", "standard", "distr_flash"]
+
+CFG = model.LMConfig(vocab=64, d_model=128, n_heads=2, n_layers=3, d_ff=256)
+
+
+def next_token_accuracy(params, acfg, seq_len, batches=8, batch=16, seed0=90_000):
+    """Exact-match accuracy of next-token prediction on the second half
+    of each sequence (where context is established)."""
+    ds = SeqDataset(CFG.vocab, seq_len)
+    hit = total = 0
+    for b in range(batches):
+        toks, targets = ds.batch(batch, seed0 + b)
+        logits = np.asarray(model.lm_forward(params, jnp.asarray(toks), CFG, acfg))
+        pred = logits.argmax(-1)
+        half = seq_len // 2
+        hit += (pred[:, half:-1] == targets[:, half:-1]).sum()
+        total += pred[:, half:-1].size
+    return hit / total * 100.0
+
+
+def finetune(variant, seq_len, steps, seed=0):
+    acfg = AttentionConfig(
+        variant=variant, block_l=16, block_m=16, group=2,
+        trainable=(variant == "distr_flash"),
+    )
+    # the flash Pallas kernel has no VJP; train through the numerically
+    # identical standard attention and evaluate with the flash kernel
+    train_acfg = AttentionConfig(variant="standard") if variant == "flash" else acfg
+    params = model.lm_init(CFG, seed=seed)
+    step = jax.jit(train.make_lm_train_step(CFG, train_acfg, lr=2e-3))
+    opt = train.adamw_init(params)
+    ds = SeqDataset(CFG.vocab, seq_len)
+    for s in range(steps):
+        toks, targets = ds.batch(16, s)
+        params, opt, loss = step(params, opt, jnp.asarray(toks), jnp.asarray(targets))
+    return params, acfg, float(loss)
+
+
+def main():
+    quick = "--quick" in sys.argv
+    steps = 60 if quick else 300
+    seq_lens = [64] if quick else [64, 128]
+    out_dir = ensure_results_dir()
+
+    results: dict = {}
+    for seq_len in seq_lens:
+        print(f"=== seq_len {seq_len}, {steps} train steps per variant")
+        for variant in VARIANTS:
+            t0 = time.time()
+            params, acfg, final_loss = finetune(variant, seq_len, steps)
+            acc = next_token_accuracy(params, acfg, seq_len)
+            results.setdefault(variant, {})[seq_len] = {"acc": acc, "loss": final_loss}
+            print(f"  {variant:12s} acc {acc:5.1f}%  loss {final_loss:.3f}  "
+                  f"({time.time()-t0:.0f}s)")
+
+    header = ["Method"] + [f"n={n} acc%" for n in seq_lens]
+    rows = []
+    for variant in VARIANTS:
+        rows.append([variant] + [f"{results[variant][n]['acc']:.1f}" for n in seq_lens])
+    text = (
+        "Table 7 (reproduction) — LM fine-tuning accuracy by attention mechanism\n"
+        "on the synthetic arithmetic-sequence task (DESIGN.md S5/S6). Paper's\n"
+        "claim to check: ours within ~1-2% of exact attention, ahead of most\n"
+        "approximate baselines.\n\n" + markdown_table(header, rows)
+    )
+    with open(os.path.join(out_dir, "tab7.md"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, "tab7.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {out_dir}/tab7.md")
+
+
+if __name__ == "__main__":
+    main()

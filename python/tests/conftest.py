@@ -1,0 +1,21 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_qkv(rng, n, d, dist="uniform"):
+    """The paper's synthesized workload: elements iid uniform(0,1)."""
+    if dist == "uniform":
+        gen = lambda: rng.rand(n, d).astype(np.float32)
+    else:
+        gen = lambda: rng.standard_normal((n, d)).astype(np.float32)
+    return gen(), gen(), gen()

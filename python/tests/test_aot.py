@@ -1,0 +1,146 @@
+"""AOT pipeline tests: manifest integrity + HLO round-trip executability.
+
+The round-trip test compiles emitted HLO text back through XLA and
+compares against the live jax function — the same path the Rust runtime
+takes (minus the text parser reassigning instruction ids).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.attention_api import AttentionConfig
+from compile.kernels import distr, ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_format_version(self):
+        assert manifest()["format"] == 1
+
+    def test_all_files_exist(self):
+        m = manifest()
+        for name, entry in m["artifacts"].items():
+            assert os.path.exists(os.path.join(ART, entry["file"])), name
+            if "params" in entry:
+                assert os.path.exists(os.path.join(ART, entry["params"]["bin"]))
+                assert os.path.exists(os.path.join(ART, entry["params"]["index"]))
+
+    def test_expected_artifacts_present(self):
+        m = manifest()["artifacts"]
+        for required in (
+            "attn_exact_256x64",
+            "attn_flash_256x64",
+            "attn_distr_256x64_g2",
+            "lm_prefill_distr_flash_128",
+            "lm_train_step",
+            "vit_fwd_standard_b8",
+        ):
+            assert required in m, f"missing artifact {required}"
+
+    def test_io_spec_shapes(self):
+        m = manifest()["artifacts"]
+        e = m["attn_exact_256x64"]
+        assert e["inputs"] == [{"shape": [256, 64], "dtype": "f32"}] * 3
+        assert e["outputs"] == [{"shape": [256, 64], "dtype": "f32"}]
+
+    def test_train_step_io_counts(self):
+        m = manifest()["artifacts"]
+        e = m["lm_train_step"]
+        n_p, n_o = e["meta"]["n_params"], e["meta"]["n_opt"]
+        assert len(e["inputs"]) == n_p + n_o + 2     # + tokens + targets
+        assert len(e["outputs"]) == n_p + n_o + 1    # + loss
+
+    def test_params_bin_size_matches_index(self):
+        m = manifest()["artifacts"]
+        for entry in m["artifacts"].values() if False else m.values():
+            if "params" not in entry:
+                continue
+            with open(os.path.join(ART, entry["params"]["index"])) as f:
+                idx = json.load(f)
+            size = os.path.getsize(os.path.join(ART, entry["params"]["bin"]))
+            assert size == idx["total_bytes"]
+            assert sum(l["numel"] for l in idx["leaves"]) * 4 == size
+
+
+class TestHloRoundTrip:
+    def _run_hlo(self, text, inputs):
+        from jaxlib._jax import DeviceList
+
+        # HLO text -> proto -> stablehlo, then through jax's CPU client —
+        # mirrors the Rust runtime path (HloModuleProto::from_text_file).
+        comp = xc._xla.hlo_module_from_text(text)
+        stablehlo = xc._xla.mlir.hlo_to_stablehlo(comp.as_serialized_hlo_module_proto())
+        client = jax.devices("cpu")[0].client
+        exe = client.compile_and_load(stablehlo, DeviceList(tuple(client.devices())))
+        bufs = [client.buffer_from_pyval(x) for x in inputs]
+        out = exe.execute(bufs)
+        return [np.asarray(o) for o in out]
+
+    def test_attention_artifact_executes(self, rng):
+        m = manifest()["artifacts"]
+        with open(os.path.join(ART, m["attn_distr_256x64_g2"]["file"])) as f:
+            text = f.read()
+        q = rng.rand(256, 64).astype(np.float32)
+        k = rng.rand(256, 64).astype(np.float32)
+        v = rng.rand(256, 64).astype(np.float32)
+        out = self._run_hlo(text, [q, k, v])
+        live = distr.distr_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), 16, 16, group=2
+        )
+        # requires aot.to_hlo_text's print_large_constants=True: the
+        # default HLO printer elides the LSH projection constant, which
+        # parses back as zeros and silently regroups every block.
+        np.testing.assert_allclose(out[0], np.asarray(live), atol=1e-5)
+
+    def test_exact_artifact_matches_oracle(self, rng):
+        m = manifest()["artifacts"]
+        with open(os.path.join(ART, m["attn_exact_256x64"]["file"])) as f:
+            text = f.read()
+        q = rng.rand(256, 64).astype(np.float32)
+        k = rng.rand(256, 64).astype(np.float32)
+        v = rng.rand(256, 64).astype(np.float32)
+        out = self._run_hlo(text, [q, k, v])
+        live = ref.exact_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(out[0], np.asarray(live), atol=1e-5)
+
+
+class TestParamExport:
+    def test_lm_params_roundtrip(self):
+        m = manifest()["artifacts"]
+        entry = m["lm_prefill_standard_128"]
+        with open(os.path.join(ART, entry["params"]["index"])) as f:
+            idx = json.load(f)
+        blob = np.fromfile(os.path.join(ART, entry["params"]["bin"]), dtype="<f4")
+        params = model.lm_init(aot.LM_CFG, seed=0)
+        flat = jax.tree.leaves(params)
+        assert len(idx["leaves"]) == len(flat)
+        for leaf_info, live in zip(idx["leaves"], flat):
+            seg = blob[leaf_info["offset"] // 4:][: leaf_info["numel"]]
+            np.testing.assert_allclose(seg, np.asarray(live).ravel(), atol=0)
+
+    def test_leaf_order_matches_manifest_inputs(self):
+        # rust feeds params.bin leaves in index order as the leading
+        # executable inputs — shapes must line up exactly.
+        m = manifest()["artifacts"]
+        entry = m["lm_prefill_standard_128"]
+        with open(os.path.join(ART, entry["params"]["index"])) as f:
+            idx = json.load(f)
+        for leaf_info, in_spec in zip(idx["leaves"], entry["inputs"]):
+            numel = int(np.prod(in_spec["shape"]))
+            assert numel == leaf_info["numel"], (leaf_info, in_spec)

@@ -1,0 +1,207 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and block configurations; fixed tests pin the
+paper's specific workloads (N=64, d=64, uniform(0,1) — §4.2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import distr, flash, ref
+from tests.conftest import make_qkv
+
+
+class TestFlashKernel:
+    @pytest.mark.parametrize("n,d", [(64, 64), (128, 64), (64, 128), (256, 32)])
+    def test_matches_exact(self, rng, n, d):
+        q, k, v = map(jnp.asarray, make_qkv(rng, n, d))
+        out = flash.flash_attention(q, k, v, 16, 16)
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    @pytest.mark.parametrize("bl,bm", [(16, 16), (32, 16), (16, 32), (64, 64), (32, 64)])
+    def test_block_size_invariance(self, rng, bl, bm):
+        # exactness must be independent of the (l, m) schedule choice
+        q, k, v = map(jnp.asarray, make_qkv(rng, 64, 64))
+        out = flash.flash_attention(q, k, v, bl, bm)
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    @pytest.mark.parametrize("bl,bm", [(16, 16), (32, 16), (64, 32)])
+    def test_causal(self, rng, bl, bm):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 128, 64, dist="normal"))
+        out = flash.flash_attention(q, k, v, bl, bm, causal=True)
+        expect = ref.exact_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_causal_first_row_is_v0(self, rng):
+        # row 0 attends only to itself
+        q, k, v = map(jnp.asarray, make_qkv(rng, 32, 32))
+        out = flash.flash_attention(q, k, v, 16, 16, causal=True)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0]), atol=1e-5)
+
+    def test_blocked_ref_matches_exact_causal(self, rng):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 64, 32, dist="normal"))
+        out = ref.blocked_exact_attention(q, k, v, 16, 16, causal=True)
+        expect = ref.exact_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_large_magnitude_stability(self, rng):
+        # online softmax must not overflow for large logits
+        q = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32) * 30)
+        k = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32) * 30)
+        v = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+        out = flash.flash_attention(q, k, v, 16, 16)
+        assert np.isfinite(np.asarray(out)).all()
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)
+
+    @given(
+        n_exp=st.integers(min_value=5, max_value=8),
+        d=st.sampled_from([16, 32, 64, 128]),
+        bl_exp=st.integers(min_value=4, max_value=6),
+        seed=st.integers(min_value=0, max_value=100),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_matches_exact(self, n_exp, d, bl_exp, seed):
+        rng = np.random.RandomState(seed)
+        n, bl = 2**n_exp, 2**bl_exp
+        if bl > n:
+            bl = n
+        q, k, v = map(jnp.asarray, make_qkv(rng, n, d, dist="normal"))
+        out = flash.flash_attention(q, k, v, bl, 16)
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+class TestDistrKernel:
+    @pytest.mark.parametrize("group", [1, 2, 4, 8])
+    def test_matches_reference(self, rng, group):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 64, 64))
+        out = distr.distr_attention(q, k, v, 16, 16, group=group)
+        expect = ref.distr_attention_ref(q, k, v, 16, 16, group=group)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_group1_is_exact(self, rng):
+        # G*=1: no fusion — must reproduce exact attention (paper §3.1)
+        q, k, v = map(jnp.asarray, make_qkv(rng, 64, 64))
+        out = distr.distr_attention(q, k, v, 16, 16, group=1)
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    @pytest.mark.parametrize("sample", ["first", "mean"])
+    def test_sample_modes(self, rng, sample):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 64, 64))
+        out = distr.distr_attention(q, k, v, 16, 16, group=2, sample=sample)
+        expect = ref.distr_attention_ref(q, k, v, 16, 16, group=2, sample=sample)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_causal_matches_reference(self, rng):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 128, 64, dist="normal"))
+        out = distr.distr_attention(q, k, v, 16, 16, group=2, causal=True)
+        expect = ref.distr_attention_ref(q, k, v, 16, 16, group=2, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_identical_column_pairs_exact(self, rng):
+        # duplicate columns in Q AND matching duplicate structure means
+        # grouping loses nothing -> distr == exact even at G*=2
+        base_q = rng.rand(64, 32).astype(np.float32)
+        q = jnp.asarray(np.repeat(base_q, 2, axis=1))
+        k = jnp.asarray(np.repeat(rng.rand(64, 32).astype(np.float32), 2, axis=1))
+        v = jnp.asarray(rng.rand(64, 64).astype(np.float32))
+        out = distr.distr_attention(q, k, v, 16, 16, group=2, sample="first")
+        expect = ref.exact_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+    def test_output_shape_preserved(self, rng):
+        # the paper's flexibility claim: d reduction never changes the
+        # output shape (§4.3)
+        for group in (2, 4, 8):
+            q, k, v = map(jnp.asarray, make_qkv(rng, 64, 64))
+            out = distr.distr_attention(q, k, v, 16, 16, group=group)
+            assert out.shape == (64, 64)
+
+    def test_approximation_error_band(self, rng):
+        # paper §4.2: mean relative Ŝ error ~1% at G*=2 on uniform(0,1)
+        errs = []
+        for rep in range(10):
+            q, k, _ = make_qkv(rng, 64, 64)
+            s = q @ k.T
+            sh = np.asarray(ref.distr_scores_ref(jnp.asarray(q), jnp.asarray(k), 2, 2, seed=rep))
+            errs.append(np.abs(sh - s) / np.abs(s))
+        mean_err = float(np.mean([e.mean() for e in errs]))
+        assert mean_err < 0.03, f"mean rel err {mean_err:.4f} out of band"
+
+    def test_error_grows_with_group(self, rng):
+        # Table 4 shape: error increases monotonically-ish with G*
+        means = []
+        for group in (2, 4, 8, 16):
+            errs = []
+            for rep in range(5):
+                q, k, _ = make_qkv(rng, 64, 64)
+                s = q @ k.T
+                sh = np.asarray(
+                    ref.distr_scores_ref(jnp.asarray(q), jnp.asarray(k), 2, group, seed=rep)
+                )
+                errs.append((np.abs(sh - s) / np.abs(s)).mean())
+            means.append(np.mean(errs))
+        assert means[0] < means[-1], f"error not growing: {means}"
+
+    @given(
+        n=st.sampled_from([32, 64, 128]),
+        d=st.sampled_from([32, 64, 128]),
+        group=st.sampled_from([2, 4]),
+        bl=st.sampled_from([16, 32]),
+        seed=st.integers(min_value=0, max_value=50),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_kernel_equals_ref(self, n, d, group, bl, seed):
+        rng = np.random.RandomState(seed)
+        if bl > n:
+            bl = n
+        q, k, v = map(jnp.asarray, make_qkv(rng, n, d, dist="normal"))
+        out = distr.distr_attention(q, k, v, bl, 16, group=group, seed=seed)
+        expect = ref.distr_attention_ref(q, k, v, bl, 16, group=group, seed=seed)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+    def test_rejects_indivisible_shapes(self, rng):
+        q, k, v = map(jnp.asarray, make_qkv(rng, 60, 64))
+        with pytest.raises(AssertionError):
+            distr.distr_attention(q, k, v, 16, 16, group=2)
+
+
+class TestDistrVjp:
+    def test_gradients_flow(self, rng):
+        import jax
+
+        attn = distr.make_distr_attention_vjp(block_l=16, block_m=16, group=2)
+        q, k, v = map(jnp.asarray, make_qkv(rng, 32, 32, dist="normal"))
+
+        def loss(q, k, v):
+            return (attn(q, k, v) ** 2).sum()
+
+        grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        for g in grads:
+            assert g.shape == (32, 32)
+            assert np.isfinite(np.asarray(g)).all()
+            assert float(jnp.abs(g).max()) > 0
+
+    def test_grad_matches_ref_grad(self, rng):
+        import jax
+
+        attn = distr.make_distr_attention_vjp(block_l=16, block_m=16, group=2, seed=1)
+        q, k, v = map(jnp.asarray, make_qkv(rng, 32, 32, dist="normal"))
+
+        def loss_kernel(q, k, v):
+            return (attn(q, k, v) ** 2).sum()
+
+        def loss_ref(q, k, v):
+            o = ref.distr_attention_ref(q, k, v, 16, 16, group=2, seed=1)
+            return (o**2).sum()
+
+        g1 = jax.grad(loss_kernel, argnums=0)(q, k, v)
+        g2 = jax.grad(loss_ref, argnums=0)(q, k, v)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)

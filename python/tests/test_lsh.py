@@ -1,0 +1,160 @@
+"""Unit tests for the LSH grouping pipeline (paper §3.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import lsh
+
+
+def gray_encode(b: int) -> int:
+    return b ^ (b >> 1)
+
+
+class TestGrayDecode:
+    def test_inverts_gray_encode(self):
+        vals = np.arange(2**12, dtype=np.uint32)
+        encoded = np.array([gray_encode(int(v)) for v in vals], dtype=np.uint32)
+        decoded = np.asarray(lsh.gray_decode(jnp.asarray(encoded), bits=16))
+        np.testing.assert_array_equal(decoded, vals)
+
+    def test_hamming_neighbours_decode_nearby(self):
+        # flipping bit k of the Gray code moves the decoded rank by
+        # at most 2^(k+1) (locality property used for sorting)
+        base = 0b1011001110001011
+        for k in range(16):
+            a = int(lsh.gray_decode(jnp.asarray([base], dtype=jnp.uint32))[0])
+            b = int(lsh.gray_decode(jnp.asarray([base ^ (1 << k)], dtype=jnp.uint32))[0])
+            assert abs(a - b) <= 2 ** (k + 1)
+
+    @given(st.integers(min_value=0, max_value=2**16 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_bijective_on_16_bits(self, g):
+        d = int(lsh.gray_decode(jnp.asarray([g], dtype=jnp.uint32))[0])
+        assert gray_encode(d) == g
+
+
+class TestProjection:
+    def test_shape_and_determinism(self):
+        p1 = lsh.projection_matrix(16, seed=3)
+        p2 = lsh.projection_matrix(16, seed=3)
+        assert p1.shape == (lsh.N_PRIME, 16)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_different_seeds_differ(self):
+        p1 = lsh.projection_matrix(16, seed=0)
+        p2 = lsh.projection_matrix(16, seed=1)
+        assert not np.allclose(np.asarray(p1), np.asarray(p2))
+
+    def test_different_block_sizes_differ(self):
+        assert lsh.projection_matrix(8).shape == (16, 8)
+        assert lsh.projection_matrix(32).shape == (16, 32)
+
+
+class TestPermutations:
+    def test_valid_permutation(self, rng):
+        q = jnp.asarray(rng.rand(64, 32).astype(np.float32))
+        perms = np.asarray(lsh.block_permutations(q, 16))
+        assert perms.shape == (4, 32)
+        for p in perms:
+            assert sorted(p.tolist()) == list(range(32))
+
+    def test_blocks_get_distinct_permutations(self, rng):
+        # §3.3: per-block permutations differ (that's the error-limiting
+        # mechanism) — with random data, identical ones are ~impossible.
+        q = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))
+        perms = np.asarray(lsh.block_permutations(q, 16))
+        assert len({tuple(p) for p in perms}) > 1
+
+    def test_identical_columns_group_adjacent(self, rng):
+        # construct a block where column 2i+1 duplicates column 2i:
+        # duplicates hash identically so they sort adjacently.
+        base = rng.standard_normal((16, 8)).astype(np.float32)
+        dup = np.repeat(base, 2, axis=1)  # (16, 16) pairs of identical cols
+        perms = np.asarray(lsh.block_permutations(jnp.asarray(dup), 16))
+        p = perms[0].tolist()
+        for i in range(0, 16, 2):
+            # each duplicate pair (2i, 2i+1) must land adjacently: equal
+            # hashes sort into a contiguous run, stably ordered by index.
+            assert abs(p.index(i) - p.index(i + 1)) == 1
+        # and the underlying hashes of duplicates are equal
+        proj = lsh.projection_matrix(16)
+        h = np.asarray(lsh.hash_columns(jnp.asarray(dup), proj))
+        np.testing.assert_array_equal(h[0::2], h[1::2])
+
+    def test_deterministic(self, rng):
+        q = jnp.asarray(rng.rand(64, 64).astype(np.float32))
+        p1 = np.asarray(lsh.block_permutations(q, 16, seed=0))
+        p2 = np.asarray(lsh.block_permutations(q, 16, seed=0))
+        np.testing.assert_array_equal(p1, p2)
+
+    def test_requires_divisible_n(self, rng):
+        q = jnp.asarray(rng.rand(60, 32).astype(np.float32))
+        with pytest.raises(AssertionError):
+            lsh.block_permutations(q, 16)
+
+    @given(
+        n_blocks=st.integers(min_value=1, max_value=4),
+        block_l=st.sampled_from([2, 8, 16]),
+        d=st.sampled_from([16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=10),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_permutation_property(self, n_blocks, block_l, d, seed):
+        rng = np.random.RandomState(seed)
+        q = jnp.asarray(rng.standard_normal((n_blocks * block_l, d)).astype(np.float32))
+        perms = np.asarray(lsh.block_permutations(q, block_l, seed=seed))
+        assert perms.shape == (n_blocks, d)
+        for p in perms:
+            assert sorted(p.tolist()) == list(range(d))
+
+
+class TestGroupSampleFuse:
+    def test_shapes(self, rng):
+        qb = jnp.asarray(rng.rand(16, 64).astype(np.float32))
+        k = jnp.asarray(rng.rand(32, 64).astype(np.float32))
+        perm = jnp.arange(64)
+        q_s, k_f = lsh.group_sample_fuse(qb, k, perm, 4)
+        assert q_s.shape == (16, 16)
+        assert k_f.shape == (32, 16)
+
+    def test_identity_perm_group1_is_exact(self, rng):
+        # G*=1 degenerates to the exact product (paper §3.1: |G_j|=1
+        # gives Ŝ = S).
+        qb = jnp.asarray(rng.rand(8, 16).astype(np.float32))
+        k = jnp.asarray(rng.rand(8, 16).astype(np.float32))
+        q_s, k_f = lsh.group_sample_fuse(qb, k, jnp.arange(16), 1)
+        np.testing.assert_allclose(
+            np.asarray(q_s @ k_f.T), np.asarray(qb @ k.T), rtol=1e-5
+        )
+
+    def test_identical_columns_zero_error(self, rng):
+        # if grouped columns are exactly equal, sampling loses nothing:
+        # q̂ * sum(k) == sum(q_i k_i) for equal q_i.
+        col = rng.rand(8, 8).astype(np.float32)
+        qb = jnp.asarray(np.repeat(col, 2, axis=1))  # pairs of equal columns
+        k = jnp.asarray(rng.rand(8, 16).astype(np.float32))
+        q_s, k_f = lsh.group_sample_fuse(qb, k, jnp.arange(16), 2, sample="first")
+        np.testing.assert_allclose(
+            np.asarray(q_s @ k_f.T), np.asarray(qb @ k.T), rtol=1e-5
+        )
+
+    def test_mean_equals_first_for_identical_columns(self, rng):
+        col = rng.rand(8, 8).astype(np.float32)
+        qb = jnp.asarray(np.repeat(col, 2, axis=1))
+        k = jnp.asarray(rng.rand(8, 16).astype(np.float32))
+        a, _ = lsh.group_sample_fuse(qb, k, jnp.arange(16), 2, sample="first")
+        b, _ = lsh.group_sample_fuse(qb, k, jnp.arange(16), 2, sample="mean")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    def test_rejects_bad_sample_mode(self, rng):
+        qb = jnp.asarray(rng.rand(8, 16).astype(np.float32))
+        with pytest.raises(ValueError):
+            lsh.group_sample_fuse(qb, qb, jnp.arange(16), 2, sample="median")
+
+    def test_rejects_indivisible_group(self, rng):
+        qb = jnp.asarray(rng.rand(8, 15).astype(np.float32))
+        with pytest.raises(AssertionError):
+            lsh.group_sample_fuse(qb, qb, jnp.arange(15), 2)

@@ -1,0 +1,176 @@
+"""Layer-2 model tests: shapes, variant swapping, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+from compile.attention_api import VARIANTS, AttentionConfig
+
+LM_SMALL = model.LMConfig(vocab=64, d_model=128, n_heads=2, n_layers=2, d_ff=256)
+VIT_SMALL = model.ViTConfig(d_model=128, n_heads=2, n_layers=2, n_classes=10)
+
+
+@pytest.fixture(scope="module")
+def lm_params():
+    return model.lm_init(LM_SMALL, seed=0)
+
+
+@pytest.fixture(scope="module")
+def vit_params():
+    return model.vit_init(VIT_SMALL, seed=0)
+
+
+class TestLM:
+    def test_forward_shape(self, lm_params):
+        toks = jnp.zeros((2, 64), jnp.int32)
+        acfg = AttentionConfig(variant="standard")
+        logits = model.lm_forward(lm_params, toks, LM_SMALL, acfg)
+        assert logits.shape == (2, 64, 64)
+
+    def test_causality(self, lm_params, rng):
+        # changing a later token must not change earlier logits
+        toks = jnp.asarray(rng.randint(0, 64, (1, 64)), jnp.int32)
+        acfg = AttentionConfig(variant="distr_flash", group=2)
+        l1 = np.asarray(model.lm_forward(lm_params, toks, LM_SMALL, acfg))
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % 64)
+        l2 = np.asarray(model.lm_forward(lm_params, toks2, LM_SMALL, acfg))
+        np.testing.assert_allclose(l1[0, :32], l2[0, :32], atol=1e-4)
+
+    @pytest.mark.parametrize("variant", [v for v in VARIANTS if v != "linformer"])
+    def test_all_variants_run(self, lm_params, variant):
+        toks = jnp.zeros((1, 64), jnp.int32)
+        acfg = AttentionConfig(variant=variant, block_l=16, block_m=16, group=2)
+        logits = model.lm_forward(lm_params, toks, LM_SMALL, acfg)
+        assert logits.shape == (1, 64, 64)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_distr_close_to_standard(self, lm_params, rng):
+        # swap-in property (paper §4.6): same weights, approximate
+        # attention, predictions stay close. Random-init logits hover
+        # near zero, so compare next-token distributions, not raw rel-err.
+        toks = jnp.asarray(rng.randint(0, 64, (1, 64)), jnp.int32)
+        exact = model.lm_forward(lm_params, toks, LM_SMALL, AttentionConfig(variant="standard"))
+        approx = model.lm_forward(
+            lm_params, toks, LM_SMALL, AttentionConfig(variant="distr_flash", group=2)
+        )
+        hydra = model.lm_forward(lm_params, toks, LM_SMALL, AttentionConfig(variant="hydra"))
+
+        def corr(a):
+            pa = np.asarray(jax.nn.softmax(a, axis=-1)).ravel()
+            pe = np.asarray(jax.nn.softmax(exact, axis=-1)).ravel()
+            return np.corrcoef(pe, pa)[0, 1]
+
+        c_distr, c_hydra = corr(approx), corr(hydra)
+        # random-init logits are near-flat, so exact agreement is noise;
+        # require distr to track the exact model far better than the
+        # matrix-free baseline, and well at absolute level
+        assert c_distr > 0.8, f"distr swap-in drift too large: corr={c_distr}"
+        assert c_distr > c_hydra, f"distr ({c_distr}) not closer than hydra ({c_hydra})"
+
+    def test_flash_equals_standard(self, lm_params, rng):
+        toks = jnp.asarray(rng.randint(0, 64, (1, 64)), jnp.int32)
+        exact = model.lm_forward(lm_params, toks, LM_SMALL, AttentionConfig(variant="standard"))
+        fl = model.lm_forward(lm_params, toks, LM_SMALL, AttentionConfig(variant="flash"))
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(exact), atol=1e-4)
+
+    def test_rope_shift_changes_logits(self, lm_params, rng):
+        # RoPE must make position matter
+        toks = jnp.asarray(rng.randint(1, 64, (1, 64)), jnp.int32)
+        rolled = jnp.roll(toks, 7, axis=1)
+        acfg = AttentionConfig(variant="standard")
+        l1 = model.lm_forward(lm_params, toks, LM_SMALL, acfg)
+        l2 = model.lm_forward(lm_params, rolled, LM_SMALL, acfg)
+        assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+class TestViT:
+    def test_forward_shape(self, vit_params, rng):
+        imgs = jnp.asarray(rng.rand(2, 32, 32, 3).astype(np.float32))
+        logits = model.vit_forward(vit_params, imgs, VIT_SMALL, AttentionConfig(variant="standard"))
+        assert logits.shape == (2, 10)
+
+    def test_patchify_roundtrip_count(self):
+        cfg = VIT_SMALL
+        imgs = jnp.arange(2 * 32 * 32 * 3, dtype=jnp.float32).reshape(2, 32, 32, 3)
+        patches = model.patchify(cfg, imgs)
+        assert patches.shape == (2, cfg.n_patches, cfg.patch_dim)
+        # content preserved
+        assert float(patches.sum()) == pytest.approx(float(imgs.sum()), rel=1e-6)
+
+    def test_seq_len_is_16_aligned(self):
+        assert VIT_SMALL.seq_len % 16 == 0
+
+    @pytest.mark.parametrize("variant", ["standard", "flash", "distr", "distr_flash", "hydra"])
+    def test_variants_run(self, vit_params, rng, variant):
+        imgs = jnp.asarray(rng.rand(1, 32, 32, 3).astype(np.float32))
+        acfg = AttentionConfig(variant=variant, block_l=16, block_m=16, group=2)
+        logits = model.vit_forward(vit_params, imgs, VIT_SMALL, acfg)
+        assert logits.shape == (1, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_distr_swap_in_close(self, vit_params, rng):
+        imgs = jnp.asarray(rng.rand(2, 32, 32, 3).astype(np.float32))
+        exact = model.vit_forward(vit_params, imgs, VIT_SMALL, AttentionConfig(variant="standard"))
+        approx = model.vit_forward(
+            vit_params, imgs, VIT_SMALL, AttentionConfig(variant="distr_flash", group=2)
+        )
+        # logits needn't be identical but top-1 should usually agree on
+        # random nets; require correlation instead of argmax equality
+        c = np.corrcoef(np.asarray(exact).ravel(), np.asarray(approx).ravel())[0, 1]
+        assert c > 0.95
+
+
+class TestTraining:
+    def test_lm_loss_decreases(self, rng):
+        cfg = LM_SMALL
+        params = model.lm_init(cfg, seed=1)
+        acfg = AttentionConfig(variant="distr_flash", group=2, trainable=True)
+        step = jax.jit(train.make_lm_train_step(cfg, acfg, lr=1e-3))
+        opt = train.adamw_init(params)
+        toks = jnp.asarray(rng.randint(0, 64, (4, 64)), jnp.int32)
+        tgts = jnp.roll(toks, -1, axis=1)
+        losses = []
+        for _ in range(8):
+            params, opt, loss = step(params, opt, toks, tgts)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], f"no learning: {losses}"
+
+    def test_vit_loss_decreases(self, rng):
+        cfg = VIT_SMALL
+        params = model.vit_init(cfg, seed=1)
+        acfg = AttentionConfig(variant="distr", group=2)
+        step = jax.jit(train.make_vit_train_step(cfg, acfg, lr=1e-3))
+        opt = train.adamw_init(params)
+        imgs = jnp.asarray(rng.rand(8, 32, 32, 3).astype(np.float32))
+        labels = jnp.asarray(rng.randint(0, 10, (8,)), jnp.int32)
+        losses = []
+        for _ in range(8):
+            params, opt, loss = step(params, opt, imgs, labels)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], f"no learning: {losses}"
+
+    def test_sgd_momentum_update(self):
+        params = {"w": jnp.ones((2, 2))}
+        grads = {"w": jnp.full((2, 2), 0.5)}
+        mom = train.sgd_init(params)
+        p2, m2 = train.sgd_update(params, grads, mom, lr=0.1, beta=0.9)
+        np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.1 * 0.5)
+        p3, _ = train.sgd_update(p2, grads, m2, lr=0.1, beta=0.9)
+        # momentum accelerates the second step
+        assert float(p2["w"][0, 0] - p3["w"][0, 0]) > 0.05
+
+    def test_adamw_t_increments(self):
+        params = {"w": jnp.ones(3)}
+        opt = train.adamw_init(params)
+        p2, o2 = train.adamw_update(params, {"w": jnp.ones(3)}, opt)
+        assert float(o2["t"]) == 1.0
+        _, o3 = train.adamw_update(p2, {"w": jnp.ones(3)}, o2)
+        assert float(o3["t"]) == 2.0
+
+    def test_cross_entropy_perfect_prediction(self):
+        logits = jnp.full((1, 4, 8), -20.0)
+        targets = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        logits = logits.at[0, jnp.arange(4), targets[0]].set(20.0)
+        assert float(train.cross_entropy_lm(logits, targets)) < 1e-3

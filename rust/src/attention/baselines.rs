@@ -1,0 +1,410 @@
+//! Rust ports of the baseline approximate mechanisms (paper §4.1), used
+//! by the timing benches (Tables 6, 8). Mirrors
+//! `python/compile/kernels/baselines.py` — see that module's docstring
+//! for the fidelity notes.
+
+use crate::tensor::{dot, matmul, matmul_bt, softmax_rows, Matrix};
+
+fn l2_normalize_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+        for x in row.iter_mut() {
+            *x /= norm;
+        }
+    }
+    out
+}
+
+/// Hydra attention [3]: O = φ(Q) ⊙ Σ(φ(K) ⊙ V); O(N·d), no attention matrix.
+pub fn hydra_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    let qn = l2_normalize_rows(q);
+    let kn = l2_normalize_rows(k);
+    let (n, d) = (q.rows, q.cols);
+    let mut out = Matrix::zeros(n, d);
+    if causal {
+        let mut kv = vec![0.0f32; d];
+        for r in 0..n {
+            for c in 0..d {
+                kv[c] += kn.at(r, c) * v.at(r, c);
+                *out.at_mut(r, c) = qn.at(r, c) * kv[c];
+            }
+        }
+    } else {
+        let mut kv = vec![0.0f32; d];
+        for r in 0..k.rows {
+            for c in 0..d {
+                kv[c] += kn.at(r, c) * v.at(r, c);
+            }
+        }
+        for r in 0..n {
+            for c in 0..d {
+                *out.at_mut(r, c) = qn.at(r, c) * kv[c];
+            }
+        }
+    }
+    out
+}
+
+/// Focused linear attention (Flatten [15]): relu^3 feature map + local
+/// rank-restoration smoothing.
+pub fn flatten_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let phi = |m: &Matrix| -> Matrix {
+        let mut out = m.clone();
+        for r in 0..out.rows {
+            let norm_x = m.row(r).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let row = out.row_mut(r);
+            for x in row.iter_mut() {
+                *x = x.max(0.0).powi(3);
+            }
+            let norm_f = row.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+            for x in row.iter_mut() {
+                *x = *x / norm_f * norm_x;
+            }
+        }
+        out
+    };
+    let qf = phi(q);
+    let kf = phi(k);
+    let mut out = Matrix::zeros(n, d);
+    if causal {
+        // running (d×d) KV summary + running z
+        let mut kv = vec![0.0f32; d * d];
+        let mut z = vec![0.0f32; d];
+        for r in 0..n {
+            let krow = kf.row(r);
+            let vrow = v.row(r);
+            for a in 0..d {
+                let ka = krow[a];
+                if ka != 0.0 {
+                    for b in 0..d {
+                        kv[a * d + b] += ka * vrow[b];
+                    }
+                }
+                z[a] += krow[a];
+            }
+            let qrow = qf.row(r);
+            let den = dot(qrow, &z) + 1e-6;
+            let orow = out.row_mut(r);
+            for b in 0..d {
+                let mut num = 0.0;
+                for a in 0..d {
+                    num += qrow[a] * kv[a * d + b];
+                }
+                orow[b] = num / den;
+            }
+        }
+    } else {
+        // kv = kf^T v  (d×d), z = colsum(kf)
+        let kv = matmul(&crate::tensor::transpose(&kf), v);
+        let mut z = vec![0.0f32; d];
+        for r in 0..k.rows {
+            for (c, zc) in z.iter_mut().enumerate() {
+                *zc += kf.at(r, c);
+            }
+        }
+        let num = matmul(&qf, &kv);
+        for r in 0..n {
+            let den = dot(qf.row(r), &z) + 1e-6;
+            for c in 0..d {
+                *out.at_mut(r, c) = num.at(r, c) / den;
+            }
+        }
+    }
+    // DWC stand-in: backward-looking local average in causal mode
+    let mut smoothed = out.clone();
+    for r in 0..n {
+        for c in 0..d {
+            let local = if causal {
+                (v.at(r, c)
+                    + if r >= 1 { v.at(r - 1, c) } else { 0.0 }
+                    + if r >= 2 { v.at(r - 2, c) } else { 0.0 })
+                    / 3.0
+            } else {
+                (v.at(r, c)
+                    + if r >= 1 { v.at(r - 1, c) } else { 0.0 }
+                    + if r + 1 < n { v.at(r + 1, c) } else { 0.0 })
+                    / 3.0
+            };
+            *smoothed.at_mut(r, c) += 0.1 * local;
+        }
+    }
+    smoothed
+}
+
+/// HyperAttention [18]: block-diagonal exact attention (sorted by sign-LSH
+/// when non-causal; original order + masking when causal), plus a
+/// uniformly-sampled residual estimating the off-diagonal mass
+/// (importance weight N / n_samples), mirroring the Python baseline.
+pub fn hyper_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool, seed: u64) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let block = 16.min(n);
+    let n_samples = if causal { 0 } else { 16.min(n) };
+    let scale = 1.0 / (d as f32).sqrt();
+    let order: Vec<usize> = if causal {
+        (0..n).collect()
+    } else {
+        let proj = Matrix::randn(d, 8, seed ^ 0xDEAD);
+        let hash = |row: &[f32]| -> u32 {
+            let mut h = 0u32;
+            for b in 0..8 {
+                let mut s = 0.0;
+                for (i, &x) in row.iter().enumerate() {
+                    s += x * proj.at(i, b);
+                }
+                if s > 0.0 {
+                    h |= 1 << b;
+                }
+            }
+            h
+        };
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by_key(|&r| (hash(q.row(r)), r));
+        idx
+    };
+    // uniformly sampled residual columns (shared across rows)
+    let samples: Vec<usize> = if n_samples > 0 {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed ^ 0xBEEF);
+        let mut s = rng.sample_distinct(n, n_samples);
+        s.sort_unstable();
+        s
+    } else {
+        Vec::new()
+    };
+    let weight = if n_samples > 0 { n as f32 / n_samples as f32 } else { 0.0 };
+
+    let mut out = Matrix::zeros(n, d);
+    for b0 in (0..n).step_by(block) {
+        let rows = &order[b0..(b0 + block).min(n)];
+        for &r in rows.iter() {
+            let mut scores = vec![f32::NEG_INFINITY; rows.len()];
+            for (ci, &c) in rows.iter().enumerate() {
+                if causal && c > r {
+                    continue;
+                }
+                scores[ci] = dot(q.row(r), k.row(c)) * scale;
+            }
+            let mut max = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            // residual scores (non-causal only) merge under the same max
+            let res_scores: Vec<f32> = samples
+                .iter()
+                .map(|&c| dot(q.row(r), k.row(c)) * scale)
+                .collect();
+            for &s in &res_scores {
+                max = max.max(s);
+            }
+            let mut den = 0.0;
+            let orow = out.row_mut(r);
+            for (ci, &c) in rows.iter().enumerate() {
+                if scores[ci] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p = (scores[ci] - max).exp();
+                den += p;
+                for (o, &vv) in orow.iter_mut().zip(v.row(c)) {
+                    *o += p * vv;
+                }
+            }
+            for (&s, &c) in res_scores.iter().zip(&samples) {
+                let p = (s - max).exp() * weight;
+                den += p;
+                for (o, &vv) in orow.iter_mut().zip(v.row(c)) {
+                    *o += p * vv;
+                }
+            }
+            if den > 0.0 {
+                for o in orow.iter_mut() {
+                    *o /= den;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Gauss-Jordan inverse with ridge — the m×m landmark system of Primal.
+fn ridge_inverse(a: &Matrix, ridge: f32) -> Matrix {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut aug = vec![0.0f64; n * 2 * n];
+    for r in 0..n {
+        for c in 0..n {
+            aug[r * 2 * n + c] = a.at(r, c) as f64 + if r == c { ridge as f64 } else { 0.0 };
+        }
+        aug[r * 2 * n + n + r] = 1.0;
+    }
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if aug[r * 2 * n + col].abs() > aug[piv * 2 * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..2 * n {
+                aug.swap(col * 2 * n + c, piv * 2 * n + c);
+            }
+        }
+        let diag = aug[col * 2 * n + col];
+        if diag.abs() < 1e-12 {
+            continue;
+        }
+        for c in 0..2 * n {
+            aug[col * 2 * n + c] /= diag;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = aug[r * 2 * n + col];
+            if f != 0.0 {
+                for c in 0..2 * n {
+                    aug[r * 2 * n + c] -= f * aug[col * 2 * n + c];
+                }
+            }
+        }
+    }
+    let mut inv = Matrix::zeros(n, n);
+    for r in 0..n {
+        for c in 0..n {
+            *inv.at_mut(r, c) = aug[r * 2 * n + n + c] as f32;
+        }
+    }
+    inv
+}
+
+/// Primal-style low-rank (Nyström landmark) attention.
+pub fn primal_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool, rank: usize) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let m = rank.min(n);
+    let stride = (n / m).max(1);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut lk = Matrix::zeros(m, d);
+    let mut lq = Matrix::zeros(m, d);
+    for i in 0..m {
+        lk.row_mut(i).copy_from_slice(k.row(i * stride));
+        lq.row_mut(i).copy_from_slice(q.row(i * stride));
+    }
+    let scale_mat = |mut mtx: Matrix| -> Matrix {
+        for x in &mut mtx.data {
+            *x *= scale;
+        }
+        mtx
+    };
+    if causal {
+        // logits-space low-rank reconstruction, masked, softmaxed
+        let f0 = scale_mat(matmul_bt(q, &lk));
+        let a = scale_mat(matmul_bt(&lq, &lk));
+        let b = scale_mat(matmul_bt(&lq, k));
+        let a_inv = ridge_inverse(&a, 1e-4);
+        let mut s = matmul(&matmul(&f0, &a_inv), &b);
+        for r in 0..n {
+            for c in (r + 1)..n {
+                *s.at_mut(r, c) = f32::NEG_INFINITY;
+            }
+        }
+        softmax_rows(&mut s);
+        matmul(&s, v)
+    } else {
+        let mut f0 = scale_mat(matmul_bt(q, &lk));
+        softmax_rows(&mut f0);
+        let mut a = scale_mat(matmul_bt(&lq, &lk));
+        softmax_rows(&mut a);
+        let mut b = scale_mat(matmul_bt(&lq, k));
+        softmax_rows(&mut b);
+        let a_inv = ridge_inverse(&a, 1e-4);
+        matmul(&f0, &matmul(&a_inv, &matmul(&b, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::standard::standard_attention;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        (Matrix::randn(n, d, seed), Matrix::randn(n, d, seed + 1), Matrix::randn(n, d, seed + 2))
+    }
+
+    #[test]
+    fn all_finite_and_shaped() {
+        let (q, k, v) = qkv(32, 16, 1);
+        for (name, out) in [
+            ("hydra", hydra_attention(&q, &k, &v, false)),
+            ("flatten", flatten_attention(&q, &k, &v, false)),
+            ("hyper", hyper_attention(&q, &k, &v, false, 0)),
+            ("primal", primal_attention(&q, &k, &v, false, 8)),
+        ] {
+            assert_eq!((out.rows, out.cols), (32, 16), "{name}");
+            assert!(out.data.iter().all(|x| x.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn causal_variants_no_future_leak() {
+        let (q, k, v) = qkv(32, 16, 5);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..16 {
+            *k2.at_mut(31, c) += 4.0;
+            *v2.at_mut(31, c) -= 4.0;
+        }
+        for (name, f) in [
+            ("hydra", hydra_attention as fn(&Matrix, &Matrix, &Matrix, bool) -> Matrix),
+            ("flatten", flatten_attention),
+        ] {
+            let a = f(&q, &k, &v, true);
+            let b = f(&q, &k2, &v2, true);
+            for r in 0..16 {
+                for c in 0..16 {
+                    assert!((a.at(r, c) - b.at(r, c)).abs() < 1e-5, "{name} row {r}");
+                }
+            }
+        }
+        let a = hyper_attention(&q, &k, &v, true, 0);
+        let b = hyper_attention(&q, &k2, &v2, true, 0);
+        for r in 0..16 {
+            for c in 0..16 {
+                assert!((a.at(r, c) - b.at(r, c)).abs() < 1e-5, "hyper row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn ridge_inverse_correct() {
+        let a = Matrix::from_vec(2, 2, vec![4.0, 7.0, 2.0, 6.0]);
+        let inv = ridge_inverse(&a, 0.0);
+        let prod = matmul(&a, &inv);
+        for r in 0..2 {
+            for c in 0..2 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((prod.at(r, c) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn hyper_closer_than_hydra() {
+        let mut err_hyper = 0.0;
+        let mut err_hydra = 0.0;
+        for seed in 0..3 {
+            let (q, k, v) = qkv(64, 32, 10 + seed);
+            let exact = standard_attention(&q, &k, &v, false);
+            err_hyper += hyper_attention(&q, &k, &v, false, 0).mean_abs_diff(&exact);
+            err_hydra += hydra_attention(&q, &k, &v, false).mean_abs_diff(&exact);
+        }
+        assert!(err_hyper < err_hydra);
+    }
+
+    #[test]
+    fn primal_higher_rank_not_worse() {
+        let (q, k, v) = qkv(64, 32, 20);
+        let exact = standard_attention(&q, &k, &v, false);
+        let lo = primal_attention(&q, &k, &v, false, 4).mean_abs_diff(&exact);
+        let hi = primal_attention(&q, &k, &v, false, 32).mean_abs_diff(&exact);
+        assert!(hi <= lo * 1.5, "lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,312 @@
+//! DistrAttention engine (paper §3) — the Rust mirror of the Pallas
+//! kernel in `python/compile/kernels/distr.py`.
+//!
+//! Per Q block: LSH permutation → sample Q columns (one estimate per
+//! group of G*) → inner loop over K blocks: fuse K columns group-wise and
+//! contract over d/G* instead of d → online softmax → PV with the *full*
+//! V. The d/G* contraction is where the paper's 37% speedup over
+//! FlashAttention-2 comes from (Fig. 9).
+
+use super::flash2::FlashParams;
+use super::lsh;
+use crate::tensor::Matrix;
+
+/// DistrAttention tuning knobs (paper: G* = sampling rate, l/m = blocks).
+#[derive(Clone, Copy, Debug)]
+pub struct DistrParams {
+    pub flash: FlashParams,
+    /// G*: columns fused per group. 1 = exact.
+    pub group: usize,
+    /// `true`: estimate = group mean (matches the paper's error bands);
+    /// `false`: estimate = first column in sorted order (the paper's
+    /// literal "sampling").
+    pub sample_mean: bool,
+    /// Center columns before LSH projection (DESIGN.md §5 S2).
+    pub center: bool,
+    pub seed: u64,
+}
+
+impl Default for DistrParams {
+    fn default() -> Self {
+        Self {
+            flash: FlashParams::default(),
+            group: 2,
+            sample_mean: true,
+            center: true,
+            seed: 0,
+        }
+    }
+}
+
+/// The approximated score matrix Ŝ ≈ Q K^T (unscaled) — Tables 3/4, Fig 7.
+pub fn distr_scores(q: &Matrix, k: &Matrix, p: &DistrParams) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let bl = p.flash.block_l.min(n);
+    assert_eq!(d % p.group, 0);
+    let dg = d / p.group;
+    let perms = lsh::block_permutations(q, bl, p.seed, p.center);
+    let mut out = Matrix::zeros(n, k.rows);
+    let n_kv = k.rows;
+    crate::util::parallel::par_chunks_mut(&mut out.data, bl * n_kv, |iq, chunk| {
+            let q0 = iq * bl;
+            let perm = &perms[iq];
+            let q_s = sample_q(q, q0, bl, perm, p.group, dg, p.sample_mean);
+            let k_f = fuse_k(k, 0, n_kv, perm, p.group, dg);
+            for r in 0..bl {
+                let qrow = &q_s[r * dg..(r + 1) * dg];
+                let orow = &mut chunk[r * n_kv..(r + 1) * n_kv];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    *o = crate::tensor::dot(qrow, &k_f[c * dg..(c + 1) * dg]);
+                }
+            }
+        });
+    out
+}
+
+/// Sampled Q estimates for one block: `(bl, d/G*)` row-major.
+#[inline]
+fn sample_q(
+    q: &Matrix,
+    q0: usize,
+    bl: usize,
+    perm: &[usize],
+    group: usize,
+    dg: usize,
+    mean: bool,
+) -> Vec<f32> {
+    let mut q_s = vec![0.0f32; bl * dg];
+    for r in 0..bl {
+        let src = q.row(q0 + r);
+        let dst = &mut q_s[r * dg..(r + 1) * dg];
+        if mean {
+            let inv = 1.0 / group as f32;
+            for (g, dv) in dst.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for j in 0..group {
+                    acc += src[perm[g * group + j]];
+                }
+                *dv = acc * inv;
+            }
+        } else {
+            for (g, dv) in dst.iter_mut().enumerate() {
+                *dv = src[perm[g * group]];
+            }
+        }
+    }
+    q_s
+}
+
+/// Fused K rows for `[k0, k0+rows)`: each group's columns summed,
+/// `(rows, d/G*)` row-major. This is the paper's "fusion" step.
+#[inline]
+fn fuse_k(k: &Matrix, k0: usize, rows: usize, perm: &[usize], group: usize, dg: usize) -> Vec<f32> {
+    let mut k_f = vec![0.0f32; rows * dg];
+    for r in 0..rows {
+        let src = k.row(k0 + r);
+        let dst = &mut k_f[r * dg..(r + 1) * dg];
+        for (g, dv) in dst.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for j in 0..group {
+                acc += src[perm[g * group + j]];
+            }
+            *dv = acc;
+        }
+    }
+    k_f
+}
+
+/// Full DistrAttention: Ŝ via sampling/fusion, then online softmax + PV
+/// in the FlashAttention-2 double loop.
+pub fn distr_attention(q: &Matrix, k: &Matrix, v: &Matrix, p: &DistrParams, causal: bool) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let n_kv = k.rows;
+    let bl = p.flash.block_l.min(n);
+    let bm = p.flash.block_m.min(n_kv);
+    assert_eq!(n % bl, 0);
+    assert_eq!(n_kv % bm, 0);
+    assert_eq!(d % p.group, 0);
+    if causal {
+        assert_eq!(bl % bm, 0, "causal needs l % m == 0");
+    }
+    let dg = d / p.group;
+    let scale = 1.0 / (d as f32).sqrt();
+    let perms = lsh::block_permutations(q, bl, p.seed, p.center);
+
+    let mut out = Matrix::zeros(n, d);
+    crate::util::parallel::par_chunks_mut(&mut out.data, bl * d, |iq, o_chunk| {
+            let q0 = iq * bl;
+            let perm = &perms[iq];
+            // sampling once per Q block; reused across the whole inner loop
+            let q_s = sample_q(q, q0, bl, perm, p.group, dg, p.sample_mean);
+            let mut m_i = vec![f32::NEG_INFINITY; bl];
+            let mut l_i = vec![0.0f32; bl];
+            let mut s_tile = vec![0.0f32; bl * bm];
+            let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
+            for jk in 0..n_blocks {
+                let k0 = jk * bm;
+                // fusion of this K block under the Q block's permutation
+                let k_f = fuse_k(k, k0, bm, perm, p.group, dg);
+                for r in 0..bl {
+                    let qrow = &q_s[r * dg..(r + 1) * dg];
+                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
+                    let visible = if causal { (q0 + r + 1).saturating_sub(k0).min(bm) } else { bm };
+                    for (c, s) in srow[..visible].iter_mut().enumerate() {
+                        *s = crate::tensor::dot(qrow, &k_f[c * dg..(c + 1) * dg]) * scale;
+                    }
+                    for s in srow[visible..].iter_mut() {
+                        *s = f32::NEG_INFINITY;
+                    }
+                }
+                for r in 0..bl {
+                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
+                    let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let m_new = m_i[r].max(row_max);
+                    if m_new == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let alpha = if m_i[r] == f32::NEG_INFINITY { 0.0 } else { (m_i[r] - m_new).exp() };
+                    let orow = &mut o_chunk[r * d..(r + 1) * d];
+                    if alpha != 1.0 {
+                        for x in orow.iter_mut() {
+                            *x *= alpha;
+                        }
+                    }
+                    let mut p_sum = 0.0f32;
+                    for (c, s) in srow.iter_mut().enumerate() {
+                        let pv = (*s - m_new).exp();
+                        *s = pv;
+                        p_sum += pv;
+                        if pv != 0.0 {
+                            let vrow = v.row(k0 + c);
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += pv * vv;
+                            }
+                        }
+                    }
+                    l_i[r] = alpha * l_i[r] + p_sum;
+                    m_i[r] = m_new;
+                }
+            }
+            for r in 0..bl {
+                let denom = if l_i[r] == 0.0 { 1.0 } else { l_i[r] };
+                for x in &mut o_chunk[r * d..(r + 1) * d] {
+                    *x /= denom;
+                }
+            }
+        });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::standard::standard_attention;
+
+    fn params(l: usize, m: usize, g: usize) -> DistrParams {
+        DistrParams {
+            flash: FlashParams { block_l: l, block_m: m },
+            group: g,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn group1_is_exact() {
+        let q = Matrix::uniform(64, 64, 1);
+        let k = Matrix::uniform(64, 64, 2);
+        let v = Matrix::uniform(64, 64, 3);
+        let got = distr_attention(&q, &k, &v, &params(16, 16, 1), false);
+        let want = standard_attention(&q, &k, &v, false);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn approximation_error_band() {
+        // paper §4.2: ~1% mean relative score error at G*=2 on uniform(0,1)
+        let mut means = Vec::new();
+        for seed in 0..5 {
+            let q = Matrix::uniform(64, 64, seed);
+            let k = Matrix::uniform(64, 64, seed + 50);
+            let truth = crate::tensor::matmul_bt(&q, &k);
+            let approx = distr_scores(&q, &k, &params(2, 16, 2));
+            let (_, _, mean) = approx.rel_err_stats(&truth);
+            means.push(mean);
+        }
+        let avg = means.iter().sum::<f32>() / means.len() as f32;
+        assert!(avg < 0.03, "mean rel err {avg} out of band");
+    }
+
+    #[test]
+    fn error_grows_with_group() {
+        let q = Matrix::uniform(64, 64, 9);
+        let k = Matrix::uniform(64, 64, 10);
+        let truth = crate::tensor::matmul_bt(&q, &k);
+        let mut prev = 0.0;
+        for g in [2, 16] {
+            let (_, _, mean) = distr_scores(&q, &k, &params(2, 16, g)).rel_err_stats(&truth);
+            assert!(mean > prev, "G*={g}");
+            prev = mean;
+        }
+    }
+
+    #[test]
+    fn attention_output_close_to_exact() {
+        let q = Matrix::uniform(64, 64, 4);
+        let k = Matrix::uniform(64, 64, 5);
+        let v = Matrix::uniform(64, 64, 6);
+        let got = distr_attention(&q, &k, &v, &params(16, 16, 2), false);
+        let want = standard_attention(&q, &k, &v, false);
+        assert!(got.mean_abs_diff(&want) < 0.01, "{}", got.mean_abs_diff(&want));
+    }
+
+    #[test]
+    fn causal_no_future_leak() {
+        let q = Matrix::randn(64, 32, 7);
+        let k = Matrix::randn(64, 32, 8);
+        let v = Matrix::randn(64, 32, 9);
+        let out1 = distr_attention(&q, &k, &v, &params(16, 16, 2), true);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..32 {
+            *k2.at_mut(63, c) += 5.0;
+            *v2.at_mut(63, c) -= 5.0;
+        }
+        let out2 = distr_attention(&q, &k2, &v2, &params(16, 16, 2), true);
+        // all rows strictly before the perturbed token's block must agree
+        for r in 0..48 {
+            for c in 0..32 {
+                assert!((out1.at(r, c) - out2.at(r, c)).abs() < 1e-6, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_first_vs_mean_differ_but_both_close() {
+        let q = Matrix::uniform(64, 64, 11);
+        let k = Matrix::uniform(64, 64, 12);
+        let v = Matrix::uniform(64, 64, 13);
+        let want = standard_attention(&q, &k, &v, false);
+        let mut pm = params(16, 16, 2);
+        pm.sample_mean = true;
+        let mut pf = params(16, 16, 2);
+        pf.sample_mean = false;
+        let om = distr_attention(&q, &k, &v, &pm, false);
+        let of = distr_attention(&q, &k, &v, &pf, false);
+        assert!(om != of);
+        assert!(om.mean_abs_diff(&want) < 0.02);
+        assert!(of.mean_abs_diff(&want) < 0.05);
+        // mean sampling is the tighter estimate
+        assert!(om.mean_abs_diff(&want) <= of.mean_abs_diff(&want));
+    }
+
+    #[test]
+    fn output_shape_preserved_for_all_groups() {
+        let q = Matrix::uniform(32, 64, 14);
+        let k = Matrix::uniform(32, 64, 15);
+        let v = Matrix::uniform(32, 64, 16);
+        for g in [1, 2, 4, 8, 16] {
+            let out = distr_attention(&q, &k, &v, &params(16, 16, g), false);
+            assert_eq!((out.rows, out.cols), (32, 64));
+        }
+    }
+}

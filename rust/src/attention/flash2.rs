@@ -1,0 +1,171 @@
+//! FlashAttention-2 schedule in Rust (paper §2.2.2, Fig. 3).
+//!
+//! Outer loop over Q blocks (parallelized across threads — the paper's
+//! threadblocks), inner sequential loop over K/V blocks with the online
+//! softmax. S and P exist only as an `l × m` scratch tile per thread,
+//! never as N×N — the memory behaviour the paper's I/O model assumes.
+
+use crate::tensor::{dot, Matrix};
+
+/// Block sizes: `l` rows of Q per outer step, `m` rows of K/V per inner
+/// step (the paper's (l, m); see `simulator::block_select` for tuning).
+#[derive(Clone, Copy, Debug)]
+pub struct FlashParams {
+    pub block_l: usize,
+    pub block_m: usize,
+}
+
+impl Default for FlashParams {
+    fn default() -> Self {
+        Self { block_l: 64, block_m: 64 }
+    }
+}
+
+/// Exact attention, FlashAttention-2 schedule. `q: (N, d)`, `k/v: (Nk, d)`.
+pub fn flash2_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    p: &FlashParams,
+    causal: bool,
+) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let n_kv = k.rows;
+    let bl = p.block_l.min(n);
+    let bm = p.block_m.min(n_kv);
+    assert_eq!(n % bl, 0, "N % l != 0");
+    assert_eq!(n_kv % bm, 0, "Nk % m != 0");
+    if causal {
+        assert_eq!(bl % bm, 0, "causal needs l % m == 0");
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut out = Matrix::zeros(n, d);
+    crate::util::parallel::par_chunks_mut(&mut out.data, bl * d, |iq, o_chunk| {
+            let q0 = iq * bl;
+            // per-thread online-softmax state
+            let mut m_i = vec![f32::NEG_INFINITY; bl];
+            let mut l_i = vec![0.0f32; bl];
+            let mut s_tile = vec![0.0f32; bl * bm];
+            let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
+            for jk in 0..n_blocks {
+                let k0 = jk * bm;
+                // S tile = Q_blk K_blk^T * scale. The causal mask is a
+                // per-row column bound, not a per-element branch.
+                for r in 0..bl {
+                    let qrow = q.row(q0 + r);
+                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
+                    let visible = if causal { (q0 + r + 1).saturating_sub(k0).min(bm) } else { bm };
+                    for (c, s) in srow[..visible].iter_mut().enumerate() {
+                        *s = dot(qrow, k.row(k0 + c)) * scale;
+                    }
+                    for s in srow[visible..].iter_mut() {
+                        *s = f32::NEG_INFINITY;
+                    }
+                }
+                // online rescale + accumulate PV
+                for r in 0..bl {
+                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
+                    let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let m_new = m_i[r].max(row_max);
+                    if m_new == f32::NEG_INFINITY {
+                        continue; // fully masked so far
+                    }
+                    let alpha = if m_i[r] == f32::NEG_INFINITY { 0.0 } else { (m_i[r] - m_new).exp() };
+                    let orow = &mut o_chunk[r * d..(r + 1) * d];
+                    if alpha != 1.0 {
+                        for x in orow.iter_mut() {
+                            *x *= alpha;
+                        }
+                    }
+                    let mut p_sum = 0.0f32;
+                    for (c, s) in srow.iter_mut().enumerate() {
+                        let pv = (*s - m_new).exp();
+                        *s = pv;
+                        p_sum += pv;
+                        if pv != 0.0 {
+                            let vrow = v.row(k0 + c);
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += pv * vv;
+                            }
+                        }
+                    }
+                    l_i[r] = alpha * l_i[r] + p_sum;
+                    m_i[r] = m_new;
+                }
+            }
+            // final normalization
+            for r in 0..bl {
+                let denom = if l_i[r] == 0.0 { 1.0 } else { l_i[r] };
+                for x in &mut o_chunk[r * d..(r + 1) * d] {
+                    *x /= denom;
+                }
+            }
+        });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::standard::standard_attention;
+
+    #[test]
+    fn matches_standard() {
+        for (n, d, seed) in [(64, 64, 1), (128, 32, 2), (64, 128, 3)] {
+            let q = Matrix::uniform(n, d, seed);
+            let k = Matrix::uniform(n, d, seed + 10);
+            let v = Matrix::uniform(n, d, seed + 20);
+            let p = FlashParams { block_l: 16, block_m: 16 };
+            let got = flash2_attention(&q, &k, &v, &p, false);
+            let want = standard_attention(&q, &k, &v, false);
+            assert!(got.max_abs_diff(&want) < 1e-5, "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        let q = Matrix::randn(128, 64, 4);
+        let k = Matrix::randn(128, 64, 5);
+        let v = Matrix::randn(128, 64, 6);
+        let base = flash2_attention(&q, &k, &v, &FlashParams { block_l: 16, block_m: 16 }, false);
+        for (l, m) in [(32, 16), (16, 32), (64, 64), (128, 128), (64, 32)] {
+            let other = flash2_attention(&q, &k, &v, &FlashParams { block_l: l, block_m: m }, false);
+            assert!(base.max_abs_diff(&other) < 1e-5, "(l={l}, m={m})");
+        }
+    }
+
+    #[test]
+    fn causal_matches_standard() {
+        let q = Matrix::randn(64, 32, 7);
+        let k = Matrix::randn(64, 32, 8);
+        let v = Matrix::randn(64, 32, 9);
+        let p = FlashParams { block_l: 32, block_m: 16 };
+        let got = flash2_attention(&q, &k, &v, &p, true);
+        let want = standard_attention(&q, &k, &v, true);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn numerically_stable_large_logits() {
+        let mut q = Matrix::randn(32, 32, 10);
+        for x in &mut q.data {
+            *x *= 50.0;
+        }
+        let k = q.clone();
+        let v = Matrix::randn(32, 32, 11);
+        let out = flash2_attention(&q, &k, &v, &FlashParams { block_l: 16, block_m: 16 }, false);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rectangular_kv() {
+        // cross-attention shape: Nq != Nk
+        let q = Matrix::randn(32, 16, 12);
+        let k = Matrix::randn(64, 16, 13);
+        let v = Matrix::randn(64, 16, 14);
+        let got = flash2_attention(&q, &k, &v, &FlashParams { block_l: 16, block_m: 16 }, false);
+        let want = standard_attention(&q, &k, &v, false);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+}

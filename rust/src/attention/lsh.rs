@@ -1,0 +1,162 @@
+//! LSH column grouping (paper §3.2) — Rust mirror of
+//! `python/compile/kernels/lsh.py`.
+//!
+//! Columns of a Q block are projected to N'=16 dimensions, sign-binarized,
+//! Gray-decoded to an integer rank, and sorted; consecutive runs of G*
+//! indices form the sampling/fusion groups. Ties break by column index so
+//! the permutation is unique (same rule as the Python side).
+
+use crate::tensor::Matrix;
+
+/// N' in the paper: the projection dimensionality / matrix-unit tile.
+pub const N_PRIME: usize = 16;
+
+/// Deterministic Gaussian projection `(N', block_l)`, seeded per shape.
+pub fn projection_matrix(block_l: usize, seed: u64) -> Matrix {
+    Matrix::randn(N_PRIME, block_l, seed ^ (block_l as u64).wrapping_mul(0x9E37_79B1))
+}
+
+/// Decode a binary-reflected Gray code to its integer rank.
+#[inline]
+pub fn gray_decode(mut g: u32) -> u32 {
+    let mut shift = 1;
+    while shift < 32 {
+        g ^= g >> shift;
+        shift <<= 1;
+    }
+    g
+}
+
+/// Hash each of the `d` columns of `block` (shape `(l, d)`) to a u32.
+///
+/// `center` subtracts the per-row mean across columns first (see the
+/// Python docstring for why this matters on all-positive activations).
+pub fn hash_columns(block: &Matrix, proj: &Matrix, center: bool) -> Vec<u32> {
+    let (l, d) = (block.rows, block.cols);
+    assert_eq!(proj.cols, l, "projection shape mismatch");
+    // column means of the centered block: mean over the d columns per row
+    let mut row_mean = vec![0.0f32; l];
+    if center {
+        for r in 0..l {
+            row_mean[r] = block.row(r).iter().sum::<f32>() / d as f32;
+        }
+    }
+    let mut hashes = vec![0u32; d];
+    // projected[p][c] = sum_r proj[p][r] * (block[r][c] - mean[r])
+    for p in 0..N_PRIME {
+        let prow = proj.row(p);
+        let mut acc = vec![0.0f32; d];
+        for r in 0..l {
+            let w = prow[r];
+            let brow = block.row(r);
+            let mu = row_mean[r];
+            for c in 0..d {
+                acc[c] += w * (brow[c] - mu);
+            }
+        }
+        for c in 0..d {
+            if acc[c] > 0.0 {
+                hashes[c] |= 1 << p;
+            }
+        }
+    }
+    hashes.iter().map(|&h| gray_decode(h)).collect()
+}
+
+/// The grouping permutation of one block: argsort of (hash, col) keys.
+pub fn block_permutation(block: &Matrix, proj: &Matrix, center: bool) -> Vec<usize> {
+    let hashes = hash_columns(block, proj, center);
+    let mut idx: Vec<usize> = (0..hashes.len()).collect();
+    idx.sort_by_key(|&c| (hashes[c], c));
+    idx
+}
+
+/// Permutations for every `block_l`-row block of `q`: `(N/block_l)` perms.
+pub fn block_permutations(q: &Matrix, block_l: usize, seed: u64, center: bool) -> Vec<Vec<usize>> {
+    assert_eq!(q.rows % block_l, 0, "N={} % block_l={} != 0", q.rows, block_l);
+    let proj = projection_matrix(block_l, seed);
+    (0..q.rows / block_l)
+        .map(|i| block_permutation(&q.row_block(i * block_l, block_l), &proj, center))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gray_encode(b: u32) -> u32 {
+        b ^ (b >> 1)
+    }
+
+    #[test]
+    fn gray_decode_inverts_encode() {
+        for b in 0..4096u32 {
+            assert_eq!(gray_decode(gray_encode(b)), b);
+        }
+    }
+
+    #[test]
+    fn gray_locality() {
+        // flipping bit k moves the decoded rank by at most 2^(k+1)
+        let base = 0b1011_0011_1000_1011u32;
+        for k in 0..16 {
+            let a = gray_decode(base) as i64;
+            let b = gray_decode(base ^ (1 << k)) as i64;
+            assert!((a - b).abs() <= 1 << (k + 1), "bit {k}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let q = Matrix::uniform(64, 48, 3);
+        for perm in block_permutations(&q, 16, 0, true) {
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..48).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let q = Matrix::uniform(32, 32, 5);
+        assert_eq!(block_permutations(&q, 16, 0, true), block_permutations(&q, 16, 0, true));
+    }
+
+    #[test]
+    fn duplicate_columns_hash_equal_and_group_adjacent() {
+        let base = Matrix::randn(16, 8, 7);
+        // build (16, 16) with column pairs duplicated
+        let mut dup = Matrix::zeros(16, 16);
+        for r in 0..16 {
+            for c in 0..8 {
+                *dup.at_mut(r, 2 * c) = base.at(r, c);
+                *dup.at_mut(r, 2 * c + 1) = base.at(r, c);
+            }
+        }
+        let proj = projection_matrix(16, 0);
+        let h = hash_columns(&dup, &proj, true);
+        for c in 0..8 {
+            assert_eq!(h[2 * c], h[2 * c + 1]);
+        }
+        let perm = block_permutation(&dup, &proj, true);
+        for c in 0..8 {
+            let a = perm.iter().position(|&x| x == 2 * c).unwrap();
+            let b = perm.iter().position(|&x| x == 2 * c + 1).unwrap();
+            assert_eq!(a.abs_diff(b), 1, "pair {c} not adjacent");
+        }
+    }
+
+    #[test]
+    fn different_blocks_different_perms() {
+        let q = Matrix::randn(128, 64, 11);
+        let perms = block_permutations(&q, 16, 0, true);
+        assert!(perms.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_n_panics() {
+        let q = Matrix::uniform(60, 32, 1);
+        block_permutations(&q, 16, 0, true);
+    }
+}

@@ -1,0 +1,171 @@
+//! Rust-native attention engines.
+//!
+//! These mirror the Layer-1 kernels (and the paper's baselines) in pure
+//! Rust so the timing benches can sweep arbitrary `(N, d, l, m, G*)`
+//! without one PJRT artifact per shape, and so the coordinator has a
+//! shape-agnostic fallback path. Numerics are cross-checked against the
+//! same invariants as the Pallas kernels (flash == standard exactly,
+//! distr within the approximation band, grouping laws).
+//!
+//! `Engine` is the uniform entry point the benches and the serving layer
+//! dispatch through.
+
+mod baselines;
+mod distr;
+mod flash2;
+mod lsh;
+mod standard;
+
+pub use baselines::{flatten_attention, hydra_attention, hyper_attention, primal_attention};
+pub use distr::{distr_attention, distr_scores, DistrParams};
+pub use flash2::{flash2_attention, FlashParams};
+pub use lsh::{block_permutations, gray_decode, hash_columns, projection_matrix};
+pub use standard::standard_attention;
+
+use crate::tensor::Matrix;
+
+/// Attention mechanism selector, matching `python/compile/attention_api.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Standard,
+    Flash2,
+    Distr,
+    Hydra,
+    Hyper,
+    Flatten,
+    Primal,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 7] = [
+        Variant::Standard,
+        Variant::Flash2,
+        Variant::Distr,
+        Variant::Hydra,
+        Variant::Hyper,
+        Variant::Flatten,
+        Variant::Primal,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Standard => "standard",
+            Variant::Flash2 => "flash2",
+            Variant::Distr => "distr",
+            Variant::Hydra => "hydra",
+            Variant::Hyper => "hyper",
+            Variant::Flatten => "flatten",
+            Variant::Primal => "primal",
+        }
+    }
+
+    /// Exact mechanisms reproduce softmax attention bit-for-bit (up to
+    /// float reassociation); approximate ones trade accuracy for speed.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, Variant::Standard | Variant::Flash2)
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "standard" => Variant::Standard,
+            "flash2" | "flash" => Variant::Flash2,
+            "distr" | "distr_flash" => Variant::Distr,
+            "hydra" => Variant::Hydra,
+            "hyper" => Variant::Hyper,
+            "flatten" => Variant::Flatten,
+            "primal" => Variant::Primal,
+            other => return Err(format!("unknown attention variant `{other}`")),
+        })
+    }
+}
+
+/// One attention engine: a variant plus its tuning knobs.
+#[derive(Clone, Debug)]
+pub struct Engine {
+    pub variant: Variant,
+    pub flash: FlashParams,
+    pub distr: DistrParams,
+    pub causal: bool,
+}
+
+impl Engine {
+    pub fn new(variant: Variant) -> Self {
+        Self {
+            variant,
+            flash: FlashParams::default(),
+            distr: DistrParams::default(),
+            causal: false,
+        }
+    }
+
+    pub fn causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
+        self
+    }
+
+    pub fn with_blocks(mut self, l: usize, m: usize) -> Self {
+        self.flash.block_l = l;
+        self.flash.block_m = m;
+        self.distr.flash.block_l = l;
+        self.distr.flash.block_m = m;
+        self
+    }
+
+    pub fn with_group(mut self, g: usize) -> Self {
+        self.distr.group = g;
+        self
+    }
+
+    /// Single-head attention (N, d) -> (N, d).
+    pub fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+        match self.variant {
+            Variant::Standard => standard_attention(q, k, v, self.causal),
+            Variant::Flash2 => flash2_attention(q, k, v, &self.flash, self.causal),
+            Variant::Distr => distr_attention(q, k, v, &self.distr, self.causal),
+            Variant::Hydra => hydra_attention(q, k, v, self.causal),
+            Variant::Hyper => hyper_attention(q, k, v, self.causal, 0),
+            Variant::Flatten => flatten_attention(q, k, v, self.causal),
+            Variant::Primal => primal_attention(q, k, v, self.causal, 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip_names() {
+        for v in Variant::ALL {
+            let parsed: Variant = v.name().parse().unwrap();
+            assert_eq!(parsed, v);
+        }
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!("quantum".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn engine_runs_all_variants() {
+        let q = Matrix::uniform(32, 32, 1);
+        let k = Matrix::uniform(32, 32, 2);
+        let v = Matrix::uniform(32, 32, 3);
+        for variant in Variant::ALL {
+            let eng = Engine::new(variant).with_blocks(16, 16);
+            let out = eng.run(&q, &k, &v);
+            assert_eq!((out.rows, out.cols), (32, 32), "{variant:?}");
+            assert!(out.data.iter().all(|x| x.is_finite()), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn exactness_flags() {
+        assert!(Variant::Flash2.is_exact());
+        assert!(!Variant::Distr.is_exact());
+    }
+}

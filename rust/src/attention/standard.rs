@@ -1,0 +1,74 @@
+//! Standard softmax attention (the paper's Attn-Standard baseline).
+//!
+//! Materializes the full S and P matrices — the O(N²) memory traffic the
+//! FlashAttention family removes. Kept as both the numerics oracle and
+//! the "default attention" baseline of Tables 5-8.
+
+use crate::tensor::{matmul, scaled_scores, softmax_rows, Matrix};
+
+/// softmax(Q K^T / sqrt(d)) V with optional causal masking.
+pub fn standard_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let mut s = scaled_scores(q, k);
+    if causal {
+        for r in 0..s.rows {
+            for c in (r + 1)..s.cols {
+                *s.at_mut(r, c) = f32::NEG_INFINITY;
+            }
+        }
+    }
+    softmax_rows(&mut s);
+    matmul(&s, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_weighted_v() {
+        // with identical K rows, attention is uniform -> output = mean(V)
+        let q = Matrix::uniform(4, 8, 1);
+        let k = Matrix::from_vec(4, 8, vec![0.5; 32]);
+        let v = Matrix::randn(4, 8, 2);
+        let out = standard_attention(&q, &k, &v, false);
+        for r in 0..4 {
+            for c in 0..8 {
+                let mean: f32 = (0..4).map(|i| v.at(i, c)).sum::<f32>() / 4.0;
+                assert!((out.at(r, c) - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_row_is_v0() {
+        let q = Matrix::randn(8, 8, 3);
+        let k = Matrix::randn(8, 8, 4);
+        let v = Matrix::randn(8, 8, 5);
+        let out = standard_attention(&q, &k, &v, true);
+        for c in 0..8 {
+            assert!((out.at(0, c) - v.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_ignores_future_perturbation() {
+        let q = Matrix::randn(8, 8, 6);
+        let k = Matrix::randn(8, 8, 7);
+        let v = Matrix::randn(8, 8, 8);
+        let out1 = standard_attention(&q, &k, &v, true);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..8 {
+            *k2.at_mut(7, c) += 3.0;
+            *v2.at_mut(7, c) -= 2.0;
+        }
+        let out2 = standard_attention(&q, &k2, &v2, true);
+        for r in 0..7 {
+            for c in 0..8 {
+                assert!((out1.at(r, c) - out2.at(r, c)).abs() < 1e-6);
+            }
+        }
+    }
+}

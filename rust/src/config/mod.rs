@@ -1,0 +1,269 @@
+//! Configuration system: one struct tree with JSON load/save via the
+//! in-tree parser (`util::json`), with CLI overrides layered on top by
+//! `main.rs`. Every field has a default; partial config files are fine.
+
+use std::path::Path;
+
+use crate::attention::Variant;
+use crate::util::json::Value;
+
+/// Attention knobs (paper: variant + l/m block sizes + G* sampling rate).
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionCfg {
+    pub variant: Variant,
+    pub block_l: usize,
+    pub block_m: usize,
+    /// G*: the sampling rate (columns fused per group)
+    pub group: usize,
+    /// estimate = group mean (true) or first sorted column (false)
+    pub sample_mean: bool,
+    /// center columns before the LSH projection
+    pub center: bool,
+}
+
+impl Default for AttentionCfg {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Distr,
+            block_l: 64,
+            block_m: 64,
+            group: 2,
+            sample_mean: true,
+            center: true,
+        }
+    }
+}
+
+/// Dynamic batcher policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherCfg {
+    /// flush when this many requests are queued
+    pub max_batch: usize,
+    /// flush after this many microseconds even if the batch is short
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait_us: 2_000 }
+    }
+}
+
+/// KV-cache manager geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheCfg {
+    /// tokens per cache block (paged-attention style)
+    pub block_tokens: usize,
+    /// total blocks in the pool
+    pub num_blocks: usize,
+}
+
+impl Default for KvCacheCfg {
+    fn default() -> Self {
+        Self { block_tokens: 16, num_blocks: 1024 }
+    }
+}
+
+/// Device pool (the multi-GPU simulation of Table 9).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCfg {
+    pub num_devices: usize,
+    /// simulated interconnect bandwidth, GB/s (PCIe 4.0 x16 ≈ 25 effective)
+    pub link_gbps: f64,
+    /// per-transfer fixed latency in microseconds
+    pub link_latency_us: u64,
+    /// double-buffer transfers to overlap compute and data movement
+    pub double_buffer: bool,
+}
+
+impl Default for DeviceCfg {
+    fn default() -> Self {
+        Self { num_devices: 1, link_gbps: 25.0, link_latency_us: 10, double_buffer: true }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub attention: AttentionCfg,
+    pub batcher: BatcherCfg,
+    pub kv_cache: KvCacheCfg,
+    pub devices: DeviceCfg,
+    /// artifacts directory (manifest.json + *.hlo.txt)
+    pub artifacts_dir: String,
+}
+
+// -- JSON (de)serialization -------------------------------------------------
+
+fn opt_usize(v: &Value, key: &str, default: usize) -> anyhow::Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            x.as_usize().ok_or_else(|| anyhow::anyhow!("`{key}` must be a non-negative integer"))
+        }
+    }
+}
+
+fn opt_bool(v: &Value, key: &str, default: bool) -> anyhow::Result<bool> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_bool().ok_or_else(|| anyhow::anyhow!("`{key}` must be a bool")),
+    }
+}
+
+fn opt_f64(v: &Value, key: &str, default: f64) -> anyhow::Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_f64().ok_or_else(|| anyhow::anyhow!("`{key}` must be a number")),
+    }
+}
+
+impl Config {
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut cfg = Config::default();
+        if let Some(a) = v.get("attention") {
+            let d = AttentionCfg::default();
+            if let Some(name) = a.get("variant") {
+                let s = name.as_str().ok_or_else(|| anyhow::anyhow!("variant must be string"))?;
+                cfg.attention.variant = s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            }
+            cfg.attention.block_l = opt_usize(a, "block_l", d.block_l)?;
+            cfg.attention.block_m = opt_usize(a, "block_m", d.block_m)?;
+            cfg.attention.group = opt_usize(a, "group", d.group)?;
+            cfg.attention.sample_mean = opt_bool(a, "sample_mean", d.sample_mean)?;
+            cfg.attention.center = opt_bool(a, "center", d.center)?;
+        }
+        if let Some(b) = v.get("batcher") {
+            let d = BatcherCfg::default();
+            cfg.batcher.max_batch = opt_usize(b, "max_batch", d.max_batch)?;
+            cfg.batcher.max_wait_us = opt_usize(b, "max_wait_us", d.max_wait_us as usize)? as u64;
+        }
+        if let Some(k) = v.get("kv_cache") {
+            let d = KvCacheCfg::default();
+            cfg.kv_cache.block_tokens = opt_usize(k, "block_tokens", d.block_tokens)?;
+            cfg.kv_cache.num_blocks = opt_usize(k, "num_blocks", d.num_blocks)?;
+        }
+        if let Some(dv) = v.get("devices") {
+            let d = DeviceCfg::default();
+            cfg.devices.num_devices = opt_usize(dv, "num_devices", d.num_devices)?;
+            cfg.devices.link_gbps = opt_f64(dv, "link_gbps", d.link_gbps)?;
+            cfg.devices.link_latency_us =
+                opt_usize(dv, "link_latency_us", d.link_latency_us as usize)? as u64;
+            cfg.devices.double_buffer = opt_bool(dv, "double_buffer", d.double_buffer)?;
+        }
+        if let Some(s) = v.get("artifacts_dir") {
+            cfg.artifacts_dir =
+                s.as_str().ok_or_else(|| anyhow::anyhow!("artifacts_dir must be string"))?.into();
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            (
+                "attention",
+                Value::object(vec![
+                    ("variant", Value::string(self.attention.variant.name())),
+                    ("block_l", Value::number(self.attention.block_l as f64)),
+                    ("block_m", Value::number(self.attention.block_m as f64)),
+                    ("group", Value::number(self.attention.group as f64)),
+                    ("sample_mean", Value::Bool(self.attention.sample_mean)),
+                    ("center", Value::Bool(self.attention.center)),
+                ]),
+            ),
+            (
+                "batcher",
+                Value::object(vec![
+                    ("max_batch", Value::number(self.batcher.max_batch as f64)),
+                    ("max_wait_us", Value::number(self.batcher.max_wait_us as f64)),
+                ]),
+            ),
+            (
+                "kv_cache",
+                Value::object(vec![
+                    ("block_tokens", Value::number(self.kv_cache.block_tokens as f64)),
+                    ("num_blocks", Value::number(self.kv_cache.num_blocks as f64)),
+                ]),
+            ),
+            (
+                "devices",
+                Value::object(vec![
+                    ("num_devices", Value::number(self.devices.num_devices as f64)),
+                    ("link_gbps", Value::number(self.devices.link_gbps)),
+                    ("link_latency_us", Value::number(self.devices.link_latency_us as f64)),
+                    ("double_buffer", Value::Bool(self.devices.double_buffer)),
+                ]),
+            ),
+            ("artifacts_dir", Value::string(self.artifacts_dir.clone())),
+        ])
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Resolve the artifacts dir: explicit config, else `./artifacts`.
+    pub fn artifacts(&self) -> std::path::PathBuf {
+        if self.artifacts_dir.is_empty() {
+            std::path::PathBuf::from("artifacts")
+        } else {
+            std::path::PathBuf::from(&self.artifacts_dir)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn default_roundtrips_json() {
+        let cfg = Config::default();
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.attention.group, cfg.attention.group);
+        assert_eq!(back.batcher.max_batch, cfg.batcher.max_batch);
+        assert_eq!(back.attention.variant, cfg.attention.variant);
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let v = Value::parse(r#"{"attention": {"variant": "flash2", "block_l": 128}}"#).unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.attention.variant, Variant::Flash2);
+        assert_eq!(cfg.attention.block_l, 128);
+        assert_eq!(cfg.attention.block_m, AttentionCfg::default().block_m);
+        assert_eq!(cfg.batcher.max_batch, BatcherCfg::default().max_batch);
+    }
+
+    #[test]
+    fn bad_variant_rejected() {
+        let v = Value::parse(r#"{"attention": {"variant": "quantum"}}"#).unwrap();
+        assert!(Config::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("cfg.json");
+        let mut cfg = Config::default();
+        cfg.devices.num_devices = 4;
+        cfg.devices.link_gbps = 12.5;
+        cfg.save(&path).unwrap();
+        let back = Config::load(&path).unwrap();
+        assert_eq!(back.devices.num_devices, 4);
+        assert!((back.devices.link_gbps - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn artifacts_dir_default() {
+        assert_eq!(Config::default().artifacts(), std::path::PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Dynamic batcher: groups compatible requests (same variant + length
+//! bucket) and flushes on size or deadline — the continuous-batching
+//! front half of an Orca/vLLM-style serving loop.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::attention::Variant;
+use crate::config::BatcherCfg;
+
+use super::request::Request;
+
+/// Requests are only batchable when they run the same executable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub variant: Variant,
+    pub len_bucket: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    pub batches: u64,
+    pub requests: u64,
+    pub size_flushes: u64,
+    pub deadline_flushes: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Pending {
+    requests: Vec<Request>,
+    opened: Instant,
+}
+
+/// Size/deadline dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherCfg,
+    pending: HashMap<BatchKey, Pending>,
+    stats: BatcherStats,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg) -> Self {
+        Self { cfg, pending: HashMap::new(), stats: BatcherStats::default() }
+    }
+
+    /// Enqueue a request; returns a full batch if this push filled one.
+    pub fn push(&mut self, req: Request) -> Option<(BatchKey, Vec<Request>)> {
+        let key = BatchKey { variant: req.variant, len_bucket: req.len_bucket() };
+        let entry = self
+            .pending
+            .entry(key)
+            .or_insert_with(|| Pending { requests: Vec::new(), opened: Instant::now() });
+        if entry.requests.is_empty() {
+            entry.opened = Instant::now();
+        }
+        entry.requests.push(req);
+        if entry.requests.len() >= self.cfg.max_batch {
+            let batch = std::mem::take(&mut entry.requests);
+            self.stats.batches += 1;
+            self.stats.requests += batch.len() as u64;
+            self.stats.size_flushes += 1;
+            return Some((key, batch));
+        }
+        None
+    }
+
+    /// Flush every batch whose deadline has passed.
+    pub fn poll_deadlines(&mut self, now: Instant) -> Vec<(BatchKey, Vec<Request>)> {
+        let deadline = Duration::from_micros(self.cfg.max_wait_us);
+        let mut out = Vec::new();
+        for (key, entry) in self.pending.iter_mut() {
+            if !entry.requests.is_empty() && now.duration_since(entry.opened) >= deadline {
+                let batch = std::mem::take(&mut entry.requests);
+                self.stats.batches += 1;
+                self.stats.requests += batch.len() as u64;
+                self.stats.deadline_flushes += 1;
+                out.push((*key, batch));
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<(BatchKey, Vec<Request>)> {
+        let mut out = Vec::new();
+        for (key, entry) in self.pending.iter_mut() {
+            if !entry.requests.is_empty() {
+                let batch = std::mem::take(&mut entry.requests);
+                self.stats.batches += 1;
+                self.stats.requests += batch.len() as u64;
+                out.push((*key, batch));
+            }
+        }
+        out
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|p| p.requests.len()).sum()
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats
+    }
+
+    /// Earliest deadline across open batches (serve-loop sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .filter(|p| !p.requests.is_empty())
+            .map(|p| p.opened + Duration::from_micros(self.cfg.max_wait_us))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize, variant: Variant) -> Request {
+        Request::new(id, vec![0; len], variant)
+    }
+
+    fn cfg(max_batch: usize, max_wait_us: u64) -> BatcherCfg {
+        BatcherCfg { max_batch, max_wait_us }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        assert!(b.push(req(1, 100, Variant::Distr)).is_none());
+        let (key, batch) = b.push(req(2, 100, Variant::Distr)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(key.len_bucket, 128);
+        assert_eq!(b.pending_count(), 0);
+        assert_eq!(b.stats().size_flushes, 1);
+    }
+
+    #[test]
+    fn incompatible_requests_do_not_batch() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        assert!(b.push(req(1, 100, Variant::Distr)).is_none());
+        // different variant
+        assert!(b.push(req(2, 100, Variant::Flash2)).is_none());
+        // different length bucket
+        assert!(b.push(req(3, 300, Variant::Distr)).is_none());
+        assert_eq!(b.pending_count(), 3);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(cfg(8, 0));
+        b.push(req(1, 64, Variant::Distr));
+        let flushed = b.poll_deadlines(Instant::now() + Duration::from_micros(1));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].1.len(), 1);
+        assert_eq!(b.stats().deadline_flushes, 1);
+    }
+
+    #[test]
+    fn deadline_not_reached_no_flush() {
+        let mut b = Batcher::new(cfg(8, 10_000_000));
+        b.push(req(1, 64, Variant::Distr));
+        assert!(b.poll_deadlines(Instant::now()).is_empty());
+        assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = Batcher::new(cfg(8, 1_000_000));
+        b.push(req(1, 64, Variant::Distr));
+        b.push(req(2, 300, Variant::Flash2));
+        let drained = b.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn stats_mean_batch_size() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        b.push(req(1, 64, Variant::Distr));
+        b.push(req(2, 64, Variant::Distr));
+        b.push(req(3, 64, Variant::Distr));
+        b.drain();
+        let s = b.stats();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_open_batch() {
+        let mut b = Batcher::new(cfg(8, 1_000));
+        assert!(b.next_deadline().is_none());
+        b.push(req(1, 64, Variant::Distr));
+        assert!(b.next_deadline().is_some());
+    }
+}

@@ -1,0 +1,131 @@
+//! Incremental decode over the paged KV cache.
+//!
+//! Prefill computes the full Ŝ with DistrAttention; decode is a
+//! single-row attention per step and is memory-bound, so (like the
+//! paper, whose contribution targets the quadratic prefill) the decode
+//! path runs exact row attention against the cached K/V. The cache is
+//! the [`KvCache`] block allocator; this module is the compute half.
+
+use anyhow::Context;
+
+use crate::tensor::dot;
+
+use super::kv_cache::{KvCache, SeqId};
+
+/// One decode step's attention: `q_row` against the sequence's cached
+/// K/V rows. Returns the attended output row (length d).
+pub fn attend_cached(cache: &KvCache, seq: SeqId, q_row: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let (k, v) = cache.gather(seq).context("gathering cached K/V")?;
+    let d = q_row.len();
+    anyhow::ensure!(k.len() % d == 0, "cache dim mismatch: {} % {d}", k.len());
+    let tokens = k.len() / d;
+    anyhow::ensure!(tokens > 0, "empty cache for sequence {seq}");
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // scores + online softmax over the cached rows
+    let mut m = f32::NEG_INFINITY;
+    let mut scores = Vec::with_capacity(tokens);
+    for t in 0..tokens {
+        let s = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
+        m = m.max(s);
+        scores.push(s);
+    }
+    let mut out = vec![0.0f32; d];
+    let mut denom = 0.0f32;
+    for (t, s) in scores.iter().enumerate() {
+        let p = (s - m).exp();
+        denom += p;
+        let vrow = &v[t * d..(t + 1) * d];
+        for (o, &vv) in out.iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+    for o in &mut out {
+        *o /= denom;
+    }
+    Ok(out)
+}
+
+/// A full decode step: attend over the cache, then append this step's
+/// K/V row (the serving loop's per-token cycle).
+pub fn decode_step(
+    cache: &mut KvCache,
+    seq: SeqId,
+    q_row: &[f32],
+    k_row: &[f32],
+    v_row: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    cache.append(seq, k_row, v_row).context("appending decode K/V")?;
+    attend_cached(cache, seq, q_row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::standard_attention;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn cached_attention_matches_standard_last_row() {
+        // decode of token t == causal attention's row t over the full K/V
+        let d = 8;
+        let n = 12;
+        let q = Matrix::randn(n, d, 1);
+        let k = Matrix::randn(n, d, 2);
+        let v = Matrix::randn(n, d, 3);
+        let full = standard_attention(&q, &k, &v, true);
+
+        let mut cache = KvCache::new(16, 4, d);
+        cache.register(1, &k.data[..d], &v.data[..d]).unwrap();
+        // replay decode: at step t, K/V rows 0..=t are cached
+        for t in 1..n {
+            let out = decode_step(
+                &mut cache,
+                1,
+                q.row(t),
+                k.row(t),
+                v.row(t),
+            )
+            .unwrap();
+            for c in 0..d {
+                assert!(
+                    (out[c] - full.at(t, c)).abs() < 1e-4,
+                    "t={t} c={c}: {} vs {}",
+                    out[c],
+                    full.at(t, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_token_attends_to_itself() {
+        let d = 4;
+        let mut cache = KvCache::new(4, 2, d);
+        let k = vec![0.1, 0.2, 0.3, 0.4];
+        let v = vec![9.0, 8.0, 7.0, 6.0];
+        cache.register(5, &k, &v).unwrap();
+        let out = attend_cached(&cache, 5, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn unknown_sequence_is_error() {
+        let cache = KvCache::new(4, 2, 4);
+        assert!(attend_cached(&cache, 42, &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn forked_sequences_decode_independently() {
+        let d = 4;
+        let mut cache = KvCache::new(16, 2, d);
+        let rows = |base: f32| -> Vec<f32> { (0..4 * d).map(|i| base + i as f32 * 0.1).collect() };
+        cache.register(1, &rows(0.0), &rows(5.0)).unwrap();
+        cache.fork(1, 2).unwrap();
+        // diverge the branches
+        let q = [0.3f32, -0.2, 0.5, 0.1];
+        let out1 = decode_step(&mut cache, 1, &q, &[1.0; 4], &[100.0; 4]).unwrap();
+        let out2 = decode_step(&mut cache, 2, &q, &[1.0; 4], &[-100.0; 4]).unwrap();
+        assert!(out1[0] > out2[0], "branches should diverge: {out1:?} vs {out2:?}");
+    }
+}

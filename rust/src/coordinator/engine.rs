@@ -1,0 +1,138 @@
+//! The serving engine: one worker thread owning a compiled LM-prefill
+//! executor (PJRT executables are not `Send`, so the executable never
+//! leaves its thread), fed through a channel by the front end.
+//!
+//! `EngineHandle` is the cheap, cloneable sender the router hands out.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context};
+
+use crate::runtime::{Executor, Manifest, TensorData};
+
+use super::request::{Request, Response};
+
+enum Cmd {
+    Prefill { req: Request, reply: mpsc::Sender<anyhow::Result<Response>> },
+    Shutdown,
+}
+
+/// Handle to a running engine worker.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Cmd>,
+    pub artifact: String,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+/// The engine worker: loads the artifact + params, loops on commands.
+pub struct Engine {
+    pub handle: EngineHandle,
+    join: JoinHandle<()>,
+    shutdown_tx: mpsc::Sender<Cmd>,
+}
+
+impl Engine {
+    /// Spawn an engine for artifact `name` (an `lm_prefill_*` entry).
+    /// `params_from`: artifact whose exported parameter blob to feed
+    /// (the aot pipeline exports weights once, on the standard variant).
+    pub fn spawn(manifest: &Manifest, name: &str, params_from: &str) -> anyhow::Result<Self> {
+        let entry = manifest.entry(name)?.clone();
+        let seq_len = entry.meta_usize("n").ok_or_else(|| anyhow!("artifact {name} missing n"))?;
+        let vocab =
+            entry.meta_usize("vocab").ok_or_else(|| anyhow!("artifact {name} missing vocab"))?;
+        let params = manifest.load_params(params_from)?;
+        let n_params = params.n_leaves();
+        if entry.inputs.len() != n_params + 1 {
+            return Err(anyhow!(
+                "artifact {name}: {} inputs but params blob has {} leaves (+1 tokens)",
+                entry.inputs.len(),
+                n_params
+            ));
+        }
+
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let manifest_dir = manifest.dir.clone();
+        let name_owned = name.to_string();
+        let join = std::thread::Builder::new()
+            .name(format!("engine-{name}"))
+            .spawn(move || {
+                let run = || -> anyhow::Result<()> {
+                    let client = xla::PjRtClient::cpu().context("PJRT client")?;
+                    let manifest = Manifest::load(&manifest_dir)?;
+                    let exe = Executor::load(&client, &manifest, &name_owned)?;
+                    // parameter literals prepared once, reused per request
+                    let param_inputs: Vec<TensorData> =
+                        params.to_vecs().into_iter().map(|(_, v)| TensorData::F32(v)).collect();
+                    while let Ok(cmd) = rx.recv() {
+                        match cmd {
+                            Cmd::Shutdown => break,
+                            Cmd::Prefill { req, reply } => {
+                                let res = prefill(&exe, &param_inputs, &req, seq_len, vocab);
+                                let _ = reply.send(res);
+                            }
+                        }
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    log::error!("engine worker failed: {e:#}");
+                }
+            })
+            .context("spawning engine thread")?;
+
+        let handle = EngineHandle { tx: tx.clone(), artifact: name.to_string(), seq_len, vocab };
+        Ok(Self { handle, join, shutdown_tx: tx })
+    }
+
+    pub fn shutdown(self) {
+        let _ = self.shutdown_tx.send(Cmd::Shutdown);
+        let _ = self.join.join();
+    }
+}
+
+impl EngineHandle {
+    /// Fire a prefill and return a receiver for the reply — callers can
+    /// overlap several in-flight requests before collecting.
+    pub fn prefill_async(&self, req: Request) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Prefill { req, reply })
+            .map_err(|_| anyhow!("engine worker gone"))?;
+        Ok(rx)
+    }
+
+    /// Blocking prefill: send and wait for the reply.
+    pub fn prefill_blocking(&self, req: Request) -> anyhow::Result<Response> {
+        let rx = self.prefill_async(req)?;
+        rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))?
+    }
+}
+
+/// Run one prefill: pad tokens to the artifact's sequence length, execute,
+/// return the logits at the last *real* token position.
+fn prefill(
+    exe: &Executor,
+    param_inputs: &[TensorData],
+    req: &Request,
+    seq_len: usize,
+    vocab: usize,
+) -> anyhow::Result<Response> {
+    if req.tokens.is_empty() {
+        return Err(anyhow!("empty prompt"));
+    }
+    if req.tokens.len() > seq_len {
+        return Err(anyhow!("prompt {} exceeds artifact seq_len {}", req.tokens.len(), seq_len));
+    }
+    let mut toks = req.tokens.clone();
+    toks.resize(seq_len, 0); // causal model: padding after the prompt is ignored
+    let mut inputs = param_inputs.to_vec();
+    inputs.push(TensorData::I32(toks));
+    let outputs = exe.run(&inputs)?;
+    let logits = outputs[0].as_f32()?;
+    let last = req.tokens.len() - 1;
+    let row = logits[last * vocab..(last + 1) * vocab].to_vec();
+    Ok(Response::greedy(req.id, row, req.arrived))
+}

@@ -1,0 +1,259 @@
+//! Paged KV-cache manager: fixed-size token blocks allocated from a pool
+//! (the PagedAttention design the paper cites as the state of the art in
+//! serving-side attention memory management).
+//!
+//! The decode path appends K/V rows per generated token; blocks are
+//! reference-counted so prefix sharing (e.g. common system prompts)
+//! costs no extra memory.
+
+use std::collections::HashMap;
+
+use anyhow::anyhow;
+
+pub type BlockId = u32;
+pub type SeqId = u64;
+
+/// A sequence's handle into the cache: ordered block list + token count.
+#[derive(Clone, Debug)]
+pub struct SeqHandle {
+    pub seq: SeqId,
+    pub blocks: Vec<BlockId>,
+    pub tokens: usize,
+}
+
+struct BlockMeta {
+    refcount: u32,
+}
+
+/// Block-granular KV cache pool.
+pub struct KvCache {
+    block_tokens: usize,
+    /// K and V storage: `num_blocks × block_tokens × 2 × d` f32
+    storage: Vec<f32>,
+    d: usize,
+    free: Vec<BlockId>,
+    meta: Vec<BlockMeta>,
+    seqs: HashMap<SeqId, SeqHandle>,
+}
+
+impl KvCache {
+    pub fn new(num_blocks: usize, block_tokens: usize, d: usize) -> Self {
+        Self {
+            block_tokens,
+            storage: vec![0.0; num_blocks * block_tokens * 2 * d],
+            d,
+            free: (0..num_blocks as BlockId).rev().collect(),
+            meta: (0..num_blocks).map(|_| BlockMeta { refcount: 0 }).collect(),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Register a new sequence with `tokens` prefilled K/V rows.
+    pub fn register(&mut self, seq: SeqId, k: &[f32], v: &[f32]) -> anyhow::Result<()> {
+        if self.seqs.contains_key(&seq) {
+            return Err(anyhow!("sequence {seq} already registered"));
+        }
+        assert_eq!(k.len(), v.len());
+        assert_eq!(k.len() % self.d, 0);
+        let tokens = k.len() / self.d;
+        let n_blocks = tokens.div_ceil(self.block_tokens);
+        if self.free.len() < n_blocks {
+            return Err(anyhow!(
+                "kv cache exhausted: need {n_blocks} blocks, {} free",
+                self.free.len()
+            ));
+        }
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for b in 0..n_blocks {
+            let id = self.free.pop().unwrap();
+            self.meta[id as usize].refcount = 1;
+            let t0 = b * self.block_tokens;
+            let t1 = ((b + 1) * self.block_tokens).min(tokens);
+            self.write_block(id, 0, &k[t0 * self.d..t1 * self.d], &v[t0 * self.d..t1 * self.d]);
+            blocks.push(id);
+        }
+        self.seqs.insert(seq, SeqHandle { seq, blocks, tokens });
+        Ok(())
+    }
+
+    /// Append one decoded token's K/V row to a sequence.
+    pub fn append(&mut self, seq: SeqId, k_row: &[f32], v_row: &[f32]) -> anyhow::Result<()> {
+        assert_eq!(k_row.len(), self.d);
+        assert_eq!(v_row.len(), self.d);
+        let (needs_block, slot, tokens) = {
+            let h = self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+            (h.tokens % self.block_tokens == 0, h.tokens % self.block_tokens, h.tokens)
+        };
+        let block = if needs_block {
+            let id = self.free.pop().ok_or_else(|| anyhow!("kv cache exhausted on append"))?;
+            self.meta[id as usize].refcount = 1;
+            self.seqs.get_mut(&seq).unwrap().blocks.push(id);
+            id
+        } else {
+            *self.seqs[&seq].blocks.last().unwrap()
+        };
+        self.write_block(block, slot, k_row, v_row);
+        self.seqs.get_mut(&seq).unwrap().tokens = tokens + 1;
+        Ok(())
+    }
+
+    /// Fork `parent` into `child` sharing all full blocks (copy-on-write
+    /// is out of scope: the shared prefix is read-only by construction
+    /// here — decode appends always open a fresh block for the child).
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> anyhow::Result<()> {
+        if self.seqs.contains_key(&child) {
+            return Err(anyhow!("sequence {child} already registered"));
+        }
+        let h = self.seqs.get(&parent).ok_or_else(|| anyhow!("unknown sequence {parent}"))?;
+        // only share block-aligned prefixes; a partial tail block would
+        // be written by both sequences
+        let full_blocks = h.tokens / self.block_tokens;
+        let blocks: Vec<BlockId> = h.blocks[..full_blocks].to_vec();
+        let tokens = full_blocks * self.block_tokens;
+        for &b in &blocks {
+            self.meta[b as usize].refcount += 1;
+        }
+        self.seqs.insert(child, SeqHandle { seq: child, blocks, tokens });
+        Ok(())
+    }
+
+    /// Release a sequence; blocks return to the pool at refcount 0.
+    pub fn release(&mut self, seq: SeqId) -> anyhow::Result<()> {
+        let h = self.seqs.remove(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        for b in h.blocks {
+            let m = &mut self.meta[b as usize];
+            m.refcount -= 1;
+            if m.refcount == 0 {
+                self.free.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn handle(&self, seq: SeqId) -> Option<&SeqHandle> {
+        self.seqs.get(&seq)
+    }
+
+    /// Gather a sequence's K and V as contiguous matrices (rows = tokens).
+    pub fn gather(&self, seq: SeqId) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let h = self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        let mut k = Vec::with_capacity(h.tokens * self.d);
+        let mut v = Vec::with_capacity(h.tokens * self.d);
+        for t in 0..h.tokens {
+            let block = h.blocks[t / self.block_tokens];
+            let slot = t % self.block_tokens;
+            let base = self.block_base(block) + slot * 2 * self.d;
+            k.extend_from_slice(&self.storage[base..base + self.d]);
+            v.extend_from_slice(&self.storage[base + self.d..base + 2 * self.d]);
+        }
+        Ok((k, v))
+    }
+
+    fn block_base(&self, id: BlockId) -> usize {
+        id as usize * self.block_tokens * 2 * self.d
+    }
+
+    fn write_block(&mut self, id: BlockId, start_slot: usize, k: &[f32], v: &[f32]) {
+        let d = self.d;
+        let base = self.block_base(id);
+        for (t, (krow, vrow)) in k.chunks(d).zip(v.chunks(d)).enumerate() {
+            let off = base + (start_slot + t) * 2 * d;
+            self.storage[off..off + d].copy_from_slice(krow);
+            self.storage[off + d..off + 2 * d].copy_from_slice(vrow);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, d: usize, base: f32) -> Vec<f32> {
+        (0..n * d).map(|i| base + i as f32).collect()
+    }
+
+    #[test]
+    fn register_gather_roundtrip() {
+        let mut c = KvCache::new(8, 4, 2);
+        let k = rows(6, 2, 0.0);
+        let v = rows(6, 2, 100.0);
+        c.register(1, &k, &v).unwrap();
+        let (gk, gv) = c.gather(1).unwrap();
+        assert_eq!(gk, k);
+        assert_eq!(gv, v);
+        assert_eq!(c.num_free(), 6); // 6 tokens / 4 per block = 2 blocks
+    }
+
+    #[test]
+    fn append_crosses_block_boundary() {
+        let mut c = KvCache::new(8, 2, 2);
+        c.register(1, &rows(2, 2, 0.0), &rows(2, 2, 50.0)).unwrap();
+        assert_eq!(c.num_free(), 7);
+        c.append(1, &[90.0, 91.0], &[92.0, 93.0]).unwrap(); // opens block 2
+        assert_eq!(c.num_free(), 6);
+        c.append(1, &[94.0, 95.0], &[96.0, 97.0]).unwrap(); // fills block 2
+        assert_eq!(c.num_free(), 6);
+        let (k, _) = c.gather(1).unwrap();
+        assert_eq!(k.len(), 4 * 2);
+        assert_eq!(&k[4..6], &[90.0, 91.0]);
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut c = KvCache::new(4, 2, 2);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+        assert_eq!(c.num_free(), 2);
+        c.release(1).unwrap();
+        assert_eq!(c.num_free(), 4);
+        assert!(c.gather(1).is_err());
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut c = KvCache::new(1, 2, 2);
+        assert!(c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).is_err());
+        // pool unchanged after failed registration
+        assert_eq!(c.num_free(), 1);
+    }
+
+    #[test]
+    fn fork_shares_full_blocks() {
+        let mut c = KvCache::new(8, 2, 2);
+        c.register(1, &rows(5, 2, 0.0), &rows(5, 2, 10.0)).unwrap(); // 3 blocks (2 full)
+        let free_before = c.num_free();
+        c.fork(1, 2).unwrap();
+        assert_eq!(c.num_free(), free_before); // shared, no new blocks
+        assert_eq!(c.handle(2).unwrap().tokens, 4);
+        // releasing the parent keeps shared blocks alive for the child
+        c.release(1).unwrap();
+        let (k, _) = c.gather(2).unwrap();
+        assert_eq!(k.len(), 4 * 2);
+        c.release(2).unwrap();
+        assert_eq!(c.num_free(), 8);
+    }
+
+    #[test]
+    fn duplicate_register_rejected() {
+        let mut c = KvCache::new(4, 2, 2);
+        c.register(1, &rows(2, 2, 0.0), &rows(2, 2, 0.0)).unwrap();
+        assert!(c.register(1, &rows(2, 2, 0.0), &rows(2, 2, 0.0)).is_err());
+    }
+
+    #[test]
+    fn append_to_unknown_seq_rejected() {
+        let mut c = KvCache::new(4, 2, 2);
+        assert!(c.append(9, &[0.0, 0.0], &[0.0, 0.0]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 coordinator — the serving framework around the kernels.
+//!
+//! The paper's contribution is a kernel-level mechanism, so the
+//! coordinator plays the role vLLM's router plays around FlashAttention:
+//! typed requests ([`request`]) flow through a dynamic batcher
+//! ([`batcher`]) and a prefill scheduler ([`scheduler`]), route to the
+//! engine matching their attention variant ([`router`]), execute on AOT
+//! artifacts ([`engine`]), with KV state managed by a block allocator
+//! ([`kv_cache`]). [`multi_device`] implements the paper's §4.7
+//! head-sharded multi-GPU scatter with double buffering (Table 9).
+
+pub mod batcher;
+pub mod decode;
+pub mod engine;
+pub mod kv_cache;
+pub mod multi_device;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{Batcher, BatcherStats};
+pub use decode::{attend_cached, decode_step};
+pub use engine::{Engine, EngineHandle};
+pub use kv_cache::{BlockId, KvCache, SeqHandle};
+pub use multi_device::{run_scatter, ScatterPlan, ScatterReport};
+pub use request::{Priority, Request, RequestId, Response};
+pub use router::Router;
+pub use scheduler::Scheduler;

@@ -1,0 +1,237 @@
+//! Multi-GPU scatter with double buffering (paper §4.7, Table 9;
+//! substitution DESIGN.md §5 S7).
+//!
+//! The paper computes attention for H=480 heads of (N, d) Q/K/V by
+//! splitting along H into chunks, scattering chunks to GPUs in rounds,
+//! and overlapping each chunk's PCIe transfer with the previous chunk's
+//! compute via double buffering.
+//!
+//! Here "devices" are worker threads doing real attention math (the Rust
+//! engines) while the interconnect is simulated: each chunk's arrival is
+//! delayed by `bytes / link_gbps + latency`, transfers serialize on one
+//! link, and with `double_buffer = false` the next transfer cannot start
+//! until the previous chunk's compute finished (no overlap) — exactly
+//! the two schedules Table 9 compares.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::attention::{Engine, Variant};
+use crate::config::DeviceCfg;
+use crate::tensor::Matrix;
+use crate::workload;
+
+/// The scatter workload description.
+#[derive(Clone, Copy, Debug)]
+pub struct ScatterPlan {
+    pub heads: usize,
+    pub chunk_heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub variant: Variant,
+    pub group: usize,
+    pub block_l: usize,
+    pub block_m: usize,
+}
+
+impl ScatterPlan {
+    /// Bytes of one chunk's Q, K and V at f32 (leader -> device traffic).
+    pub fn chunk_bytes(&self) -> u64 {
+        (self.chunk_heads * self.n * self.d * 4 * 3) as u64
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.heads.div_ceil(self.chunk_heads)
+    }
+}
+
+/// Timing report of one scatter run.
+#[derive(Clone, Debug)]
+pub struct ScatterReport {
+    pub wall: Duration,
+    pub transfer_total: Duration,
+    pub compute_total: Duration,
+    pub per_device_busy: Vec<Duration>,
+    pub per_device_chunks: Vec<usize>,
+    pub chunks: usize,
+}
+
+impl ScatterReport {
+    /// Fraction of transfer time hidden behind compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.transfer_total + self.compute_total;
+        if self.wall.is_zero() || serial <= self.wall {
+            return 0.0;
+        }
+        (serial - self.wall).as_secs_f64() / self.transfer_total.as_secs_f64().max(1e-12)
+    }
+}
+
+fn transfer_time(bytes: u64, cfg: &DeviceCfg) -> Duration {
+    Duration::from_secs_f64(bytes as f64 / (cfg.link_gbps * 1e9))
+        + Duration::from_micros(cfg.link_latency_us)
+}
+
+/// Run the head-sharded scatter: real compute, simulated interconnect.
+pub fn run_scatter(plan: &ScatterPlan, cfg: &DeviceCfg, seed: u64) -> ScatterReport {
+    let n_dev = cfg.devices_or_one();
+    let chunks = plan.num_chunks();
+    let per_transfer = transfer_time(plan.chunk_bytes(), cfg);
+
+    // worker per device: receives (release_at, chunk qkv), computes,
+    // acks each chunk so the leader can serialize when double buffering
+    // is disabled
+    let mut senders = Vec::new();
+    let (ack_tx, ack_rx) = mpsc::channel::<usize>();
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Duration, usize)>();
+    let mut joins = Vec::new();
+    for dev in 0..n_dev {
+        let (tx, rx) = mpsc::channel::<(Instant, Vec<(Matrix, Matrix, Matrix)>)>();
+        senders.push(tx);
+        let ack = ack_tx.clone();
+        let done = done_tx.clone();
+        let plan = *plan;
+        joins.push(std::thread::spawn(move || {
+            let engine = Engine::new(plan.variant)
+                .with_blocks(plan.block_l, plan.block_m)
+                .with_group(plan.group);
+            let mut busy = Duration::ZERO;
+            let mut n_chunks = 0usize;
+            while let Ok((release_at, chunk)) = rx.recv() {
+                n_chunks += 1;
+                let now = Instant::now();
+                if release_at > now {
+                    std::thread::sleep(release_at - now); // data still in flight
+                }
+                let t0 = Instant::now();
+                // one core per device: nested parallelism would let a
+                // single "device" grab the whole CPU and flatten the
+                // multi-device scaling the experiment measures
+                crate::util::parallel::with_serial(|| {
+                    for (q, k, v) in &chunk {
+                        std::hint::black_box(engine.run(q, k, v));
+                    }
+                });
+                busy += t0.elapsed();
+                let _ = ack.send(dev);
+            }
+            let _ = done.send((dev, busy, n_chunks));
+        }));
+    }
+    drop(done_tx);
+    drop(ack_tx);
+
+    let start = Instant::now();
+    let mut link_free = start;
+    let mut transfer_total = Duration::ZERO;
+    for c in 0..chunks {
+        let heads: Vec<(Matrix, Matrix, Matrix)> = (0..plan.chunk_heads)
+            .map(|h| workload::qkv_uniform(plan.n, plan.d, seed + (c * plan.chunk_heads + h) as u64))
+            .collect();
+        if !cfg.double_buffer && c > 0 {
+            // no overlap: the next transfer may only start once the
+            // previous chunk's compute has finished
+            let _ = ack_rx.recv();
+        }
+        let arrive = link_free.max(Instant::now()) + per_transfer;
+        link_free = arrive;
+        transfer_total += per_transfer;
+        let dev = c % n_dev;
+        senders[dev].send((arrive, heads)).expect("device worker alive");
+    }
+    drop(senders);
+
+    let mut per_device_busy = vec![Duration::ZERO; n_dev];
+    let mut per_device_chunks = vec![0usize; n_dev];
+    while let Ok((dev, busy, n_chunks)) = done_rx.recv() {
+        per_device_busy[dev] = busy;
+        per_device_chunks[dev] = n_chunks;
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    let wall = start.elapsed();
+    let compute_total = per_device_busy.iter().sum();
+    ScatterReport { wall, transfer_total, compute_total, per_device_busy, per_device_chunks, chunks }
+}
+
+impl DeviceCfg {
+    pub fn devices_or_one(&self) -> usize {
+        self.num_devices.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_plan(variant: Variant) -> ScatterPlan {
+        ScatterPlan {
+            heads: 8,
+            chunk_heads: 2,
+            n: 128,
+            d: 32,
+            variant,
+            group: 2,
+            block_l: 32,
+            block_m: 32,
+        }
+    }
+
+    #[test]
+    fn chunk_math() {
+        let p = small_plan(Variant::Flash2);
+        assert_eq!(p.num_chunks(), 4);
+        assert_eq!(p.chunk_bytes(), (2 * 128 * 32 * 4 * 3) as u64);
+    }
+
+    #[test]
+    fn scatter_completes_all_chunks() {
+        let cfg = DeviceCfg { num_devices: 2, link_gbps: 100.0, link_latency_us: 1, double_buffer: true };
+        let r = run_scatter(&small_plan(Variant::Flash2), &cfg, 1);
+        assert_eq!(r.chunks, 4);
+        assert_eq!(r.per_device_busy.len(), 2);
+        assert!(r.compute_total > Duration::ZERO);
+    }
+
+    #[test]
+    fn double_buffering_hides_transfer_stalls() {
+        // make transfers expensive (20ms fixed latency each): the
+        // overlapped schedule pipelines them under compute, the serial
+        // one must pay (transfer -> compute -> transfer -> ...) in full
+        let slow_link = DeviceCfg {
+            num_devices: 2,
+            link_gbps: 10.0,
+            link_latency_us: 20_000,
+            double_buffer: true,
+        };
+        let mut no_db = slow_link;
+        no_db.double_buffer = false;
+        let with = run_scatter(&small_plan(Variant::Flash2), &slow_link, 2);
+        let without = run_scatter(&small_plan(Variant::Flash2), &no_db, 2);
+        // 4 chunks, 20ms latency each: serial schedule pays ≥ 80ms of
+        // transfers plus compute in sequence; the pipelined one overlaps
+        assert!(
+            with.wall.as_secs_f64() < without.wall.as_secs_f64(),
+            "with={:?} without={:?}",
+            with.wall,
+            without.wall
+        );
+        assert!(without.wall >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn distr_not_slower_than_flash_in_scatter() {
+        let cfg = DeviceCfg { num_devices: 1, link_gbps: 100.0, link_latency_us: 1, double_buffer: true };
+        let plan_f = ScatterPlan { n: 512, d: 64, heads: 4, chunk_heads: 2, block_l: 64, block_m: 64, group: 2, variant: Variant::Flash2 };
+        let plan_d = ScatterPlan { variant: Variant::Distr, ..plan_f };
+        let f = run_scatter(&plan_f, &cfg, 3);
+        let d = run_scatter(&plan_d, &cfg, 3);
+        assert!(
+            d.compute_total.as_secs_f64() <= f.compute_total.as_secs_f64() * 1.1,
+            "distr {:?} vs flash {:?}",
+            d.compute_total,
+            f.compute_total
+        );
+    }
+}

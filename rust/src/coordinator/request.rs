@@ -1,0 +1,93 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+use crate::attention::Variant;
+
+pub type RequestId = u64;
+
+/// Scheduling priority; prefill requests for interactive sessions run
+/// ahead of batch/offline traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Batch = 0,
+    Interactive = 1,
+}
+
+/// A prefill (TTFT) request: tokens in, first-token logits out.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub variant: Variant,
+    pub priority: Priority,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<i32>, variant: Variant) -> Self {
+        Self { id, tokens, variant, priority: Priority::Interactive, arrived: Instant::now() }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Padded length bucket: requests are batched per power-of-two bucket
+    /// so one fixed-shape executable serves a range of prompt lengths.
+    pub fn len_bucket(&self) -> usize {
+        self.tokens.len().next_power_of_two().max(16)
+    }
+}
+
+/// The first-token result for a prefill request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// logits over the vocab for the next token
+    pub logits: Vec<f32>,
+    /// argmax token (greedy first token)
+    pub token: i32,
+    /// time from arrival to completion
+    pub ttft: std::time::Duration,
+}
+
+impl Response {
+    pub fn greedy(id: RequestId, logits: Vec<f32>, arrived: Instant) -> Self {
+        let token = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+        Self { id, logits, token, ttft: arrived.elapsed() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn len_bucket_rounds_up() {
+        let r = Request::new(1, vec![0; 100], Variant::Distr);
+        assert_eq!(r.len_bucket(), 128);
+        let r = Request::new(2, vec![0; 128], Variant::Distr);
+        assert_eq!(r.len_bucket(), 128);
+        let r = Request::new(3, vec![0; 3], Variant::Distr);
+        assert_eq!(r.len_bucket(), 16);
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let resp = Response::greedy(7, vec![0.1, 2.0, -1.0], Instant::now());
+        assert_eq!(resp.token, 1);
+        assert_eq!(resp.id, 7);
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::Interactive > Priority::Batch);
+    }
+}

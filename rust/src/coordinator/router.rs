@@ -1,0 +1,162 @@
+//! Request router: maps each request's attention variant (and shape
+//! bucket) to the engine serving it, tracking per-route stats.
+//!
+//! This is the "flexibility" half of the paper operationalized: exact
+//! and approximate attention engines are live simultaneously, and a
+//! request chooses its speed/accuracy point per call.
+
+use std::collections::HashMap;
+
+use anyhow::anyhow;
+
+use crate::attention::Variant;
+
+use super::request::Request;
+
+/// A route target: engine key = (variant, max prompt bucket it serves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    pub variant: Variant,
+    pub len_bucket: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouteStats {
+    pub routed: u64,
+    pub rejected: u64,
+}
+
+/// Generic router: `T` is the engine handle type (tests use unit).
+pub struct Router<T> {
+    routes: HashMap<RouteKey, T>,
+    stats: HashMap<RouteKey, RouteStats>,
+    rejected: u64,
+}
+
+impl<T> Default for Router<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Router<T> {
+    pub fn new() -> Self {
+        Self { routes: HashMap::new(), stats: HashMap::new(), rejected: 0 }
+    }
+
+    pub fn add_route(&mut self, variant: Variant, len_bucket: usize, engine: T) {
+        let key = RouteKey { variant, len_bucket };
+        self.routes.insert(key, engine);
+        self.stats.entry(key).or_default();
+    }
+
+    /// Pick the engine for `req`: exact variant match, smallest length
+    /// bucket that fits the prompt.
+    pub fn route(&mut self, req: &Request) -> anyhow::Result<(&T, RouteKey)> {
+        let need = req.tokens.len();
+        let mut best: Option<RouteKey> = None;
+        for key in self.routes.keys() {
+            if key.variant == req.variant && key.len_bucket >= need {
+                best = match best {
+                    Some(b) if b.len_bucket <= key.len_bucket => Some(b),
+                    _ => Some(*key),
+                };
+            }
+        }
+        match best {
+            Some(key) => {
+                self.stats.get_mut(&key).unwrap().routed += 1;
+                Ok((&self.routes[&key], key))
+            }
+            None => {
+                self.rejected += 1;
+                Err(anyhow!(
+                    "no route for variant {:?} with {} tokens (buckets: {:?})",
+                    req.variant,
+                    need,
+                    self.buckets_for(req.variant)
+                ))
+            }
+        }
+    }
+
+    fn buckets_for(&self, v: Variant) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .routes
+            .keys()
+            .filter(|k| k.variant == v)
+            .map(|k| k.len_bucket)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    pub fn stats(&self) -> &HashMap<RouteKey, RouteStats> {
+        &self.stats
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn num_routes(&self) -> usize {
+        self.routes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(len: usize, v: Variant) -> Request {
+        Request::new(1, vec![0; len], v)
+    }
+
+    #[test]
+    fn routes_to_exact_variant() {
+        let mut r: Router<&'static str> = Router::new();
+        r.add_route(Variant::Distr, 128, "distr-128");
+        r.add_route(Variant::Flash2, 128, "flash-128");
+        let (eng, _) = r.route(&req(100, Variant::Flash2)).unwrap();
+        assert_eq!(*eng, "flash-128");
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let mut r: Router<&'static str> = Router::new();
+        r.add_route(Variant::Distr, 128, "d128");
+        r.add_route(Variant::Distr, 256, "d256");
+        let (eng, key) = r.route(&req(100, Variant::Distr)).unwrap();
+        assert_eq!(*eng, "d128");
+        assert_eq!(key.len_bucket, 128);
+        let (eng, _) = r.route(&req(200, Variant::Distr)).unwrap();
+        assert_eq!(*eng, "d256");
+    }
+
+    #[test]
+    fn too_long_prompt_rejected_with_context() {
+        let mut r: Router<()> = Router::new();
+        r.add_route(Variant::Distr, 128, ());
+        let err = r.route(&req(1000, Variant::Distr)).unwrap_err().to_string();
+        assert!(err.contains("128"), "{err}");
+        assert_eq!(r.rejected(), 1);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let mut r: Router<()> = Router::new();
+        r.add_route(Variant::Distr, 128, ());
+        assert!(r.route(&req(10, Variant::Hydra)).is_err());
+    }
+
+    #[test]
+    fn stats_count_routed() {
+        let mut r: Router<()> = Router::new();
+        r.add_route(Variant::Distr, 128, ());
+        for _ in 0..3 {
+            r.route(&req(10, Variant::Distr)).unwrap();
+        }
+        let key = RouteKey { variant: Variant::Distr, len_bucket: 128 };
+        assert_eq!(r.stats()[&key].routed, 3);
+    }
+}

@@ -1,0 +1,94 @@
+//! Prefill scheduler: priority FIFO with per-priority fairness aging.
+//!
+//! Interactive (TTFT-sensitive) work preempts batch traffic, but batch
+//! requests age into the interactive class after `starvation_limit` so
+//! offline jobs cannot starve.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::{Priority, Request};
+
+pub struct Scheduler {
+    interactive: VecDeque<Request>,
+    batch: VecDeque<Request>,
+    starvation_limit: Duration,
+}
+
+impl Scheduler {
+    pub fn new(starvation_limit: Duration) -> Self {
+        Self { interactive: VecDeque::new(), batch: VecDeque::new(), starvation_limit }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        match req.priority {
+            Priority::Interactive => self.interactive.push_back(req),
+            Priority::Batch => self.batch.push_back(req),
+        }
+    }
+
+    /// Next request to run, honouring priority + anti-starvation aging.
+    pub fn pop(&mut self, now: Instant) -> Option<Request> {
+        if let Some(front) = self.batch.front() {
+            if now.duration_since(front.arrived) >= self.starvation_limit {
+                return self.batch.pop_front();
+            }
+        }
+        self.interactive.pop_front().or_else(|| self.batch.pop_front())
+    }
+
+    pub fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+
+    fn req(id: u64, p: Priority) -> Request {
+        Request::new(id, vec![0; 16], Variant::Distr).with_priority(p)
+    }
+
+    #[test]
+    fn interactive_first() {
+        let mut s = Scheduler::new(Duration::from_secs(60));
+        s.push(req(1, Priority::Batch));
+        s.push(req(2, Priority::Interactive));
+        assert_eq!(s.pop(Instant::now()).unwrap().id, 2);
+        assert_eq!(s.pop(Instant::now()).unwrap().id, 1);
+        assert!(s.pop(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn fifo_within_class() {
+        let mut s = Scheduler::new(Duration::from_secs(60));
+        s.push(req(1, Priority::Interactive));
+        s.push(req(2, Priority::Interactive));
+        assert_eq!(s.pop(Instant::now()).unwrap().id, 1);
+        assert_eq!(s.pop(Instant::now()).unwrap().id, 2);
+    }
+
+    #[test]
+    fn starved_batch_request_ages_up() {
+        let mut s = Scheduler::new(Duration::from_millis(0));
+        s.push(req(1, Priority::Batch));
+        s.push(req(2, Priority::Interactive));
+        // zero starvation limit: the batch request is already "starved"
+        assert_eq!(s.pop(Instant::now()).unwrap().id, 1);
+    }
+
+    #[test]
+    fn len_counts_both_queues() {
+        let mut s = Scheduler::new(Duration::from_secs(1));
+        assert!(s.is_empty());
+        s.push(req(1, Priority::Batch));
+        s.push(req(2, Priority::Interactive));
+        assert_eq!(s.len(), 2);
+    }
+}

@@ -1,0 +1,90 @@
+//! Figure 1: share of a transformer layer's compute spent in
+//! self-attention as the token count grows (paper: 94% at 4K tokens on
+//! Llama2-7B, d=64 per head).
+//!
+//! Layer model (per token batch, d_model = H·d): QKV+O projections and
+//! the MLP are N·d_model² matmuls (linear in N), attention is N²·d per
+//! head (quadratic) — the crossover the paper motivates with.
+
+use crate::attention::{flash2_attention, FlashParams};
+use crate::metrics::Table;
+use crate::tensor::{matmul, Matrix};
+use crate::workload::qkv_uniform;
+
+pub struct LayerProfile {
+    pub n: usize,
+    pub attn_us: f64,
+    pub other_us: f64,
+}
+
+impl LayerProfile {
+    pub fn attn_share(&self) -> f64 {
+        self.attn_us / (self.attn_us + self.other_us)
+    }
+}
+
+/// Profile one layer at sequence length `n` (H heads of dim d).
+pub fn profile_layer(n: usize, h: usize, d: usize, reps: usize) -> LayerProfile {
+    let d_model = h * d;
+    let x = Matrix::uniform(n, d_model, 3);
+    let w = Matrix::uniform(d_model, d_model, 4);
+    let w_up = Matrix::uniform(d_model, 4 * d_model, 5);
+    let w_down = Matrix::uniform(4 * d_model, d_model, 6);
+    let heads: Vec<_> = (0..h).map(|i| qkv_uniform(n, d, 10 + i as u64)).collect();
+    let p = FlashParams { block_l: 64.min(n), block_m: 64.min(n) };
+
+    let attn = super::time_median(reps, || {
+        for (q, k, v) in &heads {
+            std::hint::black_box(flash2_attention(q, k, v, &p, false));
+        }
+    });
+    let other = super::time_median(reps, || {
+        // QKV + output projections (4 × d_model²) and the 4x MLP
+        for _ in 0..4 {
+            std::hint::black_box(matmul(&x, &w));
+        }
+        let up = matmul(&x, &w_up);
+        std::hint::black_box(matmul(&up, &w_down));
+    });
+    LayerProfile { n, attn_us: attn.as_secs_f64() * 1e6, other_us: other.as_secs_f64() * 1e6 }
+}
+
+pub fn render(quick: bool) -> String {
+    let ns: Vec<usize> = if quick { vec![256, 512, 1024] } else { vec![512, 1024, 2048, 4096] };
+    let (h, d) = if quick { (4, 64) } else { (8, 64) };
+    let reps = if quick { 2 } else { 3 };
+    let mut t = Table::new(&["N", "attention (µs)", "proj+MLP (µs)", "attention share"]);
+    let mut profiles = Vec::new();
+    for &n in &ns {
+        let p = profile_layer(n, h, d, reps);
+        t.row(&[
+            n.to_string(),
+            format!("{:.0}", p.attn_us),
+            format!("{:.0}", p.other_us),
+            format!("{:.0}%", p.attn_share() * 100.0),
+        ]);
+        profiles.push(p);
+    }
+    let mut out = String::from(
+        "Figure 1 — attention share of a transformer layer vs N (paper: 94% at 4K)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_share_grows_with_n() {
+        let small = profile_layer(128, 2, 64, 2);
+        let large = profile_layer(1024, 2, 64, 2);
+        assert!(
+            large.attn_share() > small.attn_share(),
+            "share {} -> {}",
+            small.attn_share(),
+            large.attn_share()
+        );
+    }
+}

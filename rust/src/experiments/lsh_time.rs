@@ -1,0 +1,82 @@
+//! §4.8: cost of the LSH-based grouping itself — the paper reports
+//! 0.14-0.15 ms flat across N with a share of total attention time
+//! falling from 74.8% (N=2048) to 1.3% (N=40960).
+
+use crate::attention::{block_permutations, distr_attention, DistrParams, FlashParams};
+use crate::metrics::Table;
+use crate::workload::qkv_uniform;
+
+pub struct Row {
+    pub n: usize,
+    pub lsh_us: f64,
+    pub total_us: f64,
+}
+
+pub fn measure(quick: bool) -> Vec<Row> {
+    let ns: Vec<usize> =
+        if quick { vec![2048, 4096] } else { vec![2048, 4096, 20480, 40960] };
+    let d = 128;
+    let reps = if quick { 3 } else { 5 };
+    ns.iter()
+        .map(|&n| {
+            let (q, k, v) = qkv_uniform(n, d, 23);
+            let lsh_us = super::time_median(reps, || {
+                std::hint::black_box(block_permutations(&q, 128, 0, true));
+            })
+            .as_secs_f64()
+                * 1e6;
+            let p = DistrParams {
+                flash: FlashParams { block_l: 128, block_m: 64 },
+                group: 2,
+                ..Default::default()
+            };
+            let total_us = super::time_median(if n > 8192 { 1 } else { reps }, || {
+                std::hint::black_box(distr_attention(&q, &k, &v, &p, false));
+            })
+            .as_secs_f64()
+                * 1e6;
+            Row { n, lsh_us, total_us }
+        })
+        .collect()
+}
+
+pub fn render(quick: bool) -> String {
+    let rows = measure(quick);
+    let mut t = Table::new(&["N", "LSH grouping (µs)", "full attention (µs)", "LSH share"]);
+    for r in &rows {
+        t.row(&[
+            r.n.to_string(),
+            format!("{:.0}", r.lsh_us),
+            format!("{:.0}", r.total_us),
+            format!("{:.1}%", r.lsh_us / r.total_us * 100.0),
+        ]);
+    }
+    let mut out = String::from(
+        "§4.8 — LSH grouping cost (paper: 0.14-0.15 ms, share 74.8% -> 1.3% as N grows)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lsh_share_shrinks_with_n() {
+        let rows = measure(true);
+        let first = rows.first().unwrap();
+        let last = rows.last().unwrap();
+        let s0 = first.lsh_us / first.total_us;
+        let s1 = last.lsh_us / last.total_us;
+        assert!(s1 < s0, "share {s0} -> {s1}");
+    }
+
+    #[test]
+    fn lsh_cost_roughly_linear_in_n() {
+        let rows = measure(true);
+        // N doubles => LSH cost grows, but far less than the N² attention
+        let ratio = rows[1].lsh_us / rows[0].lsh_us.max(1e-9);
+        assert!(ratio < 4.0, "lsh ratio {ratio}");
+    }
+}

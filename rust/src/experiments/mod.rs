@@ -1,0 +1,98 @@
+//! Paper-reproduction harnesses: one submodule per table/figure of the
+//! evaluation section (DESIGN.md §4 maps each to its paper id).
+//!
+//! Every harness prints the paper-style markdown table; `run_table`
+//! dispatches from the CLI (`distr-attn bench-table <id>`), and the
+//! criterion benches reuse the same building blocks.
+
+pub mod ablate;
+pub mod fig1;
+pub mod fig7;
+pub mod fig9;
+pub mod lsh_time;
+pub mod serve;
+pub mod tab1;
+pub mod tab2;
+pub mod tab3;
+pub mod tab6;
+pub mod tab9;
+pub mod train;
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+pub use serve::{infer_once, serve_selftest};
+pub use train::train_loop;
+
+/// Median-of-`reps` wall time of `f` (one warmup call first).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> Duration {
+    f(); // warmup
+    let mut times: Vec<Duration> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    times[times.len() / 2]
+}
+
+pub fn run_table(id: &str, artifacts: &Path, quick: bool) -> anyhow::Result<()> {
+    match id {
+        "fig1" => print!("{}", fig1::render(quick)),
+        "tab1" => print!("{}", tab1::render(quick)),
+        "tab2" => print!("{}", tab2::render()),
+        "tab3" => print!("{}", tab3::render_block_sizes(quick)),
+        "tab4" => print!("{}", tab3::render_sampling_rates(quick)),
+        "fig7" => print!("{}", fig7::render()),
+        "tab5" | "tab7" => print!("{}", python_results(id)?),
+        "tab6" => print!("{}", tab6::render(artifacts, quick)?),
+        "tab8" => print!("{}", tab6::render_tab8(artifacts, quick)?),
+        "fig9" => print!("{}", fig9::render(quick)),
+        "tab9" => print!("{}", tab9::render(quick)),
+        "lsh" => print!("{}", lsh_time::render(quick)),
+        "ablate" => print!("{}", ablate::render(quick)),
+        "all" => {
+            for t in [
+                "fig1", "tab1", "tab2", "tab3", "tab4", "fig7", "tab6", "tab8", "fig9", "tab9",
+                "lsh", "ablate",
+            ] {
+                println!("\n===== {t} =====");
+                run_table(t, artifacts, quick)?;
+            }
+        }
+        other => anyhow::bail!("unknown table id `{other}`"),
+    }
+    Ok(())
+}
+
+/// Tables produced by the python fine-tuning experiments: pretty-print
+/// the JSON the experiment scripts drop in `experiments/results/`.
+fn python_results(id: &str) -> anyhow::Result<String> {
+    let path = format!("python/experiments/results/{id}.md");
+    match std::fs::read_to_string(&path) {
+        Ok(s) => Ok(s),
+        Err(_) => Ok(format!(
+            "{id}: fine-tuning experiment output not found at {path}.\n\
+             Run `python -m experiments.vit_finetune` / `python -m experiments.lm_finetune`\n\
+             from python/ first (build-time experiment, see DESIGN.md §4).\n"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_monotone_positive() {
+        let d = time_median(3, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(d >= Duration::from_micros(80));
+    }
+
+    #[test]
+    fn unknown_table_is_error() {
+        assert!(run_table("nope", Path::new("artifacts"), true).is_err());
+    }
+}

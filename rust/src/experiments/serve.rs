@@ -1,0 +1,124 @@
+//! Serving entry points for the CLI: a one-shot inference and a
+//! self-test that exercises router + batcher + scheduler + engine on a
+//! synthetic request stream.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::attention::Variant;
+use crate::config::BatcherCfg;
+use crate::coordinator::{Batcher, Engine, Priority, Request, Router, Scheduler};
+use crate::metrics::LatencyHistogram;
+use crate::runtime::Manifest;
+use crate::workload::SeqTask;
+
+/// One prefill through the engine matching `variant`.
+pub fn infer_once(artifacts: &Path, variant: &str, tokens: Vec<i32>) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let v: Variant = variant.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let suffix = match v {
+        Variant::Standard => "standard",
+        Variant::Flash2 => "flash",
+        _ => "distr_flash",
+    };
+    let n = if tokens.len() <= 128 { 128 } else { 256 };
+    let name = format!("lm_prefill_{suffix}_{n}");
+    let engine = Engine::spawn(&manifest, &name, "lm_prefill_standard_128")
+        .with_context(|| format!("spawning engine for {name}"))?;
+    let resp = engine.handle.prefill_blocking(Request::new(0, tokens, v))?;
+    println!(
+        "first token: {}  (ttft {:.1} ms, artifact {name})",
+        resp.token,
+        resp.ttft.as_secs_f64() * 1e3
+    );
+    engine.shutdown();
+    Ok(())
+}
+
+/// Boot the full stack and push a synthetic request stream through it.
+pub fn serve_selftest(artifacts: &Path, requests: usize) -> anyhow::Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let mut engines = Vec::new();
+    let mut router: Router<crate::coordinator::EngineHandle> = Router::new();
+    for (suffix, variant) in [("flash", Variant::Flash2), ("distr_flash", Variant::Distr)] {
+        for n in [128usize, 256] {
+            let name = format!("lm_prefill_{suffix}_{n}");
+            if manifest.entry(&name).is_ok() {
+                let e = Engine::spawn(&manifest, &name, "lm_prefill_standard_128")?;
+                router.add_route(variant, n, e.handle.clone());
+                engines.push(e);
+            }
+        }
+    }
+    println!("serve: {} routes live", router.num_routes());
+
+    let mut batcher = Batcher::new(BatcherCfg { max_batch: 4, max_wait_us: 500 });
+    let mut scheduler = Scheduler::new(Duration::from_millis(50));
+    let task = SeqTask::new(512, 96);
+    let mut hist = LatencyHistogram::new();
+    let t0 = Instant::now();
+
+    // open-loop arrival process: a small wave of requests is injected,
+    // served, then the next wave arrives — so TTFT measures service +
+    // in-wave queueing rather than a flood of the full backlog at t=0
+    let wave = 4usize;
+    let mut injected = 0usize;
+    let mut completed = 0usize;
+    while completed < requests {
+        while injected < requests && injected < completed + wave {
+            let i = injected;
+            let (toks, _) = task.sample(i as u64);
+            let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
+            let prio = if i % 4 == 0 { Priority::Batch } else { Priority::Interactive };
+            scheduler.push(Request::new(i as u64, toks, variant).with_priority(prio));
+            injected += 1;
+        }
+        // drain scheduler through the batcher
+        while let Some(req) = scheduler.pop(Instant::now()) {
+            if let Some((_key, batch)) = batcher.push(req) {
+                completed += run_batch(&mut router, batch, &mut hist)?;
+            }
+        }
+        for (_key, batch) in batcher.poll_deadlines(Instant::now()) {
+            completed += run_batch(&mut router, batch, &mut hist)?;
+        }
+        for (_key, batch) in batcher.drain() {
+            completed += run_batch(&mut router, batch, &mut hist)?;
+        }
+    }
+
+    let elapsed = t0.elapsed();
+    println!(
+        "serve: {requests} requests in {:.2}s  ({:.1} req/s)",
+        elapsed.as_secs_f64(),
+        requests as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "ttft: mean {:.1} ms  p50 {:.1} ms  p99 {:.1} ms  max {:.1} ms",
+        hist.mean().as_secs_f64() * 1e3,
+        hist.quantile(0.5).as_secs_f64() * 1e3,
+        hist.quantile(0.99).as_secs_f64() * 1e3,
+        hist.max().as_secs_f64() * 1e3
+    );
+    for e in engines {
+        e.shutdown();
+    }
+    Ok(())
+}
+
+fn run_batch(
+    router: &mut Router<crate::coordinator::EngineHandle>,
+    batch: Vec<Request>,
+    hist: &mut LatencyHistogram,
+) -> anyhow::Result<usize> {
+    let n = batch.len();
+    for req in batch {
+        let (handle, _) = router.route(&req)?;
+        let handle = handle.clone();
+        let resp = handle.prefill_blocking(req)?;
+        hist.record(resp.ttft);
+    }
+    Ok(n)
+}

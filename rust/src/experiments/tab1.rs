@@ -1,0 +1,78 @@
+//! Table 1: FlashAttention-2 execution time with varying N and d —
+//! halving d gives 1.13–1.23× speedup (the paper's motivation for
+//! reducing the embedding dimensionality).
+
+use crate::attention::{flash2_attention, FlashParams};
+use crate::metrics::Table;
+use crate::workload::qkv_uniform;
+
+pub struct Row {
+    pub d: usize,
+    pub times_us: Vec<f64>,
+}
+
+pub fn measure(quick: bool) -> (Vec<usize>, Vec<Row>) {
+    let ns: Vec<usize> =
+        if quick { vec![512, 1024, 2048] } else { vec![1024, 2048, 4096, 8192] };
+    let reps = if quick { 3 } else { 5 };
+    let rows = [128usize, 64]
+        .iter()
+        .map(|&d| {
+            let times = ns
+                .iter()
+                .map(|&n| {
+                    let (q, k, v) = qkv_uniform(n, d, 42);
+                    let p = FlashParams { block_l: 128.min(n), block_m: 64.min(n) };
+                    super::time_median(reps, || {
+                        std::hint::black_box(flash2_attention(&q, &k, &v, &p, false));
+                    })
+                    .as_secs_f64()
+                        * 1e6
+                })
+                .collect();
+            Row { d, times_us: times }
+        })
+        .collect();
+    (ns, rows)
+}
+
+pub fn render(quick: bool) -> String {
+    let (ns, rows) = measure(quick);
+    let mut header: Vec<String> = vec!["d".into()];
+    header.extend(ns.iter().map(|n| format!("N={n} (µs)")));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for row in &rows {
+        let mut cells = vec![row.d.to_string()];
+        cells.extend(row.times_us.iter().map(|us| format!("{us:.0}")));
+        t.row(&cells);
+    }
+    let mut out = String::from("Table 1 — Flash2 time vs (N, d); paper: halving d => 1.13-1.23x\n");
+    out.push_str(&t.render());
+    // speedup summary row
+    out.push_str("halving d speedup: ");
+    for (i, n) in ns.iter().enumerate() {
+        let s = rows[0].times_us[i] / rows[1].times_us[i].max(1e-9);
+        out.push_str(&format!("N={n}: {s:.2}x  "));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halving_d_speeds_up() {
+        let (_, rows) = measure(true);
+        // d=64 must beat d=128 at the largest N measured
+        let last = rows[0].times_us.len() - 1;
+        assert!(
+            rows[1].times_us[last] < rows[0].times_us[last],
+            "d=64 {:?} vs d=128 {:?}",
+            rows[1].times_us,
+            rows[0].times_us
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Tables 3 & 4: elementwise relative error of Ŝ vs S on the paper's
+//! synthesized workload (N=64, d=64, uniform(0,1), 100 repetitions),
+//! sweeping the block size l (Table 3) and the sampling rate G*
+//! (Table 4). Both sampling estimators are reported: `mean` (our
+//! default, matches the paper's error bands) and `first` (the paper's
+//! literal single-column sampling).
+
+use crate::attention::{distr_scores, DistrParams, FlashParams};
+use crate::metrics::Table;
+use crate::tensor::matmul_bt;
+use crate::workload::qkv_uniform;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrStats {
+    pub min: f32,
+    pub max: f32,
+    pub mean: f32,
+}
+
+/// Error stats averaged over `reps` random (Q, K) draws.
+pub fn error_stats(block_l: usize, group: usize, sample_mean: bool, reps: usize) -> ErrStats {
+    let mut acc = ErrStats { min: 0.0, max: 0.0, mean: 0.0 };
+    for rep in 0..reps {
+        let (q, k, _) = qkv_uniform(64, 64, rep as u64 * 7 + 1);
+        let truth = matmul_bt(&q, &k);
+        let p = DistrParams {
+            flash: FlashParams { block_l, block_m: 16 },
+            group,
+            sample_mean,
+            center: true,
+            seed: rep as u64,
+        };
+        let approx = distr_scores(&q, &k, &p);
+        let (mn, mx, mean) = approx.rel_err_stats(&truth);
+        acc.min += mn;
+        acc.max += mx;
+        acc.mean += mean;
+    }
+    let n = reps as f32;
+    ErrStats { min: acc.min / n, max: acc.max / n, mean: acc.mean / n }
+}
+
+fn render_sweep(title: &str, paper_note: &str, configs: &[(String, usize, usize)], reps: usize) -> String {
+    let mut out = format!("{title}\n{paper_note}\n");
+    for (label, sample_mean) in [("sample=mean (default)", true), ("sample=first (paper-literal)", false)] {
+        let mut t = Table::new(&["stat", &configs[0].0, &configs[1].0, &configs[2].0, &configs[3].0]);
+        let stats: Vec<ErrStats> = configs
+            .iter()
+            .map(|(_, l, g)| error_stats(*l, *g, sample_mean, reps))
+            .collect();
+        t.row(&std::iter::once("min %".to_string())
+            .chain(stats.iter().map(|s| format!("{:.0e}", s.min * 100.0)))
+            .collect::<Vec<_>>());
+        t.row(&std::iter::once("max %".to_string())
+            .chain(stats.iter().map(|s| format!("{:.2}", s.max * 100.0)))
+            .collect::<Vec<_>>());
+        t.row(&std::iter::once("mean %".to_string())
+            .chain(stats.iter().map(|s| format!("{:.2}", s.mean * 100.0)))
+            .collect::<Vec<_>>());
+        out.push_str(&format!("\n[{label}]\n{}", t.render()));
+    }
+    out
+}
+
+pub fn render_block_sizes(quick: bool) -> String {
+    let reps = if quick { 10 } else { 100 };
+    let configs: Vec<(String, usize, usize)> =
+        [1usize, 2, 4, 8].iter().map(|&l| (format!("l={l}"), l, 2)).collect();
+    render_sweep(
+        "Table 3 — Ŝ error vs block size l (N=64, d=64, G*=2)",
+        "paper: mean 0.87-0.90%, max 3.4-3.45%, min 4e-4..2e-3 (%)",
+        &configs,
+        reps,
+    )
+}
+
+pub fn render_sampling_rates(quick: bool) -> String {
+    let reps = if quick { 10 } else { 100 };
+    let configs: Vec<(String, usize, usize)> =
+        [2usize, 4, 8, 16].iter().map(|&g| (format!("G*={g}"), 2, g)).collect();
+    render_sweep(
+        "Table 4 — Ŝ error vs sampling rate G* (N=64, d=64, l=2)",
+        "paper: mean 0.87->4.96%, max 3.4->16.5%",
+        &configs,
+        reps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_band_matches_paper_magnitude() {
+        // G*=2, l=2, mean sampling: paper reports ~0.87% mean; hold ours
+        // to the same order of magnitude (<3%)
+        let s = error_stats(2, 2, true, 10);
+        assert!(s.mean < 0.03, "mean {}", s.mean);
+        assert!(s.max < 0.25, "max {}", s.max);
+    }
+
+    #[test]
+    fn table4_shape_error_grows_with_group() {
+        let g2 = error_stats(2, 2, false, 5);
+        let g16 = error_stats(2, 16, false, 5);
+        assert!(g16.mean > g2.mean * 2.0, "g2={} g16={}", g2.mean, g16.mean);
+    }
+
+    #[test]
+    fn table3_shape_error_flat_in_block_size() {
+        // paper: error roughly constant across l (0.87-0.9%)
+        let l2 = error_stats(2, 2, true, 5);
+        let l8 = error_stats(8, 2, true, 5);
+        assert!(l8.mean < l2.mean * 3.0 && l2.mean < l8.mean * 3.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Table 6: Time-To-First-Token of the LM across attention mechanisms
+//! and prefill lengths, measured end-to-end through the serving engine
+//! (PJRT artifact execution; DESIGN.md §5 S6 — LM scaled from Llama3-1B,
+//! prefill lengths scaled to the artifact set).
+//!
+//! Table 8 (no-fine-tune swap) reuses the same machinery on the ViT
+//! artifacts: wallclock + prediction agreement of exact vs distr.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::attention::Variant;
+use crate::coordinator::{Engine, Request};
+use crate::metrics::Table;
+use crate::runtime::{Executor, Manifest, TensorData};
+use crate::workload::SeqTask;
+
+/// LM prefill variants present in the artifact set.
+pub const LM_VARIANTS: [(&str, Variant); 3] = [
+    ("standard", Variant::Standard),
+    ("flash", Variant::Flash2),
+    ("distr_flash", Variant::Distr),
+];
+
+pub fn render(artifacts: &Path, quick: bool) -> anyhow::Result<String> {
+    let manifest = Manifest::load(artifacts)?;
+    let lens: Vec<usize> = if quick { vec![128] } else { vec![128, 256] };
+    let reps = if quick { 2 } else { 5 };
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(lens.iter().map(|n| format!("n={n} (ms)")))
+        .collect();
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+
+    for (suffix, variant) in LM_VARIANTS {
+        let mut cells = vec![suffix.to_string()];
+        for &n in &lens {
+            let name = format!("lm_prefill_{suffix}_{n}");
+            if manifest.entry(&name).is_err() {
+                cells.push("-".into());
+                continue;
+            }
+            let engine = Engine::spawn(&manifest, &name, "lm_prefill_standard_128")
+                .with_context(|| format!("spawning {name}"))?;
+            let task = SeqTask::new(512, n);
+            let mut best = f64::INFINITY;
+            for rep in 0..reps + 1 {
+                let (toks, _) = task.sample(rep as u64);
+                let req = Request::new(rep as u64, toks, variant);
+                let resp = engine.handle.prefill_blocking(req)?;
+                if rep > 0 {
+                    best = best.min(resp.ttft.as_secs_f64() * 1e3);
+                }
+            }
+            engine.shutdown();
+            cells.push(format!("{best:.1}"));
+        }
+        t.row(&cells);
+    }
+    let mut out = String::from(
+        "Table 6 — TTFT by attention mechanism and prefill length, through the\n\
+         serving engine on AOT artifacts (paper: ours & ours+flash fastest at\n\
+         every length; Flatten/Primal slower than standard at short lengths)\n\
+         NOTE: artifact wallclock runs interpret-mode Pallas on CPU (composition\n\
+         proof, not the speed claim); the per-mechanism latency ordering is\n\
+         measured on the Rust engines below.\n",
+    );
+    out.push_str(&t.render());
+    out.push_str(&render_engine_ttft(quick));
+    Ok(out)
+}
+
+/// The attention-time component of prefill for ALL seven mechanisms on
+/// the Rust engines — the quantity that drives the paper's Table 6
+/// ordering (per-head d=64, summed over the LM's heads).
+fn render_engine_ttft(quick: bool) -> String {
+    use crate::attention::{Engine, Variant};
+    use crate::workload::qkv_uniform;
+    let lens: Vec<usize> = if quick { vec![256, 512] } else { vec![256, 512, 1024, 2048] };
+    let heads = 4usize;
+    let reps = if quick { 2 } else { 3 };
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(lens.iter().map(|n| format!("n={n} (ms)")))
+        .collect();
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for variant in Variant::ALL {
+        let engine = Engine::new(variant).with_blocks(128, 64).with_group(2).causal(true);
+        let mut cells = vec![variant.name().to_string()];
+        for &n in &lens {
+            let qkv: Vec<_> = (0..heads).map(|h| qkv_uniform(n, 64, h as u64)).collect();
+            let d = super::time_median(reps, || {
+                for (q, k, v) in &qkv {
+                    std::hint::black_box(engine.run(q, k, v));
+                }
+            });
+            cells.push(format!("{:.1}", d.as_secs_f64() * 1e3));
+        }
+        t.row(&cells);
+    }
+    format!(
+        "\nattention time within prefill (Rust engines, causal, {heads} heads, d=64):\n{}",
+        t.render()
+    )
+}
+
+/// Table 8: pre-trained models, no fine-tuning — swap attention at
+/// inference time, report wallclock + top-1 agreement vs exact.
+pub fn render_tab8(artifacts: &Path, quick: bool) -> anyhow::Result<String> {
+    let manifest = Manifest::load(artifacts)?;
+    let client = xla::PjRtClient::cpu()?;
+    let std_exe = Executor::load(&client, &manifest, "vit_fwd_standard_b8")?;
+    let distr_exe = Executor::load(&client, &manifest, "vit_fwd_distr_flash_b8")?;
+    let params = manifest.load_params("vit_fwd_standard_b8")?;
+    let param_inputs: Vec<TensorData> =
+        params.to_vecs().into_iter().map(|(_, v)| TensorData::F32(v)).collect();
+
+    let batches = if quick { 2 } else { 8 };
+    let img_task = crate::workload::ImageTask::new(10, 32, 3, 0.3, 5);
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut time_std = 0.0;
+    let mut time_distr = 0.0;
+    for b in 0..batches {
+        let (imgs, _) = img_task.batch(8, b as u64);
+        let mut inputs = param_inputs.clone();
+        inputs.push(TensorData::F32(imgs));
+        let t0 = std::time::Instant::now();
+        let out_std = std_exe.run(&inputs)?;
+        time_std += t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let out_distr = distr_exe.run(&inputs)?;
+        time_distr += t0.elapsed().as_secs_f64();
+        let ls = out_std[0].as_f32()?;
+        let ld = out_distr[0].as_f32()?;
+        let classes = ls.len() / 8;
+        for i in 0..8 {
+            let arg = |v: &[f32]| {
+                v[i * classes..(i + 1) * classes]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap()
+            };
+            if arg(ls) == arg(ld) {
+                agree += 1;
+            }
+            total += 1;
+        }
+    }
+    let mut t = Table::new(&["model pair", "exact (ms/batch)", "distr (ms/batch)", "top-1 agreement"]);
+    t.row(&[
+        "vit_tiny (b=8)".into(),
+        format!("{:.1}", time_std / batches as f64 * 1e3),
+        format!("{:.1}", time_distr / batches as f64 * 1e3),
+        format!("{:.0}%", agree as f64 / total as f64 * 100.0),
+    ]);
+    let mut out = String::from(
+        "Table 8 — no-fine-tune attention swap on the ViT artifacts\n\
+         (paper: ours trades ≤7% accuracy for 12-31% faster inference;\n\
+         trained-accuracy columns come from python/experiments — see tab5)\n\
+         NOTE: artifact wallclock runs the interpret-mode Pallas lowering on\n\
+         CPU (correctness/composition proof, not the speed claim) — the\n\
+         wallclock comparison lives in fig9 on the Rust engines; TPU perf is\n\
+         estimated analytically in EXPERIMENTS.md §Perf.\n",
+    );
+    out.push_str(&t.render());
+    Ok(out)
+}

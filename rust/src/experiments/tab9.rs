@@ -1,0 +1,101 @@
+//! Table 9: multi-GPU attention scatter, Flash2 vs DistrAttention on
+//! 1/2/4 devices with double-buffered transfers (paper §4.7: ours up to
+//! 34.87% faster single-device, 7.6-23% faster multi-device).
+//!
+//! Scale substitution (DESIGN.md §5 S7): the paper uses H=480 heads of
+//! N=20480, d=128; the CPU testbed runs H and N scaled down with the
+//! same chunking structure (chunks of H/24 heads, scattered in rounds).
+
+use crate::attention::Variant;
+use crate::config::DeviceCfg;
+use crate::coordinator::{run_scatter, ScatterPlan};
+use crate::metrics::Table;
+
+pub fn plan(variant: Variant, quick: bool) -> ScatterPlan {
+    if quick {
+        ScatterPlan {
+            heads: 12,
+            chunk_heads: 2,
+            n: 512,
+            d: 128,
+            variant,
+            group: 2,
+            block_l: 128,
+            block_m: 64,
+        }
+    } else {
+        ScatterPlan {
+            heads: 48,
+            chunk_heads: 4,
+            n: 2048,
+            d: 128,
+            variant,
+            group: 2,
+            block_l: 128,
+            block_m: 64,
+        }
+    }
+}
+
+pub fn render(quick: bool) -> String {
+    let mut t = Table::new(&["method", "GPUs=1 (ms)", "2 (ms)", "4 (ms)"]);
+    let mut rows: Vec<(Variant, Vec<f64>)> = Vec::new();
+    for variant in [Variant::Flash2, Variant::Distr] {
+        let mut times = Vec::new();
+        for n_dev in [1usize, 2, 4] {
+            let cfg = DeviceCfg {
+                num_devices: n_dev,
+                link_gbps: 25.0,
+                link_latency_us: 10,
+                double_buffer: true,
+            };
+            let r = run_scatter(&plan(variant, quick), &cfg, 11);
+            times.push(r.wall.as_secs_f64() * 1e3);
+        }
+        rows.push((variant, times));
+    }
+    for (variant, times) in &rows {
+        let cells: Vec<String> = std::iter::once(variant.name().to_string())
+            .chain(times.iter().map(|ms| format!("{ms:.0}")))
+            .collect();
+        t.row(&cells);
+    }
+    let mut out = String::from(
+        "Table 9 — multi-device scatter, double-buffered (paper: ours 34.87% faster\n\
+         at 1 GPU, 7.6-23% at 2-4 GPUs; scaled workload per DESIGN.md S7)\n",
+    );
+    out.push_str(&t.render());
+    if let [(_, flash), (_, distr)] = &rows[..] {
+        out.push_str("ours vs flash2 speedup: ");
+        for (i, n_dev) in [1, 2, 4].iter().enumerate() {
+            out.push_str(&format!("{n_dev} dev: {:.1}%  ", (flash[i] / distr[i] - 1.0) * 100.0));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_devices_distribute_the_work() {
+        // wall-clock scaling is noisy under `cargo test`'s own
+        // parallelism, so assert the structural property instead: with 4
+        // devices the chunks are spread round-robin and no device idles.
+        let cfg1 = DeviceCfg { num_devices: 1, link_gbps: 200.0, link_latency_us: 1, double_buffer: true };
+        let cfg4 = DeviceCfg { num_devices: 4, link_gbps: 200.0, link_latency_us: 1, double_buffer: true };
+        let p = plan(Variant::Flash2, true);
+        let r1 = run_scatter(&p, &cfg1, 5);
+        assert_eq!(r1.per_device_chunks, vec![p.num_chunks()]);
+        let r4 = run_scatter(&p, &cfg4, 5);
+        assert_eq!(r4.per_device_chunks.iter().sum::<usize>(), p.num_chunks());
+        let max_fair = p.num_chunks().div_ceil(4);
+        assert!(
+            r4.per_device_chunks.iter().all(|&c| c > 0 && c <= max_fair),
+            "unbalanced: {:?}",
+            r4.per_device_chunks
+        );
+    }
+}

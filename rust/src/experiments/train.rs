@@ -1,0 +1,89 @@
+//! The end-to-end training loop: executes the AOT `lm_train_step`
+//! artifact (DistrAttention forward via the Pallas kernel, reference
+//! backward) from Rust, feeding updated parameters back in each step.
+//! Python never runs — the loop is pure artifact execution.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::runtime::{Executor, Manifest, TensorData};
+use crate::workload::SeqTask;
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub step_time: std::time::Duration,
+}
+
+/// Run `steps` of the train-step artifact on the synthetic corpus.
+/// `log_to`: optional file to append the loss curve to.
+pub fn run(artifacts: &Path, steps: usize, log_every: usize) -> anyhow::Result<TrainReport> {
+    let manifest = Manifest::load(artifacts)?;
+    let client = xla::PjRtClient::cpu().context("PJRT client")?;
+    let exe = Executor::load(&client, &manifest, "lm_train_step")?;
+    let entry = &exe.entry;
+    let n_params = entry.meta_usize("n_params").ok_or_else(|| anyhow!("missing n_params"))?;
+    let n_opt = entry.meta_usize("n_opt").ok_or_else(|| anyhow!("missing n_opt"))?;
+    let batch = entry.meta_usize("batch").ok_or_else(|| anyhow!("missing batch"))?;
+    let seq = entry.meta_usize("n").ok_or_else(|| anyhow!("missing n"))?;
+    let vocab = entry.meta_usize("vocab").ok_or_else(|| anyhow!("missing vocab"))?;
+
+    // initial params + optimizer state from the exported blob
+    let blob = manifest.load_params("lm_train_step")?;
+    if blob.n_leaves() != n_params + n_opt {
+        return Err(anyhow!(
+            "params blob has {} leaves, expected {} params + {} opt",
+            blob.n_leaves(),
+            n_params,
+            n_opt
+        ));
+    }
+    let mut state: Vec<TensorData> =
+        blob.to_vecs().into_iter().map(|(_, v)| TensorData::F32(v)).collect();
+
+    let task = SeqTask::new(vocab, seq);
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (toks, tgts) = task.batch(batch, step as u64);
+        let mut inputs = state.clone();
+        inputs.push(TensorData::I32(toks));
+        inputs.push(TensorData::I32(tgts));
+        let mut outputs = exe.run(&inputs)?;
+        let loss = match outputs.pop().ok_or_else(|| anyhow!("no loss output"))? {
+            TensorData::F32(v) => *v.first().ok_or_else(|| anyhow!("empty loss"))?,
+            _ => return Err(anyhow!("loss not f32")),
+        };
+        losses.push(loss);
+        state = outputs; // new params + new opt state feed the next step
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            log::info!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    let step_time = t0.elapsed() / steps.max(1) as u32;
+    Ok(TrainReport { losses, steps, step_time })
+}
+
+/// CLI wrapper: run + print the curve summary.
+pub fn train_loop(artifacts: &Path, steps: usize, out_file: Option<&Path>) -> anyhow::Result<()> {
+    let report = run(artifacts, steps, 10)?;
+    let first = report.losses.first().copied().unwrap_or(f32::NAN);
+    let last = report.losses.last().copied().unwrap_or(f32::NAN);
+    println!(
+        "trained {} steps, {:.0} ms/step: loss {:.4} -> {:.4}",
+        report.steps,
+        report.step_time.as_secs_f64() * 1e3,
+        first,
+        last
+    );
+    if let Some(path) = out_file {
+        let mut s = String::from("step,loss\n");
+        for (i, l) in report.losses.iter().enumerate() {
+            s.push_str(&format!("{i},{l}\n"));
+        }
+        std::fs::write(path, s)?;
+        println!("loss curve written to {path:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! DistrAttention — an efficient and flexible self-attention mechanism.
+//!
+//! Rust + JAX + Pallas reproduction of *"DistrAttention: An Efficient and
+//! Flexible Self-Attention Mechanism on Modern GPUs"* (Jin et al., 2025).
+//!
+//! Three layers (see `DESIGN.md`):
+//!
+//! * **Layer 1 (Pallas, build time)** — the DistrAttention and
+//!   FlashAttention-2 kernels under `python/compile/kernels/`, lowered AOT
+//!   to HLO text artifacts.
+//! * **Layer 2 (JAX, build time)** — transformer models (ViT-style encoder,
+//!   Llama-style decoder) with pluggable attention, lowered per entry point.
+//! * **Layer 3 (this crate, run time)** — loads the artifacts through the
+//!   PJRT C API ([`runtime`]), serves them behind a router + dynamic
+//!   batcher + KV-cache coordinator ([`coordinator`]), and carries the
+//!   Rust-native attention engines ([`attention`]) and the GPU analytic
+//!   model ([`simulator`]) used by the paper-reproduction benches.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod attention;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::Config;

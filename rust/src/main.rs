@@ -1,0 +1,73 @@
+//! `distr-attn` — CLI for the DistrAttention serving stack and the
+//! paper-reproduction harnesses.
+//!
+//! ```text
+//! distr-attn bench-table <id> [--quick]   # regenerate a paper table/figure
+//! distr-attn block-select                 # Table 2 (l, m) selection report
+//! distr-attn infer --variant distr --prompt 1,2,3
+//! distr-attn train --steps 100
+//! distr-attn serve --requests 64
+//! ```
+//! Global: `--artifacts DIR` (default ./artifacts).
+
+use distr_attention::experiments;
+use distr_attention::util::cli::Args;
+
+const USAGE: &str = "\
+distr-attn — DistrAttention reproduction CLI
+
+USAGE:
+  distr-attn <command> [options]
+
+COMMANDS:
+  bench-table <id>   regenerate a paper table/figure:
+                     fig1 tab1 tab2 tab3 tab4 fig7 tab5 tab6 tab7 tab8
+                     fig9 tab9 lsh ablate all        (--quick for smaller sweeps)
+  block-select       Table 2 (l, m) selection report
+  infer              one prefill (--variant distr --prompt 1,2,3,4)
+  train              AOT train-step loop (--steps 100)
+  serve              boot the serving stack self-test (--requests 64)
+
+OPTIONS:
+  --artifacts DIR    artifacts directory (default: artifacts)
+";
+
+fn main() -> anyhow::Result<()> {
+    distr_attention::util::logger::init();
+    let args = Args::from_env();
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.subcommand() {
+        Some("bench-table") => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("bench-table needs a table id\n{USAGE}"))?;
+            experiments::run_table(id, &artifacts, args.has("quick"))
+        }
+        Some("block-select") => {
+            print!("{}", experiments::tab2::render());
+            Ok(())
+        }
+        Some("infer") => {
+            let variant = args.get_or("variant", "distr");
+            let tokens: Vec<i32> = args
+                .get_or("prompt", "1,2,3,4,5,6,7,8")
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or(0))
+                .collect();
+            experiments::infer_once(&artifacts, variant, tokens)
+        }
+        Some("train") => {
+            let steps = args.get_usize("steps", 100)?;
+            experiments::train_loop(&artifacts, steps, None)
+        }
+        Some("serve") => {
+            let requests = args.get_usize("requests", 64)?;
+            experiments::serve_selftest(&artifacts, requests)
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

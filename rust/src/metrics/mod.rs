@@ -1,0 +1,198 @@
+//! Latency/throughput metrics used by every bench harness and the serve
+//! loop: a fixed-bucket histogram for percentiles plus a tiny markdown
+//! table emitter (the benches print paper-style rows).
+
+use std::time::Duration;
+
+/// Latency histogram with exponential buckets from 1µs to ~67s.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    const NUM_BUCKETS: usize = 27; // 2^0 .. 2^26 µs
+
+    pub fn new() -> Self {
+        Self { buckets: vec![0; Self::NUM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(Self::NUM_BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0.0..1.0).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // bucket upper bound, clamped to the observed maximum
+                return Duration::from_micros((1u64 << (i + 1)).min(self.max_us));
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Throughput counter over a wall-clock window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Throughput {
+    pub items: u64,
+    pub elapsed: Duration,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.items as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Markdown table builder — bench harnesses print paper-style tables.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = LatencyHistogram::new();
+        for us in [100u64, 200, 300, 400, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean(), Duration::from_micros(400));
+        assert_eq!(h.max(), Duration::from_micros(1000));
+        assert!(h.quantile(0.5) >= Duration::from_micros(200));
+        assert!(h.quantile(0.99) >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(20));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean(), Duration::from_micros(15));
+    }
+
+    #[test]
+    fn quantile_empty_is_zero() {
+        assert_eq!(LatencyHistogram::new().quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput() {
+        let t = Throughput { items: 100, elapsed: Duration::from_secs(2) };
+        assert!((t.per_sec() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["method", "time"]);
+        t.row(&["flash2".into(), "1.23".into()]);
+        t.row(&["ours".into(), "0.89".into()]);
+        let s = t.render();
+        assert!(s.contains("| method | time |"));
+        assert!(s.contains("| ours   | 0.89 |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        Table::new(&["a", "b"]).row(&["only-one".into()]);
+    }
+}

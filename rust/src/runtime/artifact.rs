@@ -1,0 +1,307 @@
+//! Artifact manifest (`artifacts/manifest.json`) and parameter blobs
+//! (`<name>.params.bin` + `.params.json`) — the contract between
+//! `python/compile/aot.py` and this runtime. Parsed with the in-tree
+//! JSON parser (`util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Value;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let shape = v
+            .req_array("shape")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+            .collect::<anyhow::Result<_>>()?;
+        Ok(Self { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Value,
+    pub params: Option<ParamsRef>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            v.req_array(key)?.iter().map(TensorSpec::from_json).collect()
+        };
+        let params = match v.get("params") {
+            None => None,
+            Some(p) => Some(ParamsRef {
+                bin: p.req_str("bin")?.to_string(),
+                index: p.req_str("index")?.to_string(),
+                n_leaves: p.req_usize("n_leaves")?,
+            }),
+        };
+        Ok(Self {
+            file: v.req_str("file")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            meta: v.get("meta").cloned().unwrap_or(Value::Null),
+            params,
+        })
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key)?.as_str()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamsRef {
+    pub bin: String,
+    pub index: String,
+    pub n_leaves: usize,
+}
+
+/// The artifact directory index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: usize,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let format = v.req_usize("format")?;
+        if format != 1 {
+            return Err(anyhow!("unsupported manifest format {format}"));
+        }
+        let mut artifacts = HashMap::new();
+        for (name, entry) in
+            v.req("artifacts")?.as_object().ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry::from_json(entry).with_context(|| format!("artifact `{name}`"))?,
+            );
+        }
+        Ok(Self { format, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts.get(name).ok_or_else(|| {
+            let mut known: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+            known.sort_unstable();
+            anyhow!("artifact `{name}` not in manifest; available: {known:?}")
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+
+    /// Names matching a predicate on (name, entry) — bench sweeps.
+    pub fn find(&self, mut pred: impl FnMut(&str, &ArtifactEntry) -> bool) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|(n, e)| pred(n, e))
+            .map(|(n, _)| n.clone())
+            .collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Load the parameter blob attached to `name` (if any).
+    pub fn load_params(&self, name: &str) -> anyhow::Result<ParamsBlob> {
+        let entry = self.entry(name)?;
+        let pref = entry
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact `{name}` exports no parameters"))?;
+        ParamsBlob::load(&self.dir.join(&pref.bin), &self.dir.join(&pref.index))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// A flattened parameter pytree: ordered leaves over one f32 blob.
+#[derive(Clone, Debug)]
+pub struct ParamsBlob {
+    pub leaves: Vec<ParamLeaf>,
+    data: Vec<f32>,
+}
+
+impl ParamsBlob {
+    pub fn load(bin: &Path, index: &Path) -> anyhow::Result<Self> {
+        let idx_text = std::fs::read_to_string(index)?;
+        let idx = Value::parse(&idx_text).map_err(|e| anyhow!("{}: {e}", index.display()))?;
+        let total_bytes = idx.req_usize("total_bytes")?;
+        let leaves = idx
+            .req_array("leaves")?
+            .iter()
+            .map(|l| -> anyhow::Result<ParamLeaf> {
+                Ok(ParamLeaf {
+                    name: l.req_str("name")?.to_string(),
+                    shape: l
+                        .req_array("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                        .collect::<anyhow::Result<_>>()?,
+                    offset: l.req_usize("offset")?,
+                    numel: l.req_usize("numel")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let bytes = std::fs::read(bin)?;
+        if bytes.len() != total_bytes {
+            return Err(anyhow!(
+                "params blob {bin:?}: {} bytes, index claims {total_bytes}",
+                bytes.len()
+            ));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Self { leaves, data })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Slice of leaf `i` in index order (the executable's input order).
+    pub fn leaf(&self, i: usize) -> &[f32] {
+        let l = &self.leaves[i];
+        &self.data[l.offset / 4..l.offset / 4 + l.numel]
+    }
+
+    /// Leaf values as owned vectors (feeding the executor).
+    pub fn to_vecs(&self) -> Vec<(Vec<usize>, Vec<f32>)> {
+        (0..self.n_leaves())
+            .map(|i| (self.leaves[i].shape.clone(), self.leaf(i).to_vec()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+    use std::io::Write;
+
+    fn write_blob(dir: &Path) -> (PathBuf, PathBuf) {
+        let bin = dir.join("p.bin");
+        let idx = dir.join("p.json");
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut f = std::fs::File::create(&bin).unwrap();
+        for v in &vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        std::fs::write(
+            &idx,
+            r#"{"leaves": [
+                {"name": "a", "shape": [2], "offset": 0, "numel": 2},
+                {"name": "b", "shape": [2, 2], "offset": 8, "numel": 4}
+            ], "total_bytes": 24}"#,
+        )
+        .unwrap();
+        (bin, idx)
+    }
+
+    #[test]
+    fn params_blob_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let (bin, idx) = write_blob(dir.path());
+        let blob = ParamsBlob::load(&bin, &idx).unwrap();
+        assert_eq!(blob.n_leaves(), 2);
+        assert_eq!(blob.leaf(0), &[1.0, 2.0]);
+        assert_eq!(blob.leaf(1), &[3.0, 4.0, 5.0, 6.0]);
+        let vecs = blob.to_vecs();
+        assert_eq!(vecs[1].0, vec![2, 2]);
+    }
+
+    #[test]
+    fn params_blob_size_mismatch_rejected() {
+        let dir = TempDir::new().unwrap();
+        let (bin, idx) = write_blob(dir.path());
+        std::fs::write(&bin, [0u8; 8]).unwrap();
+        assert!(ParamsBlob::load(&bin, &idx).is_err());
+    }
+
+    #[test]
+    fn manifest_missing_artifact_lists_available() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"format": 1, "artifacts": {"foo": {"file": "foo.hlo.txt",
+                "inputs": [], "outputs": []}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        let err = m.entry("bar").unwrap_err().to_string();
+        assert!(err.contains("foo"), "{err}");
+    }
+
+    #[test]
+    fn manifest_bad_format_rejected() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), r#"{"format": 9, "artifacts": {}}"#)
+            .unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn manifest_parses_meta_and_specs() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"format": 1, "artifacts": {"x": {"file": "x.hlo.txt",
+                "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+                "outputs": [{"shape": [2], "dtype": "i32"}],
+                "meta": {"n": 128, "variant": "distr_flash"}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        let e = m.entry("x").unwrap();
+        assert_eq!(e.inputs[0].numel(), 6);
+        assert_eq!(e.outputs[0].dtype, "i32");
+        assert_eq!(e.meta_usize("n"), Some(128));
+        assert_eq!(e.meta_str("variant"), Some("distr_flash"));
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let s = TensorSpec { shape: vec![4, 128, 64], dtype: "f32".into() };
+        assert_eq!(s.numel(), 32768);
+    }
+}

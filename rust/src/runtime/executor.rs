@@ -1,0 +1,177 @@
+//! Typed execution of AOT artifacts on a PJRT client.
+//!
+//! An [`Executor`] owns a compiled executable plus its I/O specs and maps
+//! host vectors to literals and back. Compilation happens once per
+//! artifact (at load), never on the request path.
+
+use anyhow::{anyhow, Context};
+
+use super::artifact::{ArtifactEntry, Manifest, TensorSpec};
+
+/// Host-side tensor data: the two dtypes the artifact set uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("expected f32 tensor, got i32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("expected i32 tensor, got f32")),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> anyhow::Result<xla::Literal> {
+        if self.len() != spec.numel() {
+            return Err(anyhow!(
+                "input length {} != spec {:?} ({} elems)",
+                self.len(),
+                spec.shape,
+                spec.numel()
+            ));
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (self, spec.dtype.as_str()) {
+            (TensorData::F32(v), "f32") => xla::Literal::vec1(v),
+            (TensorData::I32(v), "i32") => xla::Literal::vec1(v),
+            (got, want) => {
+                return Err(anyhow!("dtype mismatch: host {:?} vs spec {want}", kind_name(got)))
+            }
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+fn kind_name(t: &TensorData) -> &'static str {
+    match t {
+        TensorData::F32(_) => "f32",
+        TensorData::I32(_) => "i32",
+    }
+}
+
+fn literal_to_data(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<TensorData> {
+    Ok(match spec.dtype.as_str() {
+        "f32" => TensorData::F32(lit.to_vec()?),
+        "i32" => TensorData::I32(lit.to_vec()?),
+        other => return Err(anyhow!("unsupported output dtype {other}")),
+    })
+}
+
+/// A compiled artifact bound to one PJRT client.
+pub struct Executor {
+    pub name: String,
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Compile `name` from `manifest` on `client`.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, name: &str) -> anyhow::Result<Self> {
+        let entry = manifest.entry(name)?.clone();
+        let path = manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling `{name}`"))?;
+        Ok(Self { name: name.to_string(), entry, exe })
+    }
+
+    /// Execute with typed host inputs; returns typed host outputs in the
+    /// manifest's output order (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[TensorData]) -> anyhow::Result<Vec<TensorData>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(anyhow!(
+                "`{}` expects {} inputs, got {}",
+                self.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.entry.inputs)
+            .enumerate()
+            .map(|(i, (data, spec))| {
+                data.to_literal(spec).with_context(|| format!("input {i} of `{}`", self.name))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.entry.outputs.len() {
+            return Err(anyhow!(
+                "`{}` returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.entry.outputs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| literal_to_data(lit, spec))
+            .collect()
+    }
+
+    /// Convenience: run with all-f32 inputs and return the first output.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let data: Vec<TensorData> = inputs.iter().map(|v| TensorData::F32(v.clone())).collect();
+        let mut out = self.run(&data)?;
+        match out.remove(0) {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("first output is i32, expected f32")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_data_len_and_kind() {
+        let f = TensorData::F32(vec![1.0, 2.0]);
+        let i = TensorData::I32(vec![1, 2, 3]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(i.len(), 3);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        assert!(i.as_i32().is_ok());
+    }
+
+    #[test]
+    fn to_literal_shape_mismatch_rejected() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: "f32".into() };
+        let bad = TensorData::F32(vec![1.0; 3]);
+        assert!(bad.to_literal(&spec).is_err());
+    }
+
+    #[test]
+    fn to_literal_dtype_mismatch_rejected() {
+        let spec = TensorSpec { shape: vec![2], dtype: "i32".into() };
+        let bad = TensorData::F32(vec![1.0, 2.0]);
+        assert!(bad.to_literal(&spec).is_err());
+    }
+}

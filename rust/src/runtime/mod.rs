@@ -1,0 +1,19 @@
+//! PJRT runtime: loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! * [`artifact`] — manifest parsing + parameter blobs,
+//! * [`executor`] — typed execute (host vectors in, host vectors out),
+//! * [`pool`]     — a pool of independent clients simulating the paper's
+//!   multi-GPU testbed (Table 9).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized protos which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+pub mod artifact;
+pub mod executor;
+pub mod pool;
+
+pub use artifact::{ArtifactEntry, Manifest, ParamsBlob, TensorSpec};
+pub use executor::{Executor, TensorData};
+pub use pool::DevicePool;

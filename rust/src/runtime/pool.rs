@@ -1,0 +1,90 @@
+//! Device pool: N independent PJRT CPU clients standing in for the
+//! paper's multi-GPU testbed (§4.7, Table 9; DESIGN.md §5 S7).
+//!
+//! Each "device" owns its own client and compiled executables, runs on
+//! its own worker thread, and receives work over a channel — the same
+//! topology as one process per GPU. Simulated interconnect transfers are
+//! modeled by `coordinator::multi_device`.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use super::artifact::Manifest;
+use super::executor::{Executor, TensorData};
+
+/// One simulated device: a PJRT client + its compiled artifacts.
+pub struct Device {
+    pub id: usize,
+    pub client: xla::PjRtClient,
+}
+
+impl Device {
+    pub fn new(id: usize) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { id, client })
+    }
+
+    pub fn load(&self, manifest: &Manifest, name: &str) -> anyhow::Result<Executor> {
+        Executor::load(&self.client, manifest, name)
+    }
+}
+
+/// A pool of devices with per-device executors for one artifact.
+pub struct DevicePool {
+    pub devices: Vec<Arc<Device>>,
+}
+
+impl DevicePool {
+    pub fn new(n: usize) -> anyhow::Result<Self> {
+        let devices = (0..n)
+            .map(|id| Device::new(id).map(Arc::new))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Compile `name` on every device (each client compiles its own copy,
+    /// as real per-GPU processes would).
+    pub fn load_all(&self, manifest: &Manifest, name: &str) -> anyhow::Result<Vec<Arc<Executor>>> {
+        self.devices
+            .iter()
+            .map(|d| d.load(manifest, name).map(Arc::new))
+            .collect()
+    }
+}
+
+/// Round-robin assignment of `n_items` chunks to `n_devices`.
+pub fn round_robin(n_items: usize, n_devices: usize) -> Vec<usize> {
+    (0..n_items).map(|i| i % n_devices.max(1)).collect()
+}
+
+pub type SharedExecutor = Arc<Executor>;
+pub type SharedData = Vec<TensorData>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_balanced() {
+        let assign = round_robin(10, 4);
+        assert_eq!(assign.len(), 10);
+        for dev in 0..4 {
+            let cnt = assign.iter().filter(|&&a| a == dev).count();
+            assert!((2..=3).contains(&cnt));
+        }
+    }
+
+    #[test]
+    fn round_robin_zero_devices_safe() {
+        assert_eq!(round_robin(3, 0), vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,230 @@
+//! Block-size selection (paper §3.3.1, Table 2).
+//!
+//! Three selectors:
+//! * [`flash2_config`] — FlashAttention-2's hard-coded (l, m) table,
+//! * [`ours_config`]   — the paper's rule: maximize `l` then `m` subject
+//!   to the tensor-core tile constraint (Eq. 4: `l, m = n·N'`), the
+//!   shared-memory fit, the occupancy constraint (Eq. 5:
+//!   `W_b · M_s/(w(ld+2md)) ≥ 2·N_T`) and the register-file bound on the
+//!   O-block accumulator,
+//! * [`best_config`]   — exhaustive search over legal (l, m) with the
+//!   cycle cost model (the paper finds "best" by measuring all configs).
+
+use super::gpu::GpuSpec;
+
+/// tensor-core tile quantum (paper N' = 16)
+pub const N_PRIME: usize = 16;
+/// fp16 element width in the paper's kernels
+pub const ELEM_BYTES: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Selection {
+    pub l: usize,
+    pub m: usize,
+}
+
+impl std::fmt::Display for Selection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({}, {})", self.l, self.m)
+    }
+}
+
+/// FlashAttention-2's hard-coded choices (as reported in the paper's
+/// Table 2 "flash" rows).
+pub fn flash2_config(d: usize) -> Selection {
+    match d {
+        0..=64 => Selection { l: 128, m: 128 },
+        _ => Selection { l: 128, m: 32 },
+    }
+}
+
+/// Is `(l, m)` legal on `gpu` for head dim `d`?
+///
+/// Constraints (paper §3.3.1):
+/// 1. tensor-core tiles: `l % N' == 0 && m % N' == 0`,
+/// 2. threadblock limit: `l/16` warps (one warp per 16 Q rows, the
+///    FlashAttention-2 layout) within `max_threads_per_block`,
+/// 3. SMEM fit: `w·(l·d + 2·m·d) ≤ M_s`,
+/// 4. occupancy: `W_b · ⌊M_s / (w(ld+2md))⌋ ≥ 2·N_T`,
+/// 5. register bound: the fp32 O accumulator `l·d·4` must fit the
+///    per-block register budget (half the SM's register file, so two
+///    blocks can be resident).
+pub fn is_legal(gpu: &GpuSpec, d: usize, l: usize, m: usize) -> bool {
+    if l == 0 || m == 0 || l % N_PRIME != 0 || m % N_PRIME != 0 {
+        return false;
+    }
+    // inner tile never larger than the outer tile (FA2 kernel layout)
+    if m > l {
+        return false;
+    }
+    let warps = l / 16;
+    if warps > gpu.max_warps_per_block || warps * 32 > gpu.max_threads_per_block {
+        return false;
+    }
+    // SMEM fit with double buffering: two resident blocks per SM
+    let smem_per_block = ELEM_BYTES * (l * d + 2 * m * d);
+    if smem_per_block > gpu.smem_bytes / 2 {
+        return false;
+    }
+    let blocks_per_sm = gpu.smem_bytes / smem_per_block;
+    if (warps * blocks_per_sm).min(gpu.max_warps_per_sm) < 2 * gpu.tensor_cores {
+        return false;
+    }
+    // O accumulator in fp32 registers; ≤ a quarter of the register file so
+    // two blocks stay resident with working registers to spare
+    if l * d * 4 > gpu.regfile_bytes / 4 {
+        return false;
+    }
+    true
+}
+
+/// The paper's rule: maximize `l`, then maximize `m`.
+pub fn ours_config(gpu: &GpuSpec, d: usize) -> Selection {
+    let candidates: Vec<usize> = (1..=32).map(|n| n * N_PRIME).collect();
+    let mut best: Option<Selection> = None;
+    for &l in candidates.iter().rev() {
+        for &m in candidates.iter().rev() {
+            if is_legal(gpu, d, l, m) {
+                best = Some(Selection { l, m });
+                break;
+            }
+        }
+        if best.is_some() {
+            break;
+        }
+    }
+    best.expect("no legal (l, m) configuration")
+}
+
+/// Estimated execution cycles of one attention pass under `(l, m)` —
+/// the cost model behind the "best" rows. Captures the three effects
+/// the paper names: memory I/O (∝ 1/l), tensor-core time (fixed FLOPs,
+/// lower utilization for small m), and per-iteration scheduling
+/// overhead (∝ N/l · N/m).
+pub fn cost_model(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize) -> f64 {
+    let io = super::io_model::io_bytes(
+        &super::io_model::EstimateParams { n, d, elem_bytes: ELEM_BYTES },
+        l,
+    ) as f64;
+    let mem_time = io / (gpu.mem_bw_gbps * 1e9);
+
+    let flops = super::io_model::flops_exact(n, d) as f64;
+    // tensor-core utilization: m rows feed the 16-wide systolic tile;
+    // fragmenting below 64 rows leaves pipeline bubbles
+    let util = (m as f64 / 64.0).min(1.0) * (l as f64 / 64.0).min(1.0);
+    let tc_time = flops / (gpu.tc_tflops * 1e12 * (0.25 + 0.75 * util));
+
+    let iter_overhead = (n as f64 / l as f64) * (n as f64 / m as f64) * 2e-7
+        / gpu.sm_count as f64
+        * 128.0;
+    mem_time.max(tc_time) + iter_overhead
+}
+
+/// Exhaustive search over legal configs with the cost model.
+pub fn best_config(gpu: &GpuSpec, d: usize, n: usize) -> Selection {
+    let candidates: Vec<usize> = (1..=32).map(|k| k * N_PRIME).collect();
+    let mut best = None;
+    let mut best_cost = f64::INFINITY;
+    for &l in &candidates {
+        for &m in &candidates {
+            if !is_legal(gpu, d, l, m) {
+                continue;
+            }
+            let c = cost_model(gpu, n, d, l, m);
+            if c < best_cost {
+                best_cost = c;
+                best = Some(Selection { l, m });
+            }
+        }
+    }
+    best.expect("no legal config")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_must_be_multiples_of_nprime() {
+        let g = GpuSpec::RTX4090;
+        assert!(!is_legal(&g, 64, 100, 64));
+        assert!(!is_legal(&g, 64, 128, 50));
+        assert!(is_legal(&g, 64, 128, 64));
+    }
+
+    #[test]
+    fn smem_bound_enforced() {
+        let g = GpuSpec::RTX4090;
+        // 512x512 tiles at d=128 blow SMEM: 2*(512*128 + 2*512*128) = 384KB
+        assert!(!is_legal(&g, 128, 512, 512));
+    }
+
+    #[test]
+    fn ours_within_paper_gap_of_reported_choices() {
+        // the paper itself reports a <1% performance gap between its
+        // selection and the exhaustive best (Table 2 discussion); hold
+        // our solver to a 5% cost-model gap vs the paper's reported
+        // tuples on every card
+        let paper = [(32usize, 256usize, 64usize), (64, 128, 128), (128, 128, 32)];
+        for gpu in GpuSpec::ALL {
+            for (d, pl, pm) in paper {
+                let s = ours_config(&gpu, d);
+                assert!(is_legal(&gpu, d, s.l, s.m));
+                let ours_cost = cost_model(&gpu, 4096, d, s.l, s.m);
+                let paper_cost = cost_model(&gpu, 4096, d, pl, pm);
+                assert!(
+                    ours_cost <= paper_cost * 1.05,
+                    "{} d={d}: ours {} cost {ours_cost:.2e} vs paper ({pl},{pm}) {paper_cost:.2e}",
+                    gpu.name,
+                    s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ours_d32_prefers_larger_l_than_flash() {
+        // paper Table 2: at d=32 ours picks (256, 64) — larger l than
+        // flash's hard-coded 128 (I/O model: bigger l = fewer I/Os)
+        for gpu in GpuSpec::ALL {
+            let s = ours_config(&gpu, 32);
+            assert!(s.l >= 256, "{} d=32 l={}", gpu.name, s.l);
+            assert!(s.l > flash2_config(32).l);
+        }
+    }
+
+    #[test]
+    fn ours_is_deterministic() {
+        for gpu in GpuSpec::ALL {
+            for d in [32, 64, 128] {
+                assert_eq!(ours_config(&gpu, d), ours_config(&gpu, d));
+            }
+        }
+    }
+
+    #[test]
+    fn best_config_is_legal() {
+        for gpu in GpuSpec::ALL {
+            for d in [32, 64, 128] {
+                let s = best_config(&gpu, d, 4096);
+                assert!(is_legal(&gpu, d, s.l, s.m), "{} d={d}: {}", gpu.name, s);
+            }
+        }
+    }
+
+    #[test]
+    fn cost_model_penalizes_tiny_m() {
+        // the paper's observation: m=16 ruins tensor-core throughput even
+        // though the I/O model is m-independent
+        let g = GpuSpec::RTX4090;
+        let small = cost_model(&g, 4096, 64, 128, 16);
+        let large = cost_model(&g, 4096, 64, 128, 128);
+        assert!(small > large);
+    }
+
+    #[test]
+    fn cost_model_io_dominates_small_l() {
+        let g = GpuSpec::RTX4090;
+        assert!(cost_model(&g, 8192, 64, 16, 128) > cost_model(&g, 8192, 64, 128, 128));
+    }
+}

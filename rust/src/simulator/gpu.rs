@@ -1,0 +1,85 @@
+//! Per-card hardware parameters used by the analytic model.
+
+/// The subset of GPU parameters the paper's constraint system uses
+/// (§3.3.1): shared memory per SM, tensor cores per SM, warp scheduling
+/// width, plus bandwidth/compute for the cycle estimates.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub sm_count: usize,
+    /// usable shared memory per SM in bytes (M_s in the paper)
+    pub smem_bytes: usize,
+    /// tensor cores per SM (N_T)
+    pub tensor_cores: usize,
+    /// max resident warps per SM
+    pub max_warps_per_sm: usize,
+    /// max threads (=> warps*32) per threadblock
+    pub max_threads_per_block: usize,
+    /// max warps per threadblock in the FlashAttention-2 kernel layout
+    /// (one warp per 16 Q rows; FA2 ships 4-16 warp configurations)
+    pub max_warps_per_block: usize,
+    /// register file per SM in bytes — bounds the O-block accumulator
+    pub regfile_bytes: usize,
+    /// HBM bandwidth, GB/s (cycle estimates)
+    pub mem_bw_gbps: f64,
+    /// dense fp16 tensor-core throughput, TFLOP/s
+    pub tc_tflops: f64,
+}
+
+impl GpuSpec {
+    pub const RTX4090: GpuSpec = GpuSpec {
+        name: "RTX 4090",
+        sm_count: 128,
+        smem_bytes: 100 * 1024,
+        tensor_cores: 4,
+        max_warps_per_sm: 48,
+        max_threads_per_block: 1024,
+        max_warps_per_block: 16,
+        regfile_bytes: 256 * 1024,
+        mem_bw_gbps: 1008.0,
+        tc_tflops: 165.2,
+    };
+
+    pub const RTX3090: GpuSpec = GpuSpec {
+        name: "RTX 3090",
+        sm_count: 82,
+        smem_bytes: 100 * 1024,
+        tensor_cores: 4,
+        max_warps_per_sm: 48,
+        max_threads_per_block: 1024,
+        max_warps_per_block: 16,
+        regfile_bytes: 256 * 1024,
+        mem_bw_gbps: 936.0,
+        tc_tflops: 71.0,
+    };
+
+    pub const L40: GpuSpec = GpuSpec {
+        name: "L40",
+        sm_count: 142,
+        smem_bytes: 100 * 1024,
+        tensor_cores: 4,
+        max_warps_per_sm: 48,
+        max_threads_per_block: 1024,
+        max_warps_per_block: 16,
+        regfile_bytes: 256 * 1024,
+        mem_bw_gbps: 864.0,
+        tc_tflops: 181.0,
+    };
+
+    pub const ALL: [GpuSpec; 3] = [Self::RTX4090, Self::RTX3090, Self::L40];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sane() {
+        for g in GpuSpec::ALL {
+            assert!(g.sm_count > 0);
+            assert!(g.smem_bytes >= 64 * 1024);
+            assert!(g.tensor_cores > 0);
+            assert!(g.mem_bw_gbps > 100.0);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The paper's I/O model (§3.3.1):
+//!
+//! ```text
+//! I(l, m) = N/l · (l·d + 2·N·d + l·d)
+//! ```
+//!
+//! N/l output blocks; each reads one Q block (l·d), streams the whole
+//! K^T and V (2·N·d), and writes one O block (l·d). Memory traffic is
+//! independent of `m` — larger `l` always means fewer I/Os — which is
+//! why the selection rule maximizes `l` first.
+
+/// Parameters of one attention invocation.
+#[derive(Clone, Copy, Debug)]
+pub struct EstimateParams {
+    pub n: usize,
+    pub d: usize,
+    /// element width in bytes (paper kernels run fp16 => 2)
+    pub elem_bytes: usize,
+}
+
+/// Total element I/Os of the blocked self-attention for Q block rows `l`.
+pub fn io_count(p: &EstimateParams, l: usize) -> u64 {
+    let (n, d) = (p.n as u64, p.d as u64);
+    let l = l as u64;
+    (n / l) * (l * d + 2 * n * d + l * d)
+}
+
+/// I/O bytes.
+pub fn io_bytes(p: &EstimateParams, l: usize) -> u64 {
+    io_count(p, l) * p.elem_bytes as u64
+}
+
+/// FLOPs of exact blocked attention (2·N²·d for S + 2·N²·d for PV).
+pub fn flops_exact(n: usize, d: usize) -> u64 {
+    4 * (n as u64) * (n as u64) * (d as u64)
+}
+
+/// FLOPs of DistrAttention with sampling rate `g`:
+/// the S contraction shrinks to d/g, PV stays at d, fusion adds N²·d/l
+/// additions amortized over the inner loop (counted at m granularity).
+pub fn flops_distr(n: usize, d: usize, g: usize, l: usize) -> u64 {
+    let (n64, d64) = (n as u64, n as u64 * 0 + d as u64);
+    let scores = 2 * n64 * n64 * (d64 / g as u64);
+    let pv = 2 * n64 * n64 * d64;
+    let fusion = n64 / l as u64 * n64 * d64; // re-fused per Q block row
+    scores + pv + fusion
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: EstimateParams = EstimateParams { n: 4096, d: 64, elem_bytes: 2 };
+
+    #[test]
+    fn io_decreases_with_l() {
+        let mut prev = u64::MAX;
+        for l in [16, 32, 64, 128, 256] {
+            let io = io_count(&P, l);
+            assert!(io < prev, "l={l}");
+            prev = io;
+        }
+    }
+
+    #[test]
+    fn io_formula_matches_paper() {
+        // I(l,m) = N/l (2ld + 2Nd)
+        let l = 128;
+        let want = (4096 / l) * (2 * l * 64 + 2 * 4096 * 64);
+        assert_eq!(io_count(&P, l as usize), want as u64);
+    }
+
+    #[test]
+    fn distr_flops_less_than_exact() {
+        let exact = flops_exact(4096, 64);
+        let distr = flops_distr(4096, 64, 2, 128);
+        assert!(distr < exact);
+        // at G*=2 the score matmul halves: total ratio ~ (1 + 1/2)/2 + ε
+        let ratio = distr as f64 / exact as f64;
+        assert!(ratio > 0.7 && ratio < 0.85, "ratio {ratio}");
+    }
+
+    #[test]
+    fn group1_distr_flops_slightly_over_exact() {
+        // G*=1 keeps the full contraction and adds fusion overhead
+        assert!(flops_distr(1024, 64, 1, 64) >= flops_exact(1024, 64));
+    }
+}

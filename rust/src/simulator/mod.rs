@@ -1,0 +1,17 @@
+//! Analytic GPU model — the stand-in for the paper's RTX 4090 / RTX 3090
+//! / L40 testbed (DESIGN.md §5 S1).
+//!
+//! Three pieces:
+//! * [`GpuSpec`] — per-card SM / shared-memory / tensor-core parameters,
+//! * [`io_model`] — the paper's I/O count `I(l, m)` (§3.3.1),
+//! * [`block_select`] — the (l, m) selection rules (paper Eq. 4/5 +
+//!   maximize-l-then-m) vs FlashAttention-2's hard-coded table vs an
+//!   exhaustive cost-model search ("best") — Table 2.
+
+pub mod block_select;
+pub mod gpu;
+pub mod io_model;
+
+pub use block_select::{best_config, flash2_config, ours_config, Selection};
+pub use gpu::GpuSpec;
+pub use io_model::{io_count, EstimateParams};

@@ -1,0 +1,166 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Rng;
+
+/// A dense row-major `rows x cols` matrix of f32.
+///
+/// Deliberately minimal: the attention engines only need row slicing,
+/// column gathers and contiguous storage for the blocked matmul.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// The paper's synthesized workload: elements iid uniform(0, 1) (§4.2).
+    pub fn uniform(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let data = (0..rows * cols).map(|_| rng.gen_f32()).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Standard-normal entries (Box-Muller over the seeded stream).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let data = (0..rows * cols).map(|_| rng.gen_normal()).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of rows `[start, start+len)`.
+    pub fn row_block(&self, start: usize, len: usize) -> Matrix {
+        assert!(start + len <= self.rows);
+        Matrix::from_vec(len, self.cols, self.data[start * self.cols..(start + len) * self.cols].to_vec())
+    }
+
+    /// Gather columns by `idx` (used for the LSH permutation).
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn mean_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let s: f32 = self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()).sum();
+        s / self.data.len() as f32
+    }
+
+    /// Elementwise relative-error stats vs `truth`: (min, max, mean),
+    /// the paper's Table 3/4 metric.
+    pub fn rel_err_stats(&self, truth: &Matrix) -> (f32, f32, f32) {
+        assert_eq!((self.rows, self.cols), (truth.rows, truth.cols));
+        let mut min = f32::INFINITY;
+        let mut max = 0.0f32;
+        let mut sum = 0.0f64;
+        for (a, t) in self.data.iter().zip(&truth.data) {
+            let e = (a - t).abs() / t.abs().max(1e-12);
+            min = min.min(e);
+            max = max.max(e);
+            sum += e as f64;
+        }
+        (min, max, (sum / self.data.len() as f64) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.cols, 4);
+        assert!(m.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn uniform_is_deterministic_and_in_range() {
+        let a = Matrix::uniform(8, 8, 42);
+        let b = Matrix::uniform(8, 8, 42);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let c = Matrix::uniform(8, 8, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let m = Matrix::randn(100, 100, 7);
+        let mean: f32 = m.data.iter().sum::<f32>() / 10_000.0;
+        let var: f32 = m.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn row_block_and_gather() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = m.row_block(1, 1);
+        assert_eq!(b.data, vec![4., 5., 6.]);
+        let g = m.gather_cols(&[2, 0]);
+        assert_eq!(g.data, vec![3., 1., 6., 4.]);
+    }
+
+    #[test]
+    fn rel_err_stats_basic() {
+        let t = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let a = Matrix::from_vec(1, 2, vec![1.1, 2.0]);
+        let (min, max, mean) = a.rel_err_stats(&t);
+        assert!(min < 1e-6);
+        assert!((max - 0.1).abs() < 1e-5);
+        assert!((mean - 0.05).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_bad_shape_panics() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The Rust-native attention engines ([`crate::attention`]) and the
+//! model-level benches need a small, fast linear-algebra core that works
+//! on arbitrary shapes without going through PJRT (artifacts are
+//! fixed-shape). This module provides exactly that: a row-major `Matrix`,
+//! a cache-blocked parallel matmul, softmax, and the handful of ops the
+//! transformer hot path uses.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{
+    add_bias, dot, gelu, matmul, matmul_bt, matmul_into, rms_norm, scaled_scores, silu,
+    softmax_rows, transpose,
+};

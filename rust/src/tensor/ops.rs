@@ -1,0 +1,239 @@
+//! Core ops: cache-blocked parallel matmul and the transformer pointwise
+//! pieces. All f32, row-major.
+
+use super::Matrix;
+use crate::util::parallel;
+
+/// Panel size for the blocked matmul: fits comfortably in L1/L2 and keeps
+/// the inner loop auto-vectorizable. Chosen by the §Perf sweep (see
+/// EXPERIMENTS.md).
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// `a (m×k) @ b (k×n)`, parallel over row panels of `a`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// In-place variant: accumulates into a pre-zeroed `out`. The serving hot
+/// loop reuses output buffers to avoid per-request allocation.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    let k = a.cols;
+    parallel::par_chunks_mut(&mut out.data, MC * n, |panel, chunk| {
+            let r0 = panel * MC;
+            let rows = chunk.len() / n;
+            for kk in (0..k).step_by(KC) {
+                let k_end = (kk + KC).min(k);
+                for r in 0..rows {
+                    let arow = &a.data[(r0 + r) * k..(r0 + r + 1) * k];
+                    let orow = &mut chunk[r * n..(r + 1) * n];
+                    for kc in kk..k_end {
+                        let aval = arow[kc];
+                        if aval == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kc * n..(kc + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aval * bv;
+                        }
+                    }
+                }
+            }
+        });
+}
+
+/// `a (m×k) @ b^T (n×k)` — the attention score shape `Q K^T`.
+/// Row-by-row dot products: both operands stream contiguously.
+pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "QK^T inner dims");
+    let mut out = Matrix::zeros(a.rows, b.rows);
+    let n = b.rows;
+    parallel::par_chunks_mut(&mut out.data, n, |r, orow| {
+        let arow = a.row(r);
+        for (c, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, b.row(c));
+        }
+    });
+    out
+}
+
+/// Unrolled dot product; the single hottest scalar loop in the Rust
+/// engines (LLVM vectorizes the 8-wide accumulator form).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let off = i * 8;
+        for j in 0..8 {
+            acc[j] += a[off + j] * b[off + j];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `Q K^T / sqrt(d)` — the scaled attention scores.
+pub fn scaled_scores(q: &Matrix, k: &Matrix) -> Matrix {
+    let mut s = matmul_bt(q, k);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    for x in &mut s.data {
+        *x *= scale;
+    }
+    s
+}
+
+pub fn transpose(a: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.cols, a.rows);
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            out.data[c * a.rows + r] = a.data[r * a.cols + c];
+        }
+    }
+    out
+}
+
+/// Row-wise softmax in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols;
+    parallel::par_chunks_mut(&mut m.data, cols, |_, row| {
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        if sum > 0.0 {
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
+    });
+}
+
+pub fn add_bias(m: &mut Matrix, bias: &[f32]) {
+    assert_eq!(bias.len(), m.cols);
+    let cols = m.cols;
+    for row in m.data.chunks_mut(cols) {
+        for (x, b) in row.iter_mut().zip(bias) {
+            *x += b;
+        }
+    }
+}
+
+pub fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default)
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RMSNorm a row in place with weight `gamma`.
+pub fn rms_norm(row: &mut [f32], gamma: &[f32], eps: f32) {
+    let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / row.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for (x, g) in row.iter_mut().zip(gamma) {
+        *x *= inv * g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for (m, k, n, seed) in [(3, 5, 7, 1), (64, 64, 64, 2), (100, 33, 17, 3), (65, 300, 9, 4)] {
+            let a = Matrix::randn(m, k, seed);
+            let b = Matrix::randn(k, n, seed + 100);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose_path() {
+        let a = Matrix::randn(32, 24, 5);
+        let b = Matrix::randn(48, 24, 6);
+        let got = matmul_bt(&a, &b);
+        let want = matmul(&a, &transpose(&b));
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Matrix::randn(10, 37, 9);
+        softmax_rows(&mut m);
+        for r in 0..10 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_large_values_stable() {
+        let mut m = Matrix::from_vec(1, 3, vec![1000.0, 1000.0, -1000.0]);
+        softmax_rows(&mut m);
+        assert!((m.at(0, 0) - 0.5).abs() < 1e-5);
+        assert!(m.at(0, 2) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::randn(7, 13, 11);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..100).map(|i| (100 - i) as f32 * 0.01).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rms_norm_unit_output() {
+        let mut row = vec![3.0, 4.0];
+        let gamma = vec![1.0, 1.0];
+        rms_norm(&mut row, &gamma, 1e-6);
+        let ms: f32 = row.iter().map(|x| x * x).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_silu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-6);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((silu(0.0)).abs() < 1e-6);
+        assert!((silu(1.0) - 0.7311).abs() < 1e-3);
+    }
+}

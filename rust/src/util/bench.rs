@@ -1,0 +1,98 @@
+//! Bench harness behind `cargo bench` (harness = false binaries).
+//!
+//! Criterion-shaped but dependency-free: warmup, N timed iterations,
+//! median/mean/min reporting, and a `--quick` flag every bench honours.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl BenchConfig {
+    /// Parse `--quick` / `--iters N` from env args (cargo bench passes
+    /// unknown args through after `--`).
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = args.iter().any(|a| a == "--quick");
+        let iters = args
+            .iter()
+            .position(|a| a == "--iters")
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if quick { 3 } else { 10 });
+        Self { warmup: 1, iters }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+/// Time `f` under `cfg`, returning summary stats.
+pub fn run<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..cfg.iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    let sum: Duration = times.iter().sum();
+    Stats {
+        median: times[times.len() / 2],
+        mean: sum / times.len() as u32,
+        min: times[0],
+        max: *times.last().unwrap(),
+        iters: times.len(),
+    }
+}
+
+/// Print one bench line in a stable, grep-friendly format.
+pub fn report(group: &str, id: &str, stats: &Stats) {
+    println!(
+        "bench {group}/{id}: median {:>10.3?}  mean {:>10.3?}  min {:>10.3?}  (n={})",
+        stats.median, stats.mean, stats.min, stats.iters
+    );
+}
+
+/// Convenience: run + report, returning the median seconds.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, group: &str, id: &str, f: F) -> f64 {
+    let stats = run(cfg, f);
+    report(group, id, &stats);
+    stats.median.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let cfg = BenchConfig { warmup: 0, iters: 5 };
+        let mut calls = 0;
+        let s = run(&cfg, || {
+            calls += 1;
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        assert_eq!(calls, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min >= Duration::from_micros(40));
+    }
+
+    #[test]
+    fn config_defaults() {
+        let cfg = BenchConfig { warmup: 1, iters: 10 };
+        assert_eq!(cfg.iters, 10);
+    }
+}

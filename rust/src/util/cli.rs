@@ -1,0 +1,108 @@
+//! Tiny CLI flag parser for the `distr-attn` binary: positional
+//! subcommand + `--flag value` / `--flag` options.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]). `--key value` becomes a
+    /// flag unless the next token is itself a `--option` (then a switch).
+    pub fn parse(raw: impl Iterator<Item = String>) -> Self {
+        let raw: Vec<String> = raw.collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                match raw.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        out.switches.push(name.to_string());
+                        i += 1;
+                    }
+                }
+            } else {
+                out.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("bench-table tab1 --quick --artifacts out/art");
+        assert_eq!(a.subcommand(), Some("bench-table"));
+        assert_eq!(a.positional[1], "tab1");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("artifacts"), Some("out/art"));
+    }
+
+    #[test]
+    fn flag_values_and_defaults() {
+        let a = parse("train --steps 200");
+        assert_eq!(a.get_usize("steps", 100).unwrap(), 200);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --steps abc").get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("serve --quick");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,488 @@
+//! Minimal strict JSON: parse to a [`Value`] tree, serialize back.
+//!
+//! Covers the full JSON grammar (RFC 8259) minus exotic number forms;
+//! good enough for `manifest.json`, parameter indexes and config files,
+//! and small enough to audit. No external dependencies.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+#[derive(Debug)]
+pub struct JsonError {
+    pub msg: String,
+    pub offset: usize,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+impl Value {
+    pub fn parse(text: &str) -> Result<Value, JsonError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters"));
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors -------------------------------------------------
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        let n = self.as_f64()?;
+        if n >= 0.0 && n.fract() == 0.0 {
+            Some(n as usize)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object()?.get(key)
+    }
+
+    /// Required-field accessors with contextual errors.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing json field `{key}`"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?.as_str().ok_or_else(|| anyhow::anyhow!("field `{key}` not a string"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("field `{key}` not a non-negative integer"))
+    }
+
+    pub fn req_array(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.req(key)?.as_array().ok_or_else(|| anyhow::anyhow!("field `{key}` not an array"))
+    }
+
+    // -- construction helpers --------------------------------------------
+
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn string(s: impl Into<String>) -> Value {
+        Value::String(s.into())
+    }
+
+    pub fn number(n: f64) -> Value {
+        Value::Number(n)
+    }
+
+    pub fn usize_array(v: &[usize]) -> Value {
+        Value::Array(v.iter().map(|&x| Value::Number(x as f64)).collect())
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s.push('\n');
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Number(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Value::String(s) => write_escaped(out, s),
+            Value::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if pretty {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(indent + 1));
+                    }
+                    item.write(out, indent + 1, pretty);
+                }
+                if pretty && !items.is_empty() {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(indent));
+                }
+                out.push(']');
+            }
+            Value::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if pretty {
+                        out.push('\n');
+                        out.push_str(&" ".repeat(indent + 1));
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if pretty && !map.is_empty() {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(indent));
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), offset: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            self.pos = self.pos.saturating_sub(1);
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, JsonError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::String(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>().map(Value::Number).map_err(|_| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump().ok_or_else(|| self.err("bad \\u escape"))?;
+                            code = code * 16
+                                + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                        }
+                        // surrogate pairs
+                        if (0xD800..0xDC00).contains(&code) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let mut low = 0u32;
+                            for _ in 0..4 {
+                                let c = self.bump().ok_or_else(|| self.err("bad \\u escape"))?;
+                                low = low * 16
+                                    + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                            }
+                            code = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                        }
+                        out.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(c) => {
+                    // re-assemble UTF-8 multibyte sequences
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let start = self.pos - 1;
+                        self.pos = start + len;
+                        let slice = self
+                            .bytes
+                            .get(start..start + len)
+                            .ok_or_else(|| self.err("truncated utf8"))?;
+                        out.push_str(
+                            std::str::from_utf8(slice).map_err(|_| self.err("bad utf8"))?,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Value::Array(items)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err("expected `,` or `]`"));
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Object(map)),
+                _ => {
+                    self.pos = self.pos.saturating_sub(1);
+                    return Err(self.err("expected `,` or `}`"));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse("-1.5e2").unwrap(), Value::Number(-150.0));
+        assert_eq!(Value::parse(r#""hi\nthere""#).unwrap(), Value::String("hi\nthere".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        let arr = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr[1].as_usize().unwrap(), 2);
+        assert_eq!(arr[2].get("b").unwrap().as_bool().unwrap(), false);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "{", "[1,]", "{\"a\"}", "tru", "1 2", "\"\\x\"", "{\"a\":1,}"] {
+            assert!(Value::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unicode_roundtrip() {
+        let v = Value::parse(r#""café 😀 naïve""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café 😀 naïve");
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let text = r#"{"artifacts": {"x": {"shape": [2, 3], "dtype": "f32"}}, "n": 42}"#;
+        let v = Value::parse(text).unwrap();
+        let back = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+        let pretty = Value::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, pretty);
+    }
+
+    #[test]
+    fn integers_serialize_without_decimal() {
+        assert_eq!(Value::Number(42.0).to_string(), "42");
+        assert_eq!(Value::Number(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn req_helpers_error_contextually() {
+        let v = Value::parse(r#"{"a": 1}"#).unwrap();
+        assert_eq!(v.req_usize("a").unwrap(), 1);
+        let err = v.req_str("missing").unwrap_err().to_string();
+        assert!(err.contains("missing"));
+    }
+
+    #[test]
+    fn escapes_on_write() {
+        let v = Value::String("a\"b\\c\nd".into());
+        assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+    }
+}

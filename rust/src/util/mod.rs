@@ -1,0 +1,20 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The build is fully offline/vendored, so the crates a project would
+//! normally reach for (serde_json, rayon, rand, clap, criterion,
+//! tempfile) are implemented here at exactly the size this system needs:
+//!
+//! * [`json`]     — a strict JSON parser + writer (manifest, params, config),
+//! * [`parallel`] — scoped-thread data parallelism (the rayon subset we use),
+//! * [`rng`]      — SplitMix64/xoshiro256++ PRNG with uniform + normal draws,
+//! * [`bench`]    — the timing/report harness behind `cargo bench`,
+//! * [`cli`]      — flag parsing for the `distr-attn` binary,
+//! * [`testing`]  — temp-dir helper for filesystem tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod parallel;
+pub mod rng;
+pub mod testing;

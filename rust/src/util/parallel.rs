@@ -1,0 +1,149 @@
+//! Scoped-thread data parallelism — the rayon subset the hot paths use.
+//!
+//! `par_chunks_mut_enumerated` splits a mutable slice into fixed-size
+//! chunks and processes them on `available_parallelism()` threads via
+//! `std::thread::scope`. Work is distributed by atomic work-stealing
+//! index so uneven chunk costs (e.g. causal attention's triangular
+//! blocks) balance automatically.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    static SERIAL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with data parallelism disabled on this thread — used by the
+/// multi-device simulation so each "device" worker stays on one core
+/// (nested parallelism would oversubscribe and distort Table 9).
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    let prev = SERIAL.with(|s| s.replace(true));
+    let out = f();
+    SERIAL.with(|s| s.set(prev));
+    out
+}
+
+/// Number of worker threads (cached).
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    if SERIAL.with(|s| s.get()) {
+        return 1;
+    }
+    *N.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Process `data` in `chunk` chunks: `f(chunk_index, chunk_slice)`.
+/// Sequential when there's one chunk or one core (no thread overhead).
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n_chunks = data.len().div_ceil(chunk.max(1));
+    let workers = num_threads().min(n_chunks);
+    if workers <= 1 {
+        for (i, c) in data.chunks_mut(chunk.max(1)).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk.max(1)).enumerate().collect();
+    let next = AtomicUsize::new(0);
+    // hand ownership of each chunk to exactly one worker via the index
+    let cells: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                if let Some((idx, slice)) = cells[i].lock().unwrap().take() {
+                    f(idx, slice);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over indices `0..n` collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let cells: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **cells[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_elements() {
+        let mut data = vec![0usize; 1000];
+        par_chunks_mut(&mut data, 64, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        // chunk indices increase along the slice
+        assert_eq!(data[0], 1);
+        assert_eq!(data[999], 1000usize.div_ceil(64));
+    }
+
+    #[test]
+    fn handles_ragged_tail() {
+        let mut data = vec![0u32; 70];
+        par_chunks_mut(&mut data, 32, |i, c| {
+            assert!(c.len() == 32 || (i == 2 && c.len() == 6));
+            c.fill(1);
+        });
+        assert_eq!(data.iter().sum::<u32>(), 70);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut empty: Vec<u8> = vec![];
+        par_chunks_mut(&mut empty, 8, |_, _| panic!("no chunks expected"));
+        let mut one = vec![5u8];
+        par_chunks_mut(&mut one, 8, |_, c| c[0] += 1);
+        assert_eq!(one[0], 6);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let squares = par_map(100, |i| i * i);
+        for (i, &v) in squares.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_zero() {
+        assert!(par_map(0, |i| i).is_empty());
+    }
+}

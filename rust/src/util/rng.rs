@@ -1,0 +1,126 @@
+//! Deterministic PRNG: xoshiro256++ seeded via SplitMix64, with uniform
+//! and normal (Box-Muller) draws. Replaces rand/rand_chacha in the
+//! offline build; every workload generator seeds one of these.
+
+/// xoshiro256++ — fast, high-quality, reproducible.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        // SplitMix64 expansion, the reference seeding procedure
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        // top 24 bits -> [0, 1) with full float precision
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gen_normal(&mut self) -> f32 {
+        let u1 = self.gen_f32().max(1e-9);
+        let u2 = self.gen_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_range(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(43);
+        assert_ne!(Rng::seed_from_u64(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut rng = Rng::seed_from_u64(1);
+        let vals: Vec<f32> = (0..10_000).map(|_| rng.gen_f32()).collect();
+        assert!(vals.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(2);
+        let vals: Vec<f32> = (0..10_000).map(|_| rng.gen_normal()).collect();
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        let var: f32 = vals.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / vals.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..1000 {
+            assert!(rng.gen_range(7) < 7);
+        }
+    }
+
+    #[test]
+    fn sample_distinct_no_dups() {
+        let mut rng = Rng::seed_from_u64(4);
+        let s = rng.sample_distinct(100, 30);
+        assert_eq!(s.len(), 30);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(s.iter().all(|&x| x < 100));
+    }
+}

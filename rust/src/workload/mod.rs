@@ -1,0 +1,191 @@
+//! Synthetic workload generators (DESIGN.md §5 S3/S5):
+//!
+//! * the paper's uniform(0,1) Q/K/V tensors (§4.2, §4.7),
+//! * a modular-arithmetic sequence task standing in for
+//!   MathInstruct/MMLU-math — exact-match accuracy, deterministic,
+//! * a class-prototype image generator standing in for
+//!   ImageNet/CIFAR/iNaturalist fine-tuning sets.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Q/K/V triple for one head — the paper's synthesized workload.
+pub fn qkv_uniform(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    (
+        Matrix::uniform(n, d, seed.wrapping_mul(3).wrapping_add(1)),
+        Matrix::uniform(n, d, seed.wrapping_mul(3).wrapping_add(2)),
+        Matrix::uniform(n, d, seed.wrapping_mul(3).wrapping_add(3)),
+    )
+}
+
+/// Multi-head Q/K/V: `h` stacked single-head triples.
+pub fn qkv_multihead(h: usize, n: usize, d: usize, seed: u64) -> Vec<(Matrix, Matrix, Matrix)> {
+    (0..h).map(|i| qkv_uniform(n, d, seed.wrapping_add(i as u64 * 1000))).collect()
+}
+
+/// The synthetic LM task: sequences over a small vocabulary where token
+/// t+1 = (a·t_k + b) mod vocab for per-sequence (a, b), prefixed with the
+/// (a, b) "problem statement". A model must use context to predict —
+/// attention quality is directly measurable as exact-match accuracy.
+#[derive(Clone, Debug)]
+pub struct SeqTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl SeqTask {
+    pub fn new(vocab: usize, seq_len: usize) -> Self {
+        Self { vocab, seq_len }
+    }
+
+    /// One (tokens, targets) pair; targets are tokens shifted left.
+    pub fn sample(&self, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        // reserve tokens 0..8 as "operator" markers
+        let a = 1 + (1 + rng.gen_range(6)) * 2; // odd multiplier, invertible mod 2^k
+        let b = rng.gen_range(self.vocab / 2);
+        let start = 8 + rng.gen_range(self.vocab - 8);
+        let mut toks = Vec::with_capacity(self.seq_len);
+        toks.push((a % 8) as i32); // problem statement
+        toks.push((b % 8) as i32);
+        let mut x = start;
+        while toks.len() < self.seq_len {
+            toks.push(x as i32);
+            x = (a * x + b) % (self.vocab - 8) + 8;
+        }
+        let mut targets = toks[1..].to_vec();
+        targets.push(toks[0]);
+        (toks, targets)
+    }
+
+    /// A batch of (tokens, targets), flattened row-major (batch, seq).
+    pub fn batch(&self, batch: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(batch * self.seq_len);
+        let mut tgts = Vec::with_capacity(batch * self.seq_len);
+        for i in 0..batch {
+            let (t, g) = self.sample(seed.wrapping_mul(1_000_003).wrapping_add(i as u64));
+            toks.extend(t);
+            tgts.extend(g);
+        }
+        (toks, tgts)
+    }
+}
+
+/// Class-prototype image dataset: each class is a Gaussian prototype in
+/// pixel space; samples are prototype + noise. Linear separability is
+/// controlled by `noise`, so fine-tuning dynamics resemble small-data
+/// image classification (DESIGN.md §5 S3).
+#[derive(Clone, Debug)]
+pub struct ImageTask {
+    pub classes: usize,
+    pub size: usize,
+    pub channels: usize,
+    pub noise: f32,
+    prototypes: Vec<Vec<f32>>,
+}
+
+impl ImageTask {
+    pub fn new(classes: usize, size: usize, channels: usize, noise: f32, seed: u64) -> Self {
+        let dim = size * size * channels;
+        let mut rng = Rng::seed_from_u64(seed);
+        let prototypes = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.gen_f32()).collect())
+            .collect();
+        Self { classes, size, channels, noise, prototypes }
+    }
+
+    /// One (image, label): image flattened HWC, values clamped to [0, 1].
+    pub fn sample(&self, seed: u64) -> (Vec<f32>, usize) {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xABCD_EF01);
+        let label = rng.gen_range(self.classes);
+        let img = self.prototypes[label]
+            .iter()
+            .map(|&p| {
+                let n: f32 = rng.gen_f32() - 0.5;
+                (p + self.noise * n).clamp(0.0, 1.0)
+            })
+            .collect();
+        (img, label)
+    }
+
+    pub fn batch(&self, batch: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+        let dim = self.size * self.size * self.channels;
+        let mut imgs = Vec::with_capacity(batch * dim);
+        let mut labels = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let (img, l) = self.sample(seed.wrapping_mul(7_919).wrapping_add(i as u64));
+            imgs.extend(img);
+            labels.push(l);
+        }
+        (imgs, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qkv_shapes_and_range() {
+        let (q, k, v) = qkv_uniform(64, 32, 7);
+        for m in [&q, &k, &v] {
+            assert_eq!((m.rows, m.cols), (64, 32));
+            assert!(m.data.iter().all(|&x| (0.0..1.0).contains(&x)));
+        }
+        assert_ne!(q, k);
+    }
+
+    #[test]
+    fn seq_task_deterministic_and_in_vocab() {
+        let t = SeqTask::new(64, 32);
+        let (a1, g1) = t.sample(5);
+        let (a2, _) = t.sample(5);
+        assert_eq!(a1, a2);
+        assert_eq!(a1.len(), 32);
+        assert_eq!(g1.len(), 32);
+        assert!(a1.iter().all(|&x| (0..64).contains(&x)));
+        // targets are tokens shifted left
+        assert_eq!(&g1[..31], &a1[1..]);
+    }
+
+    #[test]
+    fn seq_task_sequences_differ_by_seed() {
+        let t = SeqTask::new(64, 32);
+        assert_ne!(t.sample(1).0, t.sample(2).0);
+    }
+
+    #[test]
+    fn seq_batch_shape() {
+        let t = SeqTask::new(64, 16);
+        let (toks, tgts) = t.batch(4, 9);
+        assert_eq!(toks.len(), 64);
+        assert_eq!(tgts.len(), 64);
+    }
+
+    #[test]
+    fn image_task_labels_and_clamping() {
+        let t = ImageTask::new(10, 8, 3, 0.3, 1);
+        let (imgs, labels) = t.batch(16, 3);
+        assert_eq!(imgs.len(), 16 * 8 * 8 * 3);
+        assert_eq!(labels.len(), 16);
+        assert!(labels.iter().all(|&l| l < 10));
+        assert!(imgs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn image_task_same_class_similar() {
+        // two samples of the same class correlate more than across classes
+        let t = ImageTask::new(2, 8, 1, 0.1, 2);
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(), Vec::new()];
+        for s in 0..64 {
+            let (img, l) = t.sample(s);
+            by_class[l].push(img);
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let same = dist(&by_class[0][0], &by_class[0][1]);
+        let cross = dist(&by_class[0][0], &by_class[1][0]);
+        assert!(same < cross);
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a note)
+//! when the artifacts directory is absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use distr_attention::attention::{standard_attention, Variant};
+use distr_attention::coordinator::{Engine, Request};
+use distr_attention::runtime::{Executor, Manifest, TensorData};
+use distr_attention::tensor::Matrix;
+use distr_attention::workload::{qkv_uniform, SeqTask};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for required in [
+        "attn_exact_256x64",
+        "attn_flash_256x64",
+        "attn_distr_256x64_g2",
+        "lm_prefill_distr_flash_128",
+        "lm_train_step",
+        "vit_fwd_standard_b8",
+    ] {
+        assert!(m.entry(required).is_ok(), "missing {required}");
+    }
+}
+
+#[test]
+fn exact_artifact_matches_rust_standard_attention() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = Executor::load(&client, &m, "attn_exact_256x64").unwrap();
+    let (q, k, v) = qkv_uniform(256, 64, 99);
+    let out = exe.run_f32(&[q.data.clone(), k.data.clone(), v.data.clone()]).unwrap();
+    let got = Matrix::from_vec(256, 64, out);
+    let want = standard_attention(&q, &k, &v, false);
+    assert!(
+        got.max_abs_diff(&want) < 1e-4,
+        "artifact vs rust oracle: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn flash_artifact_equals_exact_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exact = Executor::load(&client, &m, "attn_exact_256x64").unwrap();
+    let flash = Executor::load(&client, &m, "attn_flash_256x64").unwrap();
+    let (q, k, v) = qkv_uniform(256, 64, 7);
+    let inputs = vec![q.data, k.data, v.data];
+    let a = exact.run_f32(&inputs).unwrap();
+    let b = flash.run_f32(&inputs).unwrap();
+    let diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(diff < 1e-4, "flash vs exact artifact: {diff}");
+}
+
+#[test]
+fn distr_artifact_stays_in_approximation_band() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exact = Executor::load(&client, &m, "attn_exact_256x64").unwrap();
+    for (name, band) in [("attn_distr_256x64_g2", 0.02f32), ("attn_distr_256x64_g4", 0.04)] {
+        let distr = Executor::load(&client, &m, name).unwrap();
+        let (q, k, v) = qkv_uniform(256, 64, 21);
+        let inputs = vec![q.data, k.data, v.data];
+        let a = exact.run_f32(&inputs).unwrap();
+        let b = distr.run_f32(&inputs).unwrap();
+        let mean: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        assert!(mean < band, "{name}: mean |Δ| {mean} > {band}");
+        assert!(mean > 0.0, "{name}: suspiciously exact");
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_arity_and_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = Executor::load(&client, &m, "attn_exact_256x64").unwrap();
+    // wrong number of inputs
+    assert!(exe.run(&[TensorData::F32(vec![0.0; 256 * 64])]).is_err());
+    // wrong length
+    let bad = vec![
+        TensorData::F32(vec![0.0; 10]),
+        TensorData::F32(vec![0.0; 256 * 64]),
+        TensorData::F32(vec![0.0; 256 * 64]),
+    ];
+    assert!(exe.run(&bad).is_err());
+    // wrong dtype
+    let bad = vec![
+        TensorData::I32(vec![0; 256 * 64]),
+        TensorData::F32(vec![0.0; 256 * 64]),
+        TensorData::F32(vec![0.0; 256 * 64]),
+    ];
+    assert!(exe.run(&bad).is_err());
+}
+
+#[test]
+fn engine_prefill_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::spawn(&m, "lm_prefill_distr_flash_128", "lm_prefill_standard_128").unwrap();
+    let task = SeqTask::new(512, 64);
+    let (toks, _) = task.sample(1);
+    let resp = engine.handle.prefill_blocking(Request::new(1, toks, Variant::Distr)).unwrap();
+    assert_eq!(resp.logits.len(), 512, "vocab-sized logits");
+    assert!(resp.logits.iter().all(|x| x.is_finite()));
+    assert!((0..512).contains(&resp.token));
+    // same prompt -> same greedy token (determinism through PJRT)
+    let (toks, _) = task.sample(1);
+    let resp2 = engine.handle.prefill_blocking(Request::new(2, toks, Variant::Distr)).unwrap();
+    assert_eq!(resp.token, resp2.token);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_oversized_and_empty_prompts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::spawn(&m, "lm_prefill_flash_128", "lm_prefill_standard_128").unwrap();
+    let too_long = Request::new(1, vec![1; 300], Variant::Flash2);
+    assert!(engine.handle.prefill_blocking(too_long).is_err());
+    let empty = Request::new(2, vec![], Variant::Flash2);
+    assert!(engine.handle.prefill_blocking(empty).is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn prefill_standard_vs_distr_predictions_correlate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let e_std = Engine::spawn(&m, "lm_prefill_standard_128", "lm_prefill_standard_128").unwrap();
+    let e_distr = Engine::spawn(&m, "lm_prefill_distr_flash_128", "lm_prefill_standard_128").unwrap();
+    let task = SeqTask::new(512, 96);
+    let mut corr_num = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for i in 0..4 {
+        let (toks, _) = task.sample(i);
+        let a = e_std.handle.prefill_blocking(Request::new(i, toks.clone(), Variant::Standard)).unwrap();
+        let b = e_distr.handle.prefill_blocking(Request::new(i, toks, Variant::Distr)).unwrap();
+        let ma = a.logits.iter().sum::<f32>() / a.logits.len() as f32;
+        let mb = b.logits.iter().sum::<f32>() / b.logits.len() as f32;
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            corr_num += ((x - ma) * (y - mb)) as f64;
+            na += ((x - ma) * (x - ma)) as f64;
+            nb += ((y - mb) * (y - mb)) as f64;
+        }
+    }
+    let corr = corr_num / (na.sqrt() * nb.sqrt());
+    assert!(corr > 0.8, "logit correlation {corr}");
+    e_std.shutdown();
+    e_distr.shutdown();
+}
+
+#[test]
+fn train_step_reduces_loss_over_steps() {
+    let Some(dir) = artifacts_dir() else { return };
+    let report = distr_attention::experiments::train::run(&dir, 8, 0).unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let first = report.losses.first().unwrap();
+    let last = report.losses.last().unwrap();
+    assert!(last < first, "loss should drop: {first} -> {last}");
+}
+
+#[test]
+fn vit_artifacts_agree_between_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let out = distr_attention::experiments::tab6::render_tab8(&dir, true).unwrap();
+    assert!(out.contains("vit_tiny"), "{out}");
+}

@@ -1,0 +1,272 @@
+//! Property-based tests over coordinator + kernel invariants.
+//!
+//! proptest is unavailable in the offline build, so these use the same
+//! structure (seeded generators, many cases, shrink-free assertion with
+//! the seed in the message) over `util::rng`.
+
+use distr_attention::attention::{
+    block_permutations, distr_attention, distr_scores, flash2_attention, standard_attention,
+    DistrParams, FlashParams,
+};
+use distr_attention::config::BatcherCfg;
+use distr_attention::coordinator::batcher::Batcher;
+use distr_attention::coordinator::kv_cache::KvCache;
+use distr_attention::coordinator::{Priority, Request, Scheduler};
+use distr_attention::attention::Variant;
+use distr_attention::tensor::Matrix;
+use distr_attention::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+// ---------------------------------------------------------------------------
+// kernel invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_flash_equals_standard_across_shapes() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case);
+        let n = 16 << rng.gen_range(3); // 16..128
+        let d = 16 << rng.gen_range(3);
+        let bl = 16 << rng.gen_range(2);
+        let bm = 16 << rng.gen_range(2);
+        if n % bl != 0 || n % bm != 0 {
+            continue;
+        }
+        let q = Matrix::randn(n, d, case * 3 + 1);
+        let k = Matrix::randn(n, d, case * 3 + 2);
+        let v = Matrix::randn(n, d, case * 3 + 3);
+        let p = FlashParams { block_l: bl, block_m: bm };
+        let got = flash2_attention(&q, &k, &v, &p, false);
+        let want = standard_attention(&q, &k, &v, false);
+        assert!(got.max_abs_diff(&want) < 1e-4, "case {case}: n={n} d={d} l={bl} m={bm}");
+    }
+}
+
+#[test]
+fn prop_distr_rows_are_convex_combinations_of_v() {
+    // softmax(Ŝ)V output rows must lie inside the V row convex hull per
+    // coordinate (weights are a distribution regardless of Ŝ's error)
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + case);
+        let n = 16 << rng.gen_range(3);
+        let d = 32 << rng.gen_range(2);
+        let g = 1 << rng.gen_range(3); // 1,2,4
+        if d % g != 0 {
+            continue;
+        }
+        let q = Matrix::uniform(n, d, case * 5 + 1);
+        let k = Matrix::uniform(n, d, case * 5 + 2);
+        let v = Matrix::uniform(n, d, case * 5 + 3);
+        let p = DistrParams {
+            flash: FlashParams { block_l: 16, block_m: 16 },
+            group: g,
+            ..Default::default()
+        };
+        let out = distr_attention(&q, &k, &v, &p, false);
+        for c in 0..d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..n {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..n {
+                let x = out.at(r, c);
+                assert!(
+                    x >= lo - 1e-4 && x <= hi + 1e-4,
+                    "case {case}: out[{r},{c}]={x} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lsh_permutations_valid_for_any_shape() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + case);
+        let bl = [1usize, 2, 4, 8, 16, 32][rng.gen_range(6)];
+        let blocks = 1 + rng.gen_range(4);
+        let d = 16 << rng.gen_range(3);
+        let q = Matrix::randn(bl * blocks, d, case);
+        let perms = block_permutations(&q, bl, case, rng.gen_range(2) == 0);
+        assert_eq!(perms.len(), blocks);
+        for p in perms {
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..d).collect::<Vec<_>>(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_distr_scores_group1_exact() {
+    for case in 0..10 {
+        let q = Matrix::uniform(64, 32, 3000 + case);
+        let k = Matrix::uniform(64, 32, 4000 + case);
+        let p = DistrParams {
+            flash: FlashParams { block_l: 16, block_m: 16 },
+            group: 1,
+            ..Default::default()
+        };
+        let approx = distr_scores(&q, &k, &p);
+        let exact = distr_attention::tensor::matmul_bt(&q, &k);
+        assert!(approx.max_abs_diff(&exact) < 1e-4, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // every pushed request comes out exactly once, in some batch,
+    // regardless of the push pattern
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(5000 + case);
+        let max_batch = 1 + rng.gen_range(8);
+        let mut b = Batcher::new(BatcherCfg { max_batch, max_wait_us: 1_000_000 });
+        let n_req = rng.gen_range(64) + 1;
+        let mut seen = vec![false; n_req];
+        let mut collect = |batch: Vec<Request>| {
+            for r in batch {
+                let idx = r.id as usize;
+                assert!(!seen[idx], "case {case}: duplicate {idx}");
+                seen[idx] = true;
+            }
+        };
+        for i in 0..n_req {
+            let len = 16 << rng.gen_range(4);
+            let variant = if rng.gen_range(2) == 0 { Variant::Distr } else { Variant::Flash2 };
+            if let Some((_, batch)) = b.push(Request::new(i as u64, vec![0; len], variant)) {
+                assert!(batch.len() <= max_batch, "case {case}");
+                collect(batch);
+            }
+        }
+        for (_, batch) in b.drain() {
+            collect(batch);
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: lost requests");
+        assert_eq!(b.pending_count(), 0);
+    }
+}
+
+#[test]
+fn prop_batches_are_homogeneous() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(6000 + case);
+        let mut b = Batcher::new(BatcherCfg { max_batch: 4, max_wait_us: 1_000_000 });
+        let mut check = |key: distr_attention::coordinator::batcher::BatchKey,
+                         batch: &[Request]| {
+            for r in batch {
+                assert_eq!(r.variant, key.variant, "case {case}");
+                assert_eq!(r.len_bucket(), key.len_bucket, "case {case}");
+            }
+        };
+        for i in 0..50 {
+            let len = 16 << rng.gen_range(4);
+            let variant = [Variant::Distr, Variant::Flash2, Variant::Hydra][rng.gen_range(3)];
+            if let Some((key, batch)) = b.push(Request::new(i, vec![0; len], variant)) {
+                check(key, &batch);
+            }
+        }
+        for (key, batch) in b.drain() {
+            check(key, &batch);
+        }
+    }
+}
+
+#[test]
+fn prop_kv_cache_never_leaks_blocks() {
+    // arbitrary register/append/fork/release interleavings: after all
+    // sequences are released, every block is back in the pool
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(7000 + case);
+        let d = 4;
+        let blocks = 64;
+        let mut cache = KvCache::new(blocks, 4, d);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_seq = 0u64;
+        for _ in 0..100 {
+            match rng.gen_range(4) {
+                0 => {
+                    let tokens = 1 + rng.gen_range(12);
+                    let k: Vec<f32> = (0..tokens * d).map(|i| i as f32).collect();
+                    if cache.register(next_seq, &k, &k).is_ok() {
+                        live.push(next_seq);
+                    }
+                    next_seq += 1;
+                }
+                1 if !live.is_empty() => {
+                    let seq = live[rng.gen_range(live.len())];
+                    let row: Vec<f32> = (0..d).map(|i| i as f32).collect();
+                    let _ = cache.append(seq, &row, &row);
+                }
+                2 if !live.is_empty() => {
+                    let parent = live[rng.gen_range(live.len())];
+                    if cache.fork(parent, next_seq).is_ok() {
+                        live.push(next_seq);
+                    }
+                    next_seq += 1;
+                }
+                3 if !live.is_empty() => {
+                    let idx = rng.gen_range(live.len());
+                    let seq = live.swap_remove(idx);
+                    cache.release(seq).unwrap();
+                }
+                _ => {}
+            }
+            // invariant: free + live-held <= total
+            assert!(cache.num_free() <= blocks, "case {case}");
+        }
+        for seq in live.drain(..) {
+            cache.release(seq).unwrap();
+        }
+        assert_eq!(cache.num_free(), blocks, "case {case}: leaked blocks");
+    }
+}
+
+#[test]
+fn prop_kv_cache_gather_reflects_appends() {
+    for case in 0..20 {
+        let mut rng = Rng::seed_from_u64(8000 + case);
+        let d = 2;
+        let mut cache = KvCache::new(32, 3, d);
+        let prefill = 1 + rng.gen_range(10);
+        let mut expect_k: Vec<f32> = (0..prefill * d).map(|i| (case * 100 + i as u64) as f32).collect();
+        let expect_v: Vec<f32> = expect_k.iter().map(|x| x + 0.5).collect();
+        cache.register(1, &expect_k, &expect_v).unwrap();
+        let mut expect_v = expect_v;
+        for a in 0..rng.gen_range(8) {
+            let krow = vec![a as f32 * 10.0, a as f32 * 10.0 + 1.0];
+            let vrow = vec![a as f32 * 10.0 + 0.5, a as f32 * 10.0 + 1.5];
+            cache.append(1, &krow, &vrow).unwrap();
+            expect_k.extend(&krow);
+            expect_v.extend(&vrow);
+        }
+        let (k, v) = cache.gather(1).unwrap();
+        assert_eq!(k, expect_k, "case {case}");
+        assert_eq!(v, expect_v, "case {case}");
+    }
+}
+
+#[test]
+fn prop_scheduler_never_drops_or_duplicates() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(9000 + case);
+        let mut s = Scheduler::new(std::time::Duration::from_millis(rng.gen_range(10) as u64));
+        let n = 1 + rng.gen_range(40);
+        for i in 0..n {
+            let prio = if rng.gen_range(2) == 0 { Priority::Batch } else { Priority::Interactive };
+            s.push(Request::new(i as u64, vec![0; 16], Variant::Distr).with_priority(prio));
+        }
+        let mut seen = vec![false; n];
+        while let Some(r) = s.pop(std::time::Instant::now()) {
+            let idx = r.id as usize;
+            assert!(!seen[idx], "case {case}: duplicate {idx}");
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "case {case}: dropped requests");
+    }
+}
