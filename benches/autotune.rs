@@ -1,0 +1,60 @@
+//! Tuned-vs-default engine throughput over the paper's shape grid (the
+//! fig7/tab2 sweep: N x d for flash2 and distr): quantifies what the
+//! autotuner buys over the engines' hard-coded (64, 64, G*=2) defaults.
+
+use distr_attention::attention::{Engine, Variant};
+use distr_attention::autotune::{Autotuner, TunedParams};
+use distr_attention::metrics::Table;
+use distr_attention::simulator::GpuSpec;
+use distr_attention::util::bench::{bench, BenchConfig};
+use distr_attention::workload::qkv_uniform;
+
+fn fmt_params(p: &TunedParams) -> String {
+    format!("({}, {}, G*={})", p.l, p.m, p.group)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let gpu = GpuSpec::RTX4090;
+    let mut tuner = Autotuner::in_memory(gpu);
+
+    let ns: &[usize] = if quick { &[1024] } else { &[1024, 2048, 4096] };
+    let ds: &[usize] = if quick { &[64] } else { &[32, 64, 128] };
+
+    let mut t = Table::new(&["variant", "N", "d", "default", "tuned", "default s", "tuned s", "speedup"]);
+    for &variant in &[Variant::Flash2, Variant::Distr] {
+        for &n in ns {
+            for &d in ds {
+                let (q, k, v) = qkv_uniform(n, d, 1);
+                let default_params = TunedParams::default_for(variant, d);
+                let tuned_params = tuner.tuned(variant, n, d, false, 1);
+
+                let default_eng = Engine::new(variant);
+                let t_default =
+                    bench(&cfg, "autotune", &format!("default_{variant}_{n}x{d}"), || {
+                        std::hint::black_box(default_eng.run(&q, &k, &v));
+                    });
+                let tuned_eng = Engine::tuned(variant, &tuned_params);
+                let t_tuned = bench(&cfg, "autotune", &format!("tuned_{variant}_{n}x{d}"), || {
+                    std::hint::black_box(tuned_eng.run(&q, &k, &v));
+                });
+
+                t.row(&[
+                    variant.to_string(),
+                    n.to_string(),
+                    d.to_string(),
+                    fmt_params(&default_params),
+                    fmt_params(&tuned_params),
+                    format!("{t_default:.4}"),
+                    format!("{t_tuned:.4}"),
+                    format!("{:.2}x", t_default / t_tuned),
+                ]);
+            }
+        }
+    }
+    println!("\nautotuned vs default dispatch parameters ({}):", gpu.name);
+    print!("{}", t.render());
+    let s = tuner.stats();
+    println!("tuner: {} searches, {} cache hits", s.searches, s.hits);
+}

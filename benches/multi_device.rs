@@ -29,7 +29,7 @@ fn main() {
                 link_latency_us: 10,
                 double_buffer: true,
             };
-            bench(&cfg, "multi_device", &format!("scatter_{}/{n_dev}", variant.name()), || {
+            bench(&cfg, "multi_device", &format!("scatter_{variant}/{n_dev}"), || {
                 std::hint::black_box(run_scatter(&plan(variant), &dc, 7));
             });
         }

@@ -1,7 +1,174 @@
-//! Boot the full serving coordinator (router + batcher + scheduler +
-//! engines on AOT artifacts) and push a batched prefill workload through
-//! it, reporting TTFT percentiles (paper Table 6's serving-side analogue).
+//! End-to-end serving demo on the Rust-native engines: build autotuned
+//! attention engines, push a batched prefill workload through the
+//! scheduler -> batcher -> router pipeline, run a few decode steps per
+//! sequence over the paged KV cache, and report per-variant latency.
+//!
+//! Unlike the artifact-backed path this needs no `make artifacts` or
+//! PJRT runtime, so it runs on a fresh checkout:
+//!
+//! ```bash
+//! cargo run --release --example serve_llm
+//! ```
+//!
+//! The tuning cache persists in the system temp dir — a second run
+//! resolves every shape from cache (watch the hit counter).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use distr_attention::attention::{Engine, Variant};
+use distr_attention::autotune::Autotuner;
+use distr_attention::config::Config;
+use distr_attention::coordinator::{decode_step, Batcher, KvCache, Request, Router, Scheduler};
+use distr_attention::metrics::{LatencyHistogram, Table};
+use distr_attention::tensor::Matrix;
+use distr_attention::util::rng::Rng;
+use distr_attention::workload::SeqTask;
+
+/// Head dim of the demo model.
+const D: usize = 64;
+const DECODE_STEPS: usize = 4;
+const REQUESTS: u64 = 24;
+
+/// Deterministic token embedding: row r of the (n, d) matrix is a
+/// pseudo-random function of (token, position) — a stand-in for the
+/// model's embedding table that keeps the demo self-contained.
+fn embed(tokens: &[i32], n: usize, salt: u64) -> Matrix {
+    let mut m = Matrix::zeros(n, D);
+    for r in 0..n {
+        let tok = tokens.get(r).copied().unwrap_or(0) as u64;
+        let mut rng = Rng::seed_from_u64(tok.wrapping_mul(0x9E37_79B9).wrapping_add(r as u64) ^ salt);
+        for c in 0..D {
+            *m.at_mut(r, c) = rng.gen_f32();
+        }
+    }
+    m
+}
 
 fn main() -> anyhow::Result<()> {
-    distr_attention::experiments::serve_selftest(std::path::Path::new("artifacts"), 64)
+    distr_attention::util::logger::init();
+
+    // autotuner from config, persisting its cache across runs
+    let mut cfg = Config::default();
+    cfg.autotune.cache_path = std::env::temp_dir()
+        .join("distr-attn-serve-llm-tuning.json")
+        .to_string_lossy()
+        .into_owned();
+    let mut tuner = Autotuner::from_config(&cfg);
+    let preloaded = tuner.cache().len();
+
+    // one engine per (variant, length bucket), built from tuned params
+    let mut router: Router<Engine> = Router::new();
+    for variant in [Variant::Flash2, Variant::Distr] {
+        for bucket in [128usize, 256] {
+            let p = tuner.tuned(variant, bucket, D, true, cfg.batcher.max_batch);
+            router.add_route(variant, bucket, Engine::tuned(variant, &p).causal(true));
+            println!(
+                "route {variant}/{bucket}: tuned (l={}, m={}, G*={}) on {}",
+                p.l,
+                p.m,
+                p.group,
+                tuner.gpu().name
+            );
+        }
+    }
+    let mut router = router.with_autotuner(tuner);
+    println!("serve_llm: {} routes live ({} shapes preloaded from cache)\n", router.num_routes(), preloaded);
+
+    // synthetic request stream: two prompt-length populations, two
+    // variants, pushed through scheduler + batcher like the real loop
+    let short_task = SeqTask::new(512, 96);
+    let long_task = SeqTask::new(512, 200);
+    let mut scheduler = Scheduler::new(Duration::from_millis(50));
+    for i in 0..REQUESTS {
+        let (toks, _) = if i % 3 == 0 { long_task.sample(i) } else { short_task.sample(i) };
+        let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
+        scheduler.push(Request::new(i, toks, variant));
+    }
+
+    let mut batcher = Batcher::new(cfg.batcher);
+    let mut cache = KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D);
+    let mut prefill_ms: HashMap<Variant, LatencyHistogram> = HashMap::new();
+    let mut decode_us: HashMap<Variant, LatencyHistogram> = HashMap::new();
+    let mut served: HashMap<Variant, u64> = HashMap::new();
+
+    let mut run_batch = |router: &mut Router<Engine>,
+                         cache: &mut KvCache,
+                         batch: Vec<Request>|
+     -> anyhow::Result<()> {
+        let batch_len = batch.len();
+        for req in batch {
+            let n = req.len_bucket();
+            let (engine, _key, tuned) = router.route_tuned(&req, D, true, batch_len)?;
+            // per-request tuned dispatch: fall back to the route's
+            // engine when no tuner is attached
+            let engine = match &tuned {
+                Some(p) => Engine::tuned(req.variant, p).causal(true),
+                None => engine.clone(),
+            };
+
+            // prefill at the bucketed length
+            let t0 = Instant::now();
+            let q = embed(&req.tokens, n, 1);
+            let k = embed(&req.tokens, n, 2);
+            let v = embed(&req.tokens, n, 3);
+            let out = engine.run(&q, &k, &v);
+            prefill_ms.entry(req.variant).or_default().record(t0.elapsed());
+            assert!(out.data.iter().all(|x| x.is_finite()));
+
+            // a few decode steps over the paged KV cache
+            let prompt = req.tokens.len().min(n);
+            cache.register(req.id, &k.data[..prompt * D], &v.data[..prompt * D])?;
+            let mut rng = Rng::seed_from_u64(req.id ^ 0xDEC0);
+            for _ in 0..DECODE_STEPS {
+                let q_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
+                let k_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
+                let v_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
+                let t0 = Instant::now();
+                let o = decode_step(cache, req.id, &q_row, &k_row, &v_row)?;
+                decode_us.entry(req.variant).or_default().record(t0.elapsed());
+                assert_eq!(o.len(), D);
+            }
+            cache.release(req.id)?;
+            *served.entry(req.variant).or_default() += 1;
+        }
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    while let Some(req) = scheduler.pop(Instant::now()) {
+        if let Some((_key, batch)) = batcher.push(req) {
+            run_batch(&mut router, &mut cache, batch)?;
+        }
+    }
+    for (_key, batch) in batcher.drain() {
+        run_batch(&mut router, &mut cache, batch)?;
+    }
+    let elapsed = t0.elapsed();
+
+    println!("served {REQUESTS} requests in {:.2}s\n", elapsed.as_secs_f64());
+    let mut t = Table::new(&["variant", "requests", "prefill p50 (ms)", "prefill mean (ms)", "decode mean (us)"]);
+    for variant in [Variant::Flash2, Variant::Distr] {
+        let p = &prefill_ms[&variant];
+        let d = &decode_us[&variant];
+        t.row(&[
+            variant.to_string(),
+            served[&variant].to_string(),
+            format!("{:.2}", p.quantile(0.5).as_secs_f64() * 1e3),
+            format!("{:.2}", p.mean().as_secs_f64() * 1e3),
+            format!("{:.1}", d.mean().as_secs_f64() * 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let tuner = router.autotuner().expect("tuner attached");
+    let s = tuner.stats();
+    println!(
+        "\nautotune: {} cached shapes ({} hits / {} searches this run)",
+        tuner.cache().len(),
+        s.hits,
+        s.searches
+    );
+    println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
+    Ok(())
 }

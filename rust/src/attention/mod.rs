@@ -66,6 +66,12 @@ impl Variant {
     }
 }
 
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.name())
+    }
+}
+
 impl std::str::FromStr for Variant {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -99,6 +105,12 @@ impl Engine {
             distr: DistrParams::default(),
             causal: false,
         }
+    }
+
+    /// An engine configured from autotuned parameters — the serving
+    /// path's replacement for hard-coded block/group defaults.
+    pub fn tuned(variant: Variant, p: &crate::autotune::TunedParams) -> Self {
+        Self::new(variant).with_blocks(p.l, p.m).with_group(p.group.max(1))
     }
 
     pub fn causal(mut self, causal: bool) -> Self {
@@ -167,5 +179,23 @@ mod tests {
     fn exactness_flags() {
         assert!(Variant::Flash2.is_exact());
         assert!(!Variant::Distr.is_exact());
+    }
+
+    #[test]
+    fn display_matches_name() {
+        for v in Variant::ALL {
+            assert_eq!(v.to_string(), v.name());
+        }
+        assert_eq!(format!("{:>8}", Variant::Distr), "   distr");
+    }
+
+    #[test]
+    fn tuned_engine_applies_params() {
+        let p = crate::autotune::TunedParams { l: 128, m: 32, group: 4, sample_rate: 0.25 };
+        let eng = Engine::tuned(Variant::Distr, &p);
+        assert_eq!(eng.flash.block_l, 128);
+        assert_eq!(eng.flash.block_m, 32);
+        assert_eq!(eng.distr.flash.block_l, 128);
+        assert_eq!(eng.distr.group, 4);
     }
 }

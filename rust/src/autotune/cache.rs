@@ -1,0 +1,171 @@
+//! The persistent tuning cache: a versioned JSON file mapping
+//! [`TuneKey`]s to [`TunedParams`], written through on every new search
+//! result and loaded at startup so a restarted server never re-tunes a
+//! shape it has already seen.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::Value;
+
+use super::key::TuneKey;
+use super::TunedParams;
+
+/// Bump when the cache schema or the meaning of a field changes; stale
+/// files are rejected at load so old tunings never drive a new engine.
+pub const CACHE_VERSION: usize = 1;
+
+/// In-memory view of the tuning cache file.
+#[derive(Clone, Debug)]
+pub struct TuningCache {
+    /// The card the entries were tuned for (`GpuSpec::name`).
+    pub gpu: String,
+    entries: HashMap<TuneKey, TunedParams>,
+}
+
+impl TuningCache {
+    pub fn new(gpu: &str) -> Self {
+        Self { gpu: gpu.to_string(), entries: HashMap::new() }
+    }
+
+    pub fn get(&self, key: &TuneKey) -> Option<TunedParams> {
+        self.entries.get(key).copied()
+    }
+
+    pub fn insert(&mut self, key: TuneKey, params: TunedParams) {
+        self.entries.insert(key, params);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&TuneKey, &TunedParams)> {
+        self.entries.iter()
+    }
+
+    pub fn to_json(&self) -> Value {
+        // BTreeMap-backed Value::Object keeps the file diff-stable
+        let entries: Vec<(String, Value)> =
+            self.entries.iter().map(|(k, p)| (k.to_string(), p.to_json())).collect();
+        Value::Object(
+            [
+                ("version".to_string(), Value::number(CACHE_VERSION as f64)),
+                ("gpu".to_string(), Value::string(self.gpu.clone())),
+                ("entries".to_string(), Value::Object(entries.into_iter().collect())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let version = v.req_usize("version")?;
+        if version != CACHE_VERSION {
+            bail!(
+                "stale tuning cache: version {version}, this build expects {CACHE_VERSION} \
+                 (delete the cache file to re-tune)"
+            );
+        }
+        let gpu = v.req_str("gpu")?.to_string();
+        let mut entries = HashMap::new();
+        let obj = v
+            .req("entries")?
+            .as_object()
+            .ok_or_else(|| anyhow!("`entries` must be an object"))?;
+        for (k, pv) in obj {
+            let key: TuneKey = k.parse().with_context(|| format!("cache entry `{k}`"))?;
+            let params =
+                TunedParams::from_json(pv).with_context(|| format!("cache entry `{k}`"))?;
+            entries.insert(key, params);
+        }
+        Ok(Self { gpu, entries })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning cache {}", path.display()))?;
+        let v = Value::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v).with_context(|| format!("loading tuning cache {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing tuning cache {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::autotune::key::BucketPolicy;
+    use crate::util::testing::TempDir;
+
+    fn sample_key(n: usize) -> TuneKey {
+        TuneKey::for_shape(Variant::Distr, n, 64, false, 4, BucketPolicy::Pow2)
+    }
+
+    fn sample_params() -> TunedParams {
+        TunedParams { l: 256, m: 64, group: 2, sample_rate: 0.5 }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries() {
+        let mut c = TuningCache::new("RTX 4090");
+        c.insert(sample_key(1024), sample_params());
+        c.insert(sample_key(4096), TunedParams { l: 128, m: 32, group: 4, sample_rate: 0.25 });
+        let back = TuningCache::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.gpu, "RTX 4090");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(&sample_key(1024)).unwrap(), sample_params());
+        assert_eq!(back.get(&sample_key(4096)).unwrap().group, 4);
+    }
+
+    #[test]
+    fn stale_version_rejected() {
+        let text = r#"{"version": 99, "gpu": "RTX 4090", "entries": {}}"#;
+        let v = Value::parse(text).unwrap();
+        let err = TuningCache::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("stale"), "{err}");
+        assert!(err.contains("99"), "{err}");
+    }
+
+    #[test]
+    fn malformed_entry_key_rejected() {
+        let text = r#"{"version": 1, "gpu": "L40", "entries":
+            {"not-a-key": {"l": 64, "m": 64, "group": 1, "sample_rate": 1}}}"#;
+        let v = Value::parse(text).unwrap();
+        assert!(TuningCache::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_survives_restart() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("tuning").join("cache.json");
+        let mut c = TuningCache::new("L40");
+        c.insert(sample_key(2048), sample_params());
+        c.save(&path).unwrap();
+        // "restart": a fresh load must reproduce the exact params
+        let back = TuningCache::load(&path).unwrap();
+        assert_eq!(back.gpu, "L40");
+        assert_eq!(back.get(&sample_key(2048)).unwrap(), sample_params());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(TuningCache::load(Path::new("/definitely/not/here.json")).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Tuning keys: the shape equivalence classes the autotuner caches by.
+//!
+//! Serving traffic has continuously varying prompt lengths and batch
+//! sizes, but block-size selection only moves at coarse granularity, so
+//! requests are bucketed (power-of-two by default) before lookup — the
+//! same bucketing the coordinator's batcher already uses for executable
+//! compatibility ([`crate::coordinator::request::Request::len_bucket`]).
+
+use crate::attention::Variant;
+
+/// Smallest sequence bucket: one tensor-core tile row block.
+pub const MIN_N_BUCKET: usize = 16;
+
+/// How raw sequence lengths map to cache buckets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BucketPolicy {
+    /// Round up to the next power of two (default; bounded cache size).
+    #[default]
+    Pow2,
+    /// One entry per exact length (benchmarks sweeping a fixed grid).
+    Exact,
+}
+
+impl BucketPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BucketPolicy::Pow2 => "pow2",
+            BucketPolicy::Exact => "exact",
+        }
+    }
+
+    /// Bucket a sequence length.
+    pub fn bucket_n(&self, n: usize) -> usize {
+        match self {
+            BucketPolicy::Pow2 => n.next_power_of_two().max(MIN_N_BUCKET),
+            BucketPolicy::Exact => n.max(MIN_N_BUCKET),
+        }
+    }
+}
+
+impl std::str::FromStr for BucketPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pow2" => Ok(BucketPolicy::Pow2),
+            "exact" => Ok(BucketPolicy::Exact),
+            other => Err(format!("unknown n-bucket policy `{other}` (pow2|exact)")),
+        }
+    }
+}
+
+/// One tuning cache entry's identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    pub variant: Variant,
+    pub n_bucket: usize,
+    pub d: usize,
+    pub causal: bool,
+    pub batch_bucket: usize,
+}
+
+impl TuneKey {
+    /// Key for a concrete request shape under `policy`.
+    pub fn for_shape(
+        variant: Variant,
+        n: usize,
+        d: usize,
+        causal: bool,
+        batch: usize,
+        policy: BucketPolicy,
+    ) -> Self {
+        Self {
+            variant,
+            n_bucket: policy.bucket_n(n),
+            d,
+            causal,
+            batch_bucket: batch.max(1).next_power_of_two(),
+        }
+    }
+}
+
+impl std::fmt::Display for TuneKey {
+    /// Stable text form — used verbatim as the JSON cache map key.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/n{}/d{}/c{}/b{}",
+            self.variant,
+            self.n_bucket,
+            self.d,
+            u8::from(self.causal),
+            self.batch_bucket
+        )
+    }
+}
+
+impl std::str::FromStr for TuneKey {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 5 {
+            anyhow::bail!("bad tune key `{s}`: expected variant/nN/dD/cC/bB");
+        }
+        let variant: Variant =
+            parts[0].parse().map_err(|e: String| anyhow::anyhow!("bad tune key `{s}`: {e}"))?;
+        let field = |part: &str, prefix: &str| -> anyhow::Result<usize> {
+            part.strip_prefix(prefix)
+                .and_then(|x| x.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("bad tune key `{s}`: field `{part}`"))
+        };
+        let causal = match field(parts[3], "c")? {
+            0 => false,
+            1 => true,
+            other => anyhow::bail!("bad tune key `{s}`: causal flag {other}"),
+        };
+        Ok(Self {
+            variant,
+            n_bucket: field(parts[1], "n")?,
+            d: field(parts[2], "d")?,
+            causal,
+            batch_bucket: field(parts[4], "b")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_bucket_boundaries() {
+        let p = BucketPolicy::Pow2;
+        assert_eq!(p.bucket_n(1), MIN_N_BUCKET);
+        assert_eq!(p.bucket_n(16), 16);
+        assert_eq!(p.bucket_n(17), 32);
+        assert_eq!(p.bucket_n(128), 128);
+        assert_eq!(p.bucket_n(129), 256);
+        assert_eq!(p.bucket_n(4096), 4096);
+        assert_eq!(p.bucket_n(4097), 8192);
+    }
+
+    #[test]
+    fn exact_policy_keeps_length() {
+        assert_eq!(BucketPolicy::Exact.bucket_n(100), 100);
+        assert_eq!(BucketPolicy::Exact.bucket_n(1), MIN_N_BUCKET);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [BucketPolicy::Pow2, BucketPolicy::Exact] {
+            assert_eq!(p.as_str().parse::<BucketPolicy>().unwrap(), p);
+        }
+        assert!("fancy".parse::<BucketPolicy>().is_err());
+    }
+
+    #[test]
+    fn key_display_parse_roundtrip() {
+        let key = TuneKey::for_shape(Variant::Distr, 1000, 64, true, 5, BucketPolicy::Pow2);
+        assert_eq!(key.n_bucket, 1024);
+        assert_eq!(key.batch_bucket, 8);
+        assert_eq!(key.to_string(), "distr/n1024/d64/c1/b8");
+        let back: TuneKey = key.to_string().parse().unwrap();
+        assert_eq!(back, key);
+    }
+
+    #[test]
+    fn bad_keys_rejected() {
+        for bad in ["", "distr/n8/d64/c1", "quantum/n8/d64/c1/b1", "distr/n8/d64/c7/b1", "distr/x8/d64/c0/b1"] {
+            assert!(bad.parse::<TuneKey>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn batch_bucket_rounds_and_floors() {
+        let k = TuneKey::for_shape(Variant::Flash2, 64, 64, false, 0, BucketPolicy::Pow2);
+        assert_eq!(k.batch_bucket, 1);
+        let k = TuneKey::for_shape(Variant::Flash2, 64, 64, false, 3, BucketPolicy::Pow2);
+        assert_eq!(k.batch_bucket, 4);
+    }
+}

@@ -1,0 +1,298 @@
+//! Profile-guided autotuner: closes the loop from the analytic GPU cost
+//! model ([`crate::simulator`]) to live engine dispatch.
+//!
+//! The paper's headline win over FlashAttention-2 comes from selecting
+//! block sizes per hardware + shape (§3.3.1, Table 2) and from the
+//! sampling rate G* (§3.2). Before this subsystem those selectors were
+//! only consulted by the paper-reproduction experiments; the serving
+//! path ran on hard-coded defaults. Now every dispatch can ask the
+//! tuner for `(l, m, G*)`:
+//!
+//! * [`key`] — shape bucketing into [`TuneKey`]s,
+//! * [`search`] — the analytic selection (simulator-driven),
+//! * [`empirical`] — optional measured refinement (microbenchmark
+//!   sweeps over the legal neighborhood, budget-capped),
+//! * [`cache`] — the versioned JSON tuning cache persisted across
+//!   process restarts.
+//!
+//! [`Autotuner`] orchestrates: cache lookup → analytic search →
+//! empirical refinement → write-through persistence. Consumers are
+//! `attention::Engine::tuned`, `coordinator::Router::route_tuned`, the
+//! `autotune` bench, and the `serve_llm` example.
+
+pub mod cache;
+pub mod empirical;
+pub mod key;
+pub mod search;
+
+use std::path::Path;
+
+pub use cache::{TuningCache, CACHE_VERSION};
+pub use key::{BucketPolicy, TuneKey, MIN_N_BUCKET};
+
+use crate::attention::Variant;
+use crate::config::{AutotuneCfg, Config};
+use crate::simulator::GpuSpec;
+use crate::util::json::Value;
+
+/// The tuned knobs for one shape class: the paper's `(l, m)` block
+/// sizes plus the sampling rate G* (and its fraction-of-d form).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedParams {
+    /// Q-block rows per outer step.
+    pub l: usize,
+    /// K/V-block rows per inner step.
+    pub m: usize,
+    /// G*: columns fused per group (1 = exact).
+    pub group: usize,
+    /// Fraction of the head dim the contraction keeps (= 1/G*).
+    pub sample_rate: f64,
+}
+
+impl TunedParams {
+    /// The hard-coded defaults the engines used before autotuning
+    /// (`AttentionCfg`/`FlashParams`/`DistrParams` defaults).
+    pub fn default_for(variant: Variant, d: usize) -> Self {
+        let group = if variant == Variant::Distr && d >= 2 * search::MIN_DG { 2 } else { 1 };
+        Self { l: 64, m: 64, group, sample_rate: 1.0 / group as f64 }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("l", Value::number(self.l as f64)),
+            ("m", Value::number(self.m as f64)),
+            ("group", Value::number(self.group as f64)),
+            ("sample_rate", Value::number(self.sample_rate)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let p = Self {
+            l: v.req_usize("l")?,
+            m: v.req_usize("m")?,
+            group: v.req_usize("group")?,
+            sample_rate: v
+                .req("sample_rate")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("`sample_rate` must be a number"))?,
+        };
+        if p.l == 0 || p.m == 0 || p.group == 0 {
+            anyhow::bail!("tuned params must be positive: {p:?}");
+        }
+        Ok(p)
+    }
+}
+
+/// Hit/miss/search counters — the observability hook dispatch tests and
+/// the serve loop read.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TunerStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that required a search.
+    pub misses: u64,
+    /// Searches performed (analytic, plus empirical when enabled).
+    pub searches: u64,
+}
+
+/// The profile-guided autotuner.
+pub struct Autotuner {
+    gpu: GpuSpec,
+    cfg: AutotuneCfg,
+    cache: TuningCache,
+    stats: TunerStats,
+}
+
+impl Autotuner {
+    /// Build for `gpu` under `cfg`, loading the persisted cache when
+    /// one exists. A stale or foreign-GPU cache is ignored (with a
+    /// warning), never silently reused.
+    pub fn new(gpu: GpuSpec, mut cfg: AutotuneCfg) -> Self {
+        let mut cache = TuningCache::new(gpu.name);
+        if cfg.enable && !cfg.cache_path.is_empty() && Path::new(&cfg.cache_path).exists() {
+            match TuningCache::load(Path::new(&cfg.cache_path)) {
+                Ok(loaded) if loaded.gpu == gpu.name => {
+                    log::info!(
+                        "autotune: loaded {} tuned shapes from {}",
+                        loaded.len(),
+                        cfg.cache_path
+                    );
+                    cache = loaded;
+                }
+                Ok(loaded) => {
+                    // tuning fresh, and NOT persisting: write-through
+                    // would destroy the other card's tunings
+                    log::warn!(
+                        "autotune: cache {} was tuned for {}, tuning {} in memory only \
+                         (configure a per-GPU cache_path to persist)",
+                        cfg.cache_path,
+                        loaded.gpu,
+                        gpu.name
+                    );
+                    cfg.cache_path.clear();
+                }
+                Err(e) => {
+                    // corrupt or stale-version file: re-tuning and
+                    // rewriting at the current version is the intent
+                    log::warn!("autotune: ignoring unusable cache: {e:#}");
+                }
+            }
+        }
+        Self { gpu, cfg, cache, stats: TunerStats::default() }
+    }
+
+    /// An enabled, non-persisting, analytic-only tuner (benches/tests).
+    pub fn in_memory(gpu: GpuSpec) -> Self {
+        let cfg = AutotuneCfg { cache_path: String::new(), empirical: false, ..Default::default() };
+        Self::new(gpu, cfg)
+    }
+
+    /// Build from the top-level config's `[autotune]` section.
+    pub fn from_config(config: &Config) -> Self {
+        let gpu = GpuSpec::by_name(&config.autotune.gpu).unwrap_or_else(|| {
+            log::warn!(
+                "autotune: unknown gpu `{}`, tuning for {}",
+                config.autotune.gpu,
+                GpuSpec::RTX4090.name
+            );
+            GpuSpec::RTX4090
+        });
+        Self::new(gpu, config.autotune.clone())
+    }
+
+    /// The cache key a request shape maps to under this tuner's policy.
+    pub fn key_for(&self, variant: Variant, n: usize, d: usize, causal: bool, batch: usize) -> TuneKey {
+        TuneKey::for_shape(variant, n, d, causal, batch, self.cfg.n_bucket)
+    }
+
+    /// Cache-only lookup (no search, no stats).
+    pub fn lookup(&self, key: &TuneKey) -> Option<TunedParams> {
+        self.cache.get(key)
+    }
+
+    /// Tuned parameters for a request shape: cached if seen, searched
+    /// (and persisted) otherwise. Disabled tuners return the legacy
+    /// hard-coded defaults so dispatch behaviour is unchanged.
+    pub fn tuned(&mut self, variant: Variant, n: usize, d: usize, causal: bool, batch: usize) -> TunedParams {
+        if !self.cfg.enable {
+            return TunedParams::default_for(variant, d);
+        }
+        let key = self.key_for(variant, n, d, causal, batch);
+        if let Some(p) = self.cache.get(&key) {
+            self.stats.hits += 1;
+            return p;
+        }
+        self.stats.misses += 1;
+        self.stats.searches += 1;
+        let mut params = search::analytic(&self.gpu, &key);
+        if self.cfg.empirical {
+            params = empirical::refine(&self.gpu, &key, params, self.cfg.empirical_budget_ms);
+        }
+        log::info!("autotune: {key} -> (l={}, m={}, G*={})", params.l, params.m, params.group);
+        self.cache.insert(key, params);
+        if !self.cfg.cache_path.is_empty() {
+            if let Err(e) = self.save() {
+                log::warn!("autotune: failed to persist cache: {e:#}");
+            }
+        }
+        params
+    }
+
+    /// Persist the cache to the configured path.
+    pub fn save(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.cfg.cache_path.is_empty(), "autotune cache_path not configured");
+        self.cache.save(Path::new(&self.cfg.cache_path))
+    }
+
+    pub fn stats(&self) -> TunerStats {
+        self.stats
+    }
+
+    pub fn cache(&self) -> &TuningCache {
+        &self.cache
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.gpu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_match_legacy_engine_defaults() {
+        let p = TunedParams::default_for(Variant::Flash2, 64);
+        assert_eq!((p.l, p.m, p.group), (64, 64, 1));
+        let p = TunedParams::default_for(Variant::Distr, 64);
+        assert_eq!(p.group, 2);
+        // too-narrow head dims cannot sample
+        let p = TunedParams::default_for(Variant::Distr, 16);
+        assert_eq!(p.group, 1);
+    }
+
+    #[test]
+    fn params_json_roundtrip_and_validation() {
+        let p = TunedParams { l: 128, m: 64, group: 2, sample_rate: 0.5 };
+        let back = TunedParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        let bad = Value::parse(r#"{"l": 0, "m": 64, "group": 1, "sample_rate": 1}"#).unwrap();
+        assert!(TunedParams::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn tuner_caches_after_first_search() {
+        let mut t = Autotuner::in_memory(GpuSpec::RTX4090);
+        let a = t.tuned(Variant::Distr, 1000, 64, false, 1);
+        let b = t.tuned(Variant::Distr, 1024, 64, false, 1); // same pow2 bucket
+        assert_eq!(a, b);
+        let s = t.stats();
+        assert_eq!(s.searches, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(t.cache().len(), 1);
+    }
+
+    #[test]
+    fn distinct_shapes_get_distinct_entries() {
+        let mut t = Autotuner::in_memory(GpuSpec::RTX4090);
+        t.tuned(Variant::Distr, 512, 64, false, 1);
+        t.tuned(Variant::Distr, 512, 64, true, 1);
+        t.tuned(Variant::Flash2, 512, 64, false, 1);
+        t.tuned(Variant::Distr, 512, 128, false, 1);
+        assert_eq!(t.cache().len(), 4);
+    }
+
+    #[test]
+    fn disabled_tuner_returns_legacy_defaults() {
+        let cfg = AutotuneCfg { enable: false, ..Default::default() };
+        let mut t = Autotuner::new(GpuSpec::RTX4090, cfg);
+        let p = t.tuned(Variant::Distr, 4096, 64, false, 1);
+        assert_eq!(p, TunedParams::default_for(Variant::Distr, 64));
+        assert_eq!(t.stats(), TunerStats::default());
+        assert!(t.cache().is_empty());
+    }
+
+    #[test]
+    fn every_cached_entry_is_hardware_legal() {
+        use crate::simulator::block_select::is_legal;
+        let mut t = Autotuner::in_memory(GpuSpec::L40);
+        for variant in [Variant::Flash2, Variant::Distr, Variant::Standard] {
+            for n in [64usize, 300, 2048, 4096] {
+                for d in [32usize, 64, 128] {
+                    t.tuned(variant, n, d, n % 2 == 0, 1);
+                }
+            }
+        }
+        for (key, p) in t.cache().iter() {
+            assert!(
+                is_legal(t.gpu(), key.d, p.l, p.m),
+                "{key}: ({}, {}) illegal on {}",
+                p.l,
+                p.m,
+                t.gpu().name
+            );
+        }
+    }
+}

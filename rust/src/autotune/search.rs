@@ -1,0 +1,243 @@
+//! Analytic parameter search: the simulator's selection rules (paper
+//! §3.3.1, Table 2) specialized to what the live engines can actually
+//! run.
+//!
+//! The serving path adds two constraints on top of
+//! [`crate::simulator::block_select::is_legal`]:
+//!
+//! * `l` and `m` must be powers of two that divide the N-bucket — the
+//!   engines require `N % l == 0`, `N % m == 0` and (causal)
+//!   `l % m == 0`; pow2 `m ≤ l` gives the causal property for free,
+//!   and divisibility is checked against the bucket itself because the
+//!   `Exact` key policy admits non-pow2 buckets;
+//! * `l ≤ N-bucket` — a tile taller than the sequence wastes the
+//!   shared-memory budget the occupancy constraint is spending.
+//!
+//! The search seeds the candidate set with [`ours_config`] and
+//! [`best_config`] (snapped to the pow2 grid), sweeps the full legal
+//! grid, and scores with [`distr_cost`] — the paper's cycle model
+//! extended with the d/G* contraction so the sampling rate G* is chosen
+//! jointly with (l, m) instead of being a magic number.
+
+use crate::attention::Variant;
+use crate::simulator::block_select::{self, best_config, is_legal, ours_config, N_PRIME};
+use crate::simulator::io_model;
+use crate::simulator::GpuSpec;
+
+use super::key::TuneKey;
+use super::TunedParams;
+
+/// Largest tile the engines sweep (matches `block_select`'s 32·N').
+const MAX_TILE: usize = 512;
+
+/// Smallest contracted dim the sampling may leave (one tensor-core tile).
+pub const MIN_DG: usize = 16;
+
+/// Is `(l, m)` runnable by the live engines for a `n_bucket`-bucketed
+/// sequence on `gpu`? Hardware-legal + pow2 + tiles that divide the
+/// bucket — the engines assert `N % l == 0` / `N % m == 0`, and under
+/// the `Exact` key policy the bucket need not be a power of two, so
+/// divisibility is checked explicitly rather than assumed.
+pub fn serving_legal(gpu: &GpuSpec, d: usize, l: usize, m: usize, n_bucket: usize) -> bool {
+    l.is_power_of_two()
+        && m.is_power_of_two()
+        && l <= n_bucket
+        && n_bucket % l == 0
+        && n_bucket % m == 0
+        && is_legal(gpu, d, l, m)
+}
+
+/// Legal sampling rates G* for `variant` at head dim `d`, ascending.
+pub fn group_candidates(variant: Variant, d: usize) -> Vec<usize> {
+    if variant != Variant::Distr {
+        return vec![1];
+    }
+    [1usize, 2, 4, 8]
+        .into_iter()
+        .filter(|&g| d % g == 0 && d / g >= MIN_DG)
+        .collect()
+}
+
+/// Estimated seconds for one attention pass at `(l, m, G*)` — the
+/// paper's cost model ([`block_select::cost_model`]) with the
+/// tensor-core term rescaled to DistrAttention's d/G* contraction
+/// ([`io_model::flops_distr`]). `g == 1` reduces to the exact model.
+pub fn distr_cost(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize, g: usize) -> f64 {
+    if g <= 1 {
+        return block_select::cost_model(gpu, n, d, l, m);
+    }
+    block_select::cost_with_flops(gpu, n, d, l, m, io_model::flops_distr(n, d, g, l))
+}
+
+/// Snap a tile size down to the nearest serving-grid value (pow2,
+/// between N' and `MAX_TILE`).
+fn snap_pow2(x: usize) -> usize {
+    let mut p = N_PRIME;
+    while p * 2 <= x && p * 2 <= MAX_TILE {
+        p *= 2;
+    }
+    p
+}
+
+/// The analytic selection for `key` on `gpu`.
+pub fn analytic(gpu: &GpuSpec, key: &TuneKey) -> TunedParams {
+    let (d, n) = (key.d, key.n_bucket);
+    let mut candidates: Vec<(usize, usize)> = Vec::new();
+    let mut tile = MAX_TILE;
+    let mut tiles = Vec::new();
+    while tile >= N_PRIME {
+        tiles.push(tile);
+        tile /= 2;
+    }
+    // descending grid: on cost ties the first (largest-l, then
+    // largest-m) candidate wins, matching the paper's maximize-l rule
+    for &l in &tiles {
+        for &m in &tiles {
+            candidates.push((l, m));
+        }
+    }
+    // seed with the simulator's own selections, snapped onto the grid
+    // (guarded: the selectors panic when no multiple-of-N' config is
+    // legal, e.g. exotic head dims; the pow2 sweep then decides alone)
+    if candidates.iter().any(|&(l, m)| is_legal(gpu, d, l, m)) {
+        let ours = ours_config(gpu, d);
+        let best = best_config(gpu, d, n);
+        for sel in [ours, best] {
+            candidates.insert(0, (snap_pow2(sel.l), snap_pow2(sel.m)));
+        }
+    }
+
+    let groups = group_candidates(key.variant, d);
+    let mut chosen: Option<TunedParams> = None;
+    let mut chosen_cost = f64::INFINITY;
+    for (l, m) in candidates {
+        if !serving_legal(gpu, d, l, m, n) {
+            continue;
+        }
+        for &g in &groups {
+            let c = distr_cost(gpu, n, d, l, m, g);
+            if c < chosen_cost {
+                chosen_cost = c;
+                chosen = Some(TunedParams { l, m, group: g, sample_rate: 1.0 / g as f64 });
+            }
+        }
+    }
+    chosen.unwrap_or_else(|| fallback(key))
+}
+
+/// Last resort when no grid candidate is serving-legal (e.g. an
+/// `Exact`-policy bucket with no pow2 tile divisors ≥ N'): the largest
+/// pow2 tile that divides the bucket, capped at the default 64. Never
+/// a config the engines would assert on, even if the GPU model calls
+/// it suboptimal.
+fn fallback(key: &TuneKey) -> TunedParams {
+    let mut tile = 1usize;
+    while tile * 2 <= 64 && key.n_bucket % (tile * 2) == 0 {
+        tile *= 2;
+    }
+    let base = TunedParams::default_for(key.variant, key.d);
+    TunedParams { l: tile, m: tile, ..base }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::key::BucketPolicy;
+
+    fn key(variant: Variant, n: usize, d: usize) -> TuneKey {
+        TuneKey::for_shape(variant, n, d, false, 1, BucketPolicy::Pow2)
+    }
+
+    #[test]
+    fn analytic_is_serving_legal_everywhere() {
+        for gpu in GpuSpec::ALL {
+            for variant in [Variant::Flash2, Variant::Distr] {
+                for n in [64usize, 256, 1024, 4096] {
+                    for d in [32usize, 64, 128] {
+                        let p = analytic(&gpu, &key(variant, n, d));
+                        assert!(
+                            serving_legal(&gpu, d, p.l, p.m, n),
+                            "{} {variant} n={n} d={d}: ({}, {})",
+                            gpu.name,
+                            p.l,
+                            p.m
+                        );
+                        assert_eq!(d % p.group, 0);
+                        assert!(d / p.group >= MIN_DG);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_variants_never_sample() {
+        for variant in [Variant::Standard, Variant::Flash2] {
+            let p = analytic(&GpuSpec::RTX4090, &key(variant, 2048, 64));
+            assert_eq!(p.group, 1);
+            assert!((p.sample_rate - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn distr_prefers_sampling_at_large_d() {
+        // the d/G* contraction is the paper's speedup: with d=128 the
+        // compute term dominates and the tuner should pick G* > 1
+        let p = analytic(&GpuSpec::RTX4090, &key(Variant::Distr, 4096, 128));
+        assert!(p.group > 1, "G*={}", p.group);
+        assert!((p.sample_rate - 1.0 / p.group as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tile_never_exceeds_bucket() {
+        let p = analytic(&GpuSpec::RTX4090, &key(Variant::Flash2, 64, 64));
+        assert!(p.l <= 64, "l={}", p.l);
+        assert!(p.m <= p.l);
+    }
+
+    #[test]
+    fn exact_policy_bucket_gets_divisible_tiles() {
+        // n=300 has no pow2 divisor >= N', so the grid is empty and the
+        // fallback must still emit tiles the engines can run (no
+        // `N % l != 0` assert at dispatch)
+        let k = TuneKey::for_shape(Variant::Flash2, 300, 64, false, 1, BucketPolicy::Exact);
+        let p = analytic(&GpuSpec::RTX4090, &k);
+        assert_eq!(k.n_bucket % p.l, 0, "l={}", p.l);
+        assert_eq!(k.n_bucket % p.m, 0, "m={}", p.m);
+        assert_eq!(p.l % p.m, 0);
+    }
+
+    #[test]
+    fn distr_cost_reduces_to_exact_at_g1() {
+        let g = GpuSpec::RTX4090;
+        let exact = block_select::cost_model(&g, 4096, 64, 128, 64);
+        assert_eq!(distr_cost(&g, 4096, 64, 128, 64, 1), exact);
+    }
+
+    #[test]
+    fn distr_cost_monotone_in_group_for_compute_bound() {
+        // more fusion = fewer FLOPs; on a compute-bound shape the model
+        // must reward it
+        let g = GpuSpec::RTX3090; // lowest TFLOPs: compute-bound soonest
+        let c1 = distr_cost(&g, 4096, 128, 128, 128, 1);
+        let c2 = distr_cost(&g, 4096, 128, 128, 128, 2);
+        assert!(c2 < c1, "{c2} vs {c1}");
+    }
+
+    #[test]
+    fn group_candidates_respect_min_dim() {
+        assert_eq!(group_candidates(Variant::Distr, 16), vec![1]);
+        assert_eq!(group_candidates(Variant::Distr, 32), vec![1, 2]);
+        assert_eq!(group_candidates(Variant::Distr, 128), vec![1, 2, 4, 8]);
+        assert_eq!(group_candidates(Variant::Flash2, 128), vec![1]);
+    }
+
+    #[test]
+    fn snap_pow2_floors_to_grid() {
+        assert_eq!(snap_pow2(256), 256);
+        assert_eq!(snap_pow2(192), 128);
+        assert_eq!(snap_pow2(48), 32);
+        assert_eq!(snap_pow2(16), 16);
+        assert_eq!(snap_pow2(1), 16);
+    }
+}

@@ -5,6 +5,7 @@
 use std::path::Path;
 
 use crate::attention::Variant;
+use crate::autotune::BucketPolicy;
 use crate::util::json::Value;
 
 /// Attention knobs (paper: variant + l/m block sizes + G* sampling rate).
@@ -82,10 +83,41 @@ impl Default for DeviceCfg {
     }
 }
 
+/// Profile-guided autotuner knobs (see [`crate::autotune`]).
+#[derive(Clone, Debug)]
+pub struct AutotuneCfg {
+    /// consult the tuner at dispatch; disabled = legacy fixed defaults
+    pub enable: bool,
+    /// tuning cache file; empty = in-memory only (no persistence)
+    pub cache_path: String,
+    /// refine analytic picks with timed microbenchmark sweeps
+    pub empirical: bool,
+    /// wall-clock budget per empirical refinement, milliseconds
+    pub empirical_budget_ms: u64,
+    /// sequence-length bucketing policy ("pow2" | "exact")
+    pub n_bucket: BucketPolicy,
+    /// tuning target card (a `GpuSpec` name, e.g. "RTX 4090")
+    pub gpu: String,
+}
+
+impl Default for AutotuneCfg {
+    fn default() -> Self {
+        Self {
+            enable: true,
+            cache_path: String::new(),
+            empirical: false,
+            empirical_budget_ms: 50,
+            n_bucket: BucketPolicy::Pow2,
+            gpu: "RTX 4090".to_string(),
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub attention: AttentionCfg,
+    pub autotune: AutotuneCfg,
     pub batcher: BatcherCfg,
     pub kv_cache: KvCacheCfg,
     pub devices: DeviceCfg,
@@ -133,6 +165,29 @@ impl Config {
             cfg.attention.sample_mean = opt_bool(a, "sample_mean", d.sample_mean)?;
             cfg.attention.center = opt_bool(a, "center", d.center)?;
         }
+        if let Some(a) = v.get("autotune") {
+            let d = AutotuneCfg::default();
+            cfg.autotune.enable = opt_bool(a, "enable", d.enable)?;
+            if let Some(p) = a.get("cache_path") {
+                cfg.autotune.cache_path = p
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("`cache_path` must be a string"))?
+                    .to_string();
+            }
+            cfg.autotune.empirical = opt_bool(a, "empirical", d.empirical)?;
+            cfg.autotune.empirical_budget_ms =
+                opt_usize(a, "empirical_budget_ms", d.empirical_budget_ms as usize)? as u64;
+            if let Some(p) = a.get("n_bucket") {
+                let s =
+                    p.as_str().ok_or_else(|| anyhow::anyhow!("`n_bucket` must be a string"))?;
+                cfg.autotune.n_bucket =
+                    s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            }
+            if let Some(g) = a.get("gpu") {
+                cfg.autotune.gpu =
+                    g.as_str().ok_or_else(|| anyhow::anyhow!("`gpu` must be a string"))?.to_string();
+            }
+        }
         if let Some(b) = v.get("batcher") {
             let d = BatcherCfg::default();
             cfg.batcher.max_batch = opt_usize(b, "max_batch", d.max_batch)?;
@@ -169,6 +224,20 @@ impl Config {
                     ("group", Value::number(self.attention.group as f64)),
                     ("sample_mean", Value::Bool(self.attention.sample_mean)),
                     ("center", Value::Bool(self.attention.center)),
+                ]),
+            ),
+            (
+                "autotune",
+                Value::object(vec![
+                    ("enable", Value::Bool(self.autotune.enable)),
+                    ("cache_path", Value::string(self.autotune.cache_path.clone())),
+                    ("empirical", Value::Bool(self.autotune.empirical)),
+                    (
+                        "empirical_budget_ms",
+                        Value::number(self.autotune.empirical_budget_ms as f64),
+                    ),
+                    ("n_bucket", Value::string(self.autotune.n_bucket.as_str())),
+                    ("gpu", Value::string(self.autotune.gpu.clone())),
                 ]),
             ),
             (
@@ -265,5 +334,39 @@ mod tests {
     #[test]
     fn artifacts_dir_default() {
         assert_eq!(Config::default().artifacts(), std::path::PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn autotune_section_roundtrips() {
+        let mut cfg = Config::default();
+        cfg.autotune.enable = false;
+        cfg.autotune.cache_path = "/tmp/tune.json".into();
+        cfg.autotune.empirical = true;
+        cfg.autotune.empirical_budget_ms = 250;
+        cfg.autotune.n_bucket = BucketPolicy::Exact;
+        cfg.autotune.gpu = "L40".into();
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert!(!back.autotune.enable);
+        assert_eq!(back.autotune.cache_path, "/tmp/tune.json");
+        assert!(back.autotune.empirical);
+        assert_eq!(back.autotune.empirical_budget_ms, 250);
+        assert_eq!(back.autotune.n_bucket, BucketPolicy::Exact);
+        assert_eq!(back.autotune.gpu, "L40");
+    }
+
+    #[test]
+    fn autotune_partial_json_fills_defaults() {
+        let v = Value::parse(r#"{"autotune": {"empirical": true}}"#).unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert!(cfg.autotune.enable);
+        assert!(cfg.autotune.empirical);
+        assert_eq!(cfg.autotune.n_bucket, BucketPolicy::Pow2);
+        assert_eq!(cfg.autotune.gpu, AutotuneCfg::default().gpu);
+    }
+
+    #[test]
+    fn autotune_bad_policy_rejected() {
+        let v = Value::parse(r#"{"autotune": {"n_bucket": "thirds"}}"#).unwrap();
+        assert!(Config::from_json(&v).is_err());
     }
 }

@@ -4,12 +4,18 @@
 //! This is the "flexibility" half of the paper operationalized: exact
 //! and approximate attention engines are live simultaneously, and a
 //! request chooses its speed/accuracy point per call.
+//!
+//! A router can carry an [`Autotuner`]: [`Router::route_tuned`] then
+//! resolves each request's shape to tuned `(l, m, G*)` parameters
+//! (cached per shape bucket) alongside the engine handle, instead of
+//! the engines' hard-coded defaults.
 
 use std::collections::HashMap;
 
 use anyhow::anyhow;
 
 use crate::attention::Variant;
+use crate::autotune::{Autotuner, TunedParams};
 
 use super::request::Request;
 
@@ -24,6 +30,8 @@ pub struct RouteKey {
 pub struct RouteStats {
     pub routed: u64,
     pub rejected: u64,
+    /// dispatches that ran with autotuned parameters
+    pub tuned: u64,
 }
 
 /// Generic router: `T` is the engine handle type (tests use unit).
@@ -31,6 +39,7 @@ pub struct Router<T> {
     routes: HashMap<RouteKey, T>,
     stats: HashMap<RouteKey, RouteStats>,
     rejected: u64,
+    tuner: Option<Autotuner>,
 }
 
 impl<T> Default for Router<T> {
@@ -41,7 +50,18 @@ impl<T> Default for Router<T> {
 
 impl<T> Router<T> {
     pub fn new() -> Self {
-        Self { routes: HashMap::new(), stats: HashMap::new(), rejected: 0 }
+        Self { routes: HashMap::new(), stats: HashMap::new(), rejected: 0, tuner: None }
+    }
+
+    /// Attach an autotuner: [`route_tuned`](Self::route_tuned) will
+    /// consult it per request shape.
+    pub fn with_autotuner(mut self, tuner: Autotuner) -> Self {
+        self.tuner = Some(tuner);
+        self
+    }
+
+    pub fn autotuner(&self) -> Option<&Autotuner> {
+        self.tuner.as_ref()
     }
 
     pub fn add_route(&mut self, variant: Variant, len_bucket: usize, engine: T) {
@@ -50,9 +70,8 @@ impl<T> Router<T> {
         self.stats.entry(key).or_default();
     }
 
-    /// Pick the engine for `req`: exact variant match, smallest length
-    /// bucket that fits the prompt.
-    pub fn route(&mut self, req: &Request) -> anyhow::Result<(&T, RouteKey)> {
+    /// Exact variant match, smallest length bucket that fits the prompt.
+    fn select(&self, req: &Request) -> Option<RouteKey> {
         let need = req.tokens.len();
         let mut best: Option<RouteKey> = None;
         for key in self.routes.keys() {
@@ -63,21 +82,57 @@ impl<T> Router<T> {
                 };
             }
         }
-        match best {
+        best
+    }
+
+    fn reject(&mut self, req: &Request) -> anyhow::Error {
+        self.rejected += 1;
+        anyhow!(
+            "no route for variant {} with {} tokens (buckets: {:?})",
+            req.variant,
+            req.tokens.len(),
+            self.buckets_for(req.variant)
+        )
+    }
+
+    /// Pick the engine for `req`.
+    pub fn route(&mut self, req: &Request) -> anyhow::Result<(&T, RouteKey)> {
+        match self.select(req) {
             Some(key) => {
                 self.stats.get_mut(&key).unwrap().routed += 1;
                 Ok((&self.routes[&key], key))
             }
-            None => {
-                self.rejected += 1;
-                Err(anyhow!(
-                    "no route for variant {:?} with {} tokens (buckets: {:?})",
-                    req.variant,
-                    need,
-                    self.buckets_for(req.variant)
-                ))
-            }
+            None => Err(self.reject(req)),
         }
+    }
+
+    /// Pick the engine for `req` and resolve its tuned parameters.
+    ///
+    /// `d` and `causal` describe the attention the engine will run and
+    /// `batch` the number of requests dispatched together (the router
+    /// only sees tokens, not model geometry or batching) — together
+    /// they complete the tuning key, so pre-warmed cache entries for
+    /// the same shape are hit rather than re-searched. With no tuner
+    /// attached this degrades to [`route`](Self::route) + `None`, so
+    /// callers can use it unconditionally.
+    pub fn route_tuned(
+        &mut self,
+        req: &Request,
+        d: usize,
+        causal: bool,
+        batch: usize,
+    ) -> anyhow::Result<(&T, RouteKey, Option<TunedParams>)> {
+        let Some(key) = self.select(req) else {
+            return Err(self.reject(req));
+        };
+        let n = req.tokens.len().max(1);
+        let tuned = self.tuner.as_mut().map(|t| t.tuned(req.variant, n, d, causal, batch));
+        let stats = self.stats.get_mut(&key).unwrap();
+        stats.routed += 1;
+        if tuned.is_some() {
+            stats.tuned += 1;
+        }
+        Ok((&self.routes[&key], key, tuned))
     }
 
     fn buckets_for(&self, v: Variant) -> Vec<usize> {
@@ -147,6 +202,45 @@ mod tests {
         let mut r: Router<()> = Router::new();
         r.add_route(Variant::Distr, 128, ());
         assert!(r.route(&req(10, Variant::Hydra)).is_err());
+    }
+
+    #[test]
+    fn route_tuned_consults_autotuner() {
+        use crate::autotune::Autotuner;
+        use crate::simulator::{block_select::is_legal, GpuSpec};
+
+        let mut r: Router<&'static str> = Router::new().with_autotuner(Autotuner::in_memory(GpuSpec::RTX4090));
+        r.add_route(Variant::Distr, 1024, "d1024");
+        let (eng, key, tuned) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        assert_eq!(*eng, "d1024");
+        let p = tuned.expect("tuner attached => params resolved");
+        assert!(is_legal(&GpuSpec::RTX4090, 64, p.l, p.m), "({}, {})", p.l, p.m);
+        assert!(p.group >= 1 && 64 % p.group == 0);
+        assert_eq!(r.stats()[&key].tuned, 1);
+        // same shape bucket again: answered from the tuning cache
+        let (_, _, tuned2) = r.route_tuned(&req(900, Variant::Distr), 64, false, 1).unwrap();
+        assert_eq!(tuned2.unwrap(), p);
+        let ts = r.autotuner().unwrap().stats();
+        assert_eq!(ts.searches, 1);
+        assert_eq!(ts.hits, 1);
+    }
+
+    #[test]
+    fn route_tuned_without_tuner_degrades_gracefully() {
+        let mut r: Router<()> = Router::new();
+        r.add_route(Variant::Flash2, 128, ());
+        let (_, key, tuned) = r.route_tuned(&req(10, Variant::Flash2), 64, true, 1).unwrap();
+        assert!(tuned.is_none());
+        assert_eq!(r.stats()[&key].tuned, 0);
+        assert_eq!(r.stats()[&key].routed, 1);
+    }
+
+    #[test]
+    fn route_tuned_rejects_like_route() {
+        let mut r: Router<()> = Router::new();
+        r.add_route(Variant::Distr, 128, ());
+        assert!(r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).is_err());
+        assert_eq!(r.rejected(), 1);
     }
 
     #[test]

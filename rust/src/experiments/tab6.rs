@@ -87,7 +87,7 @@ fn render_engine_ttft(quick: bool) -> String {
     let mut t = Table::new(&hdr);
     for variant in Variant::ALL {
         let engine = Engine::new(variant).with_blocks(128, 64).with_group(2).causal(true);
-        let mut cells = vec![variant.name().to_string()];
+        let mut cells = vec![variant.to_string()];
         for &n in &lens {
             let qkv: Vec<_> = (0..heads).map(|h| qkv_uniform(n, 64, h as u64)).collect();
             let d = super::time_median(reps, || {

@@ -55,7 +55,7 @@ pub fn render(quick: bool) -> String {
         rows.push((variant, times));
     }
     for (variant, times) in &rows {
-        let cells: Vec<String> = std::iter::once(variant.name().to_string())
+        let cells: Vec<String> = std::iter::once(variant.to_string())
             .chain(times.iter().map(|ms| format!("{ms:.0}")))
             .collect();
         t.row(&cells);

@@ -15,11 +15,17 @@
 //!   batcher + KV-cache coordinator ([`coordinator`]), and carries the
 //!   Rust-native attention engines ([`attention`]) and the GPU analytic
 //!   model ([`simulator`]) used by the paper-reproduction benches.
+//!   The profile-guided [`autotune`] subsystem closes the loop between
+//!   the two: it turns the simulator's block-size/sampling-rate
+//!   selectors (paper §3.3.1) into per-shape `(l, m, G*)` choices the
+//!   live dispatch path consults, with a persistent tuning cache and
+//!   optional measured refinement.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.
 
 pub mod attention;
+pub mod autotune;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

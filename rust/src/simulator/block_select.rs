@@ -102,17 +102,25 @@ pub fn ours_config(gpu: &GpuSpec, d: usize) -> Selection {
 /// lower utilization for small m), and per-iteration scheduling
 /// overhead (∝ N/l · N/m).
 pub fn cost_model(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize) -> f64 {
+    cost_with_flops(gpu, n, d, l, m, super::io_model::flops_exact(n, d))
+}
+
+/// The cost model with the FLOP count as a parameter — the autotuner
+/// scores DistrAttention's reduced-contraction FLOPs
+/// ([`super::io_model::flops_distr`]) through the same memory /
+/// utilization / overhead terms, so calibrating these constants keeps
+/// every variant's score in sync.
+pub fn cost_with_flops(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize, flops: u64) -> f64 {
     let io = super::io_model::io_bytes(
         &super::io_model::EstimateParams { n, d, elem_bytes: ELEM_BYTES },
         l,
     ) as f64;
     let mem_time = io / (gpu.mem_bw_gbps * 1e9);
 
-    let flops = super::io_model::flops_exact(n, d) as f64;
     // tensor-core utilization: m rows feed the 16-wide systolic tile;
     // fragmenting below 64 rows leaves pipeline bubbles
     let util = (m as f64 / 64.0).min(1.0) * (l as f64 / 64.0).min(1.0);
-    let tc_time = flops / (gpu.tc_tflops * 1e12 * (0.25 + 0.75 * util));
+    let tc_time = flops as f64 / (gpu.tc_tflops * 1e12 * (0.25 + 0.75 * util));
 
     let iter_overhead = (n as f64 / l as f64) * (n as f64 / m as f64) * 2e-7
         / gpu.sm_count as f64

@@ -67,11 +67,26 @@ impl GpuSpec {
     };
 
     pub const ALL: [GpuSpec; 3] = [Self::RTX4090, Self::RTX3090, Self::L40];
+
+    /// Look up a card by its display name (case-insensitive) — config
+    /// files name the tuning target this way.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        Self::ALL.into_iter().find(|g| g.name.eq_ignore_ascii_case(name))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn by_name_finds_every_card() {
+        for g in GpuSpec::ALL {
+            assert_eq!(GpuSpec::by_name(g.name).unwrap().name, g.name);
+        }
+        assert_eq!(GpuSpec::by_name("rtx 4090").unwrap().name, "RTX 4090");
+        assert!(GpuSpec::by_name("TPU v5").is_none());
+    }
 
     #[test]
     fn specs_sane() {

@@ -1,0 +1,155 @@
+//! Integration tests over the autotune subsystem: cache persistence
+//! across "process restarts" (fresh Autotuner instances), versioning,
+//! legality of everything the tuner emits, and end-to-end numerics of
+//! tuned engines.
+
+use distr_attention::attention::{standard_attention, Engine, Variant};
+use distr_attention::autotune::{Autotuner, BucketPolicy, TuneKey, TuningCache, CACHE_VERSION};
+use distr_attention::config::{AutotuneCfg, Config};
+use distr_attention::simulator::block_select::is_legal;
+use distr_attention::simulator::GpuSpec;
+use distr_attention::util::testing::TempDir;
+use distr_attention::workload::qkv_uniform;
+
+fn cfg_with_cache(path: &std::path::Path) -> AutotuneCfg {
+    AutotuneCfg { cache_path: path.to_string_lossy().into_owned(), ..Default::default() }
+}
+
+#[test]
+fn cache_survives_process_restart() {
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("tuning.json");
+
+    // first "process": tune a handful of shapes
+    let mut first = Autotuner::new(GpuSpec::RTX4090, cfg_with_cache(&path));
+    let mut tuned = Vec::new();
+    for (variant, n, d, causal) in [
+        (Variant::Distr, 1000, 64, false),
+        (Variant::Distr, 4096, 128, true),
+        (Variant::Flash2, 256, 32, false),
+    ] {
+        tuned.push((variant, n, d, causal, first.tuned(variant, n, d, causal, 1)));
+    }
+    assert_eq!(first.stats().searches, 3);
+    assert!(path.exists(), "tuner must write through to {}", path.display());
+    drop(first);
+
+    // second "process": identical params straight from the cache,
+    // without a single search
+    let mut second = Autotuner::new(GpuSpec::RTX4090, cfg_with_cache(&path));
+    for (variant, n, d, causal, params) in tuned {
+        assert_eq!(second.tuned(variant, n, d, causal, 1), params, "{variant} n={n} d={d}");
+    }
+    let s = second.stats();
+    assert_eq!(s.searches, 0, "restart must not re-search cached shapes");
+    assert_eq!(s.hits, 3);
+}
+
+#[test]
+fn stale_cache_version_is_rejected_and_retuned() {
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("tuning.json");
+    let stale = format!(
+        r#"{{"version": {}, "gpu": "RTX 4090", "entries": {{}}}}"#,
+        CACHE_VERSION + 1
+    );
+    std::fs::write(&path, stale).unwrap();
+    assert!(TuningCache::load(&path).is_err(), "loader must reject a future version");
+
+    // the tuner treats the stale file as absent and re-tunes
+    let mut t = Autotuner::new(GpuSpec::RTX4090, cfg_with_cache(&path));
+    t.tuned(Variant::Distr, 512, 64, false, 1);
+    assert_eq!(t.stats().searches, 1);
+    // ... and rewrites the file at the current version
+    let reloaded = TuningCache::load(&path).unwrap();
+    assert_eq!(reloaded.len(), 1);
+}
+
+#[test]
+fn foreign_gpu_cache_is_not_reused_or_clobbered() {
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("tuning.json");
+    let mut l40 = Autotuner::new(GpuSpec::L40, cfg_with_cache(&path));
+    l40.tuned(Variant::Distr, 1024, 64, false, 1);
+    drop(l40);
+
+    let mut rtx = Autotuner::new(GpuSpec::RTX4090, cfg_with_cache(&path));
+    assert!(rtx.cache().is_empty(), "L40 tunings must not drive an RTX 4090");
+    // tuning on the foreign-cache tuner must not overwrite the L40 file
+    rtx.tuned(Variant::Distr, 2048, 64, false, 1);
+    let on_disk = TuningCache::load(&path).unwrap();
+    assert_eq!(on_disk.gpu, "L40", "foreign tunings were clobbered");
+    assert_eq!(on_disk.len(), 1);
+}
+
+#[test]
+fn all_persisted_params_are_legal_for_their_gpu() {
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("tuning.json");
+    for gpu in GpuSpec::ALL {
+        let mut t = Autotuner::new(gpu, cfg_with_cache(&path));
+        for variant in [Variant::Flash2, Variant::Distr] {
+            for n in [64usize, 777, 2048] {
+                for d in [32usize, 64, 128] {
+                    t.tuned(variant, n, d, false, 4);
+                }
+            }
+        }
+        let persisted = TuningCache::load(&path).unwrap();
+        assert_eq!(persisted.len(), t.cache().len());
+        for (key, p) in persisted.iter() {
+            assert!(
+                is_legal(&gpu, key.d, p.l, p.m),
+                "{}: {key} -> ({}, {}) violates hardware constraints",
+                gpu.name,
+                p.l,
+                p.m
+            );
+            assert!(p.l <= key.n_bucket);
+            assert_eq!(key.d % p.group, 0);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn n_bucketing_maps_boundaries_to_expected_keys() {
+    let t = Autotuner::in_memory(GpuSpec::RTX4090);
+    for (n, expect) in [(1usize, 16usize), (16, 16), (17, 32), (128, 128), (129, 256), (4096, 4096)] {
+        let key = t.key_for(Variant::Distr, n, 64, false, 1);
+        assert_eq!(key.n_bucket, expect, "n={n}");
+    }
+    // the same boundaries through the public key constructor
+    let k = TuneKey::for_shape(Variant::Distr, 257, 64, false, 2, BucketPolicy::Pow2);
+    assert_eq!(k.n_bucket, 512);
+    assert_eq!(k.batch_bucket, 2);
+}
+
+#[test]
+fn tuned_engine_output_stays_correct() {
+    // tuning changes performance knobs, never semantics: flash2 with
+    // tuned blocks must still equal exact attention, and tuned distr
+    // must stay inside the approximation band
+    let mut t = Autotuner::in_memory(GpuSpec::RTX4090);
+    let (n, d) = (256usize, 64usize);
+    let (q, k, v) = qkv_uniform(n, d, 5);
+    let want = standard_attention(&q, &k, &v, false);
+
+    let pf = t.tuned(Variant::Flash2, n, d, false, 1);
+    let flash = Engine::tuned(Variant::Flash2, &pf).run(&q, &k, &v);
+    assert!(flash.max_abs_diff(&want) < 1e-4, "{}", flash.max_abs_diff(&want));
+
+    let pd = t.tuned(Variant::Distr, n, d, false, 1);
+    let distr = Engine::tuned(Variant::Distr, &pd).run(&q, &k, &v);
+    assert!(distr.mean_abs_diff(&want) < 0.05, "{}", distr.mean_abs_diff(&want));
+}
+
+#[test]
+fn from_config_respects_gpu_and_policy() {
+    let mut cfg = Config::default();
+    cfg.autotune.gpu = "L40".into();
+    cfg.autotune.n_bucket = BucketPolicy::Exact;
+    let t = Autotuner::from_config(&cfg);
+    assert_eq!(t.gpu().name, "L40");
+    assert_eq!(t.key_for(Variant::Distr, 300, 64, false, 1).n_bucket, 300);
+}

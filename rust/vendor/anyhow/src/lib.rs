@@ -1,0 +1,237 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no registry access), so this vendored
+//! crate implements exactly the API surface the workspace uses:
+//!
+//! * [`Error`] — an error value carrying a context chain,
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — ad-hoc error construction,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both std errors and `anyhow::Error`) and on `Option`.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain joined with `": "`, matching real anyhow.
+
+use std::fmt;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, ctx: String) -> Self {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message (what `Display` prints).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // flatten the std error's source chain into our message chain
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+// Context attachment works uniformly over std errors and `Error` via a
+// helper trait (the same structure real anyhow uses: the blanket impl
+// plus a concrete impl for the local `Error`, which never implements
+// `std::error::Error`, so the two cannot overlap).
+pub trait ChainableError {
+    fn ext_context(self, ctx: String) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> ChainableError for E {
+    fn ext_context(self, ctx: String) -> Error {
+        Error::from(self).wrap(ctx)
+    }
+}
+
+impl ChainableError for Error {
+    fn ext_context(self, ctx: String) -> Error {
+        self.wrap(ctx)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ChainableError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(ctx.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let owned = String::from("oops");
+        assert_eq!(anyhow!(owned).to_string(), "oops");
+
+        fn fails(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(2).unwrap(), 2);
+        assert_eq!(fails(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(fails(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        let e: Error = Err::<(), _>(anyhow!("inner"))
+            .context("mid")
+            .with_context(|| "outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("absent").unwrap_err().to_string(), "absent");
+        assert_eq!(Some(4u32).context("absent").unwrap(), 4);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}
