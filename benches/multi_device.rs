@@ -1,9 +1,16 @@
 //! Bench behind Table 9: the head-sharded multi-device scatter with and
-//! without double buffering, flash2 vs distr.
+//! without double buffering, flash2 vs distr — plus the heterogeneous
+//! pool comparison: fixed round-robin vs the tuning-aware planner
+//! (per-device `(l, m, G*)` + throughput-proportional assignment) on a
+//! skewed RTX 4090 + L40 pool.
 
 use distr_attention::attention::Variant;
+use distr_attention::autotune::DevicePool;
 use distr_attention::config::DeviceCfg;
-use distr_attention::coordinator::{run_scatter, ScatterPlan};
+use distr_attention::coordinator::{
+    plan_tuned, run_scatter, run_scatter_round_robin, run_scatter_tuned, ScatterPlan,
+};
+use distr_attention::simulator::GpuSpec;
 use distr_attention::util::bench::{bench, BenchConfig};
 
 fn plan(variant: Variant) -> ScatterPlan {
@@ -19,6 +26,14 @@ fn plan(variant: Variant) -> ScatterPlan {
     }
 }
 
+/// A skewed two-card pool: a full-speed RTX 4090 next to an L40 running
+/// at 40% capacity (shared/thermally-capped slot). Round-robin splits
+/// chunks 50/50 and stalls on the slow card; the tuned planner assigns
+/// proportionally to predicted throughput.
+fn skewed_pool() -> DevicePool {
+    DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]).with_weights(&[1.0, 0.4])
+}
+
 fn main() {
     let cfg = BenchConfig::from_args();
     for n_dev in [1usize, 2, 4] {
@@ -28,14 +43,50 @@ fn main() {
                 link_gbps: 25.0,
                 link_latency_us: 10,
                 double_buffer: true,
+                ..Default::default()
             };
             bench(&cfg, "multi_device", &format!("scatter_{variant}/{n_dev}"), || {
                 std::hint::black_box(run_scatter(&plan(variant), &dc, 7));
             });
         }
     }
-    let dc = DeviceCfg { num_devices: 2, link_gbps: 25.0, link_latency_us: 10, double_buffer: false };
+    let dc = DeviceCfg {
+        num_devices: 2,
+        link_gbps: 25.0,
+        link_latency_us: 10,
+        double_buffer: false,
+        ..Default::default()
+    };
     bench(&cfg, "multi_device", "scatter_flash2_no_double_buffer/2", || {
         std::hint::black_box(run_scatter(&plan(Variant::Flash2), &dc, 7));
     });
+
+    // heterogeneous pool: fixed round-robin vs tuned planning on the
+    // same skewed hardware — the tuned schedule must win on wall time
+    let p = plan(Variant::Distr);
+    let pool = skewed_pool();
+    let rr = bench(&cfg, "multi_device", "scatter_distr_round_robin/skewed_2", || {
+        std::hint::black_box(run_scatter_round_robin(&p, &pool, true, 7));
+    });
+    let mut pool = skewed_pool();
+    let tuned = bench(&cfg, "multi_device", "scatter_distr_tuned/skewed_2", || {
+        std::hint::black_box(run_scatter_tuned(&p, &mut pool, true, 7));
+    });
+    println!("# tuned planning vs round-robin on the skewed pool: {:.1}% faster", (rr / tuned - 1.0) * 100.0);
+
+    // show the schedule the planner chose for the skewed pool
+    let mut pool = skewed_pool();
+    let sched = plan_tuned(&p, &mut pool);
+    for (idx, lane) in sched.lanes.iter().enumerate() {
+        println!(
+            "# device {idx} ({}, weight {:.2}): tuned (l={}, m={}, G*={}), share {:.0}%, {} chunks",
+            pool.device(idx).gpu.name,
+            lane.capacity_weight,
+            lane.params.l,
+            lane.params.m,
+            lane.params.group,
+            sched.shares[idx] * 100.0,
+            sched.assignment.iter().filter(|&&d| d == idx).count(),
+        );
+    }
 }

@@ -10,16 +10,22 @@
 //! cargo run --release --example serve_llm
 //! ```
 //!
-//! The tuning cache persists in the system temp dir — a second run
-//! resolves every shape from cache (watch the hit counter).
+//! The tuning caches persist in the system temp dir — a second run
+//! resolves every shape from cache (watch the hit counter). The final
+//! section scatters a multi-head job across a simulated heterogeneous
+//! pool (RTX 4090 + capped L40), comparing round-robin against the
+//! tuning-aware planner with per-device `(l, m, G*)`.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use distr_attention::attention::{Engine, Variant};
-use distr_attention::autotune::Autotuner;
-use distr_attention::config::Config;
-use distr_attention::coordinator::{decode_step, Batcher, KvCache, Request, Router, Scheduler};
+use distr_attention::autotune::{Autotuner, DevicePool};
+use distr_attention::config::{Config, PoolDeviceCfg};
+use distr_attention::coordinator::{
+    decode_step, run_scatter_round_robin, run_scatter_tuned, Batcher, KvCache, Request, Router,
+    ScatterPlan, Scheduler,
+};
 use distr_attention::metrics::{LatencyHistogram, Table};
 use distr_attention::tensor::Matrix;
 use distr_attention::util::rng::Rng;
@@ -48,12 +54,18 @@ fn embed(tokens: &[i32], n: usize, salt: u64) -> Matrix {
 fn main() -> anyhow::Result<()> {
     distr_attention::util::logger::init();
 
-    // autotuner from config, persisting its cache across runs
+    // autotuner from config, persisting its cache across runs; the
+    // device section describes a skewed two-card pool for the scatter
+    // demo at the end (per-card tuning caches derive from cache_path)
     let mut cfg = Config::default();
     cfg.autotune.cache_path = std::env::temp_dir()
         .join("distr-attn-serve-llm-tuning.json")
         .to_string_lossy()
         .into_owned();
+    cfg.devices.pool = vec![
+        PoolDeviceCfg { gpu: "RTX 4090".into(), ..Default::default() },
+        PoolDeviceCfg { gpu: "L40".into(), capacity_weight: 0.4, ..Default::default() },
+    ];
     let mut tuner = Autotuner::from_config(&cfg);
     let preloaded = tuner.cache().len();
 
@@ -86,7 +98,9 @@ fn main() -> anyhow::Result<()> {
         scheduler.push(Request::new(i, toks, variant));
     }
 
-    let mut batcher = Batcher::new(cfg.batcher);
+    // batches group by full TuneKey (variant + length bucket + d +
+    // masking + batch bucket): one flushed batch = one tuned config
+    let mut batcher = Batcher::new(cfg.batcher).with_model(D, true);
     let mut cache = KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D);
     let mut prefill_ms: HashMap<Variant, LatencyHistogram> = HashMap::new();
     let mut decode_us: HashMap<Variant, LatencyHistogram> = HashMap::new();
@@ -170,5 +184,49 @@ fn main() -> anyhow::Result<()> {
         s.searches
     );
     println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
+
+    // -- heterogeneous pool scatter --------------------------------------
+    // scatter a 12-head job across the skewed pool twice: fixed
+    // round-robin vs the tuned planner (per-card (l, m, G*) from each
+    // card's own cache + throughput-proportional chunk assignment)
+    println!("\nscattering 12 heads across {} devices:", cfg.devices.pool.len());
+    let mut pool = DevicePool::from_config(&cfg);
+    let plan = ScatterPlan {
+        heads: 12,
+        chunk_heads: 2,
+        n: 512,
+        d: D,
+        variant: Variant::Distr,
+        group: 2,
+        block_l: 128,
+        block_m: 64,
+    };
+    let rr = run_scatter_round_robin(&plan, &pool, true, 7);
+    let (sched, tuned_run) = run_scatter_tuned(&plan, &mut pool, true, 7);
+    for (idx, lane) in sched.lanes.iter().enumerate() {
+        println!(
+            "  device {idx} ({}, weight {:.2}): tuned (l={}, m={}, G*={}), share {:.0}%, chunks {} (round-robin gave {})",
+            pool.device(idx).gpu.name,
+            lane.capacity_weight,
+            lane.params.l,
+            lane.params.m,
+            lane.params.group,
+            sched.shares[idx] * 100.0,
+            tuned_run.per_device_chunks[idx],
+            rr.per_device_chunks[idx],
+        );
+    }
+    println!(
+        "  round-robin {:.1} ms -> tuned planning {:.1} ms ({:+.1}%), overlap {:.0}%",
+        rr.wall.as_secs_f64() * 1e3,
+        tuned_run.wall.as_secs_f64() * 1e3,
+        (rr.wall.as_secs_f64() / tuned_run.wall.as_secs_f64() - 1.0) * 100.0,
+        tuned_run.overlap_efficiency() * 100.0,
+    );
+    let ps = pool.stats();
+    println!(
+        "  pool autotune: {} searches / {} hits across per-card caches",
+        ps.searches, ps.hits
+    );
     Ok(())
 }

@@ -13,22 +13,28 @@
 //! * [`empirical`] — optional measured refinement (microbenchmark
 //!   sweeps over the legal neighborhood, budget-capped),
 //! * [`cache`] — the versioned JSON tuning cache persisted across
-//!   process restarts.
+//!   process restarts,
+//! * [`pool`] — per-device tuners (one cache file per distinct card)
+//!   for heterogeneous multi-GPU pools.
 //!
 //! [`Autotuner`] orchestrates: cache lookup → analytic search →
 //! empirical refinement → write-through persistence. Consumers are
 //! `attention::Engine::tuned`, `coordinator::Router::route_tuned`, the
-//! `autotune` bench, and the `serve_llm` example.
+//! multi-device scatter planner ([`DevicePool`] +
+//! `coordinator::multi_device`), the `autotune` and `multi_device`
+//! benches, and the `serve_llm` example.
 
 pub mod cache;
 pub mod empirical;
 pub mod key;
+pub mod pool;
 pub mod search;
 
 use std::path::Path;
 
 pub use cache::{TuningCache, CACHE_VERSION};
 pub use key::{BucketPolicy, TuneKey, MIN_N_BUCKET};
+pub use pool::{per_gpu_cache_path, DevicePool, PoolDevice};
 
 use crate::attention::Variant;
 use crate::config::{AutotuneCfg, Config};

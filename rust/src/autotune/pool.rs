@@ -1,0 +1,290 @@
+//! Per-device tuning for heterogeneous pools (paper Table 9 testbed).
+//!
+//! PR 1's [`Autotuner`] keys every decision on a single [`GpuSpec`] —
+//! correct for one card, wrong for a mixed pool: §3.3.1's whole point is
+//! that block selection is hardware-dependent, so an RTX 4090 and an
+//! L40 serving the same scatter must each run their own `(l, m, G*)`.
+//! [`DevicePool`] closes that gap: one tuner — and one persisted cache
+//! file — per distinct card in the pool, derived from a base
+//! `cache_path` via [`per_gpu_cache_path`] so two cards never clobber
+//! each other's tunings (the single-tuner path only *warns* on a
+//! foreign-GPU cache and drops persistence; see
+//! `Autotuner::new`).
+//!
+//! The pool also carries the planner-facing physics of each slot: link
+//! speed/latency for the scatter's transfer model and a
+//! `capacity_weight` (relative compute speed), which together feed the
+//! cost-model throughput prediction `coordinator::multi_device` uses to
+//! assign chunks proportionally instead of round-robin.
+//!
+//! Config surface: `[devices].pool` (per-slot `gpu`, `link_gbps`,
+//! `link_latency_us`, `capacity_weight`) plus the existing `[autotune]`
+//! section for the tuner knobs; an empty pool degrades to
+//! `num_devices` × `[autotune].gpu`, i.e. the PR-1 homogeneous world.
+
+use std::collections::HashMap;
+
+use crate::attention::Variant;
+use crate::config::{AutotuneCfg, Config};
+use crate::simulator::GpuSpec;
+
+use super::{search, Autotuner, TunedParams, TunerStats};
+
+/// Derive the per-card cache file from the configured base path, e.g.
+/// `tuning.json` + "RTX 4090" -> `tuning.rtx-4090.json`. An empty base
+/// stays empty (in-memory tuning, no persistence).
+pub fn per_gpu_cache_path(base: &str, gpu: &str) -> String {
+    if base.is_empty() {
+        return String::new();
+    }
+    let slug: String = gpu
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect();
+    match base.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.{slug}.json"),
+        None => format!("{base}.{slug}"),
+    }
+}
+
+/// One resolved device slot: the card plus its slot-local physics.
+#[derive(Clone, Debug)]
+pub struct PoolDevice {
+    pub gpu: GpuSpec,
+    pub link_gbps: f64,
+    pub link_latency_us: u64,
+    /// relative compute speed (1.0 = full speed)
+    pub capacity_weight: f64,
+}
+
+/// A heterogeneous device pool with one [`Autotuner`] per distinct card.
+///
+/// Not to be confused with `runtime::pool::DevicePool` (N PJRT clients
+/// executing AOT artifacts): this type owns the *tuning* side — which
+/// card sits in each slot, its link physics, and the per-card caches —
+/// and is what the scatter planner consults.
+pub struct DevicePool {
+    devices: Vec<PoolDevice>,
+    /// keyed by `GpuSpec::name`; slots with the same card share a tuner
+    /// (identical hardware tunes identically)
+    tuners: HashMap<&'static str, Autotuner>,
+}
+
+impl DevicePool {
+    /// Build from resolved device slots, deriving one tuner (and one
+    /// cache file) per distinct card from `base`'s `cache_path`.
+    /// Panics on an empty slot list — a pool with no devices cannot
+    /// plan anything.
+    pub fn new(devices: Vec<PoolDevice>, base: &AutotuneCfg) -> Self {
+        assert!(!devices.is_empty(), "device pool must have at least one slot");
+        let mut tuners = HashMap::new();
+        for dev in &devices {
+            tuners.entry(dev.gpu.name).or_insert_with(|| {
+                let mut cfg = base.clone();
+                cfg.cache_path = per_gpu_cache_path(&base.cache_path, dev.gpu.name);
+                cfg.gpu = dev.gpu.name.to_string();
+                Autotuner::new(dev.gpu, cfg)
+            });
+        }
+        Self { devices, tuners }
+    }
+
+    /// Build from the top-level config: `[devices].pool` slots (or the
+    /// homogeneous `num_devices` fallback) under `[autotune]` knobs.
+    /// Unknown card names fall back to the `[autotune].gpu` card.
+    pub fn from_config(config: &Config) -> Self {
+        let default_gpu = GpuSpec::by_name(&config.autotune.gpu).unwrap_or_else(|| {
+            log::warn!(
+                "pool: unknown autotune gpu `{}`, using {}",
+                config.autotune.gpu,
+                GpuSpec::RTX4090.name
+            );
+            GpuSpec::RTX4090
+        });
+        let devices = config
+            .devices
+            .resolved_pool(default_gpu.name)
+            .iter()
+            .map(|slot| PoolDevice {
+                gpu: GpuSpec::by_name(&slot.gpu).unwrap_or_else(|| {
+                    log::warn!("pool: unknown gpu `{}`, using {}", slot.gpu, default_gpu.name);
+                    default_gpu
+                }),
+                link_gbps: slot.link_gbps,
+                link_latency_us: slot.link_latency_us,
+                capacity_weight: if slot.capacity_weight > 0.0 { slot.capacity_weight } else { 1.0 },
+            })
+            .collect();
+        Self::new(devices, &config.autotune)
+    }
+
+    /// A non-persisting, analytic-only pool (benches/tests): one slot
+    /// per spec at default link physics and full capacity.
+    pub fn in_memory(specs: &[GpuSpec]) -> Self {
+        let cfg = AutotuneCfg { cache_path: String::new(), empirical: false, ..Default::default() };
+        let devices = specs
+            .iter()
+            .map(|&gpu| PoolDevice {
+                gpu,
+                link_gbps: 25.0,
+                link_latency_us: 10,
+                capacity_weight: 1.0,
+            })
+            .collect();
+        Self::new(devices, &cfg)
+    }
+
+    /// Override per-slot capacity weights (builder, benches/tests).
+    /// Panics if `weights.len() != num_devices()`.
+    pub fn with_weights(mut self, weights: &[f64]) -> Self {
+        assert_eq!(weights.len(), self.devices.len(), "one weight per device");
+        for (dev, &w) in self.devices.iter_mut().zip(weights) {
+            assert!(w > 0.0, "capacity weights must be positive");
+            dev.capacity_weight = w;
+        }
+        self
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn device(&self, idx: usize) -> &PoolDevice {
+        &self.devices[idx]
+    }
+
+    pub fn devices(&self) -> &[PoolDevice] {
+        &self.devices
+    }
+
+    /// The tuner serving a given card, if that card is in the pool.
+    pub fn tuner_for(&self, gpu_name: &str) -> Option<&Autotuner> {
+        self.tuners.get(gpu_name)
+    }
+
+    /// Tuned `(l, m, G*)` for a request shape on device `idx`, resolved
+    /// from that card's own cache (searched and persisted on miss).
+    pub fn tuned(
+        &mut self,
+        idx: usize,
+        variant: Variant,
+        n: usize,
+        d: usize,
+        causal: bool,
+        batch: usize,
+    ) -> TunedParams {
+        let name = self.devices[idx].gpu.name;
+        self.tuners
+            .get_mut(name)
+            .expect("every pool device has a tuner")
+            .tuned(variant, n, d, causal, batch)
+    }
+
+    /// Predicted seconds for one head of `(n, d)` attention on device
+    /// `idx` under `p`: the cost model for that slot's card, scaled by
+    /// its capacity weight. The scatter planner turns the reciprocal
+    /// into a throughput share.
+    pub fn predicted_seconds(&self, idx: usize, n: usize, d: usize, p: &TunedParams) -> f64 {
+        let dev = &self.devices[idx];
+        search::distr_cost(&dev.gpu, n, d, p.l, p.m, p.group) / dev.capacity_weight
+    }
+
+    /// Aggregate hit/miss/search counters across all per-card tuners.
+    pub fn stats(&self) -> TunerStats {
+        let mut total = TunerStats::default();
+        for t in self.tuners.values() {
+            let s = t.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.searches += s.searches;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn per_gpu_paths_are_distinct_and_stable() {
+        assert_eq!(per_gpu_cache_path("tuning.json", "RTX 4090"), "tuning.rtx-4090.json");
+        assert_eq!(per_gpu_cache_path("/a/b/tune.json", "L40"), "/a/b/tune.l40.json");
+        assert_eq!(per_gpu_cache_path("cache", "L40"), "cache.l40");
+        assert_eq!(per_gpu_cache_path("", "L40"), "");
+        assert_ne!(
+            per_gpu_cache_path("t.json", "RTX 4090"),
+            per_gpu_cache_path("t.json", "RTX 3090")
+        );
+    }
+
+    #[test]
+    fn pool_resolves_per_card_params() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]);
+        assert_eq!(pool.num_devices(), 2);
+        let a = pool.tuned(0, Variant::Distr, 1024, 128, false, 1);
+        let b = pool.tuned(1, Variant::Distr, 1024, 128, false, 1);
+        // hardware-dependence is the point: the 4090's bandwidth/compute
+        // ratio rewards sampling here, the L40's does not
+        assert_ne!(a, b, "per-device tunings must reflect the card");
+        assert_eq!(pool.stats().searches, 2);
+    }
+
+    #[test]
+    fn same_card_slots_share_one_tuner() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::RTX4090]);
+        let a = pool.tuned(0, Variant::Distr, 512, 64, false, 1);
+        let b = pool.tuned(1, Variant::Distr, 512, 64, false, 1);
+        assert_eq!(a, b);
+        let s = pool.stats();
+        assert_eq!(s.searches, 1, "identical cards must not re-search");
+        assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn per_card_caches_persist_to_separate_files() {
+        let dir = TempDir::new().unwrap();
+        let base = dir.path().join("tuning.json").to_string_lossy().into_owned();
+        let cfg = AutotuneCfg { cache_path: base.clone(), empirical: false, ..Default::default() };
+        let devices = vec![
+            PoolDevice {
+                gpu: GpuSpec::RTX4090,
+                link_gbps: 25.0,
+                link_latency_us: 10,
+                capacity_weight: 1.0,
+            },
+            PoolDevice {
+                gpu: GpuSpec::L40,
+                link_gbps: 25.0,
+                link_latency_us: 10,
+                capacity_weight: 1.0,
+            },
+        ];
+        let mut pool = DevicePool::new(devices.clone(), &cfg);
+        pool.tuned(0, Variant::Distr, 1024, 64, false, 1);
+        pool.tuned(1, Variant::Distr, 1024, 64, false, 1);
+        let p0 = per_gpu_cache_path(&base, GpuSpec::RTX4090.name);
+        let p1 = per_gpu_cache_path(&base, GpuSpec::L40.name);
+        assert!(std::path::Path::new(&p0).exists(), "{p0}");
+        assert!(std::path::Path::new(&p1).exists(), "{p1}");
+
+        // "restart": a fresh pool answers both cards from cache
+        let mut again = DevicePool::new(devices, &cfg);
+        again.tuned(0, Variant::Distr, 1024, 64, false, 1);
+        again.tuned(1, Variant::Distr, 1024, 64, false, 1);
+        let s = again.stats();
+        assert_eq!(s.searches, 0, "per-card caches must survive restarts");
+        assert_eq!(s.hits, 2);
+    }
+
+    #[test]
+    fn predicted_seconds_scales_with_capacity_weight() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::RTX4090])
+            .with_weights(&[1.0, 0.5]);
+        let p = pool.tuned(0, Variant::Flash2, 1024, 64, false, 1);
+        let fast = pool.predicted_seconds(0, 1024, 64, &p);
+        let slow = pool.predicted_seconds(1, 1024, 64, &p);
+        assert!((slow / fast - 2.0).abs() < 1e-9, "slow={slow} fast={fast}");
+    }
+}

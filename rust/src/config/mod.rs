@@ -65,8 +65,43 @@ impl Default for KvCacheCfg {
     }
 }
 
+/// One device slot in a heterogeneous pool: which card it is, how fast
+/// its host link runs, and how much of its nominal throughput it
+/// delivers (Table 9's testbed mixes generations, so none of these can
+/// be pool-global).
+#[derive(Clone, Debug)]
+pub struct PoolDeviceCfg {
+    /// `GpuSpec` name of this card (e.g. "RTX 4090", "L40")
+    pub gpu: String,
+    /// negotiated transfer rate for this slot, GB/s. All transfers
+    /// still serialize on the leader's single host uplink (the scatter
+    /// model's bottleneck); this sets how fast that uplink drains a
+    /// chunk destined for *this* slot (e.g. a x8 card drains slower).
+    pub link_gbps: f64,
+    /// per-transfer fixed latency when targeting this slot, microseconds
+    pub link_latency_us: u64,
+    /// relative compute speed (1.0 = full speed; < 1 models a slot that
+    /// is shared, thermally capped, or simply an older card)
+    pub capacity_weight: f64,
+}
+
+impl Default for PoolDeviceCfg {
+    fn default() -> Self {
+        Self {
+            gpu: AutotuneCfg::default().gpu,
+            link_gbps: 25.0,
+            link_latency_us: 10,
+            capacity_weight: 1.0,
+        }
+    }
+}
+
 /// Device pool (the multi-GPU simulation of Table 9).
-#[derive(Clone, Copy, Debug)]
+///
+/// A homogeneous pool is `num_devices` identical slots on one link
+/// speed; a heterogeneous pool lists its slots explicitly in `pool`
+/// (which then takes precedence over `num_devices`).
+#[derive(Clone, Debug)]
 pub struct DeviceCfg {
     pub num_devices: usize,
     /// simulated interconnect bandwidth, GB/s (PCIe 4.0 x16 ≈ 25 effective)
@@ -75,11 +110,39 @@ pub struct DeviceCfg {
     pub link_latency_us: u64,
     /// double-buffer transfers to overlap compute and data movement
     pub double_buffer: bool,
+    /// per-device descriptions; empty = homogeneous pool of
+    /// `num_devices` cards named by `[autotune].gpu`
+    pub pool: Vec<PoolDeviceCfg>,
 }
 
 impl Default for DeviceCfg {
     fn default() -> Self {
-        Self { num_devices: 1, link_gbps: 25.0, link_latency_us: 10, double_buffer: true }
+        Self {
+            num_devices: 1,
+            link_gbps: 25.0,
+            link_latency_us: 10,
+            double_buffer: true,
+            pool: Vec::new(),
+        }
+    }
+}
+
+impl DeviceCfg {
+    /// The per-device view every consumer plans against: the explicit
+    /// `pool` when given, else `num_devices` identical slots running
+    /// `default_gpu` on this config's link.
+    pub fn resolved_pool(&self, default_gpu: &str) -> Vec<PoolDeviceCfg> {
+        if !self.pool.is_empty() {
+            return self.pool.clone();
+        }
+        (0..self.num_devices.max(1))
+            .map(|_| PoolDeviceCfg {
+                gpu: default_gpu.to_string(),
+                link_gbps: self.link_gbps,
+                link_latency_us: self.link_latency_us,
+                capacity_weight: 1.0,
+            })
+            .collect()
     }
 }
 
@@ -205,6 +268,36 @@ impl Config {
             cfg.devices.link_latency_us =
                 opt_usize(dv, "link_latency_us", d.link_latency_us as usize)? as u64;
             cfg.devices.double_buffer = opt_bool(dv, "double_buffer", d.double_buffer)?;
+            if let Some(pool) = dv.get("pool") {
+                let entries = pool
+                    .as_array()
+                    .ok_or_else(|| anyhow::anyhow!("`devices.pool` must be an array"))?;
+                for entry in entries {
+                    // per-slot defaults inherit the section's link so a
+                    // pool entry only needs to name what differs
+                    let mut slot = PoolDeviceCfg {
+                        gpu: cfg.autotune.gpu.clone(),
+                        link_gbps: cfg.devices.link_gbps,
+                        link_latency_us: cfg.devices.link_latency_us,
+                        capacity_weight: 1.0,
+                    };
+                    if let Some(g) = entry.get("gpu") {
+                        slot.gpu = g
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("pool `gpu` must be a string"))?
+                            .to_string();
+                    }
+                    slot.link_gbps = opt_f64(entry, "link_gbps", slot.link_gbps)?;
+                    slot.link_latency_us =
+                        opt_usize(entry, "link_latency_us", slot.link_latency_us as usize)? as u64;
+                    slot.capacity_weight =
+                        opt_f64(entry, "capacity_weight", slot.capacity_weight)?;
+                    if slot.capacity_weight <= 0.0 {
+                        anyhow::bail!("pool `capacity_weight` must be positive");
+                    }
+                    cfg.devices.pool.push(slot);
+                }
+            }
         }
         if let Some(s) = v.get("artifacts_dir") {
             cfg.artifacts_dir =
@@ -261,6 +354,29 @@ impl Config {
                     ("link_gbps", Value::number(self.devices.link_gbps)),
                     ("link_latency_us", Value::number(self.devices.link_latency_us as f64)),
                     ("double_buffer", Value::Bool(self.devices.double_buffer)),
+                    (
+                        "pool",
+                        Value::Array(
+                            self.devices
+                                .pool
+                                .iter()
+                                .map(|slot| {
+                                    Value::object(vec![
+                                        ("gpu", Value::string(slot.gpu.clone())),
+                                        ("link_gbps", Value::number(slot.link_gbps)),
+                                        (
+                                            "link_latency_us",
+                                            Value::number(slot.link_latency_us as f64),
+                                        ),
+                                        (
+                                            "capacity_weight",
+                                            Value::number(slot.capacity_weight),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             ("artifacts_dir", Value::string(self.artifacts_dir.clone())),
@@ -368,5 +484,64 @@ mod tests {
     fn autotune_bad_policy_rejected() {
         let v = Value::parse(r#"{"autotune": {"n_bucket": "thirds"}}"#).unwrap();
         assert!(Config::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn device_pool_roundtrips_json() {
+        let mut cfg = Config::default();
+        cfg.devices.pool = vec![
+            PoolDeviceCfg { gpu: "RTX 4090".into(), ..Default::default() },
+            PoolDeviceCfg {
+                gpu: "L40".into(),
+                link_gbps: 12.5,
+                link_latency_us: 20,
+                capacity_weight: 0.5,
+            },
+        ];
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.devices.pool.len(), 2);
+        assert_eq!(back.devices.pool[0].gpu, "RTX 4090");
+        assert_eq!(back.devices.pool[1].gpu, "L40");
+        assert!((back.devices.pool[1].link_gbps - 12.5).abs() < 1e-9);
+        assert_eq!(back.devices.pool[1].link_latency_us, 20);
+        assert!((back.devices.pool[1].capacity_weight - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_pool_entries_inherit_section_defaults() {
+        let v = Value::parse(
+            r#"{"devices": {"link_gbps": 50.0, "pool": [{"gpu": "L40"}, {"capacity_weight": 0.25}]}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.devices.pool.len(), 2);
+        assert_eq!(cfg.devices.pool[0].gpu, "L40");
+        assert!((cfg.devices.pool[0].link_gbps - 50.0).abs() < 1e-9);
+        assert!((cfg.devices.pool[0].capacity_weight - 1.0).abs() < 1e-9);
+        // second entry keeps the autotune default card
+        assert_eq!(cfg.devices.pool[1].gpu, AutotuneCfg::default().gpu);
+        assert!((cfg.devices.pool[1].capacity_weight - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonpositive_capacity_weight_rejected() {
+        let v =
+            Value::parse(r#"{"devices": {"pool": [{"gpu": "L40", "capacity_weight": 0}]}}"#)
+                .unwrap();
+        assert!(Config::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn resolved_pool_falls_back_to_homogeneous() {
+        let mut cfg = DeviceCfg::default();
+        cfg.num_devices = 3;
+        cfg.link_gbps = 10.0;
+        let pool = cfg.resolved_pool("RTX 3090");
+        assert_eq!(pool.len(), 3);
+        assert!(pool.iter().all(|s| s.gpu == "RTX 3090"));
+        assert!(pool.iter().all(|s| (s.link_gbps - 10.0).abs() < 1e-9));
+        // an explicit pool wins over num_devices
+        cfg.pool = vec![PoolDeviceCfg::default()];
+        assert_eq!(cfg.resolved_pool("RTX 3090").len(), 1);
     }
 }

@@ -1,21 +1,26 @@
-//! Dynamic batcher: groups compatible requests (same variant + length
-//! bucket) and flushes on size or deadline — the continuous-batching
-//! front half of an Orca/vLLM-style serving loop.
+//! Dynamic batcher: groups compatible requests and flushes on size or
+//! deadline — the continuous-batching front half of an Orca/vLLM-style
+//! serving loop.
+//!
+//! Requests are grouped by their [`TuneKey`] (variant + bucketed length
+//! + head dim + masking + batch bucket) rather than a raw
+//! `(variant, length bucket)` pair, so every request in a flushed batch
+//! resolves to the *same* autotuner cache entry and can run one tuned
+//! `(l, m, G*)` configuration exactly. The head dim and masking are
+//! model properties the requests don't carry; describe them once with
+//! [`Batcher::with_model`].
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::attention::Variant;
+use crate::autotune::{BucketPolicy, TuneKey};
 use crate::config::BatcherCfg;
 
 use super::request::Request;
 
-/// Requests are only batchable when they run the same executable.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct BatchKey {
-    pub variant: Variant,
-    pub len_bucket: usize,
-}
+/// Requests are only batchable when they share a tuning key (and hence
+/// an executable + tuned configuration).
+pub type BatchKey = TuneKey;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatcherStats {
@@ -43,18 +48,52 @@ struct Pending {
 /// Size/deadline dynamic batcher.
 pub struct Batcher {
     cfg: BatcherCfg,
+    /// head dim of the model the batches will run (key component)
+    d: usize,
+    /// whether the attention is causally masked (key component)
+    causal: bool,
+    policy: BucketPolicy,
     pending: HashMap<BatchKey, Pending>,
     stats: BatcherStats,
 }
 
 impl Batcher {
+    /// A batcher for the default demo geometry (d = 64, non-causal);
+    /// real serve loops override with [`with_model`](Self::with_model).
     pub fn new(cfg: BatcherCfg) -> Self {
-        Self { cfg, pending: HashMap::new(), stats: BatcherStats::default() }
+        Self {
+            cfg,
+            d: 64,
+            causal: false,
+            policy: BucketPolicy::Pow2,
+            pending: HashMap::new(),
+            stats: BatcherStats::default(),
+        }
+    }
+
+    /// Describe the model geometry the tuning keys embed.
+    pub fn with_model(mut self, d: usize, causal: bool) -> Self {
+        self.d = d;
+        self.causal = causal;
+        self
+    }
+
+    /// Override the sequence-length bucketing policy.
+    pub fn with_bucket_policy(mut self, policy: BucketPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The key `req` batches under: its tuning key at this batcher's
+    /// geometry, with the batch bucket pinned to the flush size so one
+    /// batch maps to one cache entry.
+    pub fn key_of(&self, req: &Request) -> BatchKey {
+        req.tune_key(self.d, self.causal, self.cfg.max_batch.max(1), self.policy)
     }
 
     /// Enqueue a request; returns a full batch if this push filled one.
     pub fn push(&mut self, req: Request) -> Option<(BatchKey, Vec<Request>)> {
-        let key = BatchKey { variant: req.variant, len_bucket: req.len_bucket() };
+        let key = self.key_of(&req);
         let entry = self
             .pending
             .entry(key)
@@ -64,7 +103,10 @@ impl Batcher {
         }
         entry.requests.push(req);
         if entry.requests.len() >= self.cfg.max_batch {
-            let batch = std::mem::take(&mut entry.requests);
+            // remove (not just drain) the entry: long-lived servers see
+            // many distinct shape buckets, and empty leftovers would
+            // accumulate in the map forever
+            let batch = self.pending.remove(&key).expect("entry just filled").requests;
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
             self.stats.size_flushes += 1;
@@ -76,15 +118,21 @@ impl Batcher {
     /// Flush every batch whose deadline has passed.
     pub fn poll_deadlines(&mut self, now: Instant) -> Vec<(BatchKey, Vec<Request>)> {
         let deadline = Duration::from_micros(self.cfg.max_wait_us);
+        let expired: Vec<BatchKey> = self
+            .pending
+            .iter()
+            .filter(|(_, e)| {
+                !e.requests.is_empty() && now.duration_since(e.opened) >= deadline
+            })
+            .map(|(k, _)| *k)
+            .collect();
         let mut out = Vec::new();
-        for (key, entry) in self.pending.iter_mut() {
-            if !entry.requests.is_empty() && now.duration_since(entry.opened) >= deadline {
-                let batch = std::mem::take(&mut entry.requests);
-                self.stats.batches += 1;
-                self.stats.requests += batch.len() as u64;
-                self.stats.deadline_flushes += 1;
-                out.push((*key, batch));
-            }
+        for key in expired {
+            let batch = self.pending.remove(&key).expect("key collected above").requests;
+            self.stats.batches += 1;
+            self.stats.requests += batch.len() as u64;
+            self.stats.deadline_flushes += 1;
+            out.push((key, batch));
         }
         out
     }
@@ -92,19 +140,25 @@ impl Batcher {
     /// Flush everything (shutdown path).
     pub fn drain(&mut self) -> Vec<(BatchKey, Vec<Request>)> {
         let mut out = Vec::new();
-        for (key, entry) in self.pending.iter_mut() {
-            if !entry.requests.is_empty() {
-                let batch = std::mem::take(&mut entry.requests);
-                self.stats.batches += 1;
-                self.stats.requests += batch.len() as u64;
-                out.push((*key, batch));
+        for (key, entry) in std::mem::take(&mut self.pending) {
+            if entry.requests.is_empty() {
+                continue;
             }
+            self.stats.batches += 1;
+            self.stats.requests += entry.requests.len() as u64;
+            out.push((key, entry.requests));
         }
         out
     }
 
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(|p| p.requests.len()).sum()
+    }
+
+    /// Number of open shape buckets in the map — bounded by live
+    /// (non-empty) batches now that flushes remove their entries.
+    pub fn open_buckets(&self) -> usize {
+        self.pending.len()
     }
 
     pub fn stats(&self) -> BatcherStats {
@@ -124,6 +178,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::Variant;
 
     fn req(id: u64, len: usize, variant: Variant) -> Request {
         Request::new(id, vec![0; len], variant)
@@ -139,7 +194,7 @@ mod tests {
         assert!(b.push(req(1, 100, Variant::Distr)).is_none());
         let (key, batch) = b.push(req(2, 100, Variant::Distr)).unwrap();
         assert_eq!(batch.len(), 2);
-        assert_eq!(key.len_bucket, 128);
+        assert_eq!(key.n_bucket, 128);
         assert_eq!(b.pending_count(), 0);
         assert_eq!(b.stats().size_flushes, 1);
     }
@@ -153,6 +208,19 @@ mod tests {
         // different length bucket
         assert!(b.push(req(3, 300, Variant::Distr)).is_none());
         assert_eq!(b.pending_count(), 3);
+        assert_eq!(b.open_buckets(), 3);
+    }
+
+    #[test]
+    fn batch_key_is_a_full_tune_key() {
+        let mut b = Batcher::new(cfg(2, 1_000_000)).with_model(128, true);
+        b.push(req(1, 100, Variant::Distr));
+        let (key, _) = b.push(req(2, 100, Variant::Distr)).unwrap();
+        assert_eq!(key.d, 128);
+        assert!(key.causal);
+        assert_eq!(key.n_bucket, 128);
+        assert_eq!(key.batch_bucket, 2, "batch bucket pinned to flush size");
+        assert_eq!(key, b.key_of(&req(3, 90, Variant::Distr)));
     }
 
     #[test]
@@ -171,6 +239,33 @@ mod tests {
         b.push(req(1, 64, Variant::Distr));
         assert!(b.poll_deadlines(Instant::now()).is_empty());
         assert_eq!(b.pending_count(), 1);
+    }
+
+    #[test]
+    fn flushes_remove_emptied_buckets() {
+        // regression: drained-empty entries used to stay in the map
+        // forever, growing it unboundedly under many distinct shapes
+        let mut b = Batcher::new(cfg(8, 0));
+        for (i, len) in [10usize, 50, 100, 300, 1000, 3000].iter().enumerate() {
+            b.push(req(i as u64, *len, Variant::Distr));
+        }
+        assert_eq!(b.open_buckets(), 6);
+        let flushed = b.poll_deadlines(Instant::now() + Duration::from_micros(1));
+        assert_eq!(flushed.len(), 6);
+        assert_eq!(b.open_buckets(), 0, "deadline flush must shrink the map");
+
+        // size flush removes its bucket too
+        let mut b = Batcher::new(cfg(1, 1_000_000));
+        assert!(b.push(req(1, 64, Variant::Distr)).is_some());
+        assert_eq!(b.open_buckets(), 0, "size flush must shrink the map");
+
+        // ... and drain clears everything
+        let mut b = Batcher::new(cfg(8, 1_000_000));
+        b.push(req(1, 64, Variant::Distr));
+        b.push(req(2, 300, Variant::Flash2));
+        assert_eq!(b.open_buckets(), 2);
+        b.drain();
+        assert_eq!(b.open_buckets(), 0, "drain must shrink the map");
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! engine matching their attention variant ([`router`]), execute on AOT
 //! artifacts ([`engine`]), with KV state managed by a block allocator
 //! ([`kv_cache`]). [`multi_device`] implements the paper's §4.7
-//! head-sharded multi-GPU scatter with double buffering (Table 9).
+//! head-sharded multi-GPU scatter with double buffering (Table 9),
+//! including the tuning-aware planner that drives heterogeneous pools
+//! with per-device `(l, m, G*)` from [`crate::autotune::DevicePool`].
 
 pub mod batcher;
 pub mod decode;
@@ -22,7 +24,10 @@ pub use batcher::{Batcher, BatcherStats};
 pub use decode::{attend_cached, decode_step};
 pub use engine::{Engine, EngineHandle};
 pub use kv_cache::{BlockId, KvCache, SeqHandle};
-pub use multi_device::{run_scatter, ScatterPlan, ScatterReport};
+pub use multi_device::{
+    plan_tuned, run_scatter, run_scatter_round_robin, run_scatter_tuned, DeviceLane, ScatterPlan,
+    ScatterReport, ScatterSchedule,
+};
 pub use request::{Priority, Request, RequestId, Response};
 pub use router::Router;
 pub use scheduler::Scheduler;

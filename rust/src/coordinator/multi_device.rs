@@ -8,15 +8,35 @@
 //!
 //! Here "devices" are worker threads doing real attention math (the Rust
 //! engines) while the interconnect is simulated: each chunk's arrival is
-//! delayed by `bytes / link_gbps + latency`, transfers serialize on one
-//! link, and with `double_buffer = false` the next transfer cannot start
-//! until the previous chunk's compute finished (no overlap) — exactly
-//! the two schedules Table 9 compares.
+//! delayed by `bytes / link_gbps + latency`, transfers serialize on the
+//! leader's single host uplink (a chunk's drain rate is the
+//! *destination slot's* negotiated `link_gbps`, but only one transfer
+//! is in flight at a time — slow slots do delay the queue, as they
+//! would on a shared uplink), and with `double_buffer = false` the next
+//! transfer cannot start until the previous chunk's compute finished
+//! (no overlap) — exactly the two schedules Table 9 compares.
+//!
+//! Two scheduling policies are provided:
+//!
+//! * [`run_scatter`] / [`run_scatter_round_robin`] — fixed `(l, m, G*)`
+//!   on every device, chunks dealt `c % n_dev` (the PR-1-era behavior,
+//!   kept as the baseline),
+//! * [`run_scatter_tuned`] — per-device tuned parameters from a
+//!   [`DevicePool`] (each card's own cache) and chunk assignment
+//!   proportional to each device's cost-model-predicted throughput
+//!   ([`plan_tuned`]), so a skewed pool is not bottlenecked by its
+//!   slowest card.
+//!
+//! Heterogeneity is simulated on the compute side through each slot's
+//! `capacity_weight`: a weight-`w` worker stretches its real compute
+//! time by `1/w`, which is what makes proportional assignment
+//! measurably beat round-robin in `benches/multi_device.rs`.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::attention::{Engine, Variant};
+use crate::autotune::{DevicePool, TunedParams};
 use crate::config::DeviceCfg;
 use crate::tensor::Matrix;
 use crate::workload;
@@ -35,9 +55,21 @@ pub struct ScatterPlan {
 }
 
 impl ScatterPlan {
-    /// Bytes of one chunk's Q, K and V at f32 (leader -> device traffic).
+    /// Bytes of an `h`-head chunk's Q, K and V at f32 (leader -> device
+    /// traffic).
+    pub fn bytes_for_heads(&self, h: usize) -> u64 {
+        (h * self.n * self.d * 4 * 3) as u64
+    }
+
+    /// Bytes of one full-size chunk.
     pub fn chunk_bytes(&self) -> u64 {
-        (self.chunk_heads * self.n * self.d * 4 * 3) as u64
+        self.bytes_for_heads(self.chunk_heads)
+    }
+
+    /// Heads carried by chunk `c` — the final chunk carries only the
+    /// remainder when `heads % chunk_heads != 0`.
+    pub fn heads_in_chunk(&self, c: usize) -> usize {
+        self.chunk_heads.min(self.heads.saturating_sub(c * self.chunk_heads))
     }
 
     pub fn num_chunks(&self) -> usize {
@@ -54,51 +86,149 @@ pub struct ScatterReport {
     pub per_device_busy: Vec<Duration>,
     pub per_device_chunks: Vec<usize>,
     pub chunks: usize,
+    /// heads actually computed across all devices (== the plan's `heads`;
+    /// the pre-remainder-fix scatter padded the last chunk with phantoms)
+    pub heads: usize,
 }
 
 impl ScatterReport {
-    /// Fraction of transfer time hidden behind compute.
+    /// Fraction of transfer time hidden behind compute, in `[0, 1]`.
+    ///
+    /// When devices compute in parallel, `compute_total - wall` alone
+    /// can exceed `transfer_total`; the ratio is clamped so "everything
+    /// overlapped" reads as 1.0 rather than a nonsense value above it.
     pub fn overlap_efficiency(&self) -> f64 {
         let serial = self.transfer_total + self.compute_total;
         if self.wall.is_zero() || serial <= self.wall {
             return 0.0;
         }
-        (serial - self.wall).as_secs_f64() / self.transfer_total.as_secs_f64().max(1e-12)
+        ((serial - self.wall).as_secs_f64() / self.transfer_total.as_secs_f64().max(1e-12))
+            .clamp(0.0, 1.0)
     }
 }
 
-fn transfer_time(bytes: u64, cfg: &DeviceCfg) -> Duration {
-    Duration::from_secs_f64(bytes as f64 / (cfg.link_gbps * 1e9))
-        + Duration::from_micros(cfg.link_latency_us)
+/// Per-device execution parameters resolved by a scatter policy: the
+/// engine's `(l, m, G*)` plus the slot's simulated physics.
+#[derive(Clone, Debug)]
+pub struct DeviceLane {
+    pub params: TunedParams,
+    pub link_gbps: f64,
+    pub link_latency_us: u64,
+    /// relative compute speed (1.0 = full; < 1 stretches compute)
+    pub capacity_weight: f64,
 }
 
-/// Run the head-sharded scatter: real compute, simulated interconnect.
-pub fn run_scatter(plan: &ScatterPlan, cfg: &DeviceCfg, seed: u64) -> ScatterReport {
-    let n_dev = cfg.devices_or_one();
+/// A tuned scatter schedule over a (possibly heterogeneous) pool.
+#[derive(Clone, Debug)]
+pub struct ScatterSchedule {
+    pub lanes: Vec<DeviceLane>,
+    /// chunk index -> device index
+    pub assignment: Vec<usize>,
+    /// predicted throughput share per device (sums to 1)
+    pub shares: Vec<f64>,
+}
+
+fn transfer_time(bytes: u64, link_gbps: f64, latency_us: u64) -> Duration {
+    Duration::from_secs_f64(bytes as f64 / (link_gbps * 1e9))
+        + Duration::from_micros(latency_us)
+}
+
+/// Snap tuned tiles onto divisors of the concrete sequence length: the
+/// tuner keys on the *bucketed* N, but the engines assert
+/// `N % l == 0` / `N % m == 0` on the exact N they are handed.
+fn fit_tiles_to(p: &mut TunedParams, n: usize) {
+    let fit = |mut tile: usize| {
+        while tile > 1 && (tile > n || n % tile != 0) {
+            tile /= 2;
+        }
+        tile.max(1)
+    };
+    p.l = fit(p.l);
+    p.m = fit(p.m).min(p.l);
+}
+
+/// Plan a tuned scatter: resolve each device's `(l, m, G*)` from its
+/// own card's cache, predict per-device throughput with the cost model
+/// (scaled by capacity weight), and assign chunks proportionally via
+/// error diffusion so the interleaving tracks the shares.
+pub fn plan_tuned(plan: &ScatterPlan, pool: &mut DevicePool) -> ScatterSchedule {
+    let n_dev = pool.num_devices();
+    let mut lanes = Vec::with_capacity(n_dev);
+    let mut rates = Vec::with_capacity(n_dev);
+    for idx in 0..n_dev {
+        let mut params = pool.tuned(idx, plan.variant, plan.n, plan.d, false, 1);
+        fit_tiles_to(&mut params, plan.n);
+        rates.push(1.0 / pool.predicted_seconds(idx, plan.n, plan.d, &params).max(1e-12));
+        let dev = pool.device(idx);
+        lanes.push(DeviceLane {
+            params,
+            link_gbps: dev.link_gbps,
+            link_latency_us: dev.link_latency_us,
+            capacity_weight: dev.capacity_weight,
+        });
+    }
+    let total: f64 = rates.iter().sum();
+    let shares: Vec<f64> = rates.iter().map(|r| r / total).collect();
+
+    // error diffusion: each chunk goes to the device with the most
+    // accumulated credit, so assignment counts track the shares while
+    // staying interleaved (a fast device is topped up every round, not
+    // handed one contiguous prefix)
+    let mut credit = vec![0.0f64; n_dev];
+    let mut assignment = Vec::with_capacity(plan.num_chunks());
+    for _ in 0..plan.num_chunks() {
+        for (c, s) in credit.iter_mut().zip(&shares) {
+            *c += s;
+        }
+        let dev = credit
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("pool has at least one device");
+        credit[dev] -= 1.0;
+        assignment.push(dev);
+    }
+    ScatterSchedule { lanes, assignment, shares }
+}
+
+/// The shared scatter executor: real compute on per-lane engines,
+/// simulated per-lane interconnect, explicit chunk->device assignment.
+fn run_lanes(
+    plan: &ScatterPlan,
+    lanes: &[DeviceLane],
+    assignment: &[usize],
+    double_buffer: bool,
+    seed: u64,
+) -> ScatterReport {
+    let n_dev = lanes.len();
     let chunks = plan.num_chunks();
-    let per_transfer = transfer_time(plan.chunk_bytes(), cfg);
+    assert_eq!(assignment.len(), chunks, "one device per chunk");
 
     // worker per device: receives (release_at, chunk qkv), computes,
     // acks each chunk so the leader can serialize when double buffering
     // is disabled
     let mut senders = Vec::new();
     let (ack_tx, ack_rx) = mpsc::channel::<usize>();
-    let (done_tx, done_rx) = mpsc::channel::<(usize, Duration, usize)>();
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Duration, usize, usize)>();
     let mut joins = Vec::new();
-    for dev in 0..n_dev {
+    for (dev, lane) in lanes.iter().enumerate() {
         let (tx, rx) = mpsc::channel::<(Instant, Vec<(Matrix, Matrix, Matrix)>)>();
         senders.push(tx);
         let ack = ack_tx.clone();
         let done = done_tx.clone();
         let plan = *plan;
+        let lane = lane.clone();
         joins.push(std::thread::spawn(move || {
             let engine = Engine::new(plan.variant)
-                .with_blocks(plan.block_l, plan.block_m)
-                .with_group(plan.group);
+                .with_blocks(lane.params.l, lane.params.m)
+                .with_group(lane.params.group.max(1));
             let mut busy = Duration::ZERO;
             let mut n_chunks = 0usize;
+            let mut n_heads = 0usize;
             while let Ok((release_at, chunk)) = rx.recv() {
                 n_chunks += 1;
+                n_heads += chunk.len();
                 let now = Instant::now();
                 if release_at > now {
                     std::thread::sleep(release_at - now); // data still in flight
@@ -112,10 +242,17 @@ pub fn run_scatter(plan: &ScatterPlan, cfg: &DeviceCfg, seed: u64) -> ScatterRep
                         std::hint::black_box(engine.run(q, k, v));
                     }
                 });
+                let computed = t0.elapsed();
+                if lane.capacity_weight < 1.0 {
+                    // a weight-w slot runs at w times full speed
+                    std::thread::sleep(Duration::from_secs_f64(
+                        computed.as_secs_f64() * (1.0 / lane.capacity_weight - 1.0),
+                    ));
+                }
                 busy += t0.elapsed();
                 let _ = ack.send(dev);
             }
-            let _ = done.send((dev, busy, n_chunks));
+            let _ = done.send((dev, busy, n_chunks, n_heads));
         }));
     }
     drop(done_tx);
@@ -125,45 +262,130 @@ pub fn run_scatter(plan: &ScatterPlan, cfg: &DeviceCfg, seed: u64) -> ScatterRep
     let mut link_free = start;
     let mut transfer_total = Duration::ZERO;
     for c in 0..chunks {
-        let heads: Vec<(Matrix, Matrix, Matrix)> = (0..plan.chunk_heads)
+        let chunk_len = plan.heads_in_chunk(c);
+        let heads: Vec<(Matrix, Matrix, Matrix)> = (0..chunk_len)
             .map(|h| workload::qkv_uniform(plan.n, plan.d, seed + (c * plan.chunk_heads + h) as u64))
             .collect();
-        if !cfg.double_buffer && c > 0 {
+        if !double_buffer && c > 0 {
             // no overlap: the next transfer may only start once the
             // previous chunk's compute has finished
             let _ = ack_rx.recv();
         }
+        let dev = assignment[c];
+        let per_transfer = transfer_time(
+            plan.bytes_for_heads(chunk_len),
+            lanes[dev].link_gbps,
+            lanes[dev].link_latency_us,
+        );
         let arrive = link_free.max(Instant::now()) + per_transfer;
         link_free = arrive;
         transfer_total += per_transfer;
-        let dev = c % n_dev;
         senders[dev].send((arrive, heads)).expect("device worker alive");
     }
     drop(senders);
 
     let mut per_device_busy = vec![Duration::ZERO; n_dev];
     let mut per_device_chunks = vec![0usize; n_dev];
-    while let Ok((dev, busy, n_chunks)) = done_rx.recv() {
+    let mut heads = 0usize;
+    while let Ok((dev, busy, n_chunks, n_heads)) = done_rx.recv() {
         per_device_busy[dev] = busy;
         per_device_chunks[dev] = n_chunks;
+        heads += n_heads;
     }
     for j in joins {
         let _ = j.join();
     }
     let wall = start.elapsed();
     let compute_total = per_device_busy.iter().sum();
-    ScatterReport { wall, transfer_total, compute_total, per_device_busy, per_device_chunks, chunks }
+    ScatterReport {
+        wall,
+        transfer_total,
+        compute_total,
+        per_device_busy,
+        per_device_chunks,
+        chunks,
+        heads,
+    }
+}
+
+/// One lane per device from fixed plan-level parameters.
+fn uniform_lanes(plan: &ScatterPlan, slots: &[(f64, u64, f64)]) -> Vec<DeviceLane> {
+    let params = TunedParams {
+        l: plan.block_l,
+        m: plan.block_m,
+        group: plan.group.max(1),
+        sample_rate: 1.0 / plan.group.max(1) as f64,
+    };
+    slots
+        .iter()
+        .map(|&(link_gbps, link_latency_us, capacity_weight)| DeviceLane {
+            params,
+            link_gbps,
+            link_latency_us,
+            capacity_weight,
+        })
+        .collect()
+}
+
+/// Run the head-sharded scatter: real compute, simulated interconnect.
+/// Homogeneous devices, fixed plan parameters, round-robin chunks.
+pub fn run_scatter(plan: &ScatterPlan, cfg: &DeviceCfg, seed: u64) -> ScatterReport {
+    let n_dev = cfg.devices_or_one();
+    let slots = vec![(cfg.link_gbps, cfg.link_latency_us, 1.0); n_dev];
+    let lanes = uniform_lanes(plan, &slots);
+    let assignment: Vec<usize> = (0..plan.num_chunks()).map(|c| c % n_dev).collect();
+    run_lanes(plan, &lanes, &assignment, cfg.double_buffer, seed)
+}
+
+/// Round-robin over a (possibly skewed) pool with the plan's fixed
+/// parameters on every device — the baseline tuned planning competes
+/// against in `benches/multi_device.rs`.
+pub fn run_scatter_round_robin(
+    plan: &ScatterPlan,
+    pool: &DevicePool,
+    double_buffer: bool,
+    seed: u64,
+) -> ScatterReport {
+    let slots: Vec<(f64, u64, f64)> = pool
+        .devices()
+        .iter()
+        .map(|d| (d.link_gbps, d.link_latency_us, d.capacity_weight))
+        .collect();
+    let lanes = uniform_lanes(plan, &slots);
+    let n_dev = lanes.len();
+    let assignment: Vec<usize> = (0..plan.num_chunks()).map(|c| c % n_dev).collect();
+    run_lanes(plan, &lanes, &assignment, double_buffer, seed)
+}
+
+/// Tuning-aware scatter: per-device `(l, m, G*)` from each card's own
+/// cache, chunks assigned proportionally to predicted throughput.
+/// Returns the schedule alongside the report so callers can inspect the
+/// per-device parameters and shares the planner chose.
+pub fn run_scatter_tuned(
+    plan: &ScatterPlan,
+    pool: &mut DevicePool,
+    double_buffer: bool,
+    seed: u64,
+) -> (ScatterSchedule, ScatterReport) {
+    let schedule = plan_tuned(plan, pool);
+    let report = run_lanes(plan, &schedule.lanes, &schedule.assignment, double_buffer, seed);
+    (schedule, report)
 }
 
 impl DeviceCfg {
     pub fn devices_or_one(&self) -> usize {
-        self.num_devices.max(1)
+        if self.pool.is_empty() {
+            self.num_devices.max(1)
+        } else {
+            self.pool.len()
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simulator::GpuSpec;
 
     fn small_plan(variant: Variant) -> ScatterPlan {
         ScatterPlan {
@@ -178,6 +400,10 @@ mod tests {
         }
     }
 
+    fn cfg(num_devices: usize, link_gbps: f64, link_latency_us: u64, double_buffer: bool) -> DeviceCfg {
+        DeviceCfg { num_devices, link_gbps, link_latency_us, double_buffer, ..Default::default() }
+    }
+
     #[test]
     fn chunk_math() {
         let p = small_plan(Variant::Flash2);
@@ -187,11 +413,66 @@ mod tests {
 
     #[test]
     fn scatter_completes_all_chunks() {
-        let cfg = DeviceCfg { num_devices: 2, link_gbps: 100.0, link_latency_us: 1, double_buffer: true };
+        let cfg = cfg(2, 100.0, 1, true);
         let r = run_scatter(&small_plan(Variant::Flash2), &cfg, 1);
         assert_eq!(r.chunks, 4);
+        assert_eq!(r.heads, 8);
         assert_eq!(r.per_device_busy.len(), 2);
         assert!(r.compute_total > Duration::ZERO);
+    }
+
+    #[test]
+    fn final_chunk_carries_only_the_remainder() {
+        // heads = 10, chunk_heads = 4: chunks of 4, 4 and 2 — the
+        // pre-fix scatter computed (and billed transfer for) 12 heads
+        let plan = ScatterPlan {
+            heads: 10,
+            chunk_heads: 4,
+            n: 64,
+            d: 32,
+            variant: Variant::Flash2,
+            group: 1,
+            block_l: 32,
+            block_m: 32,
+        };
+        assert_eq!(plan.num_chunks(), 3);
+        assert_eq!(plan.heads_in_chunk(0), 4);
+        assert_eq!(plan.heads_in_chunk(2), 2);
+        let cfg = cfg(2, 25.0, 10, true);
+        let r = run_scatter(&plan, &cfg, 9);
+        assert_eq!(r.heads, 10, "phantom heads computed");
+        let expected: Duration = [4usize, 4, 2]
+            .iter()
+            .map(|&h| transfer_time(plan.bytes_for_heads(h), cfg.link_gbps, cfg.link_latency_us))
+            .sum();
+        assert_eq!(r.transfer_total, expected, "remainder chunk billed at full size");
+    }
+
+    #[test]
+    fn overlap_efficiency_is_clamped_to_one() {
+        // 4 devices computing in parallel: compute_total - wall alone
+        // exceeds transfer_total, which used to push the ratio past 1
+        let r = ScatterReport {
+            wall: Duration::from_millis(100),
+            transfer_total: Duration::from_millis(50),
+            compute_total: Duration::from_millis(400),
+            per_device_busy: vec![Duration::from_millis(100); 4],
+            per_device_chunks: vec![1; 4],
+            chunks: 4,
+            heads: 4,
+        };
+        assert_eq!(r.overlap_efficiency(), 1.0);
+        // and the degenerate cases stay at 0
+        let idle = ScatterReport {
+            wall: Duration::from_millis(100),
+            transfer_total: Duration::ZERO,
+            compute_total: Duration::from_millis(10),
+            per_device_busy: vec![],
+            per_device_chunks: vec![],
+            chunks: 0,
+            heads: 0,
+        };
+        assert_eq!(idle.overlap_efficiency(), 0.0);
     }
 
     #[test]
@@ -199,13 +480,8 @@ mod tests {
         // make transfers expensive (20ms fixed latency each): the
         // overlapped schedule pipelines them under compute, the serial
         // one must pay (transfer -> compute -> transfer -> ...) in full
-        let slow_link = DeviceCfg {
-            num_devices: 2,
-            link_gbps: 10.0,
-            link_latency_us: 20_000,
-            double_buffer: true,
-        };
-        let mut no_db = slow_link;
+        let slow_link = cfg(2, 10.0, 20_000, true);
+        let mut no_db = slow_link.clone();
         no_db.double_buffer = false;
         let with = run_scatter(&small_plan(Variant::Flash2), &slow_link, 2);
         let without = run_scatter(&small_plan(Variant::Flash2), &no_db, 2);
@@ -222,7 +498,7 @@ mod tests {
 
     #[test]
     fn distr_not_slower_than_flash_in_scatter() {
-        let cfg = DeviceCfg { num_devices: 1, link_gbps: 100.0, link_latency_us: 1, double_buffer: true };
+        let cfg = cfg(1, 100.0, 1, true);
         let plan_f = ScatterPlan { n: 512, d: 64, heads: 4, chunk_heads: 2, block_l: 64, block_m: 64, group: 2, variant: Variant::Flash2 };
         let plan_d = ScatterPlan { variant: Variant::Distr, ..plan_f };
         let f = run_scatter(&plan_f, &cfg, 3);
@@ -233,5 +509,67 @@ mod tests {
             d.compute_total,
             f.compute_total
         );
+    }
+
+    #[test]
+    fn tuned_planner_resolves_per_card_params_and_skews_assignment() {
+        // RTX 4090 at full speed + L40 at 0.4x: the planner must (a)
+        // give each card its own tuned (l, m, G*) and (b) hand the
+        // faster slot more chunks than round-robin would
+        let mut pool =
+            DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]).with_weights(&[1.0, 0.4]);
+        let plan = ScatterPlan {
+            heads: 24,
+            chunk_heads: 2,
+            n: 1024,
+            d: 128,
+            variant: Variant::Distr,
+            group: 2,
+            block_l: 128,
+            block_m: 64,
+        };
+        let sched = plan_tuned(&plan, &mut pool);
+        assert_eq!(sched.lanes.len(), 2);
+        assert_ne!(
+            sched.lanes[0].params, sched.lanes[1].params,
+            "per-device params must reflect each card"
+        );
+        assert_eq!(sched.assignment.len(), plan.num_chunks());
+        let counts = sched.assignment.iter().fold([0usize; 2], |mut acc, &d| {
+            acc[d] += 1;
+            acc
+        });
+        assert_eq!(counts[0] + counts[1], plan.num_chunks());
+        assert!(
+            counts[0] > counts[1],
+            "weighted planner must favor the faster slot: {counts:?}"
+        );
+        assert!((sched.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(sched.shares[0] > 0.5, "shares {:?}", sched.shares);
+        // every device's tiles divide the concrete sequence length
+        for lane in &sched.lanes {
+            assert_eq!(plan.n % lane.params.l, 0);
+            assert_eq!(plan.n % lane.params.m, 0);
+        }
+    }
+
+    #[test]
+    fn tuned_scatter_completes_all_heads() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]);
+        let plan = ScatterPlan {
+            heads: 6,
+            chunk_heads: 2,
+            n: 256,
+            d: 64,
+            variant: Variant::Distr,
+            group: 2,
+            block_l: 64,
+            block_m: 64,
+        };
+        let (sched, r) = run_scatter_tuned(&plan, &mut pool, true, 4);
+        assert_eq!(r.chunks, 3);
+        assert_eq!(r.heads, 6);
+        assert_eq!(r.per_device_chunks.iter().sum::<usize>(), 3);
+        assert_eq!(sched.assignment.len(), 3);
     }
 }

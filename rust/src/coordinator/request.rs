@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use crate::attention::Variant;
+use crate::autotune::{BucketPolicy, TuneKey};
 
 pub type RequestId = u64;
 
@@ -38,6 +39,15 @@ impl Request {
     /// so one fixed-shape executable serves a range of prompt lengths.
     pub fn len_bucket(&self) -> usize {
         self.tokens.len().next_power_of_two().max(16)
+    }
+
+    /// The autotuner cache key this request resolves to, given the model
+    /// geometry the request itself doesn't carry (head dim + masking)
+    /// and the batch size it will be dispatched with. The batcher groups
+    /// by this key so every request in a flushed batch shares one tuned
+    /// `(l, m, G*)` exactly.
+    pub fn tune_key(&self, d: usize, causal: bool, batch: usize, policy: BucketPolicy) -> TuneKey {
+        TuneKey::for_shape(self.variant, self.tokens.len().max(1), d, causal, batch, policy)
     }
 }
 
@@ -77,6 +87,17 @@ mod tests {
         assert_eq!(r.len_bucket(), 128);
         let r = Request::new(3, vec![0; 3], Variant::Distr);
         assert_eq!(r.len_bucket(), 16);
+    }
+
+    #[test]
+    fn tune_key_carries_model_geometry() {
+        let r = Request::new(1, vec![0; 100], Variant::Distr);
+        let k = r.tune_key(64, true, 8, BucketPolicy::Pow2);
+        assert_eq!(k.variant, Variant::Distr);
+        assert_eq!(k.n_bucket, r.len_bucket(), "pow2 policy matches len_bucket");
+        assert_eq!(k.d, 64);
+        assert!(k.causal);
+        assert_eq!(k.batch_bucket, 8);
     }
 
     #[test]

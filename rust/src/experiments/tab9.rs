@@ -48,6 +48,7 @@ pub fn render(quick: bool) -> String {
                 link_gbps: 25.0,
                 link_latency_us: 10,
                 double_buffer: true,
+                ..Default::default()
             };
             let r = run_scatter(&plan(variant, quick), &cfg, 11);
             times.push(r.wall.as_secs_f64() * 1e3);
@@ -84,8 +85,8 @@ mod tests {
         // wall-clock scaling is noisy under `cargo test`'s own
         // parallelism, so assert the structural property instead: with 4
         // devices the chunks are spread round-robin and no device idles.
-        let cfg1 = DeviceCfg { num_devices: 1, link_gbps: 200.0, link_latency_us: 1, double_buffer: true };
-        let cfg4 = DeviceCfg { num_devices: 4, link_gbps: 200.0, link_latency_us: 1, double_buffer: true };
+        let cfg1 = DeviceCfg { num_devices: 1, link_gbps: 200.0, link_latency_us: 1, double_buffer: true, ..Default::default() };
+        let cfg4 = DeviceCfg { num_devices: 4, link_gbps: 200.0, link_latency_us: 1, double_buffer: true, ..Default::default() };
         let p = plan(Variant::Flash2, true);
         let r1 = run_scatter(&p, &cfg1, 5);
         assert_eq!(r1.per_device_chunks, vec![p.num_chunks()]);

@@ -39,6 +39,9 @@ impl LatencyHistogram {
         self.count
     }
 
+    /// Mean latency, truncated to whole microseconds: samples are
+    /// accumulated as integer µs, so sub-microsecond precision is never
+    /// recorded and the integer division floors the result.
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -51,9 +54,18 @@ impl LatencyHistogram {
     }
 
     /// Upper bound of the bucket containing quantile `q` (0.0..1.0).
+    ///
+    /// `q <= 0.0` returns a floor instead: the lower bound of the first
+    /// occupied bucket. Without the guard, `target = 0` satisfies
+    /// `seen >= target` before any sample is seen and the first
+    /// (possibly empty) bucket's upper bound leaks out.
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
+        }
+        if q <= 0.0 {
+            let first = self.buckets.iter().position(|&c| c > 0).unwrap_or(0);
+            return Duration::from_micros(1u64 << first);
         }
         let target = (q * self.count as f64).ceil() as u64;
         let mut seen = 0;
@@ -171,6 +183,29 @@ mod tests {
     #[test]
     fn quantile_empty_is_zero() {
         assert_eq!(LatencyHistogram::new().quantile(0.5), Duration::ZERO);
+        assert_eq!(LatencyHistogram::new().quantile(0.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn quantile_zero_is_a_floor() {
+        // regression: with only a 1000µs sample (bucket [512, 1024)),
+        // quantile(0.0) used to return the *first* bucket's upper bound
+        // (2µs) because target = 0 was satisfied before any sample
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(1000));
+        assert_eq!(h.quantile(0.0), Duration::from_micros(512));
+        assert!(h.quantile(0.0) <= h.quantile(0.5));
+        // a negative q is treated the same as q = 0
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+    }
+
+    #[test]
+    fn mean_truncates_to_whole_microseconds() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(2));
+        // (1 + 2) / 2 floors to 1µs by design (integer µs accumulation)
+        assert_eq!(h.mean(), Duration::from_micros(1));
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! tuned engines.
 
 use distr_attention::attention::{standard_attention, Engine, Variant};
-use distr_attention::autotune::{Autotuner, BucketPolicy, TuneKey, TuningCache, CACHE_VERSION};
-use distr_attention::config::{AutotuneCfg, Config};
+use distr_attention::autotune::{
+    per_gpu_cache_path, Autotuner, BucketPolicy, DevicePool, TuneKey, TuningCache, CACHE_VERSION,
+};
+use distr_attention::config::{AutotuneCfg, Config, PoolDeviceCfg};
 use distr_attention::simulator::block_select::is_legal;
 use distr_attention::simulator::GpuSpec;
 use distr_attention::util::testing::TempDir;
@@ -152,4 +154,69 @@ fn from_config_respects_gpu_and_policy() {
     let t = Autotuner::from_config(&cfg);
     assert_eq!(t.gpu().name, "L40");
     assert_eq!(t.key_for(Variant::Distr, 300, 64, false, 1).n_bucket, 300);
+}
+
+#[test]
+fn per_device_cache_paths_do_not_clobber_each_other() {
+    // two tuners for different cards persisting to per-device paths
+    // derived from one base: both files must survive, each tagged with
+    // its own gpu (the shared-path case only warns and drops
+    // persistence; per-device paths are the actual fix)
+    let dir = TempDir::new().unwrap();
+    let base = dir.path().join("tuning.json").to_string_lossy().into_owned();
+    for gpu in [GpuSpec::RTX4090, GpuSpec::L40] {
+        let mut t = Autotuner::new(
+            gpu,
+            AutotuneCfg {
+                cache_path: per_gpu_cache_path(&base, gpu.name),
+                ..Default::default()
+            },
+        );
+        t.tuned(Variant::Distr, 1024, 128, false, 1);
+    }
+    for gpu in [GpuSpec::RTX4090, GpuSpec::L40] {
+        let path = per_gpu_cache_path(&base, gpu.name);
+        let cache = TuningCache::load(std::path::Path::new(&path)).unwrap();
+        assert_eq!(cache.gpu, gpu.name, "{path} holds a foreign card's tunings");
+        assert_eq!(cache.len(), 1);
+    }
+
+    // a restarted tuner on either path hits without re-searching
+    let mut again = Autotuner::new(
+        GpuSpec::L40,
+        AutotuneCfg {
+            cache_path: per_gpu_cache_path(&base, GpuSpec::L40.name),
+            ..Default::default()
+        },
+    );
+    again.tuned(Variant::Distr, 1024, 128, false, 1);
+    assert_eq!(again.stats().searches, 0);
+    assert_eq!(again.stats().hits, 1);
+}
+
+#[test]
+fn device_pool_isolates_heterogeneous_caches() {
+    let dir = TempDir::new().unwrap();
+    let base = dir.path().join("tuning.json").to_string_lossy().into_owned();
+    let mut cfg = Config::default();
+    cfg.autotune.cache_path = base.clone();
+    cfg.devices.pool = vec![
+        PoolDeviceCfg { gpu: "RTX 4090".into(), ..Default::default() },
+        PoolDeviceCfg { gpu: "L40".into(), capacity_weight: 0.5, ..Default::default() },
+    ];
+
+    let mut pool = DevicePool::from_config(&cfg);
+    assert_eq!(pool.num_devices(), 2);
+    let a = pool.tuned(0, Variant::Distr, 1024, 128, false, 1);
+    let b = pool.tuned(1, Variant::Distr, 1024, 128, false, 1);
+    assert_ne!(a, b, "heterogeneous cards must tune independently");
+    drop(pool);
+
+    // "restart": both devices resolve from their own files, no clobber
+    let mut pool = DevicePool::from_config(&cfg);
+    assert_eq!(pool.tuned(0, Variant::Distr, 1024, 128, false, 1), a);
+    assert_eq!(pool.tuned(1, Variant::Distr, 1024, 128, false, 1), b);
+    let s = pool.stats();
+    assert_eq!(s.searches, 0, "per-device caches must survive restarts intact");
+    assert_eq!(s.hits, 2);
 }

@@ -161,7 +161,7 @@ fn prop_batches_are_homogeneous() {
                          batch: &[Request]| {
             for r in batch {
                 assert_eq!(r.variant, key.variant, "case {case}");
-                assert_eq!(r.len_bucket(), key.len_bucket, "case {case}");
+                assert_eq!(r.len_bucket(), key.n_bucket, "case {case}");
             }
         };
         for i in 0..50 {
