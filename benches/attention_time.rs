@@ -1,43 +1,88 @@
 //! Bench behind Table 1 and Figure 9: Flash2 vs DistrAttention across
 //! sequence lengths and head dims on the Rust engines.
+//!
+//! Besides the stdout lines, writes the full per-variant ns/call grid to
+//! `BENCH_attention.json` at the repo root — the machine-readable perf
+//! trajectory diffed across PRs.
 
 use distr_attention::attention::{
     distr_attention, flash2_attention, standard_attention, DistrParams, FlashParams,
 };
-use distr_attention::util::bench::{bench, BenchConfig};
+use distr_attention::util::bench::{bench_stats, BenchConfig, JsonReport};
+use distr_attention::util::json::Value;
 use distr_attention::workload::qkv_uniform;
 
 fn main() {
     let cfg = BenchConfig::from_args();
+    let mut report = JsonReport::new("attention_time");
     let mut summary = Vec::new();
     for &n in &[1024usize, 2048, 4096] {
         for &d in &[64usize, 128] {
             let (q, k, v) = qkv_uniform(n, d, 1);
             let fp = FlashParams { block_l: 128, block_m: 64 };
-            let t_flash = bench(&cfg, "attention", &format!("flash2_d{d}/{n}"), || {
+            let id = format!("flash2_d{d}/{n}");
+            let s_flash = bench_stats(&cfg, "attention", &id, || {
                 std::hint::black_box(flash2_attention(&q, &k, &v, &fp, false));
             });
+            report.record_with(
+                "attention",
+                &id,
+                &s_flash,
+                vec![
+                    ("variant", Value::string("flash2")),
+                    ("n", Value::number(n as f64)),
+                    ("d", Value::number(d as f64)),
+                    ("group", Value::number(1.0)),
+                ],
+            );
+            let t_flash = s_flash.median.as_secs_f64();
             for &group in &[2usize, 4] {
                 if d / group < 16 {
                     continue;
                 }
                 let dp = DistrParams { flash: fp, group, ..Default::default() };
-                let t_distr = bench(&cfg, "attention", &format!("distr_d{d}_g{group}/{n}"), || {
+                let id = format!("distr_d{d}_g{group}/{n}");
+                let s_distr = bench_stats(&cfg, "attention", &id, || {
                     std::hint::black_box(distr_attention(&q, &k, &v, &dp, false));
                 });
+                report.record_with(
+                    "attention",
+                    &id,
+                    &s_distr,
+                    vec![
+                        ("variant", Value::string("distr")),
+                        ("n", Value::number(n as f64)),
+                        ("d", Value::number(d as f64)),
+                        ("group", Value::number(group as f64)),
+                    ],
+                );
                 if group == 2 {
-                    summary.push((n, d, t_flash / t_distr));
+                    summary.push((n, d, t_flash / s_distr.median.as_secs_f64()));
                 }
             }
         }
     }
     // standard attention reference point (O(N^2) memory)
     let (q, k, v) = qkv_uniform(1024, 64, 2);
-    bench(&cfg, "attention", "standard_d64/1024", || {
+    let s_std = bench_stats(&cfg, "attention", "standard_d64/1024", || {
         std::hint::black_box(standard_attention(&q, &k, &v, false));
     });
+    report.record_with(
+        "attention",
+        "standard_d64/1024",
+        &s_std,
+        vec![
+            ("variant", Value::string("standard")),
+            ("n", Value::number(1024.0)),
+            ("d", Value::number(64.0)),
+            ("group", Value::number(1.0)),
+        ],
+    );
     println!("\nspeedup ours(G*=2) vs flash2 (paper: up to 1.37x):");
     for (n, d, s) in summary {
         println!("  N={n:5} d={d:3}: {s:.2}x");
     }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_attention.json");
+    report.write(std::path::Path::new(path)).expect("write BENCH_attention.json");
+    println!("\nwrote {path}");
 }

@@ -3,7 +3,7 @@
 //! `python/compile/kernels/baselines.py` — see that module's docstring
 //! for the fidelity notes.
 
-use crate::tensor::{dot, matmul, matmul_bt, softmax_rows, Matrix};
+use crate::tensor::{dot, matmul, matmul_bt, microkernel, softmax_rows, Matrix};
 
 fn l2_normalize_rows(m: &Matrix) -> Matrix {
     let mut out = m.clone();
@@ -18,29 +18,39 @@ fn l2_normalize_rows(m: &Matrix) -> Matrix {
 }
 
 /// Hydra attention [3]: O = φ(Q) ⊙ Σ(φ(K) ⊙ V); O(N·d), no attention matrix.
+#[allow(clippy::needless_range_loop)]
 pub fn hydra_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
     let qn = l2_normalize_rows(q);
     let kn = l2_normalize_rows(k);
     let (n, d) = (q.rows, q.cols);
     let mut out = Matrix::zeros(n, d);
+    // row-slice form so the elementwise loops autovectorize
     if causal {
         let mut kv = vec![0.0f32; d];
         for r in 0..n {
+            let krow = kn.row(r);
+            let vrow = v.row(r);
+            let qrow = qn.row(r);
+            let orow = out.row_mut(r);
             for c in 0..d {
-                kv[c] += kn.at(r, c) * v.at(r, c);
-                *out.at_mut(r, c) = qn.at(r, c) * kv[c];
+                kv[c] += krow[c] * vrow[c];
+                orow[c] = qrow[c] * kv[c];
             }
         }
     } else {
         let mut kv = vec![0.0f32; d];
         for r in 0..k.rows {
+            let krow = kn.row(r);
+            let vrow = v.row(r);
             for c in 0..d {
-                kv[c] += kn.at(r, c) * v.at(r, c);
+                kv[c] += krow[c] * vrow[c];
             }
         }
         for r in 0..n {
+            let qrow = qn.row(r);
+            let orow = out.row_mut(r);
             for c in 0..d {
-                *out.at_mut(r, c) = qn.at(r, c) * kv[c];
+                orow[c] = qrow[c] * kv[c];
             }
         }
     }
@@ -70,30 +80,34 @@ pub fn flatten_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Ma
     let kf = phi(k);
     let mut out = Matrix::zeros(n, d);
     if causal {
-        // running (d×d) KV summary + running z
+        // running (d×d) KV summary + running z. Branch-free rank-1
+        // update and a row-major numerator sweep so both inner loops
+        // autovectorize (the old `ka != 0.0` skip defeated that).
         let mut kv = vec![0.0f32; d * d];
         let mut z = vec![0.0f32; d];
+        let mut num = vec![0.0f32; d];
         for r in 0..n {
             let krow = kf.row(r);
             let vrow = v.row(r);
-            for a in 0..d {
-                let ka = krow[a];
-                if ka != 0.0 {
-                    for b in 0..d {
-                        kv[a * d + b] += ka * vrow[b];
-                    }
+            for (a, &ka) in krow.iter().enumerate() {
+                let kvrow = &mut kv[a * d..(a + 1) * d];
+                for (kb, &vb) in kvrow.iter_mut().zip(vrow) {
+                    *kb += ka * vb;
                 }
-                z[a] += krow[a];
+                z[a] += ka;
             }
             let qrow = qf.row(r);
             let den = dot(qrow, &z) + 1e-6;
-            let orow = out.row_mut(r);
-            for b in 0..d {
-                let mut num = 0.0;
-                for a in 0..d {
-                    num += qrow[a] * kv[a * d + b];
+            num.fill(0.0);
+            for (a, &qa) in qrow.iter().enumerate() {
+                let kvrow = &kv[a * d..(a + 1) * d];
+                for (nb, &kb) in num.iter_mut().zip(kvrow) {
+                    *nb += qa * kb;
                 }
-                orow[b] = num / den;
+            }
+            let orow = out.row_mut(r);
+            for (o, &nb) in orow.iter_mut().zip(&num) {
+                *o = nb / den;
             }
         }
     } else {
@@ -176,32 +190,41 @@ pub fn hyper_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool, seed: u
     let weight = if n_samples > 0 { n as f32 / n_samples as f32 } else { 0.0 };
 
     let mut out = Matrix::zeros(n, d);
+    // block-diagonal scores go through the packed register-tile GEMM
+    // (one ≤16×16 tile per block); buffers are hoisted across blocks
+    let mut qb_pack = Vec::new();
+    let mut kb_pack = Vec::new();
+    let mut s_tile = Vec::new();
+    let mut res_scores = vec![0.0f32; samples.len()];
     for b0 in (0..n).step_by(block) {
         let rows = &order[b0..(b0 + block).min(n)];
-        for &r in rows.iter() {
-            let mut scores = vec![f32::NEG_INFINITY; rows.len()];
-            for (ci, &c) in rows.iter().enumerate() {
-                if causal && c > r {
-                    continue;
+        let len = rows.len();
+        microkernel::pack_rows_gather(q, rows, &mut qb_pack);
+        microkernel::pack_rows_gather(k, rows, &mut kb_pack);
+        s_tile.resize(len * len, 0.0);
+        microkernel::gemm_bt_tile(&qb_pack, &kb_pack, len, len, d, scale, &mut s_tile, len);
+        for (ri, &r) in rows.iter().enumerate() {
+            let scores = &mut s_tile[ri * len..(ri + 1) * len];
+            if causal {
+                for (s, &c) in scores.iter_mut().zip(rows.iter()) {
+                    if c > r {
+                        *s = f32::NEG_INFINITY;
+                    }
                 }
-                scores[ci] = dot(q.row(r), k.row(c)) * scale;
             }
             let mut max = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
             // residual scores (non-causal only) merge under the same max
-            let res_scores: Vec<f32> = samples
-                .iter()
-                .map(|&c| dot(q.row(r), k.row(c)) * scale)
-                .collect();
-            for &s in &res_scores {
-                max = max.max(s);
+            for (s, &c) in res_scores.iter_mut().zip(&samples) {
+                *s = dot(q.row(r), k.row(c)) * scale;
+                max = max.max(*s);
             }
             let mut den = 0.0;
             let orow = out.row_mut(r);
-            for (ci, &c) in rows.iter().enumerate() {
-                if scores[ci] == f32::NEG_INFINITY {
+            for (&s, &c) in scores.iter().zip(rows.iter()) {
+                if s == f32::NEG_INFINITY {
                     continue;
                 }
-                let p = (scores[ci] - max).exp();
+                let p = (s - max).exp();
                 den += p;
                 for (o, &vv) in orow.iter_mut().zip(v.row(c)) {
                     *o += p * vv;

@@ -1,11 +1,20 @@
 //! FlashAttention-2 schedule in Rust (paper §2.2.2, Fig. 3).
 //!
-//! Outer loop over Q blocks (parallelized across threads — the paper's
-//! threadblocks), inner sequential loop over K/V blocks with the online
-//! softmax. S and P exist only as an `l × m` scratch tile per thread,
-//! never as N×N — the memory behaviour the paper's I/O model assumes.
+//! Outer loop over Q blocks (parallelized across the persistent worker
+//! pool — the paper's threadblocks), inner sequential loop over K/V
+//! blocks with the online softmax. S and P exist only as an `l × m`
+//! scratch tile per thread, never as N×N — the memory behaviour the
+//! paper's I/O model assumes.
+//!
+//! The compute core runs on [`microkernel`]'s packed 8×8 register-tile
+//! kernels: the Q block is packed once per outer step, each K block is
+//! packed per inner step, `S = Q·Kᵀ` is one `gemm_bt_tile`, and the PV
+//! update is one `gemm_accum_tile` over the packed P tile instead of a
+//! per-scalar axpy. All buffers live in the per-thread [`TileScratch`],
+//! so the K-block inner loop performs no heap allocation.
 
-use crate::tensor::{dot, Matrix};
+use crate::tensor::microkernel::{self, TileScratch};
+use crate::tensor::Matrix;
 
 /// Block sizes: `l` rows of Q per outer step, `m` rows of K/V per inner
 /// step (the paper's (l, m); see `simulator::block_select` for tuning).
@@ -19,6 +28,111 @@ impl Default for FlashParams {
     fn default() -> Self {
         Self { block_l: 64, block_m: 64 }
     }
+}
+
+/// One online-softmax + PV step over the current `bl × bm` score tile in
+/// `ws.s_tile` (already scaled and causally masked). Rescales the
+/// running output, turns the tile into P in place, packs it, and
+/// accumulates `P · V_blk` into `o_chunk` via the register-tile GEMM.
+/// Shared by the flash2 and distr engines.
+pub(super) fn online_softmax_pv_step(
+    v: &Matrix,
+    k0: usize,
+    bl: usize,
+    bm: usize,
+    ws: &mut TileScratch,
+    o_chunk: &mut [f32],
+) {
+    let d = v.cols;
+    for r in 0..bl {
+        let srow = &mut ws.s_tile[r * bm..(r + 1) * bm];
+        let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let m_new = ws.m_i[r].max(row_max);
+        if m_new == f32::NEG_INFINITY {
+            // fully masked so far: contribute zero P, leave state alone
+            for s in srow.iter_mut() {
+                *s = 0.0;
+            }
+            continue;
+        }
+        let alpha = if ws.m_i[r] == f32::NEG_INFINITY { 0.0 } else { (ws.m_i[r] - m_new).exp() };
+        if alpha != 1.0 {
+            for x in &mut o_chunk[r * d..(r + 1) * d] {
+                *x *= alpha;
+            }
+        }
+        let mut p_sum = 0.0f32;
+        for s in srow.iter_mut() {
+            let pv = (*s - m_new).exp();
+            *s = pv;
+            p_sum += pv;
+        }
+        ws.l_i[r] = alpha * ws.l_i[r] + p_sum;
+        ws.m_i[r] = m_new;
+    }
+    microkernel::pack_rows(&ws.s_tile, bl, bm, bm, &mut ws.p_pack);
+    microkernel::pack_cols(&v.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.c_pack);
+    microkernel::gemm_accum_tile(&ws.p_pack, &ws.c_pack, bl, d, bm, o_chunk, d);
+}
+
+/// Divide each accumulated output row by its softmax denominator.
+pub(super) fn normalize_block(ws: &TileScratch, bl: usize, d: usize, o_chunk: &mut [f32]) {
+    for r in 0..bl {
+        let denom = if ws.l_i[r] == 0.0 { 1.0 } else { ws.l_i[r] };
+        for x in &mut o_chunk[r * d..(r + 1) * d] {
+            *x /= denom;
+        }
+    }
+}
+
+/// Reset the per-block online-softmax state.
+pub(super) fn reset_state(ws: &mut TileScratch, bl: usize, bm: usize) {
+    ws.m_i.clear();
+    ws.m_i.resize(bl, f32::NEG_INFINITY);
+    ws.l_i.clear();
+    ws.l_i.resize(bl, 0.0);
+    ws.s_tile.resize(bl * bm, 0.0);
+}
+
+/// The per-Q-block body: pack Q once, then sweep K/V blocks through the
+/// tile kernels with the online softmax. Factored out so the scratch
+/// discipline (no allocation inside the K loop) is unit-testable.
+#[allow(clippy::too_many_arguments)]
+fn flash2_block(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    bl: usize,
+    bm: usize,
+    causal: bool,
+    iq: usize,
+    ws: &mut TileScratch,
+    o_chunk: &mut [f32],
+) {
+    let d = q.cols;
+    let n_kv = k.rows;
+    let scale = 1.0 / (d as f32).sqrt();
+    let q0 = iq * bl;
+    microkernel::pack_rows(&q.data[q0 * d..(q0 + bl) * d], bl, d, d, &mut ws.a_pack);
+    reset_state(ws, bl, bm);
+    let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
+    for jk in 0..n_blocks {
+        let k0 = jk * bm;
+        microkernel::pack_rows(&k.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.b_pack);
+        microkernel::gemm_bt_tile(&ws.a_pack, &ws.b_pack, bl, bm, d, scale, &mut ws.s_tile, bm);
+        if causal {
+            // the causal mask is a per-row column bound, not a
+            // per-element branch
+            for r in 0..bl {
+                let visible = (q0 + r + 1).saturating_sub(k0).min(bm);
+                for s in &mut ws.s_tile[r * bm + visible..(r + 1) * bm] {
+                    *s = f32::NEG_INFINITY;
+                }
+            }
+        }
+        online_softmax_pv_step(v, k0, bl, bm, ws, o_chunk);
+    }
+    normalize_block(ws, bl, d, o_chunk);
 }
 
 /// Exact attention, FlashAttention-2 schedule. `q: (N, d)`, `k/v: (Nk, d)`.
@@ -38,70 +152,13 @@ pub fn flash2_attention(
     if causal {
         assert_eq!(bl % bm, 0, "causal needs l % m == 0");
     }
-    let scale = 1.0 / (d as f32).sqrt();
 
     let mut out = Matrix::zeros(n, d);
     crate::util::parallel::par_chunks_mut(&mut out.data, bl * d, |iq, o_chunk| {
-            let q0 = iq * bl;
-            // per-thread online-softmax state
-            let mut m_i = vec![f32::NEG_INFINITY; bl];
-            let mut l_i = vec![0.0f32; bl];
-            let mut s_tile = vec![0.0f32; bl * bm];
-            let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
-            for jk in 0..n_blocks {
-                let k0 = jk * bm;
-                // S tile = Q_blk K_blk^T * scale. The causal mask is a
-                // per-row column bound, not a per-element branch.
-                for r in 0..bl {
-                    let qrow = q.row(q0 + r);
-                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
-                    let visible = if causal { (q0 + r + 1).saturating_sub(k0).min(bm) } else { bm };
-                    for (c, s) in srow[..visible].iter_mut().enumerate() {
-                        *s = dot(qrow, k.row(k0 + c)) * scale;
-                    }
-                    for s in srow[visible..].iter_mut() {
-                        *s = f32::NEG_INFINITY;
-                    }
-                }
-                // online rescale + accumulate PV
-                for r in 0..bl {
-                    let srow = &mut s_tile[r * bm..(r + 1) * bm];
-                    let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-                    let m_new = m_i[r].max(row_max);
-                    if m_new == f32::NEG_INFINITY {
-                        continue; // fully masked so far
-                    }
-                    let alpha = if m_i[r] == f32::NEG_INFINITY { 0.0 } else { (m_i[r] - m_new).exp() };
-                    let orow = &mut o_chunk[r * d..(r + 1) * d];
-                    if alpha != 1.0 {
-                        for x in orow.iter_mut() {
-                            *x *= alpha;
-                        }
-                    }
-                    let mut p_sum = 0.0f32;
-                    for (c, s) in srow.iter_mut().enumerate() {
-                        let pv = (*s - m_new).exp();
-                        *s = pv;
-                        p_sum += pv;
-                        if pv != 0.0 {
-                            let vrow = v.row(k0 + c);
-                            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                                *o += pv * vv;
-                            }
-                        }
-                    }
-                    l_i[r] = alpha * l_i[r] + p_sum;
-                    m_i[r] = m_new;
-                }
-            }
-            // final normalization
-            for r in 0..bl {
-                let denom = if l_i[r] == 0.0 { 1.0 } else { l_i[r] };
-                for x in &mut o_chunk[r * d..(r + 1) * d] {
-                    *x /= denom;
-                }
-            }
+        microkernel::with_scratch(|ws| {
+            flash2_block(q, k, v, bl, bm, causal, iq, ws, o_chunk);
         });
+    });
     out
 }
 
@@ -167,5 +224,82 @@ mod tests {
         let got = flash2_attention(&q, &k, &v, &FlashParams { block_l: 16, block_m: 16 }, false);
         let want = standard_attention(&q, &k, &v, false);
         assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn ragged_register_tiles_match_standard() {
+        // block sizes and head dim deliberately not multiples of MR/NR
+        let q = Matrix::randn(60, 20, 15);
+        let k = Matrix::randn(60, 20, 16);
+        let v = Matrix::randn(60, 20, 17);
+        let p = FlashParams { block_l: 20, block_m: 10 };
+        for causal in [false, true] {
+            let got = flash2_attention(&q, &k, &v, &p, causal);
+            let want = standard_attention(&q, &k, &v, causal);
+            assert!(got.max_abs_diff(&want) < 1e-5, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn kernel_parity_scratch_reused_across_k_blocks() {
+        // the acceptance contract: no per-iteration heap allocation in
+        // the K-block inner loop. Run a multi-K-block Q block twice on
+        // one scratch and assert every buffer kept its allocation.
+        let n = 64;
+        let d = 24;
+        let (bl, bm) = (16, 16);
+        let q = Matrix::randn(n, d, 20);
+        let k = Matrix::randn(n, d, 21);
+        let v = Matrix::randn(n, d, 22);
+        let mut ws = TileScratch::default();
+        let mut o = vec![0.0f32; bl * d];
+        flash2_block(&q, &k, &v, bl, bm, false, 0, &mut ws, &mut o);
+        let ptrs = [
+            ws.a_pack.as_ptr(),
+            ws.b_pack.as_ptr(),
+            ws.c_pack.as_ptr(),
+            ws.p_pack.as_ptr(),
+            ws.s_tile.as_ptr(),
+            ws.m_i.as_ptr(),
+            ws.l_i.as_ptr(),
+        ];
+        let caps = [
+            ws.a_pack.capacity(),
+            ws.b_pack.capacity(),
+            ws.c_pack.capacity(),
+            ws.p_pack.capacity(),
+            ws.s_tile.capacity(),
+            ws.m_i.capacity(),
+            ws.l_i.capacity(),
+        ];
+        for iq in 0..(n / bl) {
+            o.fill(0.0);
+            flash2_block(&q, &k, &v, bl, bm, false, iq, &mut ws, &mut o);
+        }
+        assert_eq!(
+            ptrs,
+            [
+                ws.a_pack.as_ptr(),
+                ws.b_pack.as_ptr(),
+                ws.c_pack.as_ptr(),
+                ws.p_pack.as_ptr(),
+                ws.s_tile.as_ptr(),
+                ws.m_i.as_ptr(),
+                ws.l_i.as_ptr(),
+            ],
+            "scratch buffer reallocated inside the block loop"
+        );
+        assert_eq!(
+            caps,
+            [
+                ws.a_pack.capacity(),
+                ws.b_pack.capacity(),
+                ws.c_pack.capacity(),
+                ws.p_pack.capacity(),
+                ws.s_tile.capacity(),
+                ws.m_i.capacity(),
+                ws.l_i.capacity(),
+            ]
+        );
     }
 }

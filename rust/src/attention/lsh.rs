@@ -41,21 +41,29 @@ pub fn hash_columns(block: &Matrix, proj: &Matrix, center: bool) -> Vec<u32> {
             row_mean[r] = block.row(r).iter().sum::<f32>() / d as f32;
         }
     }
-    let mut hashes = vec![0u32; d];
-    // projected[p][c] = sum_r proj[p][r] * (block[r][c] - mean[r])
-    for p in 0..N_PRIME {
-        let prow = proj.row(p);
-        let mut acc = vec![0.0f32; d];
-        for r in 0..l {
-            let w = prow[r];
-            let brow = block.row(r);
-            let mu = row_mean[r];
-            for c in 0..d {
-                acc[c] += w * (brow[c] - mu);
+    // projected[p][c] = sum_r proj[p][r] * (block[r][c] - mean[r]).
+    // One hoisted (N' × d) accumulator instead of a fresh Vec per
+    // projection, and the block is streamed exactly once (r outer):
+    // the 16 accumulator rows stay cache-resident while each block row
+    // is broadcast across all projections. The per-(p, c) accumulation
+    // order over r is unchanged, so hashes are bit-identical to the
+    // old per-projection loop.
+    let mut acc = vec![0.0f32; N_PRIME * d];
+    for r in 0..l {
+        let brow = block.row(r);
+        let mu = row_mean[r];
+        for p in 0..N_PRIME {
+            let w = proj.at(p, r);
+            let arow = &mut acc[p * d..(p + 1) * d];
+            for (a, &x) in arow.iter_mut().zip(brow) {
+                *a += w * (x - mu);
             }
         }
-        for c in 0..d {
-            if acc[c] > 0.0 {
+    }
+    let mut hashes = vec![0u32; d];
+    for p in 0..N_PRIME {
+        for (c, &a) in acc[p * d..(p + 1) * d].iter().enumerate() {
+            if a > 0.0 {
                 hashes[c] |= 1 << p;
             }
         }

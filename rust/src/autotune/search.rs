@@ -58,15 +58,53 @@ pub fn group_candidates(variant: Variant, d: usize) -> Vec<usize> {
         .collect()
 }
 
+/// Panel-packing read+write bytes per packed f32 element of the live
+/// register-tile kernels (`tensor::microkernel`): each element is read
+/// from the source layout and written into the panel once.
+const PACK_RW_BYTES: f64 = 8.0;
+
+/// Effective packing bandwidth relative to the card's DRAM bandwidth.
+/// Panels are sized to stay cache-resident (an 8×8 register tile over
+/// ≤512-row blocks), so packing streams at a small multiple of memory
+/// bandwidth rather than at DRAM speed.
+const PACK_BW_SCALE: f64 = 4.0;
+
+/// Per-pass panel-packing seconds of the tile kernels at `(l, m)`: per
+/// Q block the Q panel is sampled/packed once (reading the full `l·d`
+/// block), and per (Q, K) block pair the kernels fuse/pack the K block
+/// and pack the V block (each reading `m·d` — fusion reads every source
+/// column whatever G* is, so the dominant packing traffic is
+/// G*-independent) plus the P tile (`l·m`). This is the overhead the
+/// scalar engines didn't pay, so the analytic score must carry it for
+/// tuned `(l, m, G*)` selections to stay honest against the rewritten
+/// hot path: it rewards larger `l` (Q packing amortized over more inner
+/// iterations) slightly beyond the pure I/O model, and being
+/// G*-independent it never perturbs the exact-vs-sampled trade-off the
+/// FLOP model owns.
+fn pack_cost(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize) -> f64 {
+    let (nf, df, lf, mf) = (n as f64, d as f64, l as f64, m as f64);
+    let q_blocks = (nf / lf).max(1.0);
+    let k_blocks = (nf / mf).max(1.0);
+    let pack_elems = q_blocks * (lf * df + k_blocks * (2.0 * mf * df + lf * mf));
+    pack_elems * PACK_RW_BYTES / (gpu.mem_bw_gbps * 1e9 * PACK_BW_SCALE)
+}
+
 /// Estimated seconds for one attention pass at `(l, m, G*)` — the
 /// paper's cost model ([`block_select::cost_model`]) with the
 /// tensor-core term rescaled to DistrAttention's d/G* contraction
-/// ([`io_model::flops_distr`]). `g == 1` reduces to the exact model.
+/// ([`io_model::flops_distr`]), plus the tile kernels' panel-packing
+/// term ([`pack_cost`], recalibrated for the register-blocked
+/// `tensor::microkernel` compute core). `g == 1` reduces to the exact
+/// model plus packing. The serving grid is pow2 ≥ 16, so every tile is
+/// a whole number of 8×8 register tiles and no ragged-tile waste term
+/// is needed.
 pub fn distr_cost(gpu: &GpuSpec, n: usize, d: usize, l: usize, m: usize, g: usize) -> f64 {
-    if g <= 1 {
-        return block_select::cost_model(gpu, n, d, l, m);
-    }
-    block_select::cost_with_flops(gpu, n, d, l, m, io_model::flops_distr(n, d, g, l))
+    let base = if g <= 1 {
+        block_select::cost_model(gpu, n, d, l, m)
+    } else {
+        block_select::cost_with_flops(gpu, n, d, l, m, io_model::flops_distr(n, d, g, l))
+    };
+    base + pack_cost(gpu, n, d, l, m)
 }
 
 /// Snap a tile size down to the nearest serving-grid value (pow2,
@@ -208,10 +246,31 @@ mod tests {
     }
 
     #[test]
-    fn distr_cost_reduces_to_exact_at_g1() {
+    fn distr_cost_reduces_to_exact_plus_packing_at_g1() {
+        // g=1 scores the exact FLOP model plus the (G*-independent)
+        // tile-kernel packing overhead
         let g = GpuSpec::RTX4090;
         let exact = block_select::cost_model(&g, 4096, 64, 128, 64);
-        assert_eq!(distr_cost(&g, 4096, 64, 128, 64, 1), exact);
+        let pack = pack_cost(&g, 4096, 64, 128, 64);
+        assert!(pack > 0.0);
+        assert_eq!(distr_cost(&g, 4096, 64, 128, 64, 1), exact + pack);
+    }
+
+    #[test]
+    fn pack_term_is_group_independent() {
+        // fusion reads every source column whatever G* is; only the
+        // FLOP model may move the exact-vs-sampled trade-off
+        let g = GpuSpec::RTX4090;
+        let c2 = distr_cost(&g, 4096, 128, 128, 64, 2);
+        let base2 = block_select::cost_with_flops(
+            &g,
+            4096,
+            128,
+            128,
+            64,
+            io_model::flops_distr(4096, 128, 2, 128),
+        );
+        assert_eq!(c2, base2 + pack_cost(&g, 4096, 128, 128, 64));
     }
 
     #[test]

@@ -95,6 +95,11 @@ impl Matrix {
     /// the paper's Table 3/4 metric.
     pub fn rel_err_stats(&self, truth: &Matrix) -> (f32, f32, f32) {
         assert_eq!((self.rows, self.cols), (truth.rows, truth.cols));
+        if self.data.is_empty() {
+            // degenerate shape: no elements, no error (avoid min=+INF
+            // and a 0/0 NaN mean)
+            return (0.0, 0.0, 0.0);
+        }
         let mut min = f32::INFINITY;
         let mut max = 0.0f32;
         let mut sum = 0.0f64;
@@ -156,6 +161,18 @@ mod tests {
         assert!(min < 1e-6);
         assert!((max - 0.1).abs() < 1e-5);
         assert!((mean - 0.05).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rel_err_stats_empty_is_finite() {
+        // regression: the unguarded fold returned min=+INF and mean=NaN
+        // on empty matrices
+        for (r, c) in [(0, 0), (0, 5), (3, 0)] {
+            let a = Matrix::zeros(r, c);
+            let t = Matrix::zeros(r, c);
+            let (min, max, mean) = a.rel_err_stats(&t);
+            assert_eq!((min, max, mean), (0.0, 0.0, 0.0), "({r},{c})");
+        }
     }
 
     #[test]

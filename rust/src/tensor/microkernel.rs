@@ -1,0 +1,413 @@
+//! Register-blocked GEMM microkernels on packed panels — the compute
+//! core under every attention engine and the blocked matmuls.
+//!
+//! # Why this exists
+//!
+//! The original engines computed every score tile as row-by-row scalar
+//! `dot` calls and accumulated PV one axpy at a time. That form forces
+//! LLVM to re-load operands per element and leaves the FMA pipelines
+//! idle. This module restructures the hot contraction the way
+//! FlashAttention-2 structures its warps: all operands are first packed
+//! into contiguous *panels*, then an `MR×NR` register tile of
+//! accumulators is swept down the shared k dimension, so the inner loop
+//! is a branch-free, bounds-check-free sequence of `MR·NR` = 64
+//! independent fused multiply-adds per k step that LLVM autovectorizes
+//! (one 8-wide vector per accumulator row on AVX2, two 4-wide on NEON).
+//!
+//! # Tile size: why 8×8
+//!
+//! * 8×8 f32 accumulators = 64 scalars = 8 YMM registers on AVX2 (or 16
+//!   NEON quads), leaving registers free for the A broadcast and the B
+//!   panel load — no spills inside the k loop;
+//! * 8 divides every block size the autotuner emits (the serving grid is
+//!   pow2 ≥ 16), so tuned shapes never pay ragged-tile waste;
+//! * ragged shapes still work: panels are zero-padded up to the tile
+//!   quantum and the write-back only touches the valid region.
+//!
+//! # Packing layout
+//!
+//! * [`pack_rows`] — row panels: source rows grouped `MR` at a time,
+//!   stored k-major (`panel[kk*MR + ri]`), so the kernel loads one
+//!   contiguous `MR`-vector of A per k step. Used for the A side of both
+//!   kernels and for the B side of `A·Bᵀ` (a row of B *is* a column of
+//!   Bᵀ).
+//! * [`pack_cols`] — column panels: source columns grouped `NR` at a
+//!   time, stored k-major (`panel[kk*NR + ci]`). Used for the B side of
+//!   `A·B` (the PV accumulation and the dense matmul).
+//! * [`pack_rows_gather`] — row panels over an arbitrary row index list
+//!   (HyperAttention's LSH-sorted blocks).
+//!
+//! Packing is O(panel) work against the kernels' O(panel · other-dim)
+//! compute, and every buffer lives in a reusable [`TileScratch`] so the
+//! steady state performs no heap allocation at all (see
+//! `scratch_buffers_reused_without_realloc`).
+
+use std::cell::RefCell;
+
+use super::Matrix;
+
+/// Register-tile rows (A side).
+pub const MR: usize = 8;
+/// Register-tile columns (B side).
+pub const NR: usize = 8;
+
+/// Reusable per-thread buffers for the tile kernels and the attention
+/// engines' block loops. All buffers are grow-only `Vec`s resized in
+/// place, so after the first block of a given shape the inner loops
+/// perform zero heap allocation.
+#[derive(Default)]
+pub struct TileScratch {
+    /// packed A panels (Q block / P tile / matmul row panel)
+    pub a_pack: Vec<f32>,
+    /// packed B panels for `A·Bᵀ` (K block rows)
+    pub b_pack: Vec<f32>,
+    /// packed B panels for `A·B` (V block columns)
+    pub c_pack: Vec<f32>,
+    /// packed P panels for the PV accumulation
+    pub p_pack: Vec<f32>,
+    /// the l×m score tile
+    pub s_tile: Vec<f32>,
+    /// online-softmax running max per Q row
+    pub m_i: Vec<f32>,
+    /// online-softmax running sum per Q row
+    pub l_i: Vec<f32>,
+    /// DistrAttention: sampled Q estimates (bl × d/G*)
+    pub q_s: Vec<f32>,
+    /// DistrAttention: fused K rows (rows × d/G*)
+    pub k_f: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch::default());
+}
+
+/// Run `f` with this thread's tile scratch. The closure must not call
+/// back into another `with_scratch` user (the engines' block bodies are
+/// leaves, so this holds by construction).
+pub fn with_scratch<R>(f: impl FnOnce(&mut TileScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Pack `rows × k` (row-major, row stride `lda`) into MR-row panels:
+/// `dst[panel][kk*MR + ri] = src[(panel*MR + ri)*lda + kk]`, zero-padded
+/// to a whole number of panels.
+pub fn pack_rows(src: &[f32], rows: usize, k: usize, lda: usize, dst: &mut Vec<f32>) {
+    let mp = rows.div_ceil(MR).max(1);
+    dst.resize(mp * MR * k, 0.0);
+    for rp in 0..mp {
+        let panel = &mut dst[rp * MR * k..(rp + 1) * MR * k];
+        for ri in 0..MR {
+            let r = rp * MR + ri;
+            if r < rows {
+                let row = &src[r * lda..r * lda + k];
+                for (kk, &x) in row.iter().enumerate() {
+                    panel[kk * MR + ri] = x;
+                }
+            } else {
+                for kk in 0..k {
+                    panel[kk * MR + ri] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack `k × cols` (row-major, row stride `ldb`) into NR-column panels:
+/// `dst[panel][kk*NR + ci] = src[kk*ldb + panel*NR + ci]`, zero-padded.
+pub fn pack_cols(src: &[f32], k: usize, cols: usize, ldb: usize, dst: &mut Vec<f32>) {
+    let np = cols.div_ceil(NR).max(1);
+    dst.resize(np * NR * k, 0.0);
+    for cp in 0..np {
+        let panel = &mut dst[cp * NR * k..(cp + 1) * NR * k];
+        let c0 = cp * NR;
+        let cmax = (cols.saturating_sub(c0)).min(NR);
+        for kk in 0..k {
+            let prow = &mut panel[kk * NR..kk * NR + NR];
+            prow[..cmax].copy_from_slice(&src[kk * ldb + c0..kk * ldb + c0 + cmax]);
+            for x in &mut prow[cmax..] {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// [`pack_rows`] over a gathered row index list of `m` (HyperAttention's
+/// sorted blocks operate on non-contiguous rows).
+pub fn pack_rows_gather(m: &Matrix, idx: &[usize], dst: &mut Vec<f32>) {
+    let rows = idx.len();
+    let k = m.cols;
+    let mp = rows.div_ceil(MR).max(1);
+    dst.resize(mp * MR * k, 0.0);
+    for rp in 0..mp {
+        let panel = &mut dst[rp * MR * k..(rp + 1) * MR * k];
+        for ri in 0..MR {
+            let r = rp * MR + ri;
+            if r < rows {
+                for (kk, &x) in m.row(idx[r]).iter().enumerate() {
+                    panel[kk * MR + ri] = x;
+                }
+            } else {
+                for kk in 0..k {
+                    panel[kk * MR + ri] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[r][c] += a_panel[kk][r] * b_panel[kk][c]`
+/// over the shared k dimension. `a` is one MR-row panel, `b` one
+/// NR-row/column panel, both k-major. The `chunks_exact` bounds are
+/// compile-time constants, so the body lowers to pure FMAs.
+#[inline(always)]
+fn kernel_tile(a: &[f32], b: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in a.chunks_exact(MR).take(k).zip(b.chunks_exact(NR)) {
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = av[r];
+            for (c, accv) in accr.iter_mut().enumerate() {
+                *accv += ar * bv[c];
+            }
+        }
+    }
+}
+
+/// `out[r*ldc + c] = scale * Σ_kk A[r][kk] · B[c][kk]` — the attention
+/// score shape `S = Q·Kᵀ` (and the dense `A·Bᵀ`). `a_pack` from
+/// [`pack_rows`] over A's `m` rows, `bt_pack` from [`pack_rows`] over
+/// B's `n` rows. Overwrites the `m × n` valid region of `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_tile(
+    a_pack: &[f32],
+    bt_pack: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    scale: f32,
+    out: &mut [f32],
+    ldc: usize,
+) {
+    let mp = m.div_ceil(MR);
+    let np = n.div_ceil(NR);
+    for rp in 0..mp {
+        let a = &a_pack[rp * MR * k..(rp + 1) * MR * k];
+        let rmax = (m - rp * MR).min(MR);
+        for cp in 0..np {
+            let b = &bt_pack[cp * NR * k..(cp + 1) * NR * k];
+            let mut acc = [[0.0f32; NR]; MR];
+            kernel_tile(a, b, k, &mut acc);
+            let cmax = (n - cp * NR).min(NR);
+            for (r, accr) in acc.iter().enumerate().take(rmax) {
+                let orow =
+                    &mut out[(rp * MR + r) * ldc + cp * NR..(rp * MR + r) * ldc + cp * NR + cmax];
+                for (o, &v) in orow.iter_mut().zip(&accr[..cmax]) {
+                    *o = v * scale;
+                }
+            }
+        }
+    }
+}
+
+/// `out[r*ldc + c] += Σ_kk A[r][kk] · B[kk][c]` — the PV accumulation
+/// `O += P·V` (and the dense `C += A·B`). `a_pack` from [`pack_rows`]
+/// over A's `m` rows, `b_pack` from [`pack_cols`] over B's `n` columns.
+/// Accumulates into the `m × n` valid region of `out`.
+pub fn gemm_accum_tile(
+    a_pack: &[f32],
+    b_pack: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    ldc: usize,
+) {
+    let mp = m.div_ceil(MR);
+    let np = n.div_ceil(NR);
+    for rp in 0..mp {
+        let a = &a_pack[rp * MR * k..(rp + 1) * MR * k];
+        let rmax = (m - rp * MR).min(MR);
+        for cp in 0..np {
+            let b = &b_pack[cp * NR * k..(cp + 1) * NR * k];
+            let mut acc = [[0.0f32; NR]; MR];
+            kernel_tile(a, b, k, &mut acc);
+            let cmax = (n - cp * NR).min(NR);
+            for (r, accr) in acc.iter().enumerate().take(rmax) {
+                let orow =
+                    &mut out[(rp * MR + r) * ldc + cp * NR..(rp * MR + r) * ldc + cp * NR + cmax];
+                for (o, &v) in orow.iter_mut().zip(&accr[..cmax]) {
+                    *o += v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_bt(a: &Matrix, b: &Matrix, scale: f32) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.rows);
+        for r in 0..a.rows {
+            for c in 0..b.rows {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols {
+                    s += a.at(r, kk) as f64 * b.at(c, kk) as f64;
+                }
+                *out.at_mut(r, c) = s as f32 * scale;
+            }
+        }
+        out
+    }
+
+    fn naive_nn(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for r in 0..a.rows {
+            for c in 0..b.cols {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols {
+                    s += a.at(r, kk) as f64 * b.at(kk, c) as f64;
+                }
+                *out.at_mut(r, c) = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn kernel_parity_gemm_bt_ragged_shapes() {
+        // deliberately not multiples of the 8×8 register tile
+        for (m, n, k, seed) in [(5, 3, 9, 1), (8, 8, 8, 2), (13, 7, 20, 3), (16, 24, 33, 4), (1, 1, 1, 5)] {
+            let a = Matrix::randn(m, k, seed);
+            let b = Matrix::randn(n, k, seed + 50);
+            let mut a_pack = Vec::new();
+            let mut b_pack = Vec::new();
+            pack_rows(&a.data, m, k, k, &mut a_pack);
+            pack_rows(&b.data, n, k, k, &mut b_pack);
+            let mut out = Matrix::zeros(m, n);
+            gemm_bt_tile(&a_pack, &b_pack, m, n, k, 0.5, &mut out.data, n);
+            let want = naive_bt(&a, &b, 0.5);
+            assert!(out.max_abs_diff(&want) < 1e-5, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn kernel_parity_gemm_accum_ragged_shapes() {
+        for (m, n, k, seed) in [(5, 3, 9, 11), (13, 7, 20, 12), (16, 24, 33, 13), (9, 17, 5, 14)] {
+            let a = Matrix::randn(m, k, seed);
+            let b = Matrix::randn(k, n, seed + 50);
+            let mut a_pack = Vec::new();
+            let mut b_pack = Vec::new();
+            pack_rows(&a.data, m, k, k, &mut a_pack);
+            pack_cols(&b.data, k, n, n, &mut b_pack);
+            // accumulate on top of an existing C
+            let base = Matrix::randn(m, n, seed + 100);
+            let mut out = base.clone();
+            gemm_accum_tile(&a_pack, &b_pack, m, n, k, &mut out.data, n);
+            let prod = naive_nn(&a, &b);
+            let mut want = base;
+            for (w, p) in want.data.iter_mut().zip(&prod.data) {
+                *w += p;
+            }
+            assert!(out.max_abs_diff(&want) < 1e-4, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn strided_output_untouched_outside_valid_region() {
+        // out has ldc > n: the pad columns must keep their sentinel
+        let (m, n, k, ldc) = (5, 6, 7, 10);
+        let a = Matrix::randn(m, k, 21);
+        let b = Matrix::randn(n, k, 22);
+        let mut a_pack = Vec::new();
+        let mut b_pack = Vec::new();
+        pack_rows(&a.data, m, k, k, &mut a_pack);
+        pack_rows(&b.data, n, k, k, &mut b_pack);
+        let mut out = vec![f32::NAN; m * ldc];
+        gemm_bt_tile(&a_pack, &b_pack, m, n, k, 1.0, &mut out, ldc);
+        for r in 0..m {
+            for c in 0..ldc {
+                if c < n {
+                    assert!(out[r * ldc + c].is_finite(), "({r},{c})");
+                } else {
+                    assert!(out[r * ldc + c].is_nan(), "pad ({r},{c}) clobbered");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rows_layout_and_padding() {
+        // 3 rows, k=2 → one zero-padded MR panel
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = vec![f32::NAN; 4]; // stale garbage must be overwritten
+        pack_rows(&src, 3, 2, 2, &mut dst);
+        assert_eq!(dst.len(), MR * 2);
+        // kk=0 column: rows 1,3,5 then zero pad
+        assert_eq!(&dst[..MR], &[1.0, 3.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&dst[MR..], &[2.0, 4.0, 6.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_cols_layout_and_padding() {
+        // k=2 rows, 3 cols → one zero-padded NR panel
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = Vec::new();
+        pack_cols(&src, 2, 3, 3, &mut dst);
+        assert_eq!(dst.len(), NR * 2);
+        assert_eq!(&dst[..NR], &[1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&dst[NR..], &[4.0, 5.0, 6.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_gather_matches_contiguous_on_identity() {
+        let m = Matrix::randn(10, 6, 31);
+        let idx: Vec<usize> = (0..10).collect();
+        let mut g = Vec::new();
+        let mut c = Vec::new();
+        pack_rows_gather(&m, &idx, &mut g);
+        pack_rows(&m.data, 10, 6, 6, &mut c);
+        assert_eq!(g, c);
+    }
+
+    #[test]
+    fn scratch_buffers_reused_without_realloc() {
+        let src = vec![1.0f32; 64 * 32];
+        let mut buf = Vec::new();
+        pack_rows(&src, 64, 32, 32, &mut buf);
+        let ptr = buf.as_ptr();
+        let cap = buf.capacity();
+        for _ in 0..10 {
+            pack_rows(&src, 64, 32, 32, &mut buf);
+        }
+        assert_eq!(ptr, buf.as_ptr(), "pack reallocated a same-size buffer");
+        assert_eq!(cap, buf.capacity());
+        // shrinking reuses the allocation too
+        pack_rows(&src, 16, 32, 32, &mut buf);
+        assert_eq!(ptr, buf.as_ptr());
+        assert_eq!(cap, buf.capacity());
+    }
+
+    #[test]
+    fn with_scratch_is_per_thread_and_stable() {
+        let p1 = with_scratch(|s| {
+            s.s_tile.resize(256, 0.0);
+            s.s_tile.as_ptr() as usize
+        });
+        let p2 = with_scratch(|s| s.s_tile.as_ptr() as usize);
+        assert_eq!(p1, p2, "thread-local scratch must persist across calls");
+    }
+
+    #[test]
+    fn nan_propagates_through_kernel() {
+        // 0 × NaN must stay NaN — the kernels have no zero-skip branches
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(1, 2, vec![f32::NAN, 2.0]);
+        let mut a_pack = Vec::new();
+        let mut b_pack = Vec::new();
+        pack_rows(&a.data, 1, 2, 2, &mut a_pack);
+        pack_rows(&b.data, 1, 2, 2, &mut b_pack);
+        let mut out = vec![0.0f32; 1];
+        gemm_bt_tile(&a_pack, &b_pack, 1, 1, 2, 1.0, &mut out, 1);
+        assert!(out[0].is_nan());
+    }
+}

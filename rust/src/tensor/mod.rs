@@ -8,6 +8,7 @@
 //! transformer hot path uses.
 
 mod matrix;
+pub mod microkernel;
 mod ops;
 
 pub use matrix::Matrix;

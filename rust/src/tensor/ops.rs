@@ -1,14 +1,39 @@
-//! Core ops: cache-blocked parallel matmul and the transformer pointwise
-//! pieces. All f32, row-major.
+//! Core ops: packed register-blocked parallel matmul and the transformer
+//! pointwise pieces. All f32, row-major.
+//!
+//! The dense products run on [`microkernel`]'s 8×8 tile kernels: the B
+//! operand is packed once per call (shared read-only across workers),
+//! each worker packs its row panel into thread-local scratch, and the
+//! inner loops are branch-free so 0·NaN propagates IEEE-correctly (the
+//! old scalar path skipped zero multiplicands, silently swallowing
+//! NaN/Inf and defeating vectorization).
 
-use super::Matrix;
+use super::{microkernel, Matrix};
 use crate::util::parallel;
+use std::cell::RefCell;
 
-/// Panel size for the blocked matmul: fits comfortably in L1/L2 and keeps
-/// the inner loop auto-vectorizable. Chosen by the §Perf sweep (see
-/// EXPERIMENTS.md).
+/// Rows of C each parallel work item owns: a multiple of the register
+/// tile ([`microkernel::MR`]) big enough to amortize panel packing.
 const MC: usize = 64;
-const KC: usize = 256;
+
+thread_local! {
+    /// Caller-side reusable buffer for the shared packed-B operand.
+    /// Separate from [`microkernel::with_scratch`]: the caller also
+    /// executes chunks as worker 0 inside the parallel region, where it
+    /// borrows its `TileScratch` — this buffer is borrowed *across*
+    /// that region, so it must be a different cell.
+    static B_PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable B-pack buffer, falling back to a
+/// fresh allocation if the cell is already borrowed (nested matmul
+/// through a pooled job running inline on this thread).
+fn with_b_pack<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    B_PACK.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut buf) => f(&mut buf),
+        Err(_) => f(&mut Vec::new()),
+    })
+}
 
 /// `a (m×k) @ b (k×n)`, parallel over row panels of `a`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -22,48 +47,49 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     assert_eq!((out.rows, out.cols), (a.rows, b.cols));
-    let n = b.cols;
     let k = a.cols;
-    parallel::par_chunks_mut(&mut out.data, MC * n, |panel, chunk| {
+    let n = b.cols;
+    let a_data = &a.data;
+    with_b_pack(|b_pack| {
+        microkernel::pack_cols(&b.data, k, n, n, b_pack);
+        let b_pack = &*b_pack;
+        parallel::par_chunks_mut(&mut out.data, MC * n, |panel, chunk| {
             let r0 = panel * MC;
             let rows = chunk.len() / n;
-            for kk in (0..k).step_by(KC) {
-                let k_end = (kk + KC).min(k);
-                for r in 0..rows {
-                    let arow = &a.data[(r0 + r) * k..(r0 + r + 1) * k];
-                    let orow = &mut chunk[r * n..(r + 1) * n];
-                    for kc in kk..k_end {
-                        let aval = arow[kc];
-                        if aval == 0.0 {
-                            continue;
-                        }
-                        let brow = &b.data[kc * n..(kc + 1) * n];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += aval * bv;
-                        }
-                    }
-                }
-            }
+            microkernel::with_scratch(|ws| {
+                microkernel::pack_rows(&a_data[r0 * k..(r0 + rows) * k], rows, k, k, &mut ws.a_pack);
+                microkernel::gemm_accum_tile(&ws.a_pack, b_pack, rows, n, k, chunk, n);
+            });
         });
+    });
 }
 
 /// `a (m×k) @ b^T (n×k)` — the attention score shape `Q K^T`.
-/// Row-by-row dot products: both operands stream contiguously.
+/// B's rows are packed once as Bᵀ panels; workers sweep register tiles.
 pub fn matmul_bt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols, "QK^T inner dims");
-    let mut out = Matrix::zeros(a.rows, b.rows);
+    let k = a.cols;
     let n = b.rows;
-    parallel::par_chunks_mut(&mut out.data, n, |r, orow| {
-        let arow = a.row(r);
-        for (c, o) in orow.iter_mut().enumerate() {
-            *o = dot(arow, b.row(c));
-        }
+    let mut out = Matrix::zeros(a.rows, n);
+    let a_data = &a.data;
+    with_b_pack(|bt_pack| {
+        microkernel::pack_rows(&b.data, n, k, k, bt_pack);
+        let bt_pack = &*bt_pack;
+        parallel::par_chunks_mut(&mut out.data, MC * n, |panel, chunk| {
+            let r0 = panel * MC;
+            let rows = chunk.len() / n;
+            microkernel::with_scratch(|ws| {
+                microkernel::pack_rows(&a_data[r0 * k..(r0 + rows) * k], rows, k, k, &mut ws.a_pack);
+                microkernel::gemm_bt_tile(&ws.a_pack, bt_pack, rows, n, k, 1.0, chunk, n);
+            });
+        });
     });
     out
 }
 
-/// Unrolled dot product; the single hottest scalar loop in the Rust
-/// engines (LLVM vectorizes the 8-wide accumulator form).
+/// Unrolled dot product for the remaining row-at-a-time consumers
+/// (standard attention, residual sampling). LLVM vectorizes the 8-wide
+/// accumulator form.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -185,6 +211,45 @@ mod tests {
         let got = matmul_bt(&a, &b);
         let want = matmul(&a, &transpose(&b));
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_propagates_nan_through_zero_coefficients() {
+        // regression: the old kernel skipped `aval == 0.0`, so 0 × NaN
+        // produced 0 instead of NaN (IEEE requires NaN) and the inner
+        // loop carried a vectorization-killing branch
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 1, vec![f32::NAN, 2.0]);
+        let out = matmul(&a, &b);
+        assert!(out.at(0, 0).is_nan(), "0 × NaN must propagate NaN");
+
+        let bt = Matrix::from_vec(1, 2, vec![f32::NAN, 2.0]);
+        let out_bt = matmul_bt(&a, &bt);
+        assert!(out_bt.at(0, 0).is_nan());
+    }
+
+    #[test]
+    fn matmul_infinity_propagates() {
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 1, vec![f32::INFINITY, 2.0]);
+        // 0 × ∞ = NaN per IEEE 754
+        let out = matmul(&a, &b);
+        assert!(out.at(0, 0).is_nan());
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = Matrix::randn(9, 5, 40);
+        let b = Matrix::randn(5, 11, 41);
+        let mut out = Matrix::zeros(9, 11);
+        matmul_into(&a, &b, &mut out);
+        let first = out.clone();
+        matmul_into(&a, &b, &mut out);
+        let mut doubled = first.clone();
+        for x in &mut doubled.data {
+            *x *= 2.0;
+        }
+        assert!(out.max_abs_diff(&doubled) < 1e-4);
     }
 
     #[test]

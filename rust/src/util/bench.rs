@@ -2,7 +2,11 @@
 //!
 //! Criterion-shaped but dependency-free: warmup, N timed iterations,
 //! median/mean/min reporting, and a `--quick` flag every bench honours.
+//! [`JsonReport`] additionally collects every result into a
+//! machine-readable JSON file so perf trajectories are tracked across
+//! PRs instead of scraped from stdout.
 
+use crate::util::json::Value;
 use std::time::{Duration, Instant};
 
 pub struct BenchConfig {
@@ -66,11 +70,63 @@ pub fn report(group: &str, id: &str, stats: &Stats) {
     );
 }
 
-/// Convenience: run + report, returning the median seconds.
-pub fn bench<F: FnMut()>(cfg: &BenchConfig, group: &str, id: &str, f: F) -> f64 {
+/// Convenience: run + report, returning the full stats (for recording
+/// into a [`JsonReport`]).
+pub fn bench_stats<F: FnMut()>(cfg: &BenchConfig, group: &str, id: &str, f: F) -> Stats {
     let stats = run(cfg, f);
     report(group, id, &stats);
-    stats.median.as_secs_f64()
+    stats
+}
+
+/// Convenience: run + report, returning the median seconds.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, group: &str, id: &str, f: F) -> f64 {
+    bench_stats(cfg, group, id, f).median.as_secs_f64()
+}
+
+/// Machine-readable bench results: one record per bench line, written
+/// as JSON (`BENCH_<name>.json`) so CI and later PRs can diff perf
+/// trajectories instead of parsing stdout.
+pub struct JsonReport {
+    bench: String,
+    results: Vec<Value>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), results: Vec::new() }
+    }
+
+    /// Record one result with extra per-record fields (shape, variant…).
+    pub fn record_with(&mut self, group: &str, id: &str, stats: &Stats, extra: Vec<(&str, Value)>) {
+        let mut pairs = vec![
+            ("group", Value::string(group)),
+            ("id", Value::string(id)),
+            ("median_ns", Value::number(stats.median.as_nanos() as f64)),
+            ("mean_ns", Value::number(stats.mean.as_nanos() as f64)),
+            ("min_ns", Value::number(stats.min.as_nanos() as f64)),
+            ("max_ns", Value::number(stats.max.as_nanos() as f64)),
+            ("iters", Value::number(stats.iters as f64)),
+        ];
+        pairs.extend(extra);
+        self.results.push(Value::object(pairs));
+    }
+
+    pub fn record(&mut self, group: &str, id: &str, stats: &Stats) {
+        self.record_with(group, id, stats, Vec::new());
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("schema", Value::number(1.0)),
+            ("bench", Value::string(self.bench.clone())),
+            ("results", Value::Array(self.results.clone())),
+        ])
+    }
+
+    /// Write the report (pretty-printed, trailing newline) to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -94,5 +150,34 @@ mod tests {
     fn config_defaults() {
         let cfg = BenchConfig { warmup: 1, iters: 10 };
         assert_eq!(cfg.iters, 10);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let stats = Stats {
+            median: Duration::from_nanos(1500),
+            mean: Duration::from_nanos(1600),
+            min: Duration::from_nanos(1400),
+            max: Duration::from_nanos(1900),
+            iters: 7,
+        };
+        let mut rep = JsonReport::new("unit");
+        rep.record_with(
+            "attention",
+            "flash2_d64/1024",
+            &stats,
+            vec![("n", Value::number(1024.0)), ("variant", Value::string("flash2"))],
+        );
+        let text = rep.to_value().to_string_pretty();
+        let parsed = Value::parse(&text).expect("self-emitted JSON must parse");
+        assert_eq!(parsed.req_str("bench").unwrap(), "unit");
+        let results = parsed.req_array("results").unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req_str("id").unwrap(), "flash2_d64/1024");
+        assert_eq!(results[0].req_usize("n").unwrap(), 1024);
+        assert_eq!(
+            results[0].get("median_ns").and_then(Value::as_f64),
+            Some(1500.0)
+        );
     }
 }

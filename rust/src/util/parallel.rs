@@ -1,13 +1,25 @@
-//! Scoped-thread data parallelism — the rayon subset the hot paths use.
+//! Persistent-pool data parallelism — the rayon subset the hot paths use.
 //!
-//! `par_chunks_mut_enumerated` splits a mutable slice into fixed-size
-//! chunks and processes them on `available_parallelism()` threads via
-//! `std::thread::scope`. Work is distributed by atomic work-stealing
-//! index so uneven chunk costs (e.g. causal attention's triangular
-//! blocks) balance automatically.
+//! The first parallel call lazily spawns `available_parallelism() - 1`
+//! worker threads that live for the process. Each `par_chunks_mut` /
+//! `par_map` call publishes one type-erased job to the pool (a condvar
+//! generation bump — no per-call thread spawns, no per-chunk `Mutex`es),
+//! the calling thread participates as worker 0, and work is distributed
+//! by an atomic work-stealing index so uneven chunk costs (e.g. causal
+//! attention's triangular blocks) balance automatically. The decode hot
+//! loop therefore pays one lock + one wakeup per call instead of
+//! `thread::scope` spawn/join plus one `Mutex` per chunk.
+//!
+//! Only one pooled job runs at a time: a second submitter (another
+//! thread, or a nested parallel call from inside a running job) finds
+//! the pool busy and simply runs its own work-stealing loop inline on
+//! the calling thread. That keeps nesting deadlock-free and matches the
+//! oversubscription-avoidance the multi-device simulation relies on.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 thread_local! {
     static SERIAL: Cell<bool> = const { Cell::new(false) };
@@ -35,38 +47,210 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// One published job: a monomorphized trampoline plus a type-erased
+/// pointer to the submitter's stack closure. The submitter blocks until
+/// every participant has finished, so the pointer outlives all uses.
+#[derive(Clone, Copy)]
+struct Job {
+    run: unsafe fn(*const (), usize),
+    ctx: *const (),
+    /// how many pool workers participate (worker indices `< workers`)
+    workers: usize,
+}
+
+// Safety: `ctx` points at a `F: Sync` closure that the submitter keeps
+// alive (and keeps waiting on) until `active` drops to zero.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    /// bumped once per published job; workers wait for a change
+    generation: u64,
+    /// participants still running the current job
+    active: usize,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// workers wait here for a new generation
+    work_cv: Condvar,
+    /// the submitter waits here for `active == 0`
+    done_cv: Condvar,
+    /// single-job-at-a-time flag; busy submitters run inline instead
+    busy: AtomicBool,
+    /// set when a worker's job closure panicked
+    panicked: AtomicBool,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    size: usize,
+    worker_ids: Vec<std::thread::ThreadId>,
+}
+
+unsafe fn trampoline<F: Fn(usize) + Sync>(ctx: *const (), worker: usize) {
+    let f = &*(ctx as *const F);
+    f(worker);
+}
+
+fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            while st.generation == seen {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            seen = st.generation;
+            st.job
+        };
+        let Some(job) = job else { continue };
+        if idx >= job.workers {
+            continue;
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.ctx, idx + 1) }));
+        if res.is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let size = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .saturating_sub(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { job: None, generation: 0, active: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            busy: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        let mut worker_ids = Vec::with_capacity(size);
+        for i in 0..size {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("distr-pool-{i}"))
+                .spawn(move || worker_loop(sh, i))
+                .expect("spawn pool worker");
+            worker_ids.push(handle.thread().id());
+        }
+        Pool { shared, size, worker_ids }
+    })
+}
+
+/// Thread ids of the persistent pool workers (spawning the pool on
+/// first use). Exposed so tests can assert worker reuse across calls.
+pub fn pool_worker_ids() -> Vec<std::thread::ThreadId> {
+    pool().worker_ids.clone()
+}
+
+/// Releases the pool's busy flag even if the submitter's closure panics.
+struct BusyGuard<'a>(&'a AtomicBool);
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+/// Waits for all pool participants even if the submitter's closure
+/// panics — the workers borrow the submitter's stack, so unwinding past
+/// them would be unsound.
+struct WaitGuard<'a>(&'a PoolShared);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        while st.active != 0 {
+            st = self.0.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+/// Run `f(worker_index)` on the calling thread (index 0) plus up to
+/// `extra` pool workers (indices 1..). `f` is expected to be a
+/// work-stealing loop over a shared atomic index, so every participant
+/// drains chunks until none remain. Falls back to a single inline call
+/// when the pool is busy (nested or concurrent parallelism) or empty.
+fn run_on_pool<F: Fn(usize) + Sync>(extra: usize, f: &F) {
+    let pool = pool();
+    let extra = extra.min(pool.size);
+    if extra == 0 || pool.shared.busy.swap(true, Ordering::Acquire) {
+        f(0);
+        return;
+    }
+    let _busy = BusyGuard(&pool.shared.busy);
+    {
+        let mut st = pool.shared.state.lock().unwrap();
+        st.job = Some(Job {
+            run: trampoline::<F>,
+            ctx: f as *const F as *const (),
+            workers: extra,
+        });
+        st.generation = st.generation.wrapping_add(1);
+        st.active = extra;
+        pool.shared.work_cv.notify_all();
+    }
+    let wait = WaitGuard(&pool.shared);
+    let res = catch_unwind(AssertUnwindSafe(|| f(0)));
+    drop(wait); // blocks until every worker finished this job
+    let worker_panicked = pool.shared.panicked.swap(false, Ordering::Relaxed);
+    if let Err(p) = res {
+        resume_unwind(p);
+    }
+    if worker_panicked {
+        panic!("pooled worker panicked during parallel execution");
+    }
+}
+
+/// Raw-pointer wrapper so disjoint chunk writes can cross the pool
+/// boundary without per-chunk locks. Safety: every index is claimed by
+/// exactly one participant via `fetch_add`.
+struct SyncPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
 /// Process `data` in `chunk` chunks: `f(chunk_index, chunk_slice)`.
-/// Sequential when there's one chunk or one core (no thread overhead).
+/// Sequential when there's one chunk or one core (no pool round-trip).
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let n_chunks = data.len().div_ceil(chunk.max(1));
+    let chunk = chunk.max(1);
+    let len = data.len();
+    let n_chunks = len.div_ceil(chunk);
     let workers = num_threads().min(n_chunks);
     if workers <= 1 {
-        for (i, c) in data.chunks_mut(chunk.max(1)).enumerate() {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk.max(1)).enumerate().collect();
+    let base = SyncPtr(data.as_mut_ptr());
     let next = AtomicUsize::new(0);
-    // hand ownership of each chunk to exactly one worker via the index
-    let cells: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
-        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                if let Some((idx, slice)) = cells[i].lock().unwrap().take() {
-                    f(idx, slice);
-                }
-            });
+    let task = move |_worker: usize| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n_chunks {
+            break;
         }
-    });
+        let start = i * chunk;
+        let clen = chunk.min(len - start);
+        // Safety: chunk `i` is claimed exactly once; chunks are disjoint.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), clen) };
+        f(i, slice);
+    };
+    run_on_pool(workers - 1, &task);
 }
 
 /// Parallel map over indices `0..n` collecting results in order.
@@ -79,27 +263,28 @@ where
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let base = SyncPtr(out.as_mut_ptr());
     let next = AtomicUsize::new(0);
-    let cells: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                **cells[i].lock().unwrap() = Some(v);
-            });
+    let task = move |_worker: usize| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
-    });
+        let v = f(i);
+        // Safety: slot `i` is claimed exactly once; slots are disjoint.
+        unsafe {
+            *base.0.add(i) = Some(v);
+        }
+    };
+    run_on_pool(workers - 1, &task);
     out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::time::Duration;
 
     #[test]
     fn chunks_cover_all_elements() {
@@ -145,5 +330,78 @@ mod tests {
     #[test]
     fn par_map_zero() {
         assert!(par_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn with_serial_stays_on_caller_thread() {
+        with_serial(|| {
+            let me = std::thread::current().id();
+            let mut data = vec![0u8; 4096];
+            par_chunks_mut(&mut data, 16, |_, c| {
+                assert_eq!(std::thread::current().id(), me);
+                c.fill(1);
+            });
+            assert!(data.iter().all(|&x| x == 1));
+        });
+    }
+
+    #[test]
+    fn pooled_workers_reused_across_calls() {
+        // every executing thread must be the caller or one of the
+        // persistent pool workers — across repeated calls, proving
+        // `par_chunks_mut` reuses pooled threads instead of spawning
+        let allowed: HashSet<_> = pool_worker_ids().into_iter().collect();
+        let me = std::thread::current().id();
+        for round in 0..3 {
+            let seen = Mutex::new(HashSet::new());
+            let mut data = vec![0u8; 4096];
+            par_chunks_mut(&mut data, 16, |_, c| {
+                // give slower workers a chance to claim a chunk
+                std::thread::sleep(Duration::from_micros(100));
+                seen.lock().unwrap().insert(std::thread::current().id());
+                c.fill(1);
+            });
+            assert!(data.iter().all(|&x| x == 1));
+            let seen = seen.into_inner().unwrap();
+            assert!(!seen.is_empty());
+            for id in seen {
+                assert!(
+                    id == me || allowed.contains(&id),
+                    "round {round}: chunk ran on a non-pool thread"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nested_parallelism_completes_serially() {
+        let mut outer = vec![0u32; 256];
+        par_chunks_mut(&mut outer, 32, |_, c| {
+            let mut inner = vec![0u32; 64];
+            // pool is busy with the outer job → runs inline, no deadlock
+            par_chunks_mut(&mut inner, 8, |_, ic| ic.fill(1));
+            let s: u32 = inner.iter().sum();
+            c.fill(s);
+        });
+        assert!(outer.iter().all(|&x| x == 64));
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let v = par_map(200, move |i| i + t);
+                    assert_eq!(v.len(), 200);
+                    assert_eq!(v[199], 199 + t);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn par_map_moves_non_copy_values() {
+        let words = par_map(50, |i| format!("w{i}"));
+        assert_eq!(words[49], "w49");
     }
 }

@@ -6,7 +6,7 @@
 
 use distr_attention::attention::{
     block_permutations, distr_attention, distr_scores, flash2_attention, standard_attention,
-    DistrParams, FlashParams,
+    DistrParams, Engine, FlashParams,
 };
 use distr_attention::config::BatcherCfg;
 use distr_attention::coordinator::batcher::Batcher;
@@ -112,6 +112,202 @@ fn prop_distr_scores_group1_exact() {
         let approx = distr_scores(&q, &k, &p);
         let exact = distr_attention::tensor::matmul_bt(&q, &k);
         assert!(approx.max_abs_diff(&exact) < 1e-4, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// register-tile kernel / scalar parity (ragged shapes)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference attention: plain loops, f64 accumulation — the
+/// ground truth the packed 8×8 microkernel paths must reproduce.
+fn naive_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let n_kv = k.rows;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = Matrix::zeros(n, d);
+    for r in 0..n {
+        let mut scores = vec![f64::NEG_INFINITY; n_kv];
+        for (c, s) in scores.iter_mut().enumerate() {
+            if causal && c > r {
+                continue;
+            }
+            let mut acc = 0.0f64;
+            for i in 0..d {
+                acc += q.at(r, i) as f64 * k.at(c, i) as f64;
+            }
+            *s = acc * scale;
+        }
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut den = 0.0f64;
+        let mut acc = vec![0.0f64; d];
+        for (c, &s) in scores.iter().enumerate() {
+            if s == f64::NEG_INFINITY {
+                continue;
+            }
+            let p = (s - max).exp();
+            den += p;
+            for (a, x) in acc.iter_mut().enumerate() {
+                *x += p * v.at(c, a) as f64;
+            }
+        }
+        for (c, &x) in acc.iter().enumerate() {
+            *out.at_mut(r, c) = (x / den) as f32;
+        }
+    }
+    out
+}
+
+/// Scalar reference DistrAttention: the same LSH permutations and
+/// f32 sampling/fusion arithmetic as the engine, but the score
+/// contraction, softmax and PV in plain f64 loops.
+fn naive_distr(q: &Matrix, k: &Matrix, v: &Matrix, p: &DistrParams, causal: bool) -> Matrix {
+    let (n, d) = (q.rows, q.cols);
+    let n_kv = k.rows;
+    let bl = p.flash.block_l.min(n);
+    let (group, dg) = (p.group, d / p.group);
+    let scale = 1.0 / (d as f64).sqrt();
+    let perms = block_permutations(q, bl, p.seed, p.center);
+    let mut out = Matrix::zeros(n, d);
+    for (iq, perm) in perms.iter().enumerate() {
+        let q0 = iq * bl;
+        // f32 sampling/fusion exactly as the engine does it
+        let mut q_s = vec![0.0f32; bl * dg];
+        for r in 0..bl {
+            for g in 0..dg {
+                let mut acc = 0.0f32;
+                for j in 0..group {
+                    acc += q.at(q0 + r, perm[g * group + j]);
+                }
+                q_s[r * dg + g] =
+                    if p.sample_mean { acc / group as f32 } else { q.at(q0 + r, perm[g * group]) };
+            }
+        }
+        let mut k_f = vec![0.0f32; n_kv * dg];
+        for c in 0..n_kv {
+            for g in 0..dg {
+                let mut acc = 0.0f32;
+                for j in 0..group {
+                    acc += k.at(c, perm[g * group + j]);
+                }
+                k_f[c * dg + g] = acc;
+            }
+        }
+        for r in 0..bl {
+            let row = q0 + r;
+            let mut scores = vec![f64::NEG_INFINITY; n_kv];
+            for (c, s) in scores.iter_mut().enumerate() {
+                if causal && c > row {
+                    continue;
+                }
+                let mut acc = 0.0f64;
+                for g in 0..dg {
+                    acc += q_s[r * dg + g] as f64 * k_f[c * dg + g] as f64;
+                }
+                *s = acc * scale;
+            }
+            let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut den = 0.0f64;
+            let mut acc = vec![0.0f64; d];
+            for (c, &s) in scores.iter().enumerate() {
+                if s == f64::NEG_INFINITY {
+                    continue;
+                }
+                let pv = (s - max).exp();
+                den += pv;
+                for (a, x) in acc.iter_mut().enumerate() {
+                    *x += pv * v.at(c, a) as f64;
+                }
+            }
+            for (c, &x) in acc.iter().enumerate() {
+                *out.at_mut(row, c) = (x / den) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Shapes deliberately not multiples of the 8×8 register tile, causal
+/// legality (`l % m == 0`) preserved.
+const RAGGED: [(usize, usize, usize, usize); 4] =
+    [(60, 20, 20, 10), (72, 36, 24, 12), (104, 56, 26, 13), (120, 40, 24, 12)];
+
+#[test]
+fn kernel_parity_flash2_matches_scalar_on_ragged_shapes() {
+    for (i, &(n, d, bl, bm)) in RAGGED.iter().enumerate() {
+        let seed = 40_000 + i as u64 * 10;
+        let q = Matrix::randn(n, d, seed);
+        let k = Matrix::randn(n, d, seed + 1);
+        let v = Matrix::randn(n, d, seed + 2);
+        let p = FlashParams { block_l: bl, block_m: bm };
+        for causal in [false, true] {
+            let want = naive_attention(&q, &k, &v, causal);
+            let flash = flash2_attention(&q, &k, &v, &p, causal);
+            assert!(
+                flash.max_abs_diff(&want) < 1e-4,
+                "flash2 n={n} d={d} l={bl} m={bm} causal={causal}: {}",
+                flash.max_abs_diff(&want)
+            );
+            let std_out = standard_attention(&q, &k, &v, causal);
+            assert!(
+                std_out.max_abs_diff(&want) < 1e-4,
+                "standard n={n} d={d} causal={causal}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_parity_distr_matches_scalar_on_ragged_shapes() {
+    for (i, &(n, d, bl, bm)) in RAGGED.iter().enumerate() {
+        let seed = 50_000 + i as u64 * 10;
+        let q = Matrix::uniform(n, d, seed);
+        let k = Matrix::uniform(n, d, seed + 1);
+        let v = Matrix::uniform(n, d, seed + 2);
+        for group in [1usize, 2] {
+            if d % group != 0 {
+                continue;
+            }
+            let p = DistrParams {
+                flash: FlashParams { block_l: bl, block_m: bm },
+                group,
+                ..Default::default()
+            };
+            for causal in [false, true] {
+                let got = distr_attention(&q, &k, &v, &p, causal);
+                let want = naive_distr(&q, &k, &v, &p, causal);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-4,
+                    "distr n={n} d={d} l={bl} m={bm} G*={group} causal={causal}: {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_parity_every_variant_runs_ragged_shapes() {
+    // all engines stay finite and correctly shaped on shapes that are
+    // not multiples of the register tile; the exact ones match the
+    // scalar reference
+    let (n, d, bl, bm) = (60usize, 20usize, 20usize, 10usize);
+    let q = Matrix::uniform(n, d, 60_001);
+    let k = Matrix::uniform(n, d, 60_002);
+    let v = Matrix::uniform(n, d, 60_003);
+    let want = naive_attention(&q, &k, &v, false);
+    for variant in Variant::ALL {
+        let eng = Engine::new(variant).with_blocks(bl, bm).with_group(2);
+        let out = eng.run(&q, &k, &v);
+        assert_eq!((out.rows, out.cols), (n, d), "{variant}");
+        assert!(out.data.iter().all(|x| x.is_finite()), "{variant}");
+        if variant.is_exact() {
+            assert!(
+                out.max_abs_diff(&want) < 1e-4,
+                "{variant}: {}",
+                out.max_abs_diff(&want)
+            );
+        }
     }
 }
 
