@@ -2,8 +2,10 @@
 //! fig7/tab2 sweep: N x d for flash2 and distr): quantifies what the
 //! autotuner buys over the engines' hard-coded (64, 64, G*=2) defaults.
 
+use std::time::Duration;
+
 use distr_attention::attention::{Engine, Variant};
-use distr_attention::autotune::{Autotuner, TunedParams};
+use distr_attention::autotune::{Autotuner, TelemetryCfg, TelemetryRecorder, TunedParams};
 use distr_attention::metrics::Table;
 use distr_attention::simulator::GpuSpec;
 use distr_attention::util::bench::{bench, BenchConfig};
@@ -57,4 +59,21 @@ fn main() {
     print!("{}", t.render());
     let s = tuner.stats();
     println!("tuner: {} searches, {} cache hits", s.searches, s.hits);
+
+    // dispatch-path overhead of the online re-tuning loop: one
+    // select + one record per tuned dispatch — must stay far below a
+    // single attention call for the telemetry to ride along for free
+    let mut rec = TelemetryRecorder::in_memory(gpu, TelemetryCfg::default());
+    let key = tuner.key_for(Variant::Distr, 4096, 64, false, 1);
+    let incumbent = tuner.tuned(Variant::Distr, 4096, 64, false, 1);
+    let per_call = bench(&cfg, "autotune", "telemetry_select_record", || {
+        for _ in 0..1000 {
+            let (_, token) = rec.select(key, incumbent);
+            std::hint::black_box(rec.record(&token, Duration::from_micros(500)));
+        }
+    });
+    println!(
+        "telemetry loop overhead: {:.0} ns per tuned dispatch",
+        per_call / 1000.0 * 1e9
+    );
 }

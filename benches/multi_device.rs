@@ -89,4 +89,22 @@ fn main() {
             sched.assignment.iter().filter(|&&d| d == idx).count(),
         );
     }
+
+    // close the loop: the tuned run above fed measured lane timings
+    // back into the pool, so replanning blends the real skew (on this
+    // CPU simulation, compute stretch × whatever the host actually
+    // delivered) into the shares instead of trusting the model alone
+    let (_, measured_run) = run_scatter_tuned(&p, &mut pool, true, 7);
+    let resched = plan_tuned(&p, &mut pool);
+    for idx in 0..pool.num_devices() {
+        let (ratio, heads) = pool.lane_measurement(idx).unwrap_or((1.0, 0.0));
+        println!(
+            "# device {idx}: measured {:.2}x predicted over {:.0} heads ({} heads this run) -> replanned share {:.0}% (model-only {:.0}%)",
+            ratio,
+            heads,
+            measured_run.per_device_heads[idx],
+            resched.shares[idx] * 100.0,
+            sched.shares[idx] * 100.0,
+        );
+    }
 }

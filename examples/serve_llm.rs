@@ -10,21 +10,27 @@
 //! cargo run --release --example serve_llm
 //! ```
 //!
-//! The tuning caches persist in the system temp dir — a second run
-//! resolves every shape from cache (watch the hit counter). The final
-//! section scatters a multi-head job across a simulated heterogeneous
-//! pool (RTX 4090 + capped L40), comparing round-robin against the
-//! tuning-aware planner with per-device `(l, m, G*)`.
+//! The serve loop is telemetry-fed end to end: each flushed batch
+//! resolves *one* tuned engine at its realized size (`route_batch`),
+//! the measured attention latency and TTFT flow back through the
+//! router's timing tokens, and measured winners are promoted into the
+//! tuning cache online. Both the tuning caches and the telemetry state
+//! persist in the system temp dir — a second run resolves every shape
+//! from cache (watch the hit counter) and keeps re-tuning from live
+//! measurements. The final section scatters a multi-head job across a
+//! simulated heterogeneous pool (RTX 4090 + capped L40), comparing
+//! round-robin against the tuning-aware planner, whose shares blend
+//! measured lane throughput fed back from each run.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use distr_attention::attention::{Engine, Variant};
-use distr_attention::autotune::{Autotuner, DevicePool};
+use distr_attention::autotune::{telemetry, Autotuner, DevicePool, TelemetryCfg};
 use distr_attention::config::{Config, PoolDeviceCfg};
 use distr_attention::coordinator::{
-    decode_step, run_scatter_round_robin, run_scatter_tuned, Batcher, KvCache, Request, Router,
-    ScatterPlan, Scheduler,
+    decode_step, plan_tuned, run_scatter_round_robin, run_scatter_tuned, Batcher, KvCache,
+    Request, Router, ScatterPlan, Scheduler,
 };
 use distr_attention::metrics::{LatencyHistogram, Table};
 use distr_attention::tensor::Matrix;
@@ -68,6 +74,9 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut tuner = Autotuner::from_config(&cfg);
     let preloaded = tuner.cache().len();
+    // telemetry rides alongside the tuning cache: persisted measured
+    // overrides whose evidence has fully aged out are dropped here
+    let recorder = telemetry::attach(&mut tuner, TelemetryCfg::default());
 
     // one engine per (variant, length bucket), built from tuned params
     let mut router: Router<Engine> = Router::new();
@@ -84,7 +93,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let mut router = router.with_autotuner(tuner);
+    let mut router = router.with_autotuner(tuner).with_telemetry(recorder);
     println!("serve_llm: {} routes live ({} shapes preloaded from cache)\n", router.num_routes(), preloaded);
 
     // synthetic request stream: two prompt-length populations, two
@@ -108,27 +117,44 @@ fn main() -> anyhow::Result<()> {
 
     let mut run_batch = |router: &mut Router<Engine>,
                          cache: &mut KvCache,
+                         scheduler: &mut Scheduler,
                          batch: Vec<Request>|
      -> anyhow::Result<()> {
-        let batch_len = batch.len();
+        // flush-side tuning-aware execution: ONE tuned engine per
+        // flushed batch, resolved at the realized batch size (a
+        // deadline flush of 3 tunes as a batch of 3, not max_batch) —
+        // the batcher groups by full tuning key, so the whole batch
+        // legally shares it
+        let (engine, _key, tuned, token) = router.route_batch(&batch, D, true)?;
+        let variant = batch[0].variant;
+        let engine = match &tuned {
+            Some(p) => Engine::tuned(variant, p).causal(true),
+            None => engine.clone(),
+        };
+
+        let batch_len = batch.len() as u32;
+        let mut attn_total = Duration::ZERO;
         for req in batch {
             let n = req.len_bucket();
-            let (engine, _key, tuned) = router.route_tuned(&req, D, true, batch_len)?;
-            // per-request tuned dispatch: fall back to the route's
-            // engine when no tuner is attached
-            let engine = match &tuned {
-                Some(p) => Engine::tuned(req.variant, p).causal(true),
-                None => engine.clone(),
-            };
-
             // prefill at the bucketed length
             let t0 = Instant::now();
             let q = embed(&req.tokens, n, 1);
             let k = embed(&req.tokens, n, 2);
             let v = embed(&req.tokens, n, 3);
+            let ta = Instant::now();
             let out = engine.run(&q, &k, &v);
+            attn_total += ta.elapsed();
             prefill_ms.entry(req.variant).or_default().record(t0.elapsed());
             assert!(out.data.iter().all(|x| x.is_finite()));
+
+            // the first token exists as soon as the prefill is done —
+            // stamp the TTFT here, before the decode loop, so the
+            // recorder tracks time-to-FIRST-token, not end-to-end
+            // completion latency
+            let ttft = scheduler.complete(&req, Instant::now());
+            if let Some(token) = &token {
+                router.report_ttft(token, ttft);
+            }
 
             // a few decode steps over the paged KV cache
             let prompt = req.tokens.len().min(n);
@@ -146,17 +172,22 @@ fn main() -> anyhow::Result<()> {
             cache.release(req.id)?;
             *served.entry(req.variant).or_default() += 1;
         }
+        // measured ns/call for the batch's tuned config closes the loop
+        // (promotions land in the tuning cache as measured overrides)
+        if let Some(token) = token {
+            router.report(&token, attn_total / batch_len.max(1));
+        }
         Ok(())
     };
 
     let t0 = Instant::now();
     while let Some(req) = scheduler.pop(Instant::now()) {
         if let Some((_key, batch)) = batcher.push(req) {
-            run_batch(&mut router, &mut cache, batch)?;
+            run_batch(&mut router, &mut cache, &mut scheduler, batch)?;
         }
     }
     for (_key, batch) in batcher.drain() {
-        run_batch(&mut router, &mut cache, batch)?;
+        run_batch(&mut router, &mut cache, &mut scheduler, batch)?;
     }
     let elapsed = t0.elapsed();
 
@@ -178,11 +209,24 @@ fn main() -> anyhow::Result<()> {
     let tuner = router.autotuner().expect("tuner attached");
     let s = tuner.stats();
     println!(
-        "\nautotune: {} cached shapes ({} hits / {} searches this run)",
+        "\nautotune: {} cached shapes ({} hits / {} searches / {} measured overrides this run)",
         tuner.cache().len(),
         s.hits,
-        s.searches
+        s.searches,
+        s.overrides
     );
+    let rec = router.telemetry().expect("telemetry attached");
+    println!(
+        "telemetry: {} keys under measurement, {} promotions, {} completions reported",
+        rec.len(),
+        rec.promotions(),
+        scheduler.completed()
+    );
+    // shutdown hook: evidence gathered between promotions survives the
+    // restart too (promotions already write through as they happen)
+    if let Err(e) = rec.persist() {
+        log::warn!("serve_llm: failed to persist telemetry: {e:#}");
+    }
     println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
 
     // -- heterogeneous pool scatter --------------------------------------
@@ -223,6 +267,20 @@ fn main() -> anyhow::Result<()> {
         (rr.wall.as_secs_f64() / tuned_run.wall.as_secs_f64() - 1.0) * 100.0,
         tuned_run.overlap_efficiency() * 100.0,
     );
+    // the tuned run recorded each lane's measured seconds-per-head;
+    // replanning now blends that measurement into the shares, so a
+    // mis-calibrated cost model converges onto the real skew
+    let resched = plan_tuned(&plan, &mut pool);
+    for idx in 0..pool.num_devices() {
+        let (ratio, heads) = pool.lane_measurement(idx).unwrap_or((1.0, 0.0));
+        println!(
+            "  device {idx} measured {:.2}x the model's prediction over {:.0} heads -> replanned share {:.0}% (was {:.0}%)",
+            ratio,
+            heads,
+            resched.shares[idx] * 100.0,
+            sched.shares[idx] * 100.0,
+        );
+    }
     let ps = pool.stats();
     println!(
         "  pool autotune: {} searches / {} hits across per-card caches",

@@ -38,6 +38,12 @@ impl TuningCache {
         self.entries.insert(key, params);
     }
 
+    /// Remove an entry (a measured override aging out): the next
+    /// lookup for this key misses and re-searches.
+    pub fn remove(&mut self, key: &TuneKey) -> Option<TunedParams> {
+        self.entries.remove(key)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -167,5 +173,16 @@ mod tests {
     #[test]
     fn missing_file_is_error() {
         assert!(TuningCache::load(Path::new("/definitely/not/here.json")).is_err());
+    }
+
+    #[test]
+    fn remove_makes_the_key_miss_again() {
+        let mut c = TuningCache::new("RTX 4090");
+        c.insert(sample_key(1024), sample_params());
+        assert_eq!(c.remove(&sample_key(1024)), Some(sample_params()));
+        assert!(c.get(&sample_key(1024)).is_none());
+        assert!(c.is_empty());
+        // removing an absent key is a no-op
+        assert_eq!(c.remove(&sample_key(1024)), None);
     }
 }

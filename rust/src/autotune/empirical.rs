@@ -28,32 +28,52 @@ fn neighbors(x: usize) -> [usize; 3] {
     [(x / 2).max(16), x, (x * 2).min(512)]
 }
 
-/// Refine `base` for `key` by timing its legal neighborhood, spending
-/// at most `budget_ms` wall milliseconds. Always returns a
-/// serving-legal configuration (falling back to `base`).
-pub fn refine(gpu: &GpuSpec, key: &TuneKey, base: TunedParams, budget_ms: u64) -> TunedParams {
-    // pow2 bench length: the engines require N % l == 0, which every
-    // pow2 tile satisfies on a pow2 N even under the Exact key policy
-    let n = key.n_bucket.clamp(16, MAX_BENCH_N).next_power_of_two();
-    let d = key.d;
-    let (q, k, v) = qkv_uniform(n, d, 0x7ea5);
-    let cfg = BenchConfig { warmup: 1, iters: 3 };
-    let started = Instant::now();
+/// The sequence length refinement measures for `key`.
+///
+/// This is the measure-vs-serve contract: whenever the bucketed N fits
+/// the budget cap, the microbenchmark runs at *exactly* the length the
+/// tuned entry will serve — under the `Exact` key policy that length
+/// need not be a power of two, and the old
+/// `clamp(..).next_power_of_two()` silently measured a different shape
+/// than the one dispatched (so the "measured winner" was a winner for
+/// some other N). Above the cap we fall back explicitly to
+/// [`MAX_BENCH_N`]: a pow2 length every pow2 serving candidate divides,
+/// where block-size ranking is shape-stable.
+pub(crate) fn bench_len(key: &TuneKey) -> usize {
+    key.n_bucket.min(MAX_BENCH_N)
+}
 
+/// Distinct candidates in the halved/doubled `(l, m, G*)` neighborhood
+/// of `base` that the engines can actually run for `key` at bench
+/// length `n`: serving-legal for the bucket, tiles dividing the bench
+/// length (only relevant when it differs from the bucket), and — for
+/// causal keys — `l % m == 0`, which the causal engines assert. The
+/// causal filter currently holds for free (pow2 grid + `is_legal`
+/// rejecting m > l), but it is the engines' contract, so it is checked
+/// here explicitly rather than inherited from another module's
+/// legality rule. Shared by offline refinement ([`refine`]) and the
+/// online telemetry explorer ([`super::telemetry`]), so live
+/// exploration can never serve a config the engines would reject.
+pub(crate) fn candidates(
+    gpu: &GpuSpec,
+    key: &TuneKey,
+    base: TunedParams,
+    n: usize,
+) -> Vec<TunedParams> {
+    let d = key.d;
     let g = base.group.max(1);
     let groups = if key.variant == crate::attention::Variant::Distr {
         [(g / 2).max(1), g, (g * 2).min(8)]
     } else {
         [1, 1, 1]
     };
-
-    let mut best = base;
-    let mut best_t = f64::INFINITY;
-    let mut measured = 0usize;
-    let mut seen: Vec<(usize, usize, usize)> = Vec::new();
+    let mut out: Vec<TunedParams> = Vec::new();
     for l in neighbors(base.l) {
         for m in neighbors(base.m) {
-            if !serving_legal(gpu, d, l, m, key.n_bucket) || l > n {
+            if !serving_legal(gpu, d, l, m, key.n_bucket) || l > n || n % l != 0 || n % m != 0 {
+                continue;
+            }
+            if key.causal && l % m != 0 {
                 continue;
             }
             for g in groups {
@@ -61,36 +81,54 @@ pub fn refine(gpu: &GpuSpec, key: &TuneKey, base: TunedParams, budget_ms: u64) -
                     continue;
                 }
                 // neighbors() duplicates at the grid edges (and groups
-                // repeats for non-Distr variants) — measure each
-                // distinct candidate once so the budget buys coverage
-                if seen.contains(&(l, m, g)) {
-                    continue;
-                }
-                seen.push((l, m, g));
+                // repeats for non-Distr variants) — keep each distinct
+                // candidate once so the budget buys coverage
                 let cand = TunedParams { l, m, group: g, sample_rate: 1.0 / g as f64 };
-                // the base always gets measured; other candidates only
-                // while the budget lasts
-                if cand != base
-                    && best_t.is_finite()
-                    && started.elapsed().as_millis() as u64 >= budget_ms
-                {
-                    continue;
-                }
-                let engine = Engine::tuned(key.variant, &cand).causal(key.causal);
-                let stats = run(&cfg, || {
-                    std::hint::black_box(engine.run(&q, &k, &v));
-                });
-                measured += 1;
-                let t = stats.median.as_secs_f64();
-                if t < best_t {
-                    best_t = t;
-                    best = cand;
+                if !out.contains(&cand) {
+                    out.push(cand);
                 }
             }
         }
     }
+    // the base is measured first so every winner beat it head-to-head
+    if let Some(pos) = out.iter().position(|c| *c == base) {
+        out.swap(0, pos);
+    }
+    out
+}
+
+/// Refine `base` for `key` by timing its legal neighborhood, spending
+/// at most `budget_ms` wall milliseconds. Always returns a
+/// serving-legal configuration (falling back to `base`).
+pub fn refine(gpu: &GpuSpec, key: &TuneKey, base: TunedParams, budget_ms: u64) -> TunedParams {
+    let n = bench_len(key);
+    let d = key.d;
+    let (q, k, v) = qkv_uniform(n, d, 0x7ea5);
+    let cfg = BenchConfig { warmup: 1, iters: 3 };
+    let started = Instant::now();
+
+    let mut best = base;
+    let mut best_t = f64::INFINITY;
+    let mut measured = 0usize;
+    for cand in candidates(gpu, key, base, n) {
+        // the first candidate (the base, when legal) always gets
+        // measured; the rest only while the budget lasts
+        if measured > 0 && started.elapsed().as_millis() as u64 >= budget_ms {
+            continue;
+        }
+        let engine = Engine::tuned(key.variant, &cand).causal(key.causal);
+        let stats = run(&cfg, || {
+            std::hint::black_box(engine.run(&q, &k, &v));
+        });
+        measured += 1;
+        let t = stats.median.as_secs_f64();
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
     log::debug!(
-        "autotune: empirical refine {key}: measured {measured} candidates, \
+        "autotune: empirical refine {key} at n={n}: measured {measured} candidates, \
          picked (l={}, m={}, G*={})",
         best.l,
         best.m,
@@ -142,5 +180,68 @@ mod tests {
         assert_eq!(neighbors(16), [16, 16, 32]);
         assert_eq!(neighbors(64), [32, 64, 128]);
         assert_eq!(neighbors(512), [256, 512, 512]);
+    }
+
+    #[test]
+    fn bench_len_measures_the_served_shape() {
+        // pow2 buckets: bench at the bucket itself
+        let k = TuneKey::for_shape(Variant::Distr, 1000, 64, false, 1, BucketPolicy::Pow2);
+        assert_eq!(bench_len(&k), 1024);
+        // exact non-pow2 buckets: bench at the exact serving length (the
+        // old clamp+next_power_of_two measured 128 for a 96-length key)
+        let k = TuneKey::for_shape(Variant::Flash2, 96, 64, false, 1, BucketPolicy::Exact);
+        assert_eq!(bench_len(&k), 96);
+        let k = TuneKey::for_shape(Variant::Flash2, 300, 64, false, 1, BucketPolicy::Exact);
+        assert_eq!(bench_len(&k), 300);
+        // above the budget cap: explicit pow2 fallback
+        let k = TuneKey::for_shape(Variant::Distr, 4096, 64, false, 1, BucketPolicy::Exact);
+        assert_eq!(bench_len(&k), MAX_BENCH_N);
+    }
+
+    #[test]
+    fn exact_key_refines_on_tiles_that_divide_the_exact_n() {
+        // regression: a non-pow2 Exact key (n=96) used to be benched at
+        // n=128, so the measured winner was measured on a shape the
+        // cache entry never serves. Every refined tile must divide 96,
+        // and refine must complete without the engines asserting.
+        let gpu = GpuSpec::RTX4090;
+        let key = TuneKey::for_shape(Variant::Flash2, 96, 64, false, 1, BucketPolicy::Exact);
+        let base = analytic(&gpu, &key);
+        let refined = refine(&gpu, &key, base, 10);
+        assert_eq!(key.n_bucket % refined.l, 0, "l={}", refined.l);
+        assert_eq!(key.n_bucket % refined.m, 0, "m={}", refined.m);
+        assert!(serving_legal(&gpu, key.d, refined.l, refined.m, key.n_bucket));
+        // candidates for this key must all divide the exact bench length
+        for c in candidates(&gpu, &key, base, bench_len(&key)) {
+            assert_eq!(96 % c.l, 0, "candidate l={}", c.l);
+            assert_eq!(96 % c.m, 0, "candidate m={}", c.m);
+        }
+    }
+
+    #[test]
+    fn causal_candidates_are_always_engine_legal() {
+        // regression: the sweep used to measure causal candidates with
+        // m > l, which the causal engines assert on (`l % m == 0`) —
+        // a measured "refinement" that panics at measure time
+        let gpu = GpuSpec::RTX4090;
+        for (variant, n, d) in
+            [(Variant::Flash2, 128, 64), (Variant::Distr, 512, 128), (Variant::Flash2, 1024, 32)]
+        {
+            let key = TuneKey::for_shape(variant, n, d, true, 1, BucketPolicy::Pow2);
+            let base = analytic(&gpu, &key);
+            for c in candidates(&gpu, &key, base, bench_len(&key)) {
+                assert_eq!(c.l % c.m, 0, "{variant} n={n} d={d}: causal candidate ({}, {})", c.l, c.m);
+            }
+        }
+    }
+
+    #[test]
+    fn base_is_first_candidate_when_legal() {
+        let gpu = GpuSpec::RTX4090;
+        let key = TuneKey::for_shape(Variant::Distr, 512, 64, false, 1, BucketPolicy::Pow2);
+        let base = analytic(&gpu, &key);
+        let cands = candidates(&gpu, &key, base, bench_len(&key));
+        assert!(!cands.is_empty());
+        assert_eq!(cands[0], base, "base must be measured before the budget can expire");
     }
 }

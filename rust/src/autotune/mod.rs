@@ -15,7 +15,11 @@
 //! * [`cache`] — the versioned JSON tuning cache persisted across
 //!   process restarts,
 //! * [`pool`] — per-device tuners (one cache file per distinct card)
-//!   for heterogeneous multi-GPU pools.
+//!   for heterogeneous multi-GPU pools, plus measured per-lane
+//!   calibration the scatter planner blends into its shares,
+//! * [`telemetry`] — online re-tuning from serving telemetry: measured
+//!   ns/call + TTFT per key, hysteresis-guarded promotion of measured
+//!   winners into the cache, decay so stale overrides age out.
 //!
 //! [`Autotuner`] orchestrates: cache lookup → analytic search →
 //! empirical refinement → write-through persistence. Consumers are
@@ -29,12 +33,16 @@ pub mod empirical;
 pub mod key;
 pub mod pool;
 pub mod search;
+pub mod telemetry;
 
 use std::path::Path;
 
 pub use cache::{TuningCache, CACHE_VERSION};
 pub use key::{BucketPolicy, TuneKey, MIN_N_BUCKET};
 pub use pool::{per_gpu_cache_path, DevicePool, PoolDevice};
+pub use telemetry::{
+    telemetry_path, Promotion, TelemetryCfg, TelemetryRecorder, TimingToken, TELEMETRY_VERSION,
+};
 
 use crate::attention::Variant;
 use crate::config::{AutotuneCfg, Config};
@@ -99,6 +107,9 @@ pub struct TunerStats {
     pub misses: u64,
     /// Searches performed (analytic, plus empirical when enabled).
     pub searches: u64,
+    /// Measured overrides promoted into the cache by the telemetry
+    /// loop ([`telemetry`]).
+    pub overrides: u64,
 }
 
 /// The profile-guided autotuner.
@@ -204,6 +215,39 @@ impl Autotuner {
         params
     }
 
+    /// Install a *measured* override for `key` — the telemetry loop's
+    /// write path ([`telemetry::TelemetryRecorder`] promotions). The
+    /// override enters the same cache (and persisted file) the analytic
+    /// searches fill, so every later lookup — here or after a restart —
+    /// serves the measured winner.
+    pub fn apply_override(&mut self, key: TuneKey, params: TunedParams) {
+        self.cache.insert(key, params);
+        self.stats.overrides += 1;
+        if !self.cfg.cache_path.is_empty() {
+            if let Err(e) = self.save() {
+                log::warn!("autotune: failed to persist override: {e:#}");
+            }
+        }
+    }
+
+    /// Drop a cached entry (stale measured overrides aging out — see
+    /// [`telemetry::attach`]); the next lookup re-searches. Returns
+    /// whether the key was present.
+    pub fn drop_cached(&mut self, key: &TuneKey) -> bool {
+        let dropped = self.cache.remove(key).is_some();
+        if dropped && !self.cfg.cache_path.is_empty() {
+            if let Err(e) = self.save() {
+                log::warn!("autotune: failed to persist drop: {e:#}");
+            }
+        }
+        dropped
+    }
+
+    /// The configured persistence path ("" = in-memory only).
+    pub fn cache_path(&self) -> &str {
+        &self.cfg.cache_path
+    }
+
     /// Persist the cache to the configured path.
     pub fn save(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.cfg.cache_path.is_empty(), "autotune cache_path not configured");
@@ -278,6 +322,25 @@ mod tests {
         assert_eq!(p, TunedParams::default_for(Variant::Distr, 64));
         assert_eq!(t.stats(), TunerStats::default());
         assert!(t.cache().is_empty());
+    }
+
+    #[test]
+    fn override_enters_cache_and_drop_restores_search() {
+        let mut t = Autotuner::in_memory(GpuSpec::RTX4090);
+        let analytic = t.tuned(Variant::Distr, 1024, 64, false, 1);
+        let key = t.key_for(Variant::Distr, 1024, 64, false, 1);
+        let measured = TunedParams { l: 32, m: 32, group: 1, sample_rate: 1.0 };
+        assert_ne!(measured, analytic, "pick a distinct override for the test");
+        t.apply_override(key, measured);
+        assert_eq!(t.stats().overrides, 1);
+        // lookups now serve the measured winner without a search
+        assert_eq!(t.tuned(Variant::Distr, 1024, 64, false, 1), measured);
+        assert_eq!(t.stats().searches, 1, "override must not trigger a re-search");
+        // dropping the override re-searches back to the analytic pick
+        assert!(t.drop_cached(&key));
+        assert!(!t.drop_cached(&key), "second drop is a no-op");
+        assert_eq!(t.tuned(Variant::Distr, 1024, 64, false, 1), analytic);
+        assert_eq!(t.stats().searches, 2);
     }
 
     #[test]

@@ -23,12 +23,21 @@
 //! `num_devices` × `[autotune].gpu`, i.e. the PR-1 homogeneous world.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use crate::attention::Variant;
 use crate::config::{AutotuneCfg, Config};
+use crate::metrics::Ewma;
 use crate::simulator::GpuSpec;
 
 use super::{search, Autotuner, TunedParams, TunerStats};
+
+/// EWMA smoothing for measured lane calibration ratios.
+const LANE_EWMA_ALPHA: f64 = 0.25;
+
+/// Measured evidence (in heads) at which the blend weighs measurement
+/// and model equally; past it, measurement dominates.
+const LANE_PRIOR_HEADS: f64 = 8.0;
 
 /// Derive the per-card cache file from the configured base path, e.g.
 /// `tuning.json` + "RTX 4090" -> `tuning.rtx-4090.json`. An empty base
@@ -68,6 +77,11 @@ pub struct DevicePool {
     /// keyed by `GpuSpec::name`; slots with the same card share a tuner
     /// (identical hardware tunes identically)
     tuners: HashMap<&'static str, Autotuner>,
+    /// per-slot measured/predicted calibration ratio (EWMA, weighted by
+    /// heads computed) — the scatter telemetry `plan_tuned` blends in.
+    /// Per *slot*, not per card: two identical cards can sit behind
+    /// different thermal caps or shared hosts.
+    lane_ratio: Vec<Ewma>,
 }
 
 impl DevicePool {
@@ -86,7 +100,8 @@ impl DevicePool {
                 Autotuner::new(dev.gpu, cfg)
             });
         }
-        Self { devices, tuners }
+        let lane_ratio = vec![Ewma::new(LANE_EWMA_ALPHA); devices.len()];
+        Self { devices, tuners, lane_ratio }
     }
 
     /// Build from the top-level config: `[devices].pool` slots (or the
@@ -189,7 +204,54 @@ impl DevicePool {
         search::distr_cost(&dev.gpu, n, d, p.l, p.m, p.group) / dev.capacity_weight
     }
 
-    /// Aggregate hit/miss/search counters across all per-card tuners.
+    /// Feed one measured lane timing back into slot `idx`: `busy`
+    /// seconds spent computing `heads` heads whose cost-model prediction
+    /// was `predicted_sph` seconds per head. What's learned is the
+    /// *calibration ratio* measured/predicted, so the evidence transfers
+    /// across shapes — a mis-calibrated model shows up as a ratio far
+    /// from 1 and the planner's shares converge to the real skew.
+    pub fn record_lane(&mut self, idx: usize, heads: usize, busy: Duration, predicted_sph: f64) {
+        if heads == 0 || predicted_sph <= 0.0 {
+            return;
+        }
+        let measured_sph = busy.as_secs_f64() / heads as f64;
+        self.lane_ratio[idx].observe_n(measured_sph / predicted_sph, heads as f64);
+    }
+
+    /// Measured calibration state of slot `idx`: `(ratio, evidence in
+    /// heads)`, or `None` before any scatter fed this lane.
+    pub fn lane_measurement(&self, idx: usize) -> Option<(f64, f64)> {
+        let e = &self.lane_ratio[idx];
+        (!e.is_empty()).then(|| (e.value(), e.samples()))
+    }
+
+    /// Age all lanes' measured evidence (e.g. after a reconfiguration).
+    pub fn decay_lane_measurements(&mut self, factor: f64) {
+        for e in &mut self.lane_ratio {
+            e.decay(factor);
+        }
+    }
+
+    /// Cost-model seconds per head for slot `idx`, corrected by the
+    /// lane's measured calibration ratio with a confidence weight that
+    /// grows with evidence: `w = samples / (samples + prior)`. With no
+    /// measurements this is exactly
+    /// [`predicted_seconds`](Self::predicted_seconds); as scatter
+    /// telemetry accumulates it converges to the measured per-head
+    /// time.
+    pub fn blended_seconds(&self, idx: usize, n: usize, d: usize, p: &TunedParams) -> f64 {
+        let predicted = self.predicted_seconds(idx, n, d, p);
+        match self.lane_measurement(idx) {
+            Some((ratio, samples)) => {
+                let w = samples / (samples + LANE_PRIOR_HEADS);
+                predicted * ((1.0 - w) + w * ratio)
+            }
+            None => predicted,
+        }
+    }
+
+    /// Aggregate hit/miss/search/override counters across all per-card
+    /// tuners.
     pub fn stats(&self) -> TunerStats {
         let mut total = TunerStats::default();
         for t in self.tuners.values() {
@@ -197,6 +259,7 @@ impl DevicePool {
             total.hits += s.hits;
             total.misses += s.misses;
             total.searches += s.searches;
+            total.overrides += s.overrides;
         }
         total
     }
@@ -276,6 +339,43 @@ mod tests {
         let s = again.stats();
         assert_eq!(s.searches, 0, "per-card caches must survive restarts");
         assert_eq!(s.hits, 2);
+    }
+
+    #[test]
+    fn blended_seconds_tracks_measured_lane_ratio() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::RTX4090]);
+        let p = pool.tuned(0, Variant::Flash2, 1024, 64, false, 1);
+        let pred = pool.predicted_seconds(1, 1024, 64, &p);
+        // no measurements yet: blend == prediction
+        assert_eq!(pool.blended_seconds(1, 1024, 64, &p), pred);
+        assert!(pool.lane_measurement(1).is_none());
+
+        // lane 1 consistently measures 4x slower than the model says
+        for _ in 0..8 {
+            pool.record_lane(1, 8, Duration::from_secs_f64(8.0 * 4.0 * pred), pred);
+        }
+        let (ratio, samples) = pool.lane_measurement(1).unwrap();
+        assert!((ratio - 4.0).abs() < 1e-9, "ratio {ratio}");
+        assert_eq!(samples, 64.0);
+        let blended = pool.blended_seconds(1, 1024, 64, &p);
+        // with 64 heads of evidence vs an 8-head prior, w = 8/9: the
+        // blend sits close to the measured 4x
+        assert!(blended > pred * 3.5 && blended < pred * 4.0, "{}", blended / pred);
+        // the untouched lane still trusts the model
+        assert_eq!(pool.blended_seconds(0, 1024, 64, &p), pool.predicted_seconds(0, 1024, 64, &p));
+
+        // decay ages the evidence back toward the model
+        pool.decay_lane_measurements(0.01);
+        let decayed = pool.blended_seconds(1, 1024, 64, &p);
+        assert!(decayed < blended, "decay must pull the blend back toward the model");
+    }
+
+    #[test]
+    fn record_lane_ignores_degenerate_inputs() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090]);
+        pool.record_lane(0, 0, Duration::from_secs(1), 1.0);
+        pool.record_lane(0, 4, Duration::from_secs(1), 0.0);
+        assert!(pool.lane_measurement(0).is_none());
     }
 
     #[test]

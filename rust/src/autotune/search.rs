@@ -152,6 +152,15 @@ pub fn analytic(gpu: &GpuSpec, key: &TuneKey) -> TunedParams {
         if !serving_legal(gpu, d, l, m, n) {
             continue;
         }
+        // the causal engines assert `l % m == 0`. Today this holds for
+        // every candidate by construction (pow2 grid + `is_legal`
+        // rejecting m > l), but the invariant lives in another module —
+        // keep the serve-side contract explicit so a future grid or
+        // legality change cannot silently select a config the causal
+        // engines panic on
+        if key.causal && l % m != 0 {
+            continue;
+        }
         for &g in &groups {
             let c = distr_cost(gpu, n, d, l, m, g);
             if c < chosen_cost {
@@ -224,6 +233,30 @@ mod tests {
         let p = analytic(&GpuSpec::RTX4090, &key(Variant::Distr, 4096, 128));
         assert!(p.group > 1, "G*={}", p.group);
         assert!((p.sample_rate - 1.0 / p.group as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn causal_selection_is_engine_legal_everywhere() {
+        // the causal engines assert l % m == 0 at dispatch; the tuner
+        // must never hand them a config they'd panic on
+        for gpu in GpuSpec::ALL {
+            for variant in [Variant::Flash2, Variant::Distr] {
+                for n in [64usize, 256, 1024, 4096] {
+                    for d in [32usize, 64, 128] {
+                        let k = TuneKey::for_shape(variant, n, d, true, 1, BucketPolicy::Pow2);
+                        let p = analytic(&gpu, &k);
+                        assert_eq!(
+                            p.l % p.m,
+                            0,
+                            "{} {variant} n={n} d={d}: causal pick ({}, {})",
+                            gpu.name,
+                            p.l,
+                            p.m
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,804 @@
+//! Online re-tuning from serving telemetry: the measure→tune→dispatch
+//! loop closed on live traffic.
+//!
+//! The paper's block-size selection is measured, not modeled (§3.3.1 —
+//! Table 2's "best" rows come from timing the candidates), but until
+//! now the serving stack trusted the analytic cost model end-to-end:
+//! `Router::route_tuned` never learned from the latencies it observed.
+//! This module is the missing feedback edge. A [`TelemetryRecorder`]
+//! keeps, per [`TuneKey`], an EWMA of measured ns/call for the tuned
+//! config actually served *and* for a small set of serving-legal
+//! challenger configs (the same halved/doubled neighborhood
+//! [`super::empirical`] sweeps offline — built by
+//! [`empirical::candidates`], so online exploration can never select a
+//! config the engines would assert on). The dispatch path asks
+//! [`select`](TelemetryRecorder::select) which config to run — usually
+//! the incumbent, periodically a challenger — and reports the measured
+//! latency back through the returned [`TimingToken`]. Once a
+//! challenger has enough evidence and beats the incumbent's EWMA by
+//! the hysteresis margin, [`record`](TelemetryRecorder::record)
+//! returns a [`Promotion`] the router applies to the [`Autotuner`]
+//! cache ([`Autotuner::apply_override`]), so every later lookup — in
+//! this process or, via the persisted cache, the next one — serves the
+//! *measured* winner.
+//!
+//! Evidence decays three ways so stale overrides age out instead of
+//! ruling forever: the EWMA itself favors recent samples, sample
+//! counts are periodically decayed (`decay_every`/`decay`), and a
+//! restart decays everything by `restart_decay` when the persisted
+//! state (versioned, stored alongside the tuning cache — see
+//! [`telemetry_path`]) is loaded. A promoted override whose evidence
+//! has fully aged out is dropped from both the recorder and the tuning
+//! cache at [`attach`] time, falling back to a fresh analytic search.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::metrics::Ewma;
+use crate::simulator::GpuSpec;
+use crate::util::json::Value;
+
+use super::key::TuneKey;
+use super::{empirical, Autotuner, TunedParams};
+
+/// Bump when the telemetry schema or the meaning of a field changes;
+/// stale files are rejected at load (the evidence is cheap to re-earn).
+pub const TELEMETRY_VERSION: usize = 1;
+
+/// Knobs of the online re-tuning loop.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryCfg {
+    /// Evidence (decayed sample count) a config needs before it can
+    /// take part in a promotion decision, on either side.
+    pub min_samples: f64,
+    /// Hysteresis: a challenger's EWMA must be below
+    /// `incumbent * hysteresis` to promote (0.9 = ≥10% faster), so
+    /// measurement noise cannot ping-pong the cache.
+    pub hysteresis: f64,
+    /// EWMA smoothing factor for ns/call and TTFT.
+    pub alpha: f64,
+    /// One exploration dispatch (serve a challenger instead of the
+    /// incumbent) every this many dispatches of a key. 0 disables
+    /// exploration; 1 is rejected at construction — it would serve
+    /// *only* challengers, so the incumbent never accumulates the
+    /// evidence the promotion gate requires and the loop deadlocks
+    /// while routing all traffic through unvetted configs.
+    pub explore_every: u64,
+    /// Decay every key's sample counts by [`decay`](Self::decay) each
+    /// time its dispatch count crosses a multiple of this.
+    pub decay_every: u64,
+    /// Periodic decay factor in (0, 1].
+    pub decay: f64,
+    /// Decay applied to all sample counts when persisted state is
+    /// loaded: overrides must re-earn their evidence across restarts.
+    pub restart_decay: f64,
+    /// Cap on tracked configs per key (incumbent + challengers).
+    pub max_candidates: usize,
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> Self {
+        Self {
+            min_samples: 8.0,
+            hysteresis: 0.9,
+            alpha: 0.25,
+            explore_every: 8,
+            decay_every: 256,
+            decay: 0.5,
+            restart_decay: 0.5,
+            max_candidates: 8,
+        }
+    }
+}
+
+/// Handed out by [`TelemetryRecorder::select`] (through
+/// `Router::route_tuned`); the serve path passes it back with the
+/// measured latency once the dispatch completes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingToken {
+    pub key: TuneKey,
+    /// The config this dispatch actually ran (incumbent or challenger).
+    pub params: TunedParams,
+}
+
+/// A measured override ready to enter the tuning cache.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Promotion {
+    pub key: TuneKey,
+    pub params: TunedParams,
+}
+
+/// One config under measurement for a key.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateStats {
+    pub params: TunedParams,
+    /// EWMA of measured ns per attention call.
+    pub ns: Ewma,
+}
+
+/// Everything the recorder knows about one tuning key.
+#[derive(Clone, Debug)]
+pub struct KeyTelemetry {
+    /// Incumbent + serving-legal challengers; `[0]` is the config the
+    /// key was initialized with.
+    candidates: Vec<CandidateStats>,
+    /// The config non-exploration dispatches serve.
+    incumbent: TunedParams,
+    dispatches: u64,
+    /// EWMA of measured time-to-first-token, ns.
+    ttft_ns: Ewma,
+    promotions: u64,
+}
+
+impl KeyTelemetry {
+    pub fn incumbent(&self) -> TunedParams {
+        self.incumbent
+    }
+
+    pub fn candidates(&self) -> &[CandidateStats] {
+        &self.candidates
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Measured TTFT estimate, if any completions were reported.
+    pub fn ttft(&self) -> Option<Duration> {
+        (!self.ttft_ns.is_empty()).then(|| Duration::from_nanos(self.ttft_ns.value() as u64))
+    }
+
+    fn stats_of(&self, params: &TunedParams) -> Option<&CandidateStats> {
+        self.candidates.iter().find(|c| c.params == *params)
+    }
+}
+
+/// Derive the telemetry file from the tuning cache path, e.g.
+/// `tuning.json` -> `tuning.telemetry.json`. An empty base stays empty
+/// (in-memory telemetry, no persistence).
+pub fn telemetry_path(cache_path: &str) -> String {
+    if cache_path.is_empty() {
+        return String::new();
+    }
+    match cache_path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.telemetry.json"),
+        None => format!("{cache_path}.telemetry"),
+    }
+}
+
+/// The per-key online recorder the serve path feeds.
+pub struct TelemetryRecorder {
+    cfg: TelemetryCfg,
+    gpu: GpuSpec,
+    keys: HashMap<TuneKey, KeyTelemetry>,
+    /// persistence path; empty = memory only
+    path: String,
+    promotions: u64,
+}
+
+impl TelemetryRecorder {
+    /// Build for `gpu`, loading persisted state from `path` when it
+    /// exists (restart-decayed). A stale-version or foreign-GPU file is
+    /// ignored with a warning — telemetry is cheap to re-earn.
+    pub fn new(gpu: GpuSpec, cfg: TelemetryCfg, path: String) -> Self {
+        assert!(cfg.hysteresis > 0.0 && cfg.hysteresis <= 1.0, "hysteresis must be in (0, 1]");
+        assert!(cfg.min_samples > 0.0, "min_samples must be positive");
+        assert!(
+            cfg.explore_every != 1,
+            "explore_every = 1 would serve only challengers (0 disables exploration, >= 2 interleaves)"
+        );
+        let mut rec =
+            Self { cfg, gpu, keys: HashMap::new(), path: path.clone(), promotions: 0 };
+        if !path.is_empty() && Path::new(&path).exists() {
+            match Self::load_file(Path::new(&path), cfg) {
+                Ok((loaded_gpu, keys, promotions)) if loaded_gpu == gpu.name => {
+                    rec.keys = keys;
+                    rec.promotions = promotions;
+                    rec.decay_all(cfg.restart_decay);
+                    // write the decayed state back so restart decay
+                    // compounds: an override that sees no traffic for a
+                    // few restarts really does age to expiry
+                    if let Err(e) = rec.save() {
+                        log::warn!("telemetry: failed to persist restart decay: {e:#}");
+                    }
+                    log::info!("telemetry: loaded {} keys from {path}", rec.keys.len());
+                }
+                Ok((loaded_gpu, ..)) => {
+                    log::warn!(
+                        "telemetry: {path} was recorded on {loaded_gpu}, starting fresh for {}",
+                        gpu.name
+                    );
+                }
+                Err(e) => log::warn!("telemetry: ignoring unusable state: {e:#}"),
+            }
+        }
+        rec
+    }
+
+    /// A non-persisting recorder (benches/tests).
+    pub fn in_memory(gpu: GpuSpec, cfg: TelemetryCfg) -> Self {
+        Self::new(gpu, cfg, String::new())
+    }
+
+    /// Which config should this dispatch of `key` run? `incumbent` is
+    /// the tuner cache's current answer — it seeds the candidate set on
+    /// first sight of the key (and joins it later if the cache was
+    /// re-tuned underneath us). Most dispatches serve the recorder's
+    /// incumbent; every `explore_every`-th serves the least-measured
+    /// challenger so the loop keeps earning evidence.
+    pub fn select(&mut self, key: TuneKey, incumbent: TunedParams) -> (TunedParams, TimingToken) {
+        let (cfg, gpu) = (self.cfg, self.gpu);
+        let kt = self.keys.entry(key).or_insert_with(|| {
+            let mut cands = empirical::candidates(&gpu, &key, incumbent, key.n_bucket);
+            cands.truncate(cfg.max_candidates);
+            let mut candidates: Vec<CandidateStats> =
+                cands.into_iter().map(|params| CandidateStats { params, ns: Ewma::new(cfg.alpha) }).collect();
+            if !candidates.iter().any(|c| c.params == incumbent) {
+                candidates.insert(0, CandidateStats { params: incumbent, ns: Ewma::new(cfg.alpha) });
+                candidates.truncate(cfg.max_candidates.max(1));
+            }
+            KeyTelemetry {
+                candidates,
+                incumbent,
+                dispatches: 0,
+                ttft_ns: Ewma::new(cfg.alpha),
+                promotions: 0,
+            }
+        });
+        // the cache re-tuned underneath us (e.g. deleted cache file):
+        // track the new analytic pick as a candidate, but keep serving
+        // the incumbent the evidence points at
+        if kt.stats_of(&incumbent).is_none() && kt.candidates.len() < cfg.max_candidates {
+            kt.candidates.push(CandidateStats { params: incumbent, ns: Ewma::new(cfg.alpha) });
+        }
+        kt.dispatches += 1;
+        if cfg.decay_every > 0 && kt.dispatches % cfg.decay_every == 0 {
+            for c in &mut kt.candidates {
+                c.ns.decay(cfg.decay);
+            }
+            kt.ttft_ns.decay(cfg.decay);
+        }
+        let explore = cfg.explore_every > 0
+            && kt.candidates.len() > 1
+            && kt.dispatches % cfg.explore_every == 0;
+        let params = if explore {
+            let incumbent = kt.incumbent;
+            kt.candidates
+                .iter()
+                .filter(|c| c.params != incumbent)
+                .min_by(|a, b| a.ns.samples().total_cmp(&b.ns.samples()))
+                .map(|c| c.params)
+                .unwrap_or(incumbent)
+        } else {
+            kt.incumbent
+        };
+        (params, TimingToken { key, params })
+    }
+
+    /// Fold one measured dispatch latency into the token's candidate.
+    /// Returns a [`Promotion`] when a challenger's evidence clears the
+    /// hysteresis bar — the caller applies it to the tuner cache.
+    pub fn record(&mut self, token: &TimingToken, elapsed: Duration) -> Option<Promotion> {
+        let cfg = self.cfg;
+        let kt = self.keys.get_mut(&token.key)?;
+        match kt.candidates.iter_mut().find(|c| c.params == token.params) {
+            Some(c) => c.ns.observe(elapsed.as_nanos() as f64),
+            None => {
+                // token minted before a decay dropped the candidate, or
+                // from a foreign recorder: track it rather than lose the
+                // measurement, while respecting the cap
+                if kt.candidates.len() >= cfg.max_candidates {
+                    return None;
+                }
+                let mut ns = Ewma::new(cfg.alpha);
+                ns.observe(elapsed.as_nanos() as f64);
+                kt.candidates.push(CandidateStats { params: token.params, ns });
+            }
+        }
+
+        // promotion check: best measured config with enough evidence
+        let incumbent = kt.incumbent;
+        let inc = kt.stats_of(&incumbent)?;
+        if inc.ns.samples() < cfg.min_samples {
+            return None;
+        }
+        let inc_ns = inc.ns.value();
+        let best = kt
+            .candidates
+            .iter()
+            .filter(|c| c.ns.samples() >= cfg.min_samples)
+            .min_by(|a, b| a.ns.value().total_cmp(&b.ns.value()))?;
+        if best.params == incumbent || best.ns.value() >= inc_ns * cfg.hysteresis {
+            return None;
+        }
+        let promoted = best.params;
+        kt.incumbent = promoted;
+        kt.promotions += 1;
+        // a flip resets half the evidence: flipping straight back needs
+        // fresh measurements, not the same noisy ones
+        for c in &mut kt.candidates {
+            c.ns.decay(0.5);
+        }
+        self.promotions += 1;
+        log::info!(
+            "telemetry: promoting measured override {} -> (l={}, m={}, G*={})",
+            token.key,
+            promoted.l,
+            promoted.m,
+            promoted.group
+        );
+        if !self.path.is_empty() {
+            if let Err(e) = self.save() {
+                log::warn!("telemetry: failed to persist: {e:#}");
+            }
+        }
+        Some(Promotion { key: token.key, params: promoted })
+    }
+
+    /// Fold one measured time-to-first-token for `key` (completions
+    /// reported by the scheduler/serve loop). Keys never selected are
+    /// ignored — TTFT without a dispatch has nothing to tune.
+    pub fn record_ttft(&mut self, key: &TuneKey, ttft: Duration) {
+        if let Some(kt) = self.keys.get_mut(key) {
+            kt.ttft_ns.observe(ttft.as_nanos() as f64);
+        }
+    }
+
+    /// The recorder's current incumbent for `key`, if tracked.
+    pub fn incumbent(&self, key: &TuneKey) -> Option<TunedParams> {
+        self.keys.get(key).map(|kt| kt.incumbent)
+    }
+
+    /// Full per-key state (observability / tests).
+    pub fn key_state(&self, key: &TuneKey) -> Option<&KeyTelemetry> {
+        self.keys.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Total promotions across all keys this process + loaded history.
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Age all evidence by `factor` (restart decay uses this).
+    pub fn decay_all(&mut self, factor: f64) {
+        for kt in self.keys.values_mut() {
+            for c in &mut kt.candidates {
+                c.ns.decay(factor);
+            }
+            kt.ttft_ns.decay(factor);
+        }
+    }
+
+    /// Remove and return the keys whose promoted override has fully
+    /// aged out (evidence below one sample): the override should no
+    /// longer rule the cache, and the key re-tunes from scratch.
+    pub fn take_expired(&mut self) -> Vec<TuneKey> {
+        let expired: Vec<TuneKey> = self
+            .keys
+            .iter()
+            .filter(|(_, kt)| {
+                kt.promotions > 0
+                    && match kt.stats_of(&kt.incumbent) {
+                        Some(c) => c.ns.samples() < 1.0,
+                        None => true,
+                    }
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for k in &expired {
+            self.keys.remove(k);
+        }
+        expired
+    }
+
+    // -- persistence ------------------------------------------------------
+
+    fn params_json(p: &TunedParams) -> Value {
+        p.to_json()
+    }
+
+    fn ewma_json(e: &Ewma) -> Value {
+        Value::object(vec![
+            ("value", Value::number(e.value())),
+            ("samples", Value::number(e.samples())),
+        ])
+    }
+
+    fn ewma_from_json(v: &Value, alpha: f64) -> anyhow::Result<Ewma> {
+        let value = v
+            .req("value")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("`value` must be a number"))?;
+        let samples = v
+            .req("samples")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("`samples` must be a number"))?;
+        Ok(Ewma::from_parts(value, samples, alpha))
+    }
+
+    pub fn to_json(&self) -> Value {
+        let keys: Vec<(String, Value)> = self
+            .keys
+            .iter()
+            .map(|(k, kt)| {
+                let candidates: Vec<Value> = kt
+                    .candidates
+                    .iter()
+                    .map(|c| {
+                        Value::object(vec![
+                            ("params", Self::params_json(&c.params)),
+                            ("ns", Self::ewma_json(&c.ns)),
+                        ])
+                    })
+                    .collect();
+                (
+                    k.to_string(),
+                    Value::object(vec![
+                        ("incumbent", Self::params_json(&kt.incumbent)),
+                        ("dispatches", Value::number(kt.dispatches as f64)),
+                        ("promotions", Value::number(kt.promotions as f64)),
+                        ("ttft", Self::ewma_json(&kt.ttft_ns)),
+                        ("candidates", Value::Array(candidates)),
+                    ]),
+                )
+            })
+            .collect();
+        Value::object(vec![
+            ("version", Value::number(TELEMETRY_VERSION as f64)),
+            ("gpu", Value::string(self.gpu.name)),
+            ("promotions", Value::number(self.promotions as f64)),
+            ("keys", Value::Object(keys.into_iter().collect())),
+        ])
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn load_file(
+        path: &Path,
+        cfg: TelemetryCfg,
+    ) -> anyhow::Result<(String, HashMap<TuneKey, KeyTelemetry>, u64)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading telemetry {}", path.display()))?;
+        let v = Value::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let version = v.req_usize("version")?;
+        if version != TELEMETRY_VERSION {
+            bail!("stale telemetry: version {version}, expected {TELEMETRY_VERSION}");
+        }
+        let gpu = v.req_str("gpu")?.to_string();
+        let promotions = v.req_usize("promotions")? as u64;
+        let mut keys = HashMap::new();
+        let obj = v
+            .req("keys")?
+            .as_object()
+            .ok_or_else(|| anyhow!("`keys` must be an object"))?;
+        for (k, kv) in obj {
+            let key: TuneKey = k.parse().with_context(|| format!("telemetry key `{k}`"))?;
+            let incumbent = TunedParams::from_json(kv.req("incumbent")?)
+                .with_context(|| format!("telemetry key `{k}`"))?;
+            let mut candidates = Vec::new();
+            for cv in kv.req_array("candidates")? {
+                candidates.push(CandidateStats {
+                    params: TunedParams::from_json(cv.req("params")?)?,
+                    ns: Self::ewma_from_json(cv.req("ns")?, cfg.alpha)?,
+                });
+            }
+            keys.insert(
+                key,
+                KeyTelemetry {
+                    candidates,
+                    incumbent,
+                    dispatches: kv.req_usize("dispatches")? as u64,
+                    ttft_ns: Self::ewma_from_json(kv.req("ttft")?, cfg.alpha)?,
+                    promotions: kv.req_usize("promotions")? as u64,
+                },
+            );
+        }
+        Ok((gpu, keys, promotions))
+    }
+
+    /// Persist to the configured path if one is set — the serve loop's
+    /// shutdown hook, so evidence gathered between promotions (and keys
+    /// that never promoted at all) survives the restart.
+    pub fn persist(&self) -> anyhow::Result<()> {
+        if self.path.is_empty() {
+            return Ok(());
+        }
+        self.save()
+    }
+
+    /// Persist to the configured path.
+    pub fn save(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.path.is_empty(), "telemetry path not configured");
+        let path = Path::new(&self.path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing telemetry {}", path.display()))
+    }
+}
+
+/// Build the recorder that rides alongside `tuner`: persisted next to
+/// the tuning cache (see [`telemetry_path`]), restart-decayed, with
+/// fully aged-out measured overrides dropped from the tuner's cache so
+/// their next lookup re-searches analytically instead of serving a
+/// stale override forever.
+pub fn attach(tuner: &mut Autotuner, cfg: TelemetryCfg) -> TelemetryRecorder {
+    let path = telemetry_path(tuner.cache_path());
+    let mut rec = TelemetryRecorder::new(*tuner.gpu(), cfg, path);
+    let expired = rec.take_expired();
+    if !expired.is_empty() {
+        for key in &expired {
+            log::info!("telemetry: measured override for {key} aged out, re-tuning");
+            tuner.drop_cached(key);
+        }
+        if let Err(e) = rec.persist() {
+            log::warn!("telemetry: failed to persist expiry: {e:#}");
+        }
+    }
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::autotune::key::BucketPolicy;
+    use crate::autotune::search::analytic;
+    use crate::util::testing::TempDir;
+
+    fn test_cfg() -> TelemetryCfg {
+        TelemetryCfg {
+            min_samples: 3.0,
+            hysteresis: 0.9,
+            alpha: 0.5,
+            explore_every: 2,
+            decay_every: 1_000_000,
+            ..Default::default()
+        }
+    }
+
+    fn key() -> TuneKey {
+        TuneKey::for_shape(Variant::Distr, 1024, 64, false, 4, BucketPolicy::Pow2)
+    }
+
+    /// Drive the loop with synthetic latencies: `fast` params measure
+    /// 1ms, everything else 10ms. Returns the promotion, if any fired
+    /// within `iters` dispatches.
+    fn drive(
+        rec: &mut TelemetryRecorder,
+        key: TuneKey,
+        incumbent: TunedParams,
+        fast: TunedParams,
+        iters: usize,
+    ) -> Option<Promotion> {
+        for _ in 0..iters {
+            let current = rec.incumbent(&key).unwrap_or(incumbent);
+            let (params, token) = rec.select(key, current);
+            let elapsed = if params == fast {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(10)
+            };
+            if let Some(p) = rec.record(&token, elapsed) {
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn select_serves_incumbent_and_explores_challengers() {
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::in_memory(gpu, test_cfg());
+        let incumbent = analytic(&gpu, &key());
+        let mut served_incumbent = 0;
+        let mut served_other = 0;
+        for _ in 0..20 {
+            let (p, _) = rec.select(key(), incumbent);
+            if p == incumbent {
+                served_incumbent += 1;
+            } else {
+                served_other += 1;
+            }
+        }
+        assert!(served_incumbent > served_other, "{served_incumbent} vs {served_other}");
+        assert!(served_other > 0, "exploration must happen (explore_every=2)");
+        let kt = rec.key_state(&key()).unwrap();
+        assert!(kt.candidates().len() > 1, "legal challengers must be tracked");
+        assert_eq!(kt.dispatches(), 20);
+    }
+
+    #[test]
+    fn measured_winner_is_promoted_after_hysteresis() {
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::in_memory(gpu, test_cfg());
+        let incumbent = analytic(&gpu, &key());
+        // the "true fastest" config is a challenger the analytic model
+        // did not pick — synthetic latencies make it 10x faster
+        let (_, _) = rec.select(key(), incumbent);
+        let fast = rec
+            .key_state(&key())
+            .unwrap()
+            .candidates()
+            .iter()
+            .map(|c| c.params)
+            .find(|p| *p != incumbent)
+            .expect("neighborhood has challengers");
+        let promo = drive(&mut rec, key(), incumbent, fast, 100).expect("promotion must fire");
+        assert_eq!(promo.key, key());
+        assert_eq!(promo.params, fast);
+        assert_eq!(rec.incumbent(&key()), Some(fast));
+        assert_eq!(rec.promotions(), 1);
+        // after the flip, non-exploration dispatches serve the winner
+        let (p, _) = rec.select(key(), fast);
+        assert_eq!(p, fast);
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_flips() {
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::in_memory(gpu, test_cfg());
+        let incumbent = analytic(&gpu, &key());
+        rec.select(key(), incumbent);
+        let challenger = rec
+            .key_state(&key())
+            .unwrap()
+            .candidates()
+            .iter()
+            .map(|c| c.params)
+            .find(|p| *p != incumbent)
+            .unwrap();
+        // challenger only 5% faster: inside the 10% hysteresis band
+        for _ in 0..100 {
+            let current = rec.incumbent(&key()).unwrap();
+            let (params, token) = rec.select(key(), current);
+            let us = if params == challenger { 950 } else { 1000 };
+            assert!(
+                rec.record(&token, Duration::from_micros(us)).is_none(),
+                "a 5% edge must not clear a 10% hysteresis bar"
+            );
+        }
+        assert_eq!(rec.incumbent(&key()), Some(incumbent));
+    }
+
+    #[test]
+    fn ttft_recorded_per_key() {
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::in_memory(gpu, test_cfg());
+        let incumbent = analytic(&gpu, &key());
+        // unknown keys are ignored
+        rec.record_ttft(&key(), Duration::from_millis(5));
+        assert!(rec.key_state(&key()).is_none());
+        rec.select(key(), incumbent);
+        rec.record_ttft(&key(), Duration::from_millis(5));
+        rec.record_ttft(&key(), Duration::from_millis(5));
+        let ttft = rec.key_state(&key()).unwrap().ttft().unwrap();
+        assert_eq!(ttft, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn state_persists_and_restart_decays_evidence() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("tel.json").to_string_lossy().into_owned();
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::new(gpu, test_cfg(), path.clone());
+        let incumbent = analytic(&gpu, &key());
+        for _ in 0..10 {
+            let (_, token) = rec.select(key(), incumbent);
+            rec.record(&token, Duration::from_millis(2));
+        }
+        let before = rec.key_state(&key()).unwrap().stats_of(&incumbent).unwrap().ns.samples();
+        assert!(before > 0.0);
+        rec.save().unwrap();
+
+        // "restart": state loads, evidence halved (restart_decay = 0.5)
+        let again = TelemetryRecorder::new(gpu, test_cfg(), path);
+        let kt = again.key_state(&key()).expect("persisted key must load");
+        assert_eq!(kt.incumbent(), rec.incumbent(&key()).unwrap());
+        let after = kt.stats_of(&kt.incumbent()).unwrap().ns.samples();
+        assert!((after - before * 0.5).abs() < 1e-9, "{after} vs {before}");
+    }
+
+    #[test]
+    fn foreign_gpu_and_stale_version_start_fresh() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("tel.json");
+        std::fs::write(
+            &path,
+            format!(r#"{{"version": {}, "gpu": "L40", "promotions": 0, "keys": {{}}}}"#, TELEMETRY_VERSION),
+        )
+        .unwrap();
+        let rec = TelemetryRecorder::new(
+            GpuSpec::RTX4090,
+            test_cfg(),
+            path.to_string_lossy().into_owned(),
+        );
+        assert!(rec.is_empty(), "L40 telemetry must not drive an RTX 4090");
+
+        std::fs::write(&path, r#"{"version": 99, "gpu": "RTX 4090", "promotions": 0, "keys": {}}"#)
+            .unwrap();
+        let rec = TelemetryRecorder::new(
+            GpuSpec::RTX4090,
+            test_cfg(),
+            path.to_string_lossy().into_owned(),
+        );
+        assert!(rec.is_empty(), "future-version telemetry must be rejected");
+    }
+
+    #[test]
+    fn aged_out_override_expires_and_is_dropped_from_cache() {
+        let gpu = GpuSpec::RTX4090;
+        let mut cfg = test_cfg();
+        cfg.restart_decay = 0.01; // simulate many idle restarts at once
+        let dir = TempDir::new().unwrap();
+        let cache_path = dir.path().join("tuning.json").to_string_lossy().into_owned();
+        let mut tuner = Autotuner::new(
+            gpu,
+            crate::config::AutotuneCfg { cache_path: cache_path.clone(), empirical: false, ..Default::default() },
+        );
+        let tkey = key();
+        let incumbent = tuner.tuned(tkey.variant, tkey.n_bucket, tkey.d, tkey.causal, tkey.batch_bucket);
+
+        let mut rec = attach(&mut tuner, cfg);
+        rec.select(tkey, incumbent);
+        let fast = rec
+            .key_state(&tkey)
+            .unwrap()
+            .candidates()
+            .iter()
+            .map(|c| c.params)
+            .find(|p| *p != incumbent)
+            .unwrap();
+        let promo = drive(&mut rec, tkey, incumbent, fast, 100).expect("promotion");
+        tuner.apply_override(promo.key, promo.params);
+        assert_eq!(tuner.lookup(&tkey), Some(fast));
+        rec.save().unwrap();
+        drop(rec);
+
+        // next "process": the 0.01 restart decay ages the override out;
+        // attach drops it from the tuning cache so the key re-tunes
+        let mut tuner = Autotuner::new(
+            gpu,
+            crate::config::AutotuneCfg { cache_path, empirical: false, ..Default::default() },
+        );
+        assert_eq!(tuner.lookup(&tkey), Some(fast), "override persisted across restart");
+        let rec = attach(&mut tuner, cfg);
+        assert!(rec.key_state(&tkey).is_none(), "expired key must leave the recorder");
+        assert_eq!(tuner.lookup(&tkey), None, "expired override must leave the cache");
+    }
+
+    #[test]
+    #[should_panic]
+    fn explore_every_one_is_rejected() {
+        // serving only challengers starves the incumbent of evidence
+        // and deadlocks the promotion gate
+        let cfg = TelemetryCfg { explore_every: 1, ..Default::default() };
+        TelemetryRecorder::in_memory(GpuSpec::RTX4090, cfg);
+    }
+
+    #[test]
+    fn telemetry_path_derivation() {
+        assert_eq!(telemetry_path("tuning.json"), "tuning.telemetry.json");
+        assert_eq!(telemetry_path("/a/b/t.json"), "/a/b/t.telemetry.json");
+        assert_eq!(telemetry_path("cache"), "cache.telemetry");
+        assert_eq!(telemetry_path(""), "");
+    }
+}

@@ -84,11 +84,23 @@ impl Batcher {
         self
     }
 
-    /// The key `req` batches under: its tuning key at this batcher's
-    /// geometry, with the batch bucket pinned to the flush size so one
-    /// batch maps to one cache entry.
+    /// The *grouping* key `req` batches under: its tuning key at this
+    /// batcher's geometry. Grouping must be stable before the flush
+    /// size is known, so the batch bucket here is pinned to
+    /// `max_batch`; the key emitted with a flushed batch is rewritten
+    /// to the realized size by [`realized_key`](Self::realized_key).
     pub fn key_of(&self, req: &Request) -> BatchKey {
         req.tune_key(self.d, self.causal, self.cfg.max_batch.max(1), self.policy)
+    }
+
+    /// The key a flushed batch of `len` requests resolves tuning with:
+    /// the grouping key with its batch bucket rewritten to the
+    /// *realized* flush size. A deadline flush of 3 with
+    /// `max_batch = 64` used to emit the b64 key — a tuned config for a
+    /// batch size the flush doesn't have, sharing a cache entry with
+    /// genuinely full batches.
+    pub fn realized_key(key: BatchKey, len: usize) -> BatchKey {
+        BatchKey { batch_bucket: len.max(1).next_power_of_two(), ..key }
     }
 
     /// Enqueue a request; returns a full batch if this push filled one.
@@ -110,6 +122,7 @@ impl Batcher {
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
             self.stats.size_flushes += 1;
+            let key = Self::realized_key(key, batch.len());
             return Some((key, batch));
         }
         None
@@ -132,7 +145,7 @@ impl Batcher {
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
             self.stats.deadline_flushes += 1;
-            out.push((key, batch));
+            out.push((Self::realized_key(key, batch.len()), batch));
         }
         out
     }
@@ -146,7 +159,7 @@ impl Batcher {
             }
             self.stats.batches += 1;
             self.stats.requests += entry.requests.len() as u64;
-            out.push((key, entry.requests));
+            out.push((Self::realized_key(key, entry.requests.len()), entry.requests));
         }
         out
     }
@@ -231,6 +244,43 @@ mod tests {
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].1.len(), 1);
         assert_eq!(b.stats().deadline_flushes, 1);
+    }
+
+    #[test]
+    fn partial_flushes_key_on_the_realized_size() {
+        // regression: a deadline flush of 3 with max_batch = 64 used to
+        // emit a b64 key, resolving a tuned config for a batch size the
+        // flush doesn't have (and sharing its cache entry with full
+        // batches)
+        let mut b = Batcher::new(cfg(64, 0));
+        for i in 0..3 {
+            assert!(b.push(req(i, 100, Variant::Distr)).is_none());
+        }
+        let flushed = b.poll_deadlines(Instant::now() + Duration::from_micros(1));
+        assert_eq!(flushed.len(), 1);
+        let (key, batch) = &flushed[0];
+        assert_eq!(batch.len(), 3);
+        assert_eq!(key.batch_bucket, 4, "realized size 3 buckets to 4, not max_batch");
+
+        // a full flush of the same shape gets a different cache entry
+        let mut full = Batcher::new(cfg(64, 1_000_000));
+        let mut emitted = None;
+        for i in 0..64 {
+            if let Some((k, _)) = full.push(req(i, 100, Variant::Distr)) {
+                emitted = Some(k);
+            }
+        }
+        let full_key = emitted.expect("64 pushes fill the batch");
+        assert_eq!(full_key.batch_bucket, 64);
+        assert_ne!(*key, full_key, "partial and full flushes must not share a tuning entry");
+
+        // drain keys on the realized size too
+        let mut b = Batcher::new(cfg(64, 1_000_000));
+        for i in 0..5 {
+            b.push(req(i, 100, Variant::Distr));
+        }
+        let drained = b.drain();
+        assert_eq!(drained[0].0.batch_bucket, 8, "drain of 5 buckets to 8");
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub use decode::{attend_cached, decode_step};
 pub use engine::{Engine, EngineHandle};
 pub use kv_cache::{BlockId, KvCache, SeqHandle};
 pub use multi_device::{
-    plan_tuned, run_scatter, run_scatter_round_robin, run_scatter_tuned, DeviceLane, ScatterPlan,
-    ScatterReport, ScatterSchedule,
+    plan_tuned, record_scatter_telemetry, run_scatter, run_scatter_round_robin,
+    run_scatter_tuned, DeviceLane, ScatterPlan, ScatterReport, ScatterSchedule,
 };
 pub use request::{Priority, Request, RequestId, Response};
 pub use router::Router;

@@ -85,6 +85,10 @@ pub struct ScatterReport {
     pub compute_total: Duration,
     pub per_device_busy: Vec<Duration>,
     pub per_device_chunks: Vec<usize>,
+    /// heads computed by each device — with `per_device_busy`, the
+    /// measured seconds-per-head each lane actually delivered, which
+    /// the telemetry loop feeds back into the planner's shares.
+    pub per_device_heads: Vec<usize>,
     pub chunks: usize,
     /// heads actually computed across all devices (== the plan's `heads`;
     /// the pre-remainder-fix scatter padded the last chunk with phantoms)
@@ -148,9 +152,14 @@ fn fit_tiles_to(p: &mut TunedParams, n: usize) {
 }
 
 /// Plan a tuned scatter: resolve each device's `(l, m, G*)` from its
-/// own card's cache, predict per-device throughput with the cost model
-/// (scaled by capacity weight), and assign chunks proportionally via
-/// error diffusion so the interleaving tracks the shares.
+/// own card's cache, estimate per-device throughput — the cost model
+/// (scaled by capacity weight) *blended with the measured lane
+/// throughput* previous tuned scatters recorded
+/// ([`DevicePool::blended_seconds`]) — and assign chunks proportionally
+/// via error diffusion so the interleaving tracks the shares. With no
+/// measurements the blend reduces to the pure model; as
+/// [`run_scatter_tuned`] feeds timings back, a mis-calibrated model
+/// converges to the real skew.
 pub fn plan_tuned(plan: &ScatterPlan, pool: &mut DevicePool) -> ScatterSchedule {
     let n_dev = pool.num_devices();
     let mut lanes = Vec::with_capacity(n_dev);
@@ -158,7 +167,7 @@ pub fn plan_tuned(plan: &ScatterPlan, pool: &mut DevicePool) -> ScatterSchedule 
     for idx in 0..n_dev {
         let mut params = pool.tuned(idx, plan.variant, plan.n, plan.d, false, 1);
         fit_tiles_to(&mut params, plan.n);
-        rates.push(1.0 / pool.predicted_seconds(idx, plan.n, plan.d, &params).max(1e-12));
+        rates.push(1.0 / pool.blended_seconds(idx, plan.n, plan.d, &params).max(1e-12));
         let dev = pool.device(idx);
         lanes.push(DeviceLane {
             params,
@@ -286,10 +295,12 @@ fn run_lanes(
 
     let mut per_device_busy = vec![Duration::ZERO; n_dev];
     let mut per_device_chunks = vec![0usize; n_dev];
+    let mut per_device_heads = vec![0usize; n_dev];
     let mut heads = 0usize;
     while let Ok((dev, busy, n_chunks, n_heads)) = done_rx.recv() {
         per_device_busy[dev] = busy;
         per_device_chunks[dev] = n_chunks;
+        per_device_heads[dev] = n_heads;
         heads += n_heads;
     }
     for j in joins {
@@ -303,6 +314,7 @@ fn run_lanes(
         compute_total,
         per_device_busy,
         per_device_chunks,
+        per_device_heads,
         chunks,
         heads,
     }
@@ -357,10 +369,40 @@ pub fn run_scatter_round_robin(
     run_lanes(plan, &lanes, &assignment, double_buffer, seed)
 }
 
+/// Feed one tuned scatter's measured lane timings back into `pool`:
+/// each lane's realized seconds-per-head, recorded against what the
+/// cost model predicted for the params it ran, so the next
+/// [`plan_tuned`] blends the real skew into its shares.
+pub fn record_scatter_telemetry(
+    pool: &mut DevicePool,
+    plan: &ScatterPlan,
+    schedule: &ScatterSchedule,
+    report: &ScatterReport,
+) {
+    let lanes = pool
+        .num_devices()
+        .min(schedule.lanes.len())
+        .min(report.per_device_heads.len())
+        .min(report.per_device_busy.len());
+    for idx in 0..lanes {
+        let heads = report.per_device_heads[idx];
+        if heads == 0 {
+            continue;
+        }
+        let predicted =
+            pool.predicted_seconds(idx, plan.n, plan.d, &schedule.lanes[idx].params);
+        pool.record_lane(idx, heads, report.per_device_busy[idx], predicted);
+    }
+}
+
 /// Tuning-aware scatter: per-device `(l, m, G*)` from each card's own
-/// cache, chunks assigned proportionally to predicted throughput.
-/// Returns the schedule alongside the report so callers can inspect the
-/// per-device parameters and shares the planner chose.
+/// cache, chunks assigned proportionally to the blended (model ×
+/// measured) throughput estimate. Returns the schedule alongside the
+/// report so callers can inspect the per-device parameters and shares
+/// the planner chose. Each run's measured lane timings are recorded
+/// back into the pool ([`record_scatter_telemetry`]), so repeated
+/// scatters converge onto the hardware's real relative speeds even
+/// when the cost model is mis-calibrated.
 pub fn run_scatter_tuned(
     plan: &ScatterPlan,
     pool: &mut DevicePool,
@@ -369,6 +411,7 @@ pub fn run_scatter_tuned(
 ) -> (ScatterSchedule, ScatterReport) {
     let schedule = plan_tuned(plan, pool);
     let report = run_lanes(plan, &schedule.lanes, &schedule.assignment, double_buffer, seed);
+    record_scatter_telemetry(pool, plan, &schedule, &report);
     (schedule, report)
 }
 
@@ -458,6 +501,7 @@ mod tests {
             compute_total: Duration::from_millis(400),
             per_device_busy: vec![Duration::from_millis(100); 4],
             per_device_chunks: vec![1; 4],
+            per_device_heads: vec![1; 4],
             chunks: 4,
             heads: 4,
         };
@@ -469,6 +513,7 @@ mod tests {
             compute_total: Duration::from_millis(10),
             per_device_busy: vec![],
             per_device_chunks: vec![],
+            per_device_heads: vec![],
             chunks: 0,
             heads: 0,
         };
@@ -550,6 +595,103 @@ mod tests {
         for lane in &sched.lanes {
             assert_eq!(plan.n % lane.params.l, 0);
             assert_eq!(plan.n % lane.params.m, 0);
+        }
+    }
+
+    #[test]
+    fn plan_tuned_shares_converge_to_measured_lane_timings() {
+        // two identical cards, so the cost model predicts a 50/50 split —
+        // deliberately mis-calibrated against "reality", where lane 1
+        // runs 4x slower. Feed synthetic measured timings (no wall
+        // clock) and watch the shares converge to the real 80/20 skew
+        // within a handful of rounds.
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::RTX4090]);
+        let plan = ScatterPlan {
+            heads: 20,
+            chunk_heads: 2,
+            n: 512,
+            d: 64,
+            variant: Variant::Distr,
+            group: 2,
+            block_l: 64,
+            block_m: 64,
+        };
+        let before = plan_tuned(&plan, &mut pool);
+        assert!(
+            (before.shares[0] - 0.5).abs() < 1e-6,
+            "identical cards start at an even split: {:?}",
+            before.shares
+        );
+
+        let mut share0 = before.shares[0];
+        for round in 0..6 {
+            let sched = plan_tuned(&plan, &mut pool);
+            // synthetic measurement: lane 0 exactly as predicted, lane 1
+            // 4x slower than predicted
+            let report = ScatterReport {
+                wall: Duration::from_secs(1),
+                transfer_total: Duration::ZERO,
+                compute_total: Duration::from_secs(1),
+                per_device_busy: vec![
+                    Duration::from_secs_f64(
+                        10.0 * pool.predicted_seconds(0, plan.n, plan.d, &sched.lanes[0].params),
+                    ),
+                    Duration::from_secs_f64(
+                        10.0 * 4.0
+                            * pool.predicted_seconds(1, plan.n, plan.d, &sched.lanes[1].params),
+                    ),
+                ],
+                per_device_chunks: vec![5, 5],
+                per_device_heads: vec![10, 10],
+                chunks: 10,
+                heads: 20,
+            };
+            record_scatter_telemetry(&mut pool, &plan, &sched, &report);
+            let new_share0 = plan_tuned(&plan, &mut pool).shares[0];
+            assert!(
+                new_share0 >= share0 - 1e-9,
+                "round {round}: share must move toward the fast lane ({new_share0} < {share0})"
+            );
+            share0 = new_share0;
+        }
+        // 4x skew => fast lane's share converges toward 4/5
+        assert!(share0 > 0.7, "shares must track measured lane timings, got {share0}");
+        let (ratio, _) = pool.lane_measurement(1).unwrap();
+        assert!((ratio - 4.0).abs() < 1e-6, "lane 1 calibration ratio {ratio}");
+
+        // ... and the chunk assignment follows the shares
+        let sched = plan_tuned(&plan, &mut pool);
+        let counts = sched.assignment.iter().fold([0usize; 2], |mut acc, &d| {
+            acc[d] += 1;
+            acc
+        });
+        assert!(counts[0] > counts[1] * 2, "assignment must skew to the fast lane: {counts:?}");
+    }
+
+    #[test]
+    fn tuned_scatter_records_lane_telemetry() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]);
+        let plan = ScatterPlan {
+            heads: 6,
+            chunk_heads: 2,
+            n: 256,
+            d: 64,
+            variant: Variant::Flash2,
+            group: 1,
+            block_l: 64,
+            block_m: 64,
+        };
+        let (_, r) = run_scatter_tuned(&plan, &mut pool, true, 11);
+        assert_eq!(r.per_device_heads.iter().sum::<usize>(), 6);
+        // every lane that computed heads fed the pool's measurements
+        for idx in 0..pool.num_devices() {
+            if r.per_device_heads[idx] > 0 {
+                let (ratio, samples) = pool
+                    .lane_measurement(idx)
+                    .expect("lane with computed heads must record telemetry");
+                assert!(ratio > 0.0);
+                assert!(samples >= r.per_device_heads[idx] as f64);
+            }
         }
     }
 

@@ -9,13 +9,22 @@
 //! resolves each request's shape to tuned `(l, m, G*)` parameters
 //! (cached per shape bucket) alongside the engine handle, instead of
 //! the engines' hard-coded defaults.
+//!
+//! With a [`TelemetryRecorder`] also attached the loop closes: each
+//! tuned dispatch returns a [`TimingToken`], the serve path reports the
+//! measured latency back through [`Router::report`] (and TTFT through
+//! [`Router::report_ttft`]), and once a measured challenger clears the
+//! recorder's hysteresis bar the promotion is applied straight into the
+//! tuner's cache — later dispatches serve the measured winner, in this
+//! process and (via the persisted cache) the next.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use anyhow::anyhow;
 
 use crate::attention::Variant;
-use crate::autotune::{Autotuner, TunedParams};
+use crate::autotune::{Autotuner, TelemetryRecorder, TimingToken, TunedParams};
 
 use super::request::Request;
 
@@ -40,6 +49,7 @@ pub struct Router<T> {
     stats: HashMap<RouteKey, RouteStats>,
     rejected: u64,
     tuner: Option<Autotuner>,
+    telemetry: Option<TelemetryRecorder>,
 }
 
 impl<T> Default for Router<T> {
@@ -50,7 +60,13 @@ impl<T> Default for Router<T> {
 
 impl<T> Router<T> {
     pub fn new() -> Self {
-        Self { routes: HashMap::new(), stats: HashMap::new(), rejected: 0, tuner: None }
+        Self {
+            routes: HashMap::new(),
+            stats: HashMap::new(),
+            rejected: 0,
+            tuner: None,
+            telemetry: None,
+        }
     }
 
     /// Attach an autotuner: [`route_tuned`](Self::route_tuned) will
@@ -60,8 +76,20 @@ impl<T> Router<T> {
         self
     }
 
+    /// Attach a telemetry recorder: tuned dispatches then return
+    /// [`TimingToken`]s and measured latencies reported through
+    /// [`report`](Self::report) feed the online re-tuning loop.
+    pub fn with_telemetry(mut self, recorder: TelemetryRecorder) -> Self {
+        self.telemetry = Some(recorder);
+        self
+    }
+
     pub fn autotuner(&self) -> Option<&Autotuner> {
         self.tuner.as_ref()
+    }
+
+    pub fn telemetry(&self) -> Option<&TelemetryRecorder> {
+        self.telemetry.as_ref()
     }
 
     pub fn add_route(&mut self, variant: Variant, len_bucket: usize, engine: T) {
@@ -115,24 +143,90 @@ impl<T> Router<T> {
     /// the same shape are hit rather than re-searched. With no tuner
     /// attached this degrades to [`route`](Self::route) + `None`, so
     /// callers can use it unconditionally.
+    ///
+    /// With telemetry attached the dispatch also returns a
+    /// [`TimingToken`]; pass it back with the measured latency via
+    /// [`report`](Self::report) to close the re-tuning loop (the
+    /// recorder may substitute a measured winner, or periodically an
+    /// exploration challenger, for the cache's analytic pick).
     pub fn route_tuned(
         &mut self,
         req: &Request,
         d: usize,
         causal: bool,
         batch: usize,
-    ) -> anyhow::Result<(&T, RouteKey, Option<TunedParams>)> {
+    ) -> anyhow::Result<(&T, RouteKey, Option<TunedParams>, Option<TimingToken>)> {
         let Some(key) = self.select(req) else {
             return Err(self.reject(req));
         };
         let n = req.tokens.len().max(1);
-        let tuned = self.tuner.as_mut().map(|t| t.tuned(req.variant, n, d, causal, batch));
+        let mut token = None;
+        let tuned = match self.tuner.as_mut() {
+            Some(t) => {
+                let tune_key = t.key_for(req.variant, n, d, causal, batch);
+                let mut params = t.tuned(req.variant, n, d, causal, batch);
+                if let Some(rec) = self.telemetry.as_mut() {
+                    let (chosen, tok) = rec.select(tune_key, params);
+                    params = chosen;
+                    token = Some(tok);
+                }
+                Some(params)
+            }
+            None => None,
+        };
         let stats = self.stats.get_mut(&key).unwrap();
         stats.routed += 1;
         if tuned.is_some() {
             stats.tuned += 1;
         }
-        Ok((&self.routes[&key], key, tuned))
+        Ok((&self.routes[&key], key, tuned, token))
+    }
+
+    /// Resolve one engine + one tuned config for a whole flushed batch
+    /// at its *realized* size — the flush-side half of tuning-aware
+    /// batch execution. The batcher groups by full tuning key, so every
+    /// request in `batch` shares a shape class; keying the resolution
+    /// on `batch.len()` (not the configured `max_batch`) means a
+    /// deadline flush of 3 tunes as a batch of 3, and the realized size
+    /// feeds back into the cache key.
+    pub fn route_batch(
+        &mut self,
+        batch: &[Request],
+        d: usize,
+        causal: bool,
+    ) -> anyhow::Result<(&T, RouteKey, Option<TunedParams>, Option<TimingToken>)> {
+        let Some(first) = batch.first() else {
+            return Err(anyhow!("cannot route an empty batch"));
+        };
+        let extra = batch.len() as u64 - 1;
+        let (_, key, tuned, token) = self.route_tuned(first, d, causal, batch.len())?;
+        let stats = self.stats.get_mut(&key).unwrap();
+        stats.routed += extra;
+        if tuned.is_some() {
+            stats.tuned += extra;
+        }
+        Ok((&self.routes[&key], key, tuned, token))
+    }
+
+    /// Report a tuned dispatch's measured latency. When the recorder
+    /// promotes a measured override, it is applied to the attached
+    /// tuner's cache immediately — the loop's write-back edge.
+    pub fn report(&mut self, token: &TimingToken, elapsed: Duration) {
+        if let Some(rec) = self.telemetry.as_mut() {
+            if let Some(promo) = rec.record(token, elapsed) {
+                if let Some(t) = self.tuner.as_mut() {
+                    t.apply_override(promo.key, promo.params);
+                }
+            }
+        }
+    }
+
+    /// Report a completed request's measured time-to-first-token for
+    /// the tuning key it was dispatched under.
+    pub fn report_ttft(&mut self, token: &TimingToken, ttft: Duration) {
+        if let Some(rec) = self.telemetry.as_mut() {
+            rec.record_ttft(&token.key, ttft);
+        }
     }
 
     fn buckets_for(&self, v: Variant) -> Vec<usize> {
@@ -211,14 +305,15 @@ mod tests {
 
         let mut r: Router<&'static str> = Router::new().with_autotuner(Autotuner::in_memory(GpuSpec::RTX4090));
         r.add_route(Variant::Distr, 1024, "d1024");
-        let (eng, key, tuned) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        let (eng, key, tuned, token) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
         assert_eq!(*eng, "d1024");
+        assert!(token.is_none(), "no telemetry attached => no token");
         let p = tuned.expect("tuner attached => params resolved");
         assert!(is_legal(&GpuSpec::RTX4090, 64, p.l, p.m), "({}, {})", p.l, p.m);
         assert!(p.group >= 1 && 64 % p.group == 0);
         assert_eq!(r.stats()[&key].tuned, 1);
         // same shape bucket again: answered from the tuning cache
-        let (_, _, tuned2) = r.route_tuned(&req(900, Variant::Distr), 64, false, 1).unwrap();
+        let (_, _, tuned2, _) = r.route_tuned(&req(900, Variant::Distr), 64, false, 1).unwrap();
         assert_eq!(tuned2.unwrap(), p);
         let ts = r.autotuner().unwrap().stats();
         assert_eq!(ts.searches, 1);
@@ -229,10 +324,96 @@ mod tests {
     fn route_tuned_without_tuner_degrades_gracefully() {
         let mut r: Router<()> = Router::new();
         r.add_route(Variant::Flash2, 128, ());
-        let (_, key, tuned) = r.route_tuned(&req(10, Variant::Flash2), 64, true, 1).unwrap();
+        let (_, key, tuned, token) = r.route_tuned(&req(10, Variant::Flash2), 64, true, 1).unwrap();
         assert!(tuned.is_none());
+        assert!(token.is_none());
         assert_eq!(r.stats()[&key].tuned, 0);
         assert_eq!(r.stats()[&key].routed, 1);
+    }
+
+    #[test]
+    fn route_tuned_with_telemetry_issues_tokens_and_learns() {
+        use crate::autotune::{Autotuner, TelemetryCfg, TelemetryRecorder};
+        use crate::simulator::GpuSpec;
+        use std::time::Duration;
+
+        let gpu = GpuSpec::RTX4090;
+        let cfg = TelemetryCfg {
+            min_samples: 3.0,
+            hysteresis: 0.9,
+            explore_every: 2,
+            ..Default::default()
+        };
+        let mut r: Router<()> = Router::new()
+            .with_autotuner(Autotuner::in_memory(gpu))
+            .with_telemetry(TelemetryRecorder::in_memory(gpu, cfg));
+        r.add_route(Variant::Distr, 1024, ());
+
+        // discover the analytic incumbent and a legal challenger
+        let (_, _, tuned, token) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        let incumbent = tuned.unwrap();
+        let token = token.expect("telemetry attached => token issued");
+        let fast = r
+            .telemetry()
+            .unwrap()
+            .key_state(&token.key)
+            .unwrap()
+            .candidates()
+            .iter()
+            .map(|c| c.params)
+            .find(|p| *p != incumbent)
+            .expect("neighborhood has challengers");
+
+        // the analytic model is "mis-calibrated": measured latencies say
+        // the challenger is 10x faster than the incumbent
+        let mut flipped = false;
+        for _ in 0..100 {
+            let (_, _, tuned, token) =
+                r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+            let served = tuned.unwrap();
+            let token = token.unwrap();
+            let elapsed = if served == fast {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(10)
+            };
+            r.report(&token, elapsed);
+            if r.autotuner().unwrap().lookup(&token.key) == Some(fast) {
+                flipped = true;
+                break;
+            }
+        }
+        assert!(flipped, "measured winner must be promoted into the tuner cache");
+        assert_eq!(r.autotuner().unwrap().stats().overrides, 1);
+        // TTFT reporting is accepted for the dispatched key
+        r.report_ttft(&token, Duration::from_millis(7));
+        assert!(r.telemetry().unwrap().key_state(&token.key).unwrap().ttft().is_some());
+    }
+
+    #[test]
+    fn route_batch_keys_on_realized_size() {
+        use crate::autotune::Autotuner;
+        use crate::simulator::GpuSpec;
+
+        let mut r: Router<&'static str> =
+            Router::new().with_autotuner(Autotuner::in_memory(GpuSpec::RTX4090));
+        r.add_route(Variant::Distr, 128, "d128");
+        let batch: Vec<Request> = (0..3).map(|i| req(100 + i, Variant::Distr)).collect();
+        let (eng, key, tuned, _) = r.route_batch(&batch, 64, false).unwrap();
+        assert_eq!(*eng, "d128");
+        assert!(tuned.is_some());
+        // stats count every request in the batch, not one per flush
+        assert_eq!(r.stats()[&key].routed, 3);
+        assert_eq!(r.stats()[&key].tuned, 3);
+        // the tuning key embeds the realized batch bucket (3 -> 4), so a
+        // partial flush cannot share a cache entry with a full one
+        let t = r.autotuner().unwrap();
+        let k3 = t.key_for(Variant::Distr, 100, 64, false, 3);
+        assert!(t.lookup(&k3).is_some(), "resolved at the realized size");
+        let k64 = t.key_for(Variant::Distr, 100, 64, false, 64);
+        assert!(t.lookup(&k64).is_none(), "max-batch key must not be touched");
+
+        assert!(r.route_batch(&[], 64, false).is_err(), "empty batch is rejected");
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! Interactive (TTFT-sensitive) work preempts batch traffic, but batch
 //! requests age into the interactive class after `starvation_limit` so
 //! offline jobs cannot starve.
+//!
+//! The scheduler is also the completion chokepoint of the serve loop:
+//! [`complete`](Scheduler::complete) turns a finished request into its
+//! measured TTFT, which the serve path feeds to the telemetry recorder
+//! (`Router::report_ttft`) — the arrival-to-first-token number the
+//! online re-tuner tracks per shape.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -13,11 +19,29 @@ pub struct Scheduler {
     interactive: VecDeque<Request>,
     batch: VecDeque<Request>,
     starvation_limit: Duration,
+    completed: u64,
 }
 
 impl Scheduler {
     pub fn new(starvation_limit: Duration) -> Self {
-        Self { interactive: VecDeque::new(), batch: VecDeque::new(), starvation_limit }
+        Self {
+            interactive: VecDeque::new(),
+            batch: VecDeque::new(),
+            starvation_limit,
+            completed: 0,
+        }
+    }
+
+    /// Report a request completion at `now`; returns its measured
+    /// time-to-first-token (arrival to completion).
+    pub fn complete(&mut self, req: &Request, now: Instant) -> Duration {
+        self.completed += 1;
+        now.saturating_duration_since(req.arrived)
+    }
+
+    /// Completions reported so far.
+    pub fn completed(&self) -> u64 {
+        self.completed
     }
 
     pub fn push(&mut self, req: Request) {
@@ -81,6 +105,21 @@ mod tests {
         s.push(req(2, Priority::Interactive));
         // zero starvation limit: the batch request is already "starved"
         assert_eq!(s.pop(Instant::now()).unwrap().id, 1);
+    }
+
+    #[test]
+    fn complete_reports_ttft_and_counts() {
+        let mut s = Scheduler::new(Duration::from_secs(60));
+        let r = req(1, Priority::Interactive);
+        let arrived = r.arrived;
+        s.push(r);
+        let popped = s.pop(Instant::now()).unwrap();
+        assert_eq!(s.completed(), 0);
+        let ttft = s.complete(&popped, arrived + Duration::from_millis(25));
+        assert_eq!(ttft, Duration::from_millis(25));
+        assert_eq!(s.completed(), 1);
+        // a completion stamped before arrival saturates to zero
+        assert_eq!(s.complete(&popped, arrived - Duration::from_millis(1)), Duration::ZERO);
     }
 
     #[test]

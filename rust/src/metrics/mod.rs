@@ -1,8 +1,82 @@
 //! Latency/throughput metrics used by every bench harness and the serve
-//! loop: a fixed-bucket histogram for percentiles plus a tiny markdown
-//! table emitter (the benches print paper-style rows).
+//! loop: a fixed-bucket histogram for percentiles, an exponentially
+//! weighted moving average (the unit the serving-telemetry recorders
+//! aggregate with), and a tiny markdown table emitter (the benches
+//! print paper-style rows).
 
 use std::time::Duration;
+
+/// Exponentially weighted moving average with a decayable sample count.
+///
+/// The online re-tuning loop ([`crate::autotune::telemetry`] and the
+/// scatter planner's lane feedback) needs a latency estimate that (a)
+/// favors recent observations so hardware drift shows up, and (b)
+/// carries how much evidence backs it so hysteresis thresholds and
+/// restart decay have something to act on. Plain means do neither.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    value: f64,
+    samples: f64,
+    alpha: f64,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: the weight of each new observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1], got {alpha}");
+        Self { value: 0.0, samples: 0.0, alpha }
+    }
+
+    /// Fold in one observation.
+    pub fn observe(&mut self, x: f64) {
+        self.observe_n(x, 1.0);
+    }
+
+    /// Fold in one observation that stands for `weight` samples (e.g. a
+    /// per-head time measured over a whole chunk of heads). The value
+    /// update is a single EWMA step; only the evidence count scales.
+    pub fn observe_n(&mut self, x: f64, weight: f64) {
+        if weight <= 0.0 {
+            return;
+        }
+        if self.samples <= 0.0 {
+            self.value = x;
+        } else {
+            self.value += self.alpha * (x - self.value);
+        }
+        self.samples += weight;
+    }
+
+    /// Current estimate (0.0 before any observation — check
+    /// [`is_empty`](Self::is_empty)).
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    /// Evidence behind the estimate, decayable via [`decay`](Self::decay).
+    pub fn samples(&self) -> f64 {
+        self.samples
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples <= 0.0
+    }
+
+    /// Age the evidence (restart decay / periodic decay): the estimate
+    /// stays, but it counts for less until fresh samples re-earn it.
+    pub fn decay(&mut self, factor: f64) {
+        assert!((0.0..=1.0).contains(&factor), "decay factor must be in [0, 1]");
+        self.samples *= factor;
+    }
+
+    /// Rebuild from persisted state (telemetry cache load).
+    pub fn from_parts(value: f64, samples: f64, alpha: f64) -> Self {
+        let mut e = Self::new(alpha);
+        e.value = value;
+        e.samples = samples.max(0.0);
+        e
+    }
+}
 
 /// Latency histogram with exponential buckets from 1µs to ~67s.
 #[derive(Clone, Debug)]
@@ -155,6 +229,60 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ewma_first_observation_is_exact() {
+        let mut e = Ewma::new(0.25);
+        assert!(e.is_empty());
+        e.observe(100.0);
+        assert_eq!(e.value(), 100.0);
+        assert_eq!(e.samples(), 1.0);
+    }
+
+    #[test]
+    fn ewma_tracks_recent_observations() {
+        let mut e = Ewma::new(0.5);
+        e.observe(100.0);
+        for _ in 0..20 {
+            e.observe(10.0);
+        }
+        assert!((e.value() - 10.0).abs() < 1e-3, "{}", e.value());
+        assert_eq!(e.samples(), 21.0);
+    }
+
+    #[test]
+    fn ewma_weighted_observation_counts_evidence_once() {
+        let mut e = Ewma::new(0.25);
+        e.observe_n(4.0, 8.0);
+        assert_eq!(e.value(), 4.0);
+        assert_eq!(e.samples(), 8.0);
+        // zero/negative weights are ignored entirely
+        e.observe_n(100.0, 0.0);
+        assert_eq!(e.value(), 4.0);
+        assert_eq!(e.samples(), 8.0);
+    }
+
+    #[test]
+    fn ewma_decay_ages_evidence_not_estimate() {
+        let mut e = Ewma::new(0.25);
+        e.observe_n(7.0, 10.0);
+        e.decay(0.5);
+        assert_eq!(e.value(), 7.0);
+        assert_eq!(e.samples(), 5.0);
+    }
+
+    #[test]
+    fn ewma_parts_roundtrip() {
+        let e = Ewma::from_parts(3.5, 12.0, 0.2);
+        assert_eq!(e.value(), 3.5);
+        assert_eq!(e.samples(), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_zero_alpha() {
+        Ewma::new(0.0);
+    }
 
     #[test]
     fn histogram_basic_stats() {

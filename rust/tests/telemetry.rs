@@ -1,0 +1,200 @@
+//! Integration tests over the online re-tuning loop: the full
+//! scheduler -> batcher -> router -> telemetry -> tuning-cache path,
+//! with *synthetic* measured latencies so every assertion is
+//! deterministic (no wall-clock dependence anywhere).
+
+use std::time::{Duration, Instant};
+
+use distr_attention::attention::Variant;
+use distr_attention::autotune::{
+    telemetry, Autotuner, TelemetryCfg, TelemetryRecorder, TunedParams,
+};
+use distr_attention::config::{AutotuneCfg, BatcherCfg};
+use distr_attention::coordinator::{Batcher, Request, Router, Scheduler};
+use distr_attention::simulator::GpuSpec;
+use distr_attention::util::testing::TempDir;
+
+const D: usize = 64;
+
+fn fast_cfg() -> TelemetryCfg {
+    TelemetryCfg {
+        min_samples: 3.0,
+        hysteresis: 0.9,
+        explore_every: 2,
+        ..Default::default()
+    }
+}
+
+/// The serve loop with a deliberately mis-calibrated cost model: the
+/// analytic pick "measures" 10x slower than one specific legal
+/// challenger. Telemetry must flip the cache to the measured winner,
+/// subsequent dispatches must serve it, and the override must survive
+/// a process restart through the persisted tuning cache.
+#[test]
+fn serve_loop_corrects_miscalibrated_model_and_persists() {
+    let dir = TempDir::new().unwrap();
+    let cache_path = dir.path().join("tuning.json").to_string_lossy().into_owned();
+    let gpu = GpuSpec::RTX4090;
+
+    let mut tuner = Autotuner::new(
+        gpu,
+        AutotuneCfg { cache_path: cache_path.clone(), empirical: false, ..Default::default() },
+    );
+    let recorder = telemetry::attach(&mut tuner, fast_cfg());
+    let mut router: Router<&'static str> =
+        Router::new().with_autotuner(tuner).with_telemetry(recorder);
+    router.add_route(Variant::Distr, 1024, "distr-1024");
+
+    let mut scheduler = Scheduler::new(Duration::from_millis(50));
+    let mut batcher = Batcher::new(BatcherCfg { max_batch: 4, max_wait_us: 1_000_000 });
+
+    // "reality" disagrees with the analytic model: whatever the model
+    // picked, this challenger is 10x faster on the real hardware
+    let mut target: Option<TunedParams> = None;
+    let mut incumbent: Option<TunedParams> = None;
+    let mut flipped_at = None;
+
+    for round in 0..120u64 {
+        for i in 0..4u64 {
+            scheduler.push(Request::new(round * 4 + i, vec![0; 1000], Variant::Distr));
+        }
+        while let Some(req) = scheduler.pop(Instant::now()) {
+            let Some((_key, batch)) = batcher.push(req) else { continue };
+            let (_, _, tuned, token) = router.route_batch(&batch, D, false).unwrap();
+            let served = tuned.expect("tuner attached");
+            let token = token.expect("telemetry attached");
+            if incumbent.is_none() {
+                incumbent = Some(served);
+                let t = router
+                    .telemetry()
+                    .unwrap()
+                    .key_state(&token.key)
+                    .unwrap()
+                    .candidates()
+                    .iter()
+                    .map(|c| c.params)
+                    .find(|p| Some(*p) != incumbent)
+                    .expect("legal challengers exist for this shape");
+                target = Some(t);
+            }
+            let synthetic = if Some(served) == target {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(10)
+            };
+            for req in &batch {
+                let ttft = scheduler.complete(req, req.arrived + synthetic);
+                router.report_ttft(&token, ttft);
+            }
+            router.report(&token, synthetic);
+            if flipped_at.is_none()
+                && router.autotuner().unwrap().lookup(&token.key) == target
+            {
+                flipped_at = Some(round);
+            }
+        }
+    }
+
+    let target = target.unwrap();
+    let flipped_at = flipped_at.expect("telemetry must promote the measured winner");
+    assert!(flipped_at < 119, "promotion fired only at the very end: round {flipped_at}");
+    assert!(router.autotuner().unwrap().stats().overrides >= 1);
+    assert!(router.telemetry().unwrap().promotions() >= 1);
+    assert_eq!(scheduler.completed(), 480);
+
+    // subsequent dispatches serve the measured winner (bar exploration)
+    let req = Request::new(9999, vec![0; 1000], Variant::Distr);
+    let (_, _, tuned, token) = router.route_tuned(&req, D, false, 4).unwrap();
+    let token = token.unwrap();
+    assert_eq!(
+        router.telemetry().unwrap().incumbent(&token.key),
+        Some(target),
+        "recorder incumbent must be the measured winner"
+    );
+    // route_tuned may legitimately hand out an exploration challenger;
+    // the cache itself must hold the override
+    assert!(tuned.is_some());
+    assert_eq!(router.autotuner().unwrap().lookup(&token.key), Some(target));
+
+    // "restart": a fresh tuner loads the persisted cache and serves the
+    // measured override without re-searching
+    let mut fresh = Autotuner::new(
+        gpu,
+        AutotuneCfg { cache_path, empirical: false, ..Default::default() },
+    );
+    assert_eq!(fresh.tuned(Variant::Distr, 1000, D, false, 4), target);
+    assert_eq!(fresh.stats().searches, 0, "override must come from the persisted cache");
+
+    // ... and the telemetry state persisted alongside it, evidence
+    // restart-decayed but the incumbent intact
+    let reloaded = TelemetryRecorder::new(
+        gpu,
+        fast_cfg(),
+        distr_attention::autotune::telemetry_path(fresh.cache_path()),
+    );
+    let key = fresh.key_for(Variant::Distr, 1000, D, false, 4);
+    let kt = reloaded.key_state(&key).expect("telemetry persisted across restart");
+    assert_eq!(kt.incumbent(), target);
+    assert!(kt.ttft().is_some(), "TTFT telemetry persisted");
+}
+
+/// A deadline flush of 3 with `max_batch = 64` must resolve (and cache)
+/// a tuned config for a realized batch of 3 — not share an entry with
+/// full 64-request batches.
+#[test]
+fn partial_flush_resolves_its_own_tuned_entry() {
+    let gpu = GpuSpec::RTX4090;
+    let mut router: Router<()> = Router::new().with_autotuner(Autotuner::in_memory(gpu));
+    router.add_route(Variant::Flash2, 128, ());
+
+    let mut batcher = Batcher::new(BatcherCfg { max_batch: 64, max_wait_us: 0 });
+    for i in 0..3 {
+        assert!(batcher.push(Request::new(i, vec![0; 100], Variant::Flash2)).is_none());
+    }
+    let mut flushed = batcher.poll_deadlines(Instant::now() + Duration::from_micros(1));
+    assert_eq!(flushed.len(), 1);
+    let (key, batch) = flushed.pop().unwrap();
+    assert_eq!(batch.len(), 3);
+    assert_eq!(key.batch_bucket, 4, "flush key carries the realized size");
+
+    let (_, _, tuned, _) = router.route_batch(&batch, D, false).unwrap();
+    assert!(tuned.is_some());
+    let tuner = router.autotuner().unwrap();
+    let realized = tuner.key_for(Variant::Flash2, 100, D, false, 3);
+    let pinned = tuner.key_for(Variant::Flash2, 100, D, false, 64);
+    assert_eq!(realized, key, "batcher flush key == tuner key at the realized size");
+    assert!(tuner.lookup(&realized).is_some(), "tuned at the realized batch size");
+    assert!(
+        tuner.lookup(&pinned).is_none(),
+        "a 3-request deadline flush must not populate the b64 entry"
+    );
+}
+
+/// The scheduler's completion stamp is the TTFT the recorder tracks:
+/// synthetic completion times must surface in the per-key telemetry.
+#[test]
+fn completions_feed_ttft_telemetry() {
+    let gpu = GpuSpec::RTX4090;
+    let mut router: Router<()> = Router::new()
+        .with_autotuner(Autotuner::in_memory(gpu))
+        .with_telemetry(TelemetryRecorder::in_memory(gpu, fast_cfg()));
+    router.add_route(Variant::Distr, 256, ());
+    let mut scheduler = Scheduler::new(Duration::from_millis(50));
+
+    scheduler.push(Request::new(1, vec![0; 200], Variant::Distr));
+    let req = scheduler.pop(Instant::now()).unwrap();
+    let (_, _, _, token) = router.route_tuned(&req, D, false, 1).unwrap();
+    let token = token.unwrap();
+    let ttft = scheduler.complete(&req, req.arrived + Duration::from_millis(12));
+    assert_eq!(ttft, Duration::from_millis(12));
+    router.report_ttft(&token, ttft);
+    let recorded = router
+        .telemetry()
+        .unwrap()
+        .key_state(&token.key)
+        .unwrap()
+        .ttft()
+        .expect("TTFT must be recorded for the dispatched key");
+    assert_eq!(recorded, Duration::from_millis(12));
+    assert_eq!(scheduler.completed(), 1);
+}
