@@ -26,21 +26,20 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use distr_attention::attention::{Engine, Variant};
-use distr_attention::autotune::{telemetry, Autotuner, DevicePool, TelemetryCfg};
+use distr_attention::autotune::{telemetry, Autotuner, BucketPolicy, DevicePool, TelemetryCfg};
 use distr_attention::config::{Config, PoolDeviceCfg};
 use distr_attention::coordinator::{
     decode_step, plan_tuned, run_scatter_round_robin, run_scatter_tuned, Batcher, KvCache,
     Request, Router, ScatterPlan, Scheduler,
 };
 use distr_attention::metrics::{LatencyHistogram, Table};
+use distr_attention::obs::{self, ShadowProbe};
 use distr_attention::tensor::Matrix;
 use distr_attention::util::rng::Rng;
 use distr_attention::workload::SeqTask;
 
 /// Head dim of the demo model.
 const D: usize = 64;
-const DECODE_STEPS: usize = 4;
-const REQUESTS: u64 = 24;
 
 /// Deterministic token embedding: row r of the (n, d) matrix is a
 /// pseudo-random function of (token, position) — a stand-in for the
@@ -59,6 +58,26 @@ fn embed(tokens: &[i32], n: usize, salt: u64) -> Matrix {
 
 fn main() -> anyhow::Result<()> {
     distr_attention::util::logger::init();
+
+    // SERVE_SMOKE=1 shrinks the run for CI: enough traffic to exercise
+    // every serving layer, small enough to finish in seconds
+    let smoke = std::env::var("SERVE_SMOKE").is_ok();
+    let requests: u64 = if smoke { 8 } else { 24 };
+    let decode_steps: usize = if smoke { 2 } else { 4 };
+
+    // OBS_DIR=<dir> turns on span tracing + LSH probes and writes
+    // metrics_snapshot.json / trace.json there at shutdown
+    let reg = obs::registry::global().clone();
+    let obs_dir = std::env::var("OBS_DIR").ok();
+    if obs_dir.is_some() {
+        obs::trace::set_enabled(true);
+        obs::probe::set_lsh_probes(true);
+    }
+    let probe_rate = std::env::var("OBS_PROBE_RATE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.125);
+    let probe = ShadowProbe::new(probe_rate);
 
     // autotuner from config, persisting its cache across runs; the
     // device section describes a skewed two-card pool for the scatter
@@ -93,15 +112,15 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let mut router = router.with_autotuner(tuner).with_telemetry(recorder);
+    let mut router = router.with_autotuner(tuner).with_telemetry(recorder).with_obs(reg.clone());
     println!("serve_llm: {} routes live ({} shapes preloaded from cache)\n", router.num_routes(), preloaded);
 
     // synthetic request stream: two prompt-length populations, two
     // variants, pushed through scheduler + batcher like the real loop
     let short_task = SeqTask::new(512, 96);
     let long_task = SeqTask::new(512, 200);
-    let mut scheduler = Scheduler::new(Duration::from_millis(50));
-    for i in 0..REQUESTS {
+    let mut scheduler = Scheduler::new(Duration::from_millis(50)).with_obs(&reg);
+    for i in 0..requests {
         let (toks, _) = if i % 3 == 0 { long_task.sample(i) } else { short_task.sample(i) };
         let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
         scheduler.push(Request::new(i, toks, variant));
@@ -109,11 +128,14 @@ fn main() -> anyhow::Result<()> {
 
     // batches group by full TuneKey (variant + length bucket + d +
     // masking + batch bucket): one flushed batch = one tuned config
-    let mut batcher = Batcher::new(cfg.batcher).with_model(D, true);
-    let mut cache = KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D);
+    let mut batcher = Batcher::new(cfg.batcher).with_model(D, true).with_obs(&reg);
+    let mut cache =
+        KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D).with_obs(&reg);
     let mut prefill_ms: HashMap<Variant, LatencyHistogram> = HashMap::new();
     let mut decode_us: HashMap<Variant, LatencyHistogram> = HashMap::new();
     let mut served: HashMap<Variant, u64> = HashMap::new();
+    let inter_token = reg.histogram("serve_inter_token", &[]);
+    let mut tokens_served: u64 = 0;
 
     let mut run_batch = |router: &mut Router<Engine>,
                          cache: &mut KvCache,
@@ -147,6 +169,15 @@ fn main() -> anyhow::Result<()> {
             prefill_ms.entry(req.variant).or_default().record(t0.elapsed());
             assert!(out.data.iter().all(|x| x.is_finite()));
 
+            // shadow-evaluate a sampled fraction of served heads: exact
+            // attention recomputed off the hot path, rel-err per TuneKey
+            if probe.should_sample() {
+                let pkey = token.as_ref().map(|t| t.key).unwrap_or_else(|| {
+                    req.tune_key(D, true, batch_len as usize, BucketPolicy::Pow2)
+                });
+                probe.observe(pkey, &q, &k, &v, true, &out);
+            }
+
             // the first token exists as soon as the prefill is done —
             // stamp the TTFT here, before the decode loop, so the
             // recorder tracks time-to-FIRST-token, not end-to-end
@@ -160,16 +191,19 @@ fn main() -> anyhow::Result<()> {
             let prompt = req.tokens.len().min(n);
             cache.register(req.id, &k.data[..prompt * D], &v.data[..prompt * D])?;
             let mut rng = Rng::seed_from_u64(req.id ^ 0xDEC0);
-            for _ in 0..DECODE_STEPS {
+            for _ in 0..decode_steps {
                 let q_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
                 let k_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
                 let v_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
                 let t0 = Instant::now();
                 let o = decode_step(cache, req.id, &q_row, &k_row, &v_row)?;
-                decode_us.entry(req.variant).or_default().record(t0.elapsed());
+                let step = t0.elapsed();
+                decode_us.entry(req.variant).or_default().record(step);
+                inter_token.record(step);
                 assert_eq!(o.len(), D);
             }
             cache.release(req.id)?;
+            tokens_served += (prompt + decode_steps) as u64;
             *served.entry(req.variant).or_default() += 1;
         }
         // measured ns/call for the batch's tuned config closes the loop
@@ -191,7 +225,7 @@ fn main() -> anyhow::Result<()> {
     }
     let elapsed = t0.elapsed();
 
-    println!("served {REQUESTS} requests in {:.2}s\n", elapsed.as_secs_f64());
+    println!("served {requests} requests in {:.2}s\n", elapsed.as_secs_f64());
     let mut t = Table::new(&["variant", "requests", "prefill p50 (ms)", "prefill mean (ms)", "decode mean (us)"]);
     for variant in [Variant::Flash2, Variant::Distr] {
         let p = &prefill_ms[&variant];
@@ -228,6 +262,29 @@ fn main() -> anyhow::Result<()> {
         log::warn!("serve_llm: failed to persist telemetry: {e:#}");
     }
     println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
+
+    // one-line serve summary + final observability snapshot
+    let ttft = reg.histogram("scheduler_ttft", &[]).snapshot();
+    println!(
+        "serve summary: {requests} requests, {tokens_served} tokens, ttft p50 {:.2} ms / p99 {:.2} ms, shadow probe mean rel-err {:.4} over {} samples",
+        ttft.quantile(0.5).as_secs_f64() * 1e3,
+        ttft.quantile(0.99).as_secs_f64() * 1e3,
+        probe.mean_rel_err(),
+        probe.samples(),
+    );
+    if let Some(dir) = &obs_dir {
+        probe.publish(&reg);
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("metrics_snapshot.json"), reg.snapshot_json().to_string_pretty())?;
+        obs::trace::write_chrome(&dir.join("trace.json"))?;
+        println!(
+            "obs: wrote {} and {} ({} spans; load trace.json in ui.perfetto.dev)",
+            dir.join("metrics_snapshot.json").display(),
+            dir.join("trace.json").display(),
+            obs::trace::events_recorded(),
+        );
+    }
 
     // -- heterogeneous pool scatter --------------------------------------
     // scatter a 12-head job across the skewed pool twice: fixed

@@ -16,6 +16,7 @@
 
 use super::flash2::{self, FlashParams};
 use super::lsh;
+use crate::obs::trace;
 use crate::tensor::microkernel::{self, TileScratch};
 use crate::tensor::Matrix;
 
@@ -155,17 +156,28 @@ fn distr_block(
     let dg = d / p.group;
     let scale = 1.0 / (d as f32).sqrt();
     let q0 = iq * bl;
-    // sampling once per Q block; reused across the whole inner loop
-    sample_q_into(q, q0, bl, perm, p.group, dg, p.sample_mean, &mut ws.q_s);
-    microkernel::pack_rows(&ws.q_s, bl, dg, dg, &mut ws.a_pack);
+    {
+        // sampling once per Q block; reused across the whole inner loop
+        let _s = trace::span("microkernel", "lsh_sample");
+        sample_q_into(q, q0, bl, perm, p.group, dg, p.sample_mean, &mut ws.q_s);
+        microkernel::pack_rows(&ws.q_s, bl, dg, dg, &mut ws.a_pack);
+    }
     flash2::reset_state(ws, bl, bm);
     let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
     for jk in 0..n_blocks {
         let k0 = jk * bm;
-        // fusion of this K block under the Q block's permutation
-        fuse_k_into(k, k0, bm, perm, p.group, dg, &mut ws.k_f);
-        microkernel::pack_rows(&ws.k_f, bm, dg, dg, &mut ws.b_pack);
-        microkernel::gemm_bt_tile(&ws.a_pack, &ws.b_pack, bl, bm, dg, scale, &mut ws.s_tile, bm);
+        {
+            // fusion of this K block under the Q block's permutation
+            let _s = trace::span("microkernel", "lsh_fuse");
+            fuse_k_into(k, k0, bm, perm, p.group, dg, &mut ws.k_f);
+            microkernel::pack_rows(&ws.k_f, bm, dg, dg, &mut ws.b_pack);
+        }
+        {
+            let _s = trace::span("microkernel", "qk_gemm");
+            microkernel::gemm_bt_tile(
+                &ws.a_pack, &ws.b_pack, bl, bm, dg, scale, &mut ws.s_tile, bm,
+            );
+        }
         if causal {
             for r in 0..bl {
                 let visible = (q0 + r + 1).saturating_sub(k0).min(bm);

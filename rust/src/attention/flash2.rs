@@ -13,6 +13,7 @@
 //! per-scalar axpy. All buffers live in the per-thread [`TileScratch`],
 //! so the K-block inner loop performs no heap allocation.
 
+use crate::obs::trace;
 use crate::tensor::microkernel::{self, TileScratch};
 use crate::tensor::Matrix;
 
@@ -44,32 +45,37 @@ pub(super) fn online_softmax_pv_step(
     o_chunk: &mut [f32],
 ) {
     let d = v.cols;
-    for r in 0..bl {
-        let srow = &mut ws.s_tile[r * bm..(r + 1) * bm];
-        let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let m_new = ws.m_i[r].max(row_max);
-        if m_new == f32::NEG_INFINITY {
-            // fully masked so far: contribute zero P, leave state alone
+    {
+        let _s = trace::span("microkernel", "online_softmax");
+        for r in 0..bl {
+            let srow = &mut ws.s_tile[r * bm..(r + 1) * bm];
+            let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = ws.m_i[r].max(row_max);
+            if m_new == f32::NEG_INFINITY {
+                // fully masked so far: contribute zero P, leave state alone
+                for s in srow.iter_mut() {
+                    *s = 0.0;
+                }
+                continue;
+            }
+            let alpha =
+                if ws.m_i[r] == f32::NEG_INFINITY { 0.0 } else { (ws.m_i[r] - m_new).exp() };
+            if alpha != 1.0 {
+                for x in &mut o_chunk[r * d..(r + 1) * d] {
+                    *x *= alpha;
+                }
+            }
+            let mut p_sum = 0.0f32;
             for s in srow.iter_mut() {
-                *s = 0.0;
+                let pv = (*s - m_new).exp();
+                *s = pv;
+                p_sum += pv;
             }
-            continue;
+            ws.l_i[r] = alpha * ws.l_i[r] + p_sum;
+            ws.m_i[r] = m_new;
         }
-        let alpha = if ws.m_i[r] == f32::NEG_INFINITY { 0.0 } else { (ws.m_i[r] - m_new).exp() };
-        if alpha != 1.0 {
-            for x in &mut o_chunk[r * d..(r + 1) * d] {
-                *x *= alpha;
-            }
-        }
-        let mut p_sum = 0.0f32;
-        for s in srow.iter_mut() {
-            let pv = (*s - m_new).exp();
-            *s = pv;
-            p_sum += pv;
-        }
-        ws.l_i[r] = alpha * ws.l_i[r] + p_sum;
-        ws.m_i[r] = m_new;
     }
+    let _s = trace::span("microkernel", "pv_accum");
     microkernel::pack_rows(&ws.s_tile, bl, bm, bm, &mut ws.p_pack);
     microkernel::pack_cols(&v.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.c_pack);
     microkernel::gemm_accum_tile(&ws.p_pack, &ws.c_pack, bl, d, bm, o_chunk, d);
@@ -113,13 +119,24 @@ fn flash2_block(
     let n_kv = k.rows;
     let scale = 1.0 / (d as f32).sqrt();
     let q0 = iq * bl;
-    microkernel::pack_rows(&q.data[q0 * d..(q0 + bl) * d], bl, d, d, &mut ws.a_pack);
+    {
+        let _s = trace::span("microkernel", "pack");
+        microkernel::pack_rows(&q.data[q0 * d..(q0 + bl) * d], bl, d, d, &mut ws.a_pack);
+    }
     reset_state(ws, bl, bm);
     let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
     for jk in 0..n_blocks {
         let k0 = jk * bm;
-        microkernel::pack_rows(&k.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.b_pack);
-        microkernel::gemm_bt_tile(&ws.a_pack, &ws.b_pack, bl, bm, d, scale, &mut ws.s_tile, bm);
+        {
+            let _s = trace::span("microkernel", "pack");
+            microkernel::pack_rows(&k.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.b_pack);
+        }
+        {
+            let _s = trace::span("microkernel", "qk_gemm");
+            microkernel::gemm_bt_tile(
+                &ws.a_pack, &ws.b_pack, bl, bm, d, scale, &mut ws.s_tile, bm,
+            );
+        }
         if causal {
             // the causal mask is a per-row column bound, not a
             // per-element branch

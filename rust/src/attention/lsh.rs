@@ -74,6 +74,9 @@ pub fn hash_columns(block: &Matrix, proj: &Matrix, center: bool) -> Vec<u32> {
 /// The grouping permutation of one block: argsort of (hash, col) keys.
 pub fn block_permutation(block: &Matrix, proj: &Matrix, center: bool) -> Vec<usize> {
     let hashes = hash_columns(block, proj, center);
+    if crate::obs::probe::lsh_probes_on() {
+        crate::obs::probe::note_lsh_hashes(crate::obs::registry::global(), &hashes);
+    }
     let mut idx: Vec<usize> = (0..hashes.len()).collect();
     idx.sort_by_key(|&c| (hashes[c], c));
     idx
@@ -82,6 +85,7 @@ pub fn block_permutation(block: &Matrix, proj: &Matrix, center: bool) -> Vec<usi
 /// Permutations for every `block_l`-row block of `q`: `(N/block_l)` perms.
 pub fn block_permutations(q: &Matrix, block_l: usize, seed: u64, center: bool) -> Vec<Vec<usize>> {
     assert_eq!(q.rows % block_l, 0, "N={} % block_l={} != 0", q.rows, block_l);
+    let _s = crate::obs::trace::span("microkernel", "lsh_hash");
     let proj = projection_matrix(block_l, seed);
     (0..q.rows / block_l)
         .map(|i| block_permutation(&q.row_block(i * block_l, block_l), &proj, center))

@@ -133,6 +133,7 @@ impl Engine {
 
     /// Single-head attention (N, d) -> (N, d).
     pub fn run(&self, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+        let _s = crate::obs::trace::span("engine", self.variant.name());
         match self.variant {
             Variant::Standard => standard_attention(q, k, v, self.causal),
             Variant::Flash2 => flash2_attention(q, k, v, &self.flash, self.causal),

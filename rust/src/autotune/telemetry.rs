@@ -327,6 +327,7 @@ impl TelemetryRecorder {
             c.ns.decay(0.5);
         }
         self.promotions += 1;
+        crate::obs::registry::global().counter("telemetry_promotions_total", &[]).inc();
         log::info!(
             "telemetry: promoting measured override {} -> (l={}, m={}, G*={})",
             token.key,
@@ -402,6 +403,11 @@ impl TelemetryRecorder {
             .collect();
         for k in &expired {
             self.keys.remove(k);
+        }
+        if !expired.is_empty() {
+            crate::obs::registry::global()
+                .counter("telemetry_demotions_total", &[])
+                .add(expired.len() as u64);
         }
         expired
     }

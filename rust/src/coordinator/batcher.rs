@@ -15,6 +15,8 @@ use std::time::{Duration, Instant};
 
 use crate::autotune::{BucketPolicy, TuneKey};
 use crate::config::BatcherCfg;
+use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+use crate::obs::trace;
 
 use super::request::Request;
 
@@ -45,6 +47,32 @@ struct Pending {
     opened: Instant,
 }
 
+/// Optional metric handles (`batcher_*` in the catalog). The flush
+/// counter is one metric name with a `reason` label so rates can be
+/// summed or split in the same query.
+struct BatcherObs {
+    queue_depth: Gauge,
+    open_buckets: Gauge,
+    size_flushes: Counter,
+    deadline_flushes: Counter,
+    drain_flushes: Counter,
+    /// Realized flush sizes, recorded as counts (1 unit == 1 request).
+    batch_size: Histogram,
+}
+
+impl BatcherObs {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            queue_depth: reg.gauge("batcher_queue_depth", &[]),
+            open_buckets: reg.gauge("batcher_open_buckets", &[]),
+            size_flushes: reg.counter("batcher_flush_total", &[("reason", "size")]),
+            deadline_flushes: reg.counter("batcher_flush_total", &[("reason", "deadline")]),
+            drain_flushes: reg.counter("batcher_flush_total", &[("reason", "drain")]),
+            batch_size: reg.histogram("batcher_batch_size", &[]),
+        }
+    }
+}
+
 /// Size/deadline dynamic batcher.
 pub struct Batcher {
     cfg: BatcherCfg,
@@ -55,6 +83,7 @@ pub struct Batcher {
     policy: BucketPolicy,
     pending: HashMap<BatchKey, Pending>,
     stats: BatcherStats,
+    obs: Option<BatcherObs>,
 }
 
 impl Batcher {
@@ -68,7 +97,14 @@ impl Batcher {
             policy: BucketPolicy::Pow2,
             pending: HashMap::new(),
             stats: BatcherStats::default(),
+            obs: None,
         }
+    }
+
+    /// Attach metric handles from `reg` (`batcher_*` in the catalog).
+    pub fn with_obs(mut self, reg: &Registry) -> Self {
+        self.obs = Some(BatcherObs::new(reg));
+        self
     }
 
     /// Describe the model geometry the tuning keys embed.
@@ -122,10 +158,24 @@ impl Batcher {
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
             self.stats.size_flushes += 1;
+            if let Some(obs) = &self.obs {
+                obs.size_flushes.inc();
+                obs.batch_size.record_count(batch.len() as u64);
+            }
+            self.sync_gauges();
             let key = Self::realized_key(key, batch.len());
             return Some((key, batch));
         }
+        self.sync_gauges();
         None
+    }
+
+    /// Refresh the queue-shape gauges after any pending-map change.
+    fn sync_gauges(&self) {
+        if let Some(obs) = &self.obs {
+            obs.queue_depth.set(self.pending_count() as f64);
+            obs.open_buckets.set(self.pending.len() as f64);
+        }
     }
 
     /// Flush every batch whose deadline has passed.
@@ -141,11 +191,19 @@ impl Batcher {
             .collect();
         let mut out = Vec::new();
         for key in expired {
+            let _s = trace::span("coordinator", "deadline_flush");
             let batch = self.pending.remove(&key).expect("key collected above").requests;
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
             self.stats.deadline_flushes += 1;
+            if let Some(obs) = &self.obs {
+                obs.deadline_flushes.inc();
+                obs.batch_size.record_count(batch.len() as u64);
+            }
             out.push((Self::realized_key(key, batch.len()), batch));
+        }
+        if !out.is_empty() {
+            self.sync_gauges();
         }
         out
     }
@@ -159,8 +217,13 @@ impl Batcher {
             }
             self.stats.batches += 1;
             self.stats.requests += entry.requests.len() as u64;
+            if let Some(obs) = &self.obs {
+                obs.drain_flushes.inc();
+                obs.batch_size.record_count(entry.requests.len() as u64);
+            }
             out.push((Self::realized_key(key, entry.requests.len()), entry.requests));
         }
+        self.sync_gauges();
         out
     }
 
@@ -339,6 +402,27 @@ mod tests {
         assert_eq!(s.requests, 3);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn obs_counts_flush_reasons_and_queue_depth() {
+        let reg = Registry::new();
+        let mut b = Batcher::new(cfg(2, 0)).with_obs(&reg);
+        b.push(req(1, 64, Variant::Distr));
+        assert_eq!(reg.gauge("batcher_queue_depth", &[]).get(), 1.0);
+        assert!(b.push(req(2, 64, Variant::Distr)).is_some());
+        assert_eq!(reg.counter("batcher_flush_total", &[("reason", "size")]).get(), 1);
+        assert_eq!(reg.gauge("batcher_queue_depth", &[]).get(), 0.0);
+        b.push(req(3, 300, Variant::Distr));
+        b.poll_deadlines(Instant::now() + Duration::from_micros(1));
+        assert_eq!(reg.counter("batcher_flush_total", &[("reason", "deadline")]).get(), 1);
+        b.push(req(4, 1000, Variant::Distr));
+        b.drain();
+        assert_eq!(reg.counter("batcher_flush_total", &[("reason", "drain")]).get(), 1);
+        // three flushes of one or two requests each were recorded
+        let sizes = reg.histogram("batcher_batch_size", &[]).snapshot();
+        assert_eq!(sizes.count(), 3);
+        assert_eq!(sizes.sum_us(), 4, "2 + 1 + 1 requests across flushes");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use anyhow::Context;
 
+use crate::obs::trace;
 use crate::tensor::dot;
 
 use super::kv_cache::{KvCache, SeqId};
@@ -55,6 +56,7 @@ pub fn decode_step(
     k_row: &[f32],
     v_row: &[f32],
 ) -> anyhow::Result<Vec<f32>> {
+    let _s = trace::span("coordinator", "decode_step");
     cache.append(seq, k_row, v_row).context("appending decode K/V")?;
     attend_cached(cache, seq, q_row)
 }

@@ -10,6 +10,8 @@ use std::collections::HashMap;
 
 use anyhow::anyhow;
 
+use crate::obs::registry::{Counter, Gauge, Registry};
+
 pub type BlockId = u32;
 pub type SeqId = u64;
 
@@ -25,6 +27,32 @@ struct BlockMeta {
     refcount: u32,
 }
 
+/// Optional metric handles (see docs/OBSERVABILITY.md, `kv_*`). All
+/// updates are relaxed atomics; an un-wired cache pays nothing.
+struct KvObs {
+    blocks_used: Gauge,
+    blocks_free: Gauge,
+    seqs: Gauge,
+    shared_refs: Gauge,
+    evicted_total: Counter,
+    fork_shared_total: Counter,
+    alloc_failures_total: Counter,
+}
+
+impl KvObs {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            blocks_used: reg.gauge("kv_blocks_used", &[]),
+            blocks_free: reg.gauge("kv_blocks_free", &[]),
+            seqs: reg.gauge("kv_seqs", &[]),
+            shared_refs: reg.gauge("kv_shared_refs", &[]),
+            evicted_total: reg.counter("kv_blocks_evicted_total", &[]),
+            fork_shared_total: reg.counter("kv_fork_shared_blocks_total", &[]),
+            alloc_failures_total: reg.counter("kv_alloc_failures_total", &[]),
+        }
+    }
+}
+
 /// Block-granular KV cache pool.
 pub struct KvCache {
     block_tokens: usize,
@@ -34,6 +62,7 @@ pub struct KvCache {
     free: Vec<BlockId>,
     meta: Vec<BlockMeta>,
     seqs: HashMap<SeqId, SeqHandle>,
+    obs: Option<KvObs>,
 }
 
 impl KvCache {
@@ -45,6 +74,28 @@ impl KvCache {
             free: (0..num_blocks as BlockId).rev().collect(),
             meta: (0..num_blocks).map(|_| BlockMeta { refcount: 0 }).collect(),
             seqs: HashMap::new(),
+            obs: None,
+        }
+    }
+
+    /// Attach metric handles from `reg` (builder; see `kv_*` in the
+    /// metric catalog).
+    pub fn with_obs(mut self, reg: &Registry) -> Self {
+        self.obs = Some(KvObs::new(reg));
+        self.sync_gauges();
+        self
+    }
+
+    /// Refresh the pool-occupancy gauges after any allocation change.
+    fn sync_gauges(&self) {
+        if let Some(obs) = &self.obs {
+            let free = self.free.len();
+            obs.blocks_used.set((self.meta.len() - free) as f64);
+            obs.blocks_free.set(free as f64);
+            obs.seqs.set(self.seqs.len() as f64);
+            let shared: u64 =
+                self.meta.iter().map(|m| m.refcount.saturating_sub(1) as u64).sum();
+            obs.shared_refs.set(shared as f64);
         }
     }
 
@@ -70,6 +121,9 @@ impl KvCache {
         let tokens = k.len() / self.d;
         let n_blocks = tokens.div_ceil(self.block_tokens);
         if self.free.len() < n_blocks {
+            if let Some(obs) = &self.obs {
+                obs.alloc_failures_total.inc();
+            }
             return Err(anyhow!(
                 "kv cache exhausted: need {n_blocks} blocks, {} free",
                 self.free.len()
@@ -85,6 +139,7 @@ impl KvCache {
             blocks.push(id);
         }
         self.seqs.insert(seq, SeqHandle { seq, blocks, tokens });
+        self.sync_gauges();
         Ok(())
     }
 
@@ -97,9 +152,15 @@ impl KvCache {
             (h.tokens % self.block_tokens == 0, h.tokens % self.block_tokens, h.tokens)
         };
         let block = if needs_block {
-            let id = self.free.pop().ok_or_else(|| anyhow!("kv cache exhausted on append"))?;
+            let Some(id) = self.free.pop() else {
+                if let Some(obs) = &self.obs {
+                    obs.alloc_failures_total.inc();
+                }
+                return Err(anyhow!("kv cache exhausted on append"));
+            };
             self.meta[id as usize].refcount = 1;
             self.seqs.get_mut(&seq).unwrap().blocks.push(id);
+            self.sync_gauges();
             id
         } else {
             *self.seqs[&seq].blocks.last().unwrap()
@@ -125,20 +186,30 @@ impl KvCache {
         for &b in &blocks {
             self.meta[b as usize].refcount += 1;
         }
+        if let Some(obs) = &self.obs {
+            obs.fork_shared_total.add(blocks.len() as u64);
+        }
         self.seqs.insert(child, SeqHandle { seq: child, blocks, tokens });
+        self.sync_gauges();
         Ok(())
     }
 
     /// Release a sequence; blocks return to the pool at refcount 0.
     pub fn release(&mut self, seq: SeqId) -> anyhow::Result<()> {
         let h = self.seqs.remove(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        let mut freed = 0u64;
         for b in h.blocks {
             let m = &mut self.meta[b as usize];
             m.refcount -= 1;
             if m.refcount == 0 {
                 self.free.push(b);
+                freed += 1;
             }
         }
+        if let Some(obs) = &self.obs {
+            obs.evicted_total.add(freed);
+        }
+        self.sync_gauges();
         Ok(())
     }
 
@@ -255,5 +326,28 @@ mod tests {
     fn append_to_unknown_seq_rejected() {
         let mut c = KvCache::new(4, 2, 2);
         assert!(c.append(9, &[0.0, 0.0], &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn obs_gauges_track_pool_state() {
+        let reg = Registry::new();
+        let mut c = KvCache::new(8, 2, 2).with_obs(&reg);
+        assert_eq!(reg.gauge("kv_blocks_free", &[]).get(), 8.0);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+        assert_eq!(reg.gauge("kv_blocks_used", &[]).get(), 2.0);
+        assert_eq!(reg.gauge("kv_seqs", &[]).get(), 1.0);
+        c.fork(1, 2).unwrap();
+        assert_eq!(reg.counter("kv_fork_shared_blocks_total", &[]).get(), 2);
+        assert_eq!(reg.gauge("kv_shared_refs", &[]).get(), 2.0);
+        c.release(1).unwrap();
+        // shared blocks stay resident for the child: nothing evicted yet
+        assert_eq!(reg.counter("kv_blocks_evicted_total", &[]).get(), 0);
+        c.release(2).unwrap();
+        assert_eq!(reg.counter("kv_blocks_evicted_total", &[]).get(), 2);
+        assert_eq!(reg.gauge("kv_blocks_free", &[]).get(), 8.0);
+        // exhaustion failures are counted
+        let mut tiny = KvCache::new(1, 2, 2).with_obs(&reg);
+        assert!(tiny.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).is_err());
+        assert_eq!(reg.counter("kv_alloc_failures_total", &[]).get(), 1);
     }
 }

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 use crate::attention::{Engine, Variant};
 use crate::autotune::{DevicePool, TunedParams};
 use crate::config::DeviceCfg;
+use crate::obs::trace;
 use crate::tensor::Matrix;
 use crate::workload;
 
@@ -210,6 +211,7 @@ fn run_lanes(
     double_buffer: bool,
     seed: u64,
 ) -> ScatterReport {
+    let _s = trace::span("coordinator", "scatter");
     let n_dev = lanes.len();
     let chunks = plan.num_chunks();
     assert_eq!(assignment.len(), chunks, "one device per chunk");
@@ -384,6 +386,9 @@ pub fn record_scatter_telemetry(
         .min(schedule.lanes.len())
         .min(report.per_device_heads.len())
         .min(report.per_device_busy.len());
+    let reg = crate::obs::registry::global();
+    let total_busy: f64 =
+        report.per_device_busy[..lanes].iter().map(|b| b.as_secs_f64()).sum();
     for idx in 0..lanes {
         let heads = report.per_device_heads[idx];
         if heads == 0 {
@@ -392,6 +397,19 @@ pub fn record_scatter_telemetry(
         let predicted =
             pool.predicted_seconds(idx, plan.n, plan.d, &schedule.lanes[idx].params);
         pool.record_lane(idx, heads, report.per_device_busy[idx], predicted);
+
+        // lane gauges: realized heads, s/head, and how far the lane's
+        // busy share drifted from the share the planner targeted
+        let busy = report.per_device_busy[idx].as_secs_f64();
+        let dev = idx.to_string();
+        let labels: [(&str, &str); 1] = [("device", dev.as_str())];
+        reg.gauge("scatter_lane_heads", &labels).set(heads as f64);
+        reg.gauge("scatter_lane_s_per_head", &labels).set(busy / heads as f64);
+        if total_busy > 0.0 {
+            let planned = schedule.shares.get(idx).copied().unwrap_or(0.0);
+            reg.gauge("scatter_lane_share_drift", &labels)
+                .set((busy / total_busy - planned).abs());
+        }
     }
 }
 

@@ -19,12 +19,15 @@
 //! process and (via the persisted cache) the next.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::anyhow;
 
 use crate::attention::Variant;
-use crate::autotune::{Autotuner, TelemetryRecorder, TimingToken, TunedParams};
+use crate::autotune::{Autotuner, TelemetryRecorder, TimingToken, TuneKey, TunedParams};
+use crate::obs::registry::{Counter, Gauge, Registry};
+use crate::obs::trace;
 
 use super::request::Request;
 
@@ -43,6 +46,66 @@ pub struct RouteStats {
     pub tuned: u64,
 }
 
+/// Optional metric handles (`router_*` / `autotune_gstar*` in the
+/// catalog). Keeps the registry handle because per-variant dispatch
+/// counters and per-key G* gauges are created lazily as routes are
+/// exercised.
+struct RouterObs {
+    reg: Arc<Registry>,
+    rejected: Counter,
+    tuned: Counter,
+    untuned: Counter,
+    promotions: Counter,
+    gstar_changes: Counter,
+    dispatch: HashMap<Variant, Counter>,
+    /// Per tuning key: the gauge publishing the served G* and the last
+    /// value seen, so selection drift registers as a counted change.
+    gstar: HashMap<TuneKey, (Gauge, usize)>,
+}
+
+impl RouterObs {
+    fn new(reg: Arc<Registry>) -> Self {
+        Self {
+            rejected: reg.counter("router_rejected_total", &[]),
+            tuned: reg.counter("router_tuned_total", &[]),
+            untuned: reg.counter("router_untuned_total", &[]),
+            promotions: reg.counter("router_promotions_applied_total", &[]),
+            gstar_changes: reg.counter("autotune_gstar_changes_total", &[]),
+            dispatch: HashMap::new(),
+            gstar: HashMap::new(),
+            reg,
+        }
+    }
+
+    fn note_dispatch(&mut self, variant: Variant, n: u64) {
+        let counter = self.dispatch.entry(variant).or_insert_with(|| {
+            self.reg.counter("router_dispatch_total", &[("variant", variant.name())])
+        });
+        counter.add(n);
+    }
+
+    /// Publish the served G* for `key` and count a change when it
+    /// drifts from the previous dispatch — the selection-drift signal
+    /// the quality probes pair with.
+    fn note_gstar(&mut self, key: TuneKey, group: usize) {
+        match self.gstar.get_mut(&key) {
+            Some((gauge, last)) => {
+                if *last != group {
+                    self.gstar_changes.inc();
+                    *last = group;
+                }
+                gauge.set(group as f64);
+            }
+            None => {
+                let key_str = key.to_string();
+                let gauge = self.reg.gauge("autotune_gstar", &[("key", key_str.as_str())]);
+                gauge.set(group as f64);
+                self.gstar.insert(key, (gauge, group));
+            }
+        }
+    }
+}
+
 /// Generic router: `T` is the engine handle type (tests use unit).
 pub struct Router<T> {
     routes: HashMap<RouteKey, T>,
@@ -50,6 +113,7 @@ pub struct Router<T> {
     rejected: u64,
     tuner: Option<Autotuner>,
     telemetry: Option<TelemetryRecorder>,
+    obs: Option<RouterObs>,
 }
 
 impl<T> Default for Router<T> {
@@ -66,7 +130,16 @@ impl<T> Router<T> {
             rejected: 0,
             tuner: None,
             telemetry: None,
+            obs: None,
         }
+    }
+
+    /// Attach metric handles from `reg` (`router_*` and
+    /// `autotune_gstar*` in the catalog). Takes the `Arc` because
+    /// per-variant and per-key series are registered lazily.
+    pub fn with_obs(mut self, reg: Arc<Registry>) -> Self {
+        self.obs = Some(RouterObs::new(reg));
+        self
     }
 
     /// Attach an autotuner: [`route_tuned`](Self::route_tuned) will
@@ -115,6 +188,9 @@ impl<T> Router<T> {
 
     fn reject(&mut self, req: &Request) -> anyhow::Error {
         self.rejected += 1;
+        if let Some(obs) = &self.obs {
+            obs.rejected.inc();
+        }
         anyhow!(
             "no route for variant {} with {} tokens (buckets: {:?})",
             req.variant,
@@ -128,6 +204,9 @@ impl<T> Router<T> {
         match self.select(req) {
             Some(key) => {
                 self.stats.get_mut(&key).unwrap().routed += 1;
+                if let Some(obs) = &mut self.obs {
+                    obs.note_dispatch(key.variant, 1);
+                }
                 Ok((&self.routes[&key], key))
             }
             None => Err(self.reject(req)),
@@ -161,12 +240,14 @@ impl<T> Router<T> {
         };
         let n = req.tokens.len().max(1);
         let mut token = None;
+        let mut tune_key = None;
         let tuned = match self.tuner.as_mut() {
             Some(t) => {
-                let tune_key = t.key_for(req.variant, n, d, causal, batch);
+                let tk = t.key_for(req.variant, n, d, causal, batch);
+                tune_key = Some(tk);
                 let mut params = t.tuned(req.variant, n, d, causal, batch);
                 if let Some(rec) = self.telemetry.as_mut() {
-                    let (chosen, tok) = rec.select(tune_key, params);
+                    let (chosen, tok) = rec.select(tk, params);
                     params = chosen;
                     token = Some(tok);
                 }
@@ -178,6 +259,16 @@ impl<T> Router<T> {
         stats.routed += 1;
         if tuned.is_some() {
             stats.tuned += 1;
+        }
+        if let Some(obs) = &mut self.obs {
+            obs.note_dispatch(key.variant, 1);
+            match tuned {
+                Some(_) => obs.tuned.inc(),
+                None => obs.untuned.inc(),
+            }
+            if let (Some(tk), Some(params)) = (tune_key, &tuned) {
+                obs.note_gstar(tk, params.group);
+            }
         }
         Ok((&self.routes[&key], key, tuned, token))
     }
@@ -195,6 +286,7 @@ impl<T> Router<T> {
         d: usize,
         causal: bool,
     ) -> anyhow::Result<(&T, RouteKey, Option<TunedParams>, Option<TimingToken>)> {
+        let _s = trace::span("coordinator", "route_batch");
         let Some(first) = batch.first() else {
             return Err(anyhow!("cannot route an empty batch"));
         };
@@ -204,6 +296,9 @@ impl<T> Router<T> {
         stats.routed += extra;
         if tuned.is_some() {
             stats.tuned += extra;
+        }
+        if let Some(obs) = &mut self.obs {
+            obs.note_dispatch(key.variant, extra);
         }
         Ok((&self.routes[&key], key, tuned, token))
     }
@@ -216,6 +311,9 @@ impl<T> Router<T> {
             if let Some(promo) = rec.record(token, elapsed) {
                 if let Some(t) = self.tuner.as_mut() {
                     t.apply_override(promo.key, promo.params);
+                }
+                if let Some(obs) = &self.obs {
+                    obs.promotions.inc();
                 }
             }
         }
@@ -422,6 +520,37 @@ mod tests {
         r.add_route(Variant::Distr, 128, ());
         assert!(r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).is_err());
         assert_eq!(r.rejected(), 1);
+    }
+
+    #[test]
+    fn obs_counts_dispatches_and_gstar() {
+        use crate::autotune::Autotuner;
+        use crate::simulator::GpuSpec;
+
+        let reg = Arc::new(Registry::new());
+        let mut r: Router<()> = Router::new()
+            .with_autotuner(Autotuner::in_memory(GpuSpec::RTX4090))
+            .with_obs(reg.clone());
+        r.add_route(Variant::Distr, 128, ());
+        let batch: Vec<Request> = (0..3).map(|i| req(100 + i, Variant::Distr)).collect();
+        let (_, _, tuned, _) = r.route_batch(&batch, 64, false).unwrap();
+        let group = tuned.unwrap().group;
+        assert_eq!(reg.counter("router_dispatch_total", &[("variant", "distr")]).get(), 3);
+        assert_eq!(reg.counter("router_tuned_total", &[]).get(), 1, "one flush resolution");
+        // the served G* is published under the realized tuning key
+        let t = r.autotuner().unwrap();
+        let tk = t.key_for(Variant::Distr, 100, 64, false, 3);
+        let key_str = tk.to_string();
+        assert_eq!(
+            reg.gauge("autotune_gstar", &[("key", key_str.as_str())]).get(),
+            group as f64
+        );
+        // a steady selection registers no drift
+        r.route_batch(&batch, 64, false).unwrap();
+        assert_eq!(reg.counter("autotune_gstar_changes_total", &[]).get(), 0);
+        // rejections are counted
+        assert!(r.route(&req(1000, Variant::Distr)).is_err());
+        assert_eq!(reg.counter("router_rejected_total", &[]).get(), 1);
     }
 
     #[test]

@@ -13,13 +13,33 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+
 use super::request::{Priority, Request};
+
+/// Optional metric handles (`scheduler_*` in the catalog).
+struct SchedulerObs {
+    queue_depth: Gauge,
+    completed_total: Counter,
+    ttft: Histogram,
+}
+
+impl SchedulerObs {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            queue_depth: reg.gauge("scheduler_queue_depth", &[]),
+            completed_total: reg.counter("scheduler_completed_total", &[]),
+            ttft: reg.histogram("scheduler_ttft", &[]),
+        }
+    }
+}
 
 pub struct Scheduler {
     interactive: VecDeque<Request>,
     batch: VecDeque<Request>,
     starvation_limit: Duration,
     completed: u64,
+    obs: Option<SchedulerObs>,
 }
 
 impl Scheduler {
@@ -29,14 +49,26 @@ impl Scheduler {
             batch: VecDeque::new(),
             starvation_limit,
             completed: 0,
+            obs: None,
         }
+    }
+
+    /// Attach metric handles from `reg` (`scheduler_*` in the catalog).
+    pub fn with_obs(mut self, reg: &Registry) -> Self {
+        self.obs = Some(SchedulerObs::new(reg));
+        self
     }
 
     /// Report a request completion at `now`; returns its measured
     /// time-to-first-token (arrival to completion).
     pub fn complete(&mut self, req: &Request, now: Instant) -> Duration {
         self.completed += 1;
-        now.saturating_duration_since(req.arrived)
+        let ttft = now.saturating_duration_since(req.arrived);
+        if let Some(obs) = &self.obs {
+            obs.completed_total.inc();
+            obs.ttft.record(ttft);
+        }
+        ttft
     }
 
     /// Completions reported so far.
@@ -49,16 +81,31 @@ impl Scheduler {
             Priority::Interactive => self.interactive.push_back(req),
             Priority::Batch => self.batch.push_back(req),
         }
+        self.sync_gauges();
     }
 
     /// Next request to run, honouring priority + anti-starvation aging.
     pub fn pop(&mut self, now: Instant) -> Option<Request> {
+        let popped = self.pop_inner(now);
+        if popped.is_some() {
+            self.sync_gauges();
+        }
+        popped
+    }
+
+    fn pop_inner(&mut self, now: Instant) -> Option<Request> {
         if let Some(front) = self.batch.front() {
             if now.duration_since(front.arrived) >= self.starvation_limit {
                 return self.batch.pop_front();
             }
         }
         self.interactive.pop_front().or_else(|| self.batch.pop_front())
+    }
+
+    fn sync_gauges(&self) {
+        if let Some(obs) = &self.obs {
+            obs.queue_depth.set(self.len() as f64);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -120,6 +167,23 @@ mod tests {
         assert_eq!(s.completed(), 1);
         // a completion stamped before arrival saturates to zero
         assert_eq!(s.complete(&popped, arrived - Duration::from_millis(1)), Duration::ZERO);
+    }
+
+    #[test]
+    fn obs_records_ttft_and_queue_depth() {
+        let reg = Registry::new();
+        let mut s = Scheduler::new(Duration::from_secs(60)).with_obs(&reg);
+        let r = req(1, Priority::Interactive);
+        let arrived = r.arrived;
+        s.push(r);
+        assert_eq!(reg.gauge("scheduler_queue_depth", &[]).get(), 1.0);
+        let popped = s.pop(Instant::now()).unwrap();
+        assert_eq!(reg.gauge("scheduler_queue_depth", &[]).get(), 0.0);
+        s.complete(&popped, arrived + Duration::from_millis(10));
+        assert_eq!(reg.counter("scheduler_completed_total", &[]).get(), 1);
+        let ttft = reg.histogram("scheduler_ttft", &[]).snapshot();
+        assert_eq!(ttft.count(), 1);
+        assert!(ttft.max() >= Duration::from_millis(8));
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod simulator;
 pub mod tensor;

@@ -94,7 +94,8 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
-    const NUM_BUCKETS: usize = 27; // 2^0 .. 2^26 µs
+    /// Bucket count: bucket `i` covers `[2^i, 2^(i+1))` µs, 1µs .. ~67s.
+    pub const NUM_BUCKETS: usize = 27; // 2^0 .. 2^26 µs
 
     pub fn new() -> Self {
         Self { buckets: vec![0; Self::NUM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
@@ -160,6 +161,45 @@ impl LatencyHistogram {
         self.count += other.count;
         self.sum_us += other.sum_us;
         self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Raw per-bucket counts (length [`Self::NUM_BUCKETS`]); the metrics
+    /// exporters need them for cumulative `le` lines and JSON snapshots.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Total recorded microseconds (integer accumulation, same unit the
+    /// buckets are keyed in).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Upper bound (exclusive, in µs) of bucket `i` — the Prometheus
+    /// `le` value for that bucket.
+    pub fn bucket_le_us(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    /// Bucket-wise subtraction: the histogram of everything recorded in
+    /// `self` after `prev` was snapshotted, so windowed rates and
+    /// percentiles can be computed from a shared, ever-growing histogram
+    /// without resetting it under concurrent writers.
+    ///
+    /// `prev` must be an earlier snapshot of the same histogram (every
+    /// bucket of `self` >= the matching bucket of `prev`); subtraction
+    /// saturates defensively if not. `max` is carried over from `self`
+    /// — the per-window maximum is not recoverable from bucket counts,
+    /// so the delta's `max()`/`quantile()` clamp to the lifetime max.
+    pub fn snapshot_delta(&self, prev: &LatencyHistogram) -> LatencyHistogram {
+        let mut out = LatencyHistogram::new();
+        for (o, (a, b)) in out.buckets.iter_mut().zip(self.buckets.iter().zip(&prev.buckets)) {
+            *o = a.saturating_sub(*b);
+        }
+        out.count = self.count.saturating_sub(prev.count);
+        out.sum_us = self.sum_us.saturating_sub(prev.sum_us);
+        out.max_us = self.max_us;
+        out
     }
 }
 
@@ -306,6 +346,59 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.mean(), Duration::from_micros(15));
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_window() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(5000));
+        let prev = h.clone();
+        // window: three more samples land after the snapshot
+        for us in [10u64, 10, 800] {
+            h.record(Duration::from_micros(us));
+        }
+        let delta = h.snapshot_delta(&prev);
+        assert_eq!(delta.count(), 3);
+        assert_eq!(delta.sum_us(), 820);
+        // the window's samples are exactly the post-snapshot ones
+        let mut expect = LatencyHistogram::new();
+        for us in [10u64, 10, 800] {
+            expect.record(Duration::from_micros(us));
+        }
+        assert_eq!(delta.buckets(), expect.buckets());
+        // max is the lifetime max by design (not recoverable per-window)
+        assert_eq!(delta.max(), Duration::from_micros(5000));
+    }
+
+    #[test]
+    fn snapshot_delta_merge_round_trip() {
+        // merge(prev, delta) reconstructs the full histogram
+        let mut full = LatencyHistogram::new();
+        for us in [1u64, 50, 300, 7000] {
+            full.record(Duration::from_micros(us));
+        }
+        let prev = full.clone();
+        for us in [2u64, 60, 40000] {
+            full.record(Duration::from_micros(us));
+        }
+        let delta = full.snapshot_delta(&prev);
+        let mut rebuilt = prev.clone();
+        rebuilt.merge(&delta);
+        assert_eq!(rebuilt.buckets(), full.buckets());
+        assert_eq!(rebuilt.count(), full.count());
+        assert_eq!(rebuilt.sum_us(), full.sum_us());
+        assert_eq!(rebuilt.max(), full.max());
+    }
+
+    #[test]
+    fn snapshot_delta_of_identical_snapshots_is_empty() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(123));
+        let d = h.snapshot_delta(&h.clone());
+        assert_eq!(d.count(), 0);
+        assert_eq!(d.sum_us(), 0);
+        assert!(d.buckets().iter().all(|&b| b == 0));
     }
 
     #[test]

@@ -1,0 +1,34 @@
+//! Serve-path observability: metrics registry, span tracing, and live
+//! approximation-quality probes.
+//!
+//! Three pillars, each independently gated so the un-observed hot path
+//! stays within 1% of a no-obs baseline (asserted by
+//! `benches/obs_overhead.rs`):
+//!
+//! * [`registry`] — process-global counters/gauges/histograms keyed by
+//!   name + static labels. Handles are lock-free atomics (histograms
+//!   stripe over mutex shards merged on scrape). Exported as Prometheus
+//!   text ([`Registry::render_prometheus`]) or a JSON snapshot
+//!   ([`Registry::snapshot_json`]). Components take an optional
+//!   registry via `with_obs(...)` builders — un-wired components pay
+//!   nothing.
+//! * [`trace`] — scoped spans (`obs_span!("coordinator", "route_batch")`
+//!   or [`trace::span`]) in per-thread ring buffers with parent linkage,
+//!   exported as Chrome trace-event JSON for Perfetto. Disabled by
+//!   default (one relaxed load per call site); compiled out entirely
+//!   under `--features obs-compile-out`.
+//! * [`probe`] — a sampling shadow-evaluator recomputing exact
+//!   attention for a deterministic fraction of served batches and
+//!   histogramming relative error per `TuneKey`, plus LSH bucket-
+//!   balance gauges. This is how the paper's "~1% accuracy loss" claim
+//!   becomes a continuously observed serving metric.
+//!
+//! See `docs/OBSERVABILITY.md` for the metric catalog and capture guide.
+
+pub mod probe;
+pub mod registry;
+pub mod trace;
+
+pub use probe::ShadowProbe;
+pub use registry::{global, Counter, Gauge, Histogram, Registry};
+pub use trace::{span, SpanGuard};

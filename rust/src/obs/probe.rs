@@ -1,0 +1,300 @@
+//! Live approximation-quality probes.
+//!
+//! DistrAttention's G*-sampled path trades accuracy for speed; the paper
+//! reports ~1% loss from offline tables. [`ShadowProbe`] turns that into
+//! a continuously observed serving metric: for a deterministic fraction
+//! of served batches it recomputes *exact* attention on the same inputs
+//! and records the relative error of the served output into a per-
+//! [`TuneKey`] histogram (seconds == relative error, so `p99` reads back
+//! directly as an error quantile).
+//!
+//! Sampling is counter-based (`every = round(1/rate)`), not random or
+//! wall-clock driven, so runs are reproducible and the 0%-sampling fast
+//! path is a single relaxed atomic increment + compare.
+//!
+//! The module also hosts the LSH bucket-balance gauges
+//! ([`note_lsh_hashes`], fed from `attention::lsh` when probes are on)
+//! and the G*-selection drift tracking lives in `coordinator::router`'s
+//! obs wiring.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::attention::standard_attention;
+use crate::autotune::TuneKey;
+use crate::metrics::{Ewma, LatencyHistogram};
+use crate::obs::registry::Registry;
+use crate::obs::trace;
+use crate::tensor::Matrix;
+use crate::util::json::Value;
+
+/// Global gate for the cheap in-kernel quality gauges (LSH bucket
+/// balance). Off by default: the hash loop runs per Q block, so even a
+/// gauge update is only paid when someone is watching.
+static LSH_PROBES: AtomicBool = AtomicBool::new(false);
+
+pub fn set_lsh_probes(on: bool) {
+    LSH_PROBES.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn lsh_probes_on() -> bool {
+    LSH_PROBES.load(Ordering::Relaxed)
+}
+
+/// Record LSH bucket-balance gauges for one block's column hashes:
+/// the number of distinct buckets and the modal (largest) bucket's
+/// share of columns. A modal share near 1.0 means hashing collapsed —
+/// grouping degenerates to adjacent-column fusion.
+pub fn note_lsh_hashes(reg: &Registry, hashes: &[u32]) {
+    if hashes.is_empty() || !lsh_probes_on() {
+        return;
+    }
+    let mut sorted: Vec<u32> = hashes.to_vec();
+    sorted.sort_unstable();
+    let mut distinct = 0u64;
+    let mut modal = 0usize;
+    let mut run = 0usize;
+    let mut prev: Option<u32> = None;
+    for &h in &sorted {
+        if prev == Some(h) {
+            run += 1;
+        } else {
+            distinct += 1;
+            run = 1;
+            prev = Some(h);
+        }
+        modal = modal.max(run);
+    }
+    reg.gauge("lsh_distinct_buckets", &[]).set(distinct as f64);
+    reg.gauge("lsh_modal_bucket_share", &[]).set(modal as f64 / hashes.len() as f64);
+}
+
+struct ProbeState {
+    rel_err: LatencyHistogram,
+    mean: Ewma,
+    samples: u64,
+}
+
+impl ProbeState {
+    fn new() -> Self {
+        Self { rel_err: LatencyHistogram::new(), mean: Ewma::new(0.25), samples: 0 }
+    }
+}
+
+/// Sampling shadow-evaluator: recompute exact attention for a fraction
+/// of served batches and histogram the relative error per [`TuneKey`].
+pub struct ShadowProbe {
+    /// Sample every Nth call; 0 disables sampling entirely.
+    every: u64,
+    counter: AtomicU64,
+    states: Mutex<HashMap<TuneKey, ProbeState>>,
+    overall: Mutex<Ewma>,
+}
+
+impl ShadowProbe {
+    /// `rate` is the sampled fraction in [0, 1]; it is rounded to the
+    /// nearest `1/every` (e.g. 0.1 → every 10th call). `rate <= 0`
+    /// disables sampling; `rate >= 1` samples every call.
+    pub fn new(rate: f64) -> Self {
+        let every = if rate <= 0.0 {
+            0
+        } else if rate >= 1.0 {
+            1
+        } else {
+            (1.0 / rate).round().max(1.0) as u64
+        };
+        Self {
+            every,
+            counter: AtomicU64::new(0),
+            states: Mutex::new(HashMap::new()),
+            overall: Mutex::new(Ewma::new(0.25)),
+        }
+    }
+
+    /// Effective sampling rate after rounding.
+    pub fn rate(&self) -> f64 {
+        if self.every == 0 {
+            0.0
+        } else {
+            1.0 / self.every as f64
+        }
+    }
+
+    /// Deterministic sampling decision: true on every `every`-th call.
+    /// The disabled path (rate 0) is one relaxed increment + compare.
+    pub fn should_sample(&self) -> bool {
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        self.every != 0 && n % self.every == 0
+    }
+
+    /// Shadow-evaluate one served batch: recompute exact attention on
+    /// `(q, k, v)` and record the mean relative error of `approx`
+    /// against it under `key`. Returns the recorded error.
+    pub fn observe(
+        &self,
+        key: TuneKey,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        causal: bool,
+        approx: &Matrix,
+    ) -> f32 {
+        let _s = trace::span("probe", "shadow_exact_attention");
+        let exact = standard_attention(q, k, v, causal);
+        let (_, _, mean) = approx.rel_err_stats(&exact);
+        self.record_rel_err(key, mean);
+        mean
+    }
+
+    /// Record an already-computed relative error (split from
+    /// [`observe`](Self::observe) for tests and external evaluators).
+    pub fn record_rel_err(&self, key: TuneKey, rel_err: f32) {
+        let err = rel_err as f64;
+        if !err.is_finite() || err < 0.0 {
+            return;
+        }
+        let mut states = self.states.lock().unwrap();
+        let state = states.entry(key).or_insert_with(ProbeState::new);
+        // seconds == relative error: 1e-6 lands in the first bucket, so
+        // errors below 1e-6 clamp there (documented in OBSERVABILITY.md)
+        state.rel_err.record(Duration::from_secs_f64(err.min(1.0e6)));
+        state.mean.observe(err);
+        state.samples += 1;
+        drop(states);
+        self.overall.lock().unwrap().observe(err);
+    }
+
+    /// Total samples recorded across all keys.
+    pub fn samples(&self) -> u64 {
+        self.states.lock().unwrap().values().map(|s| s.samples).sum()
+    }
+
+    /// EWMA of relative error across all keys (0.0 before any sample).
+    pub fn mean_rel_err(&self) -> f64 {
+        self.overall.lock().unwrap().value()
+    }
+
+    /// Publish per-key gauges (`probe_rel_err_mean{key=...}`,
+    /// `probe_rel_err_p99{key=...}`, `probe_samples{key=...}`) into
+    /// `reg`. Called at scrape/snapshot points, not per sample.
+    pub fn publish(&self, reg: &Registry) {
+        let states = self.states.lock().unwrap();
+        for (key, state) in states.iter() {
+            let key_str = key.to_string();
+            let labels: [(&str, &str); 1] = [("key", key_str.as_str())];
+            reg.gauge("probe_rel_err_mean", &labels).set(state.mean.value());
+            reg.gauge("probe_rel_err_p99", &labels)
+                .set(state.rel_err.quantile(0.99).as_secs_f64());
+            reg.gauge("probe_samples", &labels).set(state.samples as f64);
+        }
+        reg.gauge("probe_sampling_rate", &[]).set(self.rate());
+    }
+
+    /// JSON summary keyed by tune-key string.
+    pub fn to_json(&self) -> Value {
+        let states = self.states.lock().unwrap();
+        let entries: Vec<(String, Value)> = states
+            .iter()
+            .map(|(key, state)| {
+                (
+                    key.to_string(),
+                    Value::object(vec![
+                        ("samples", Value::number(state.samples as f64)),
+                        ("mean_rel_err", Value::number(state.mean.value())),
+                        (
+                            "p50_rel_err",
+                            Value::number(state.rel_err.quantile(0.5).as_secs_f64()),
+                        ),
+                        (
+                            "p99_rel_err",
+                            Value::number(state.rel_err.quantile(0.99).as_secs_f64()),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        Value::Object(entries.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::autotune::BucketPolicy;
+
+    fn key() -> TuneKey {
+        TuneKey::for_shape(Variant::Distr, 128, 64, true, 4, BucketPolicy::Pow2)
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let p = ShadowProbe::new(0.5);
+        let picks: Vec<bool> = (0..6).map(|_| p.should_sample()).collect();
+        assert_eq!(picks, vec![true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn zero_rate_never_samples() {
+        let p = ShadowProbe::new(0.0);
+        assert_eq!(p.rate(), 0.0);
+        assert!((0..100).all(|_| !p.should_sample()));
+    }
+
+    #[test]
+    fn full_rate_always_samples() {
+        let p = ShadowProbe::new(1.0);
+        assert!((0..10).all(|_| p.should_sample()));
+    }
+
+    #[test]
+    fn exact_output_scores_zero_error() {
+        let p = ShadowProbe::new(1.0);
+        let q = Matrix::randn(32, 16, 1);
+        let k = Matrix::randn(32, 16, 2);
+        let v = Matrix::randn(32, 16, 3);
+        let exact = standard_attention(&q, &k, &v, false);
+        let err = p.observe(key(), &q, &k, &v, false, &exact);
+        assert!(err.abs() < 1e-6, "self-comparison must be ~0, got {err}");
+        assert_eq!(p.samples(), 1);
+        assert!(p.mean_rel_err() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_non_finite_errors() {
+        let p = ShadowProbe::new(1.0);
+        p.record_rel_err(key(), f32::NAN);
+        p.record_rel_err(key(), -1.0);
+        assert_eq!(p.samples(), 0);
+    }
+
+    #[test]
+    fn json_and_publish_expose_per_key_state() {
+        let p = ShadowProbe::new(0.25);
+        p.record_rel_err(key(), 0.01);
+        p.record_rel_err(key(), 0.02);
+        let json = p.to_json();
+        let entry = json.get(&key().to_string()).expect("key entry");
+        assert_eq!(entry.req_usize("samples").unwrap(), 2);
+        let reg = Registry::new();
+        p.publish(&reg);
+        let key_str = key().to_string();
+        let mean = reg.gauge("probe_rel_err_mean", &[("key", key_str.as_str())]).get();
+        assert!(mean > 0.009 && mean < 0.021, "{mean}");
+        assert_eq!(reg.gauge("probe_sampling_rate", &[]).get(), 0.25);
+    }
+
+    #[test]
+    fn lsh_balance_gauges() {
+        let reg = Registry::new();
+        set_lsh_probes(true);
+        note_lsh_hashes(&reg, &[3, 3, 3, 1, 2, 3]);
+        set_lsh_probes(false);
+        assert_eq!(reg.gauge("lsh_distinct_buckets", &[]).get(), 3.0);
+        let share = reg.gauge("lsh_modal_bucket_share", &[]).get();
+        assert!((share - 4.0 / 6.0).abs() < 1e-9, "{share}");
+    }
+}

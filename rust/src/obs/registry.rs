@@ -1,0 +1,462 @@
+//! Process-global metrics registry: counters, gauges, histograms.
+//!
+//! Handles are cheap `Arc` clones over atomics; the hot path never takes
+//! the registry lock. Counters and gauges are single relaxed atomics.
+//! Histograms stripe over a small fixed set of `Mutex<LatencyHistogram>`
+//! shards indexed by a stable per-thread slot, so concurrent recorders
+//! almost never contend; shards are merged only on scrape.
+//!
+//! Two export formats:
+//! * [`Registry::render_prometheus`] — Prometheus text exposition
+//!   (`# TYPE` lines, escaped label values, cumulative `le` buckets).
+//!   Histogram buckets and sums are in **integer microseconds** — this
+//!   system is self-contained, so we keep the native histogram unit
+//!   instead of converting to seconds.
+//! * [`Registry::snapshot_json`] — a JSON snapshot built on
+//!   [`crate::util::json::Value`], written by `serve_llm` at shutdown.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Value;
+
+/// Number of histogram stripes. Threads map onto stripes by a stable
+/// per-thread slot, so with fewer live threads than shards there is no
+/// lock contention at all.
+const N_SHARDS: usize = 16;
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Stable slot per thread, assigned on first metric touch. The
+    /// persistent worker pool means slots are effectively static.
+    static THREAD_SLOT: usize = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+}
+
+fn thread_slot() -> usize {
+    THREAD_SLOT.with(|s| *s)
+}
+
+/// Metric identity: name + sorted static label pairs.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricId {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+impl MetricId {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        Self { name: name.to_string(), labels }
+    }
+}
+
+/// Monotone counter handle (relaxed atomic increments).
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge handle: an f64 stored as bits in an atomic u64.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.cell.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: f64) {
+        let _ = self.cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + delta).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+struct HistShards {
+    shards: Vec<Mutex<LatencyHistogram>>,
+}
+
+impl HistShards {
+    fn new() -> Self {
+        Self { shards: (0..N_SHARDS).map(|_| Mutex::new(LatencyHistogram::new())).collect() }
+    }
+
+    fn merged(&self) -> LatencyHistogram {
+        let mut out = LatencyHistogram::new();
+        for shard in &self.shards {
+            out.merge(&shard.lock().unwrap());
+        }
+        out
+    }
+}
+
+/// Histogram handle: striped [`LatencyHistogram`] shards merged on scrape.
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistShards>,
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let shard = thread_slot() % N_SHARDS;
+        self.inner.shards[shard].lock().unwrap().record(d);
+    }
+
+    /// Record a dimensionless count (batch size, bucket population) by
+    /// encoding it as integer microseconds: value `n` lands in the same
+    /// power-of-two bucket layout, and quantiles read back in units of
+    /// `n`. Documented per-metric in docs/OBSERVABILITY.md.
+    pub fn record_count(&self, n: u64) {
+        self.record(Duration::from_micros(n));
+    }
+
+    /// Record a small non-negative float (e.g. a relative error) by
+    /// mapping seconds == value, so `1e-6` occupies the first bucket and
+    /// quantiles read back directly in the recorded unit.
+    pub fn record_value(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.record(Duration::from_secs_f64(v.clamp(0.0, 1.0e6)));
+    }
+
+    /// Merge all shards into one snapshot histogram.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.inner.merged()
+    }
+}
+
+/// The registry: name+labels → handle, behind one coarse lock that is
+/// only taken at registration/scrape time, never per-observation.
+pub struct Registry {
+    counters: Mutex<BTreeMap<MetricId, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<MetricId, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<MetricId, Arc<HistShards>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Get-or-create a counter for `name` + `labels`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let id = MetricId::new(name, labels);
+        let mut map = self.counters.lock().unwrap();
+        Counter { cell: map.entry(id).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone() }
+    }
+
+    /// Get-or-create a gauge for `name` + `labels`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let id = MetricId::new(name, labels);
+        let mut map = self.gauges.lock().unwrap();
+        Gauge {
+            cell: map
+                .entry(id)
+                .or_insert_with(|| Arc::new(AtomicU64::new(0.0f64.to_bits())))
+                .clone(),
+        }
+    }
+
+    /// Get-or-create a histogram for `name` + `labels`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let id = MetricId::new(name, labels);
+        let mut map = self.histograms.lock().unwrap();
+        Histogram { inner: map.entry(id).or_insert_with(|| Arc::new(HistShards::new())).clone() }
+    }
+
+    /// Prometheus text exposition. Deterministic ordering (BTreeMap walk),
+    /// one `# TYPE` line per metric name, label values escaped per the
+    /// exposition format (backslash, double quote, newline).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+
+        let counters = self.counters.lock().unwrap();
+        let mut last_name = String::new();
+        for (id, cell) in counters.iter() {
+            let name = sanitize_name(&id.name);
+            if name != last_name {
+                out.push_str(&format!("# TYPE {name} counter\n"));
+                last_name = name.clone();
+            }
+            out.push_str(&format!(
+                "{name}{} {}\n",
+                fmt_labels(&id.labels, None),
+                cell.load(Ordering::Relaxed)
+            ));
+        }
+        drop(counters);
+
+        let gauges = self.gauges.lock().unwrap();
+        let mut last_name = String::new();
+        for (id, cell) in gauges.iter() {
+            let name = sanitize_name(&id.name);
+            if name != last_name {
+                out.push_str(&format!("# TYPE {name} gauge\n"));
+                last_name = name.clone();
+            }
+            out.push_str(&format!(
+                "{name}{} {}\n",
+                fmt_labels(&id.labels, None),
+                f64::from_bits(cell.load(Ordering::Relaxed))
+            ));
+        }
+        drop(gauges);
+
+        let histograms = self.histograms.lock().unwrap();
+        let mut last_name = String::new();
+        for (id, shards) in histograms.iter() {
+            let name = sanitize_name(&id.name);
+            if name != last_name {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                last_name = name.clone();
+            }
+            let snap = shards.merged();
+            let mut cumulative = 0u64;
+            for (i, &n) in snap.buckets().iter().enumerate() {
+                cumulative += n;
+                let le = LatencyHistogram::bucket_le_us(i).to_string();
+                out.push_str(&format!(
+                    "{name}_bucket{} {cumulative}\n",
+                    fmt_labels(&id.labels, Some(("le", &le)))
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_bucket{} {}\n",
+                fmt_labels(&id.labels, Some(("le", "+Inf"))),
+                snap.count()
+            ));
+            out.push_str(&format!("{name}_sum{} {}\n", fmt_labels(&id.labels, None), snap.sum_us()));
+            out.push_str(&format!("{name}_count{} {}\n", fmt_labels(&id.labels, None), snap.count()));
+        }
+        out
+    }
+
+    /// JSON snapshot of every metric, parseable by [`Value::parse`].
+    pub fn snapshot_json(&self) -> Value {
+        let counters: Vec<Value> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, cell)| {
+                Value::object(vec![
+                    ("name", Value::string(id.name.clone())),
+                    ("labels", labels_json(&id.labels)),
+                    ("value", Value::number(cell.load(Ordering::Relaxed) as f64)),
+                ])
+            })
+            .collect();
+        let gauges: Vec<Value> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, cell)| {
+                Value::object(vec![
+                    ("name", Value::string(id.name.clone())),
+                    ("labels", labels_json(&id.labels)),
+                    ("value", Value::number(f64::from_bits(cell.load(Ordering::Relaxed)))),
+                ])
+            })
+            .collect();
+        let histograms: Vec<Value> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, shards)| {
+                let snap = shards.merged();
+                let buckets: Vec<usize> = snap.buckets().iter().map(|&b| b as usize).collect();
+                Value::object(vec![
+                    ("name", Value::string(id.name.clone())),
+                    ("labels", labels_json(&id.labels)),
+                    ("count", Value::number(snap.count() as f64)),
+                    ("sum_us", Value::number(snap.sum_us() as f64)),
+                    ("max_us", Value::number(snap.max().as_micros() as f64)),
+                    ("mean_us", Value::number(snap.mean().as_micros() as f64)),
+                    ("p50_us", Value::number(snap.quantile(0.5).as_micros() as f64)),
+                    ("p99_us", Value::number(snap.quantile(0.99).as_micros() as f64)),
+                    ("buckets", Value::usize_array(&buckets)),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("schema", Value::number(1.0)),
+            ("counters", Value::Array(counters)),
+            ("gauges", Value::Array(gauges)),
+            ("histograms", Value::Array(histograms)),
+        ])
+    }
+}
+
+/// Sanitize to the Prometheus metric-name charset `[a-zA-Z0-9_:]`,
+/// prefixing an underscore when the name would start with a digit.
+fn sanitize_name(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len() + 1);
+    for (i, c) in raw.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+            out.push(c);
+        } else if ok {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    for c in raw.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize_name(k), escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{}=\"{}\"", k, escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn labels_json(labels: &[(String, String)]) -> Value {
+    let map: BTreeMap<String, Value> =
+        labels.iter().map(|(k, v)| (k.clone(), Value::string(v.clone()))).collect();
+    Value::Object(map)
+}
+
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// The process-global registry (created on first use). Components accept
+/// an injected registry for deterministic tests; serving binaries pass
+/// this one so every layer lands in a single scrape.
+pub fn global() -> &'static Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_round_trip() {
+        let reg = Registry::new();
+        let c = reg.counter("requests_total", &[("variant", "distr")]);
+        c.inc();
+        c.add(4);
+        // Same name+labels resolves to the same cell.
+        assert_eq!(reg.counter("requests_total", &[("variant", "distr")]).get(), 5);
+        let g = reg.gauge("queue_depth", &[]);
+        g.set(3.0);
+        g.add(-1.0);
+        assert_eq!(reg.gauge("queue_depth", &[]).get(), 2.0);
+    }
+
+    #[test]
+    fn histogram_shards_merge_on_snapshot() {
+        let reg = Registry::new();
+        let h = reg.histogram("latency", &[]);
+        for us in [10u64, 100, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 3);
+        assert_eq!(snap.sum_us(), 1110);
+    }
+
+    #[test]
+    fn name_sanitization() {
+        assert_eq!(sanitize_name("kv.blocks-used"), "kv_blocks_used");
+        assert_eq!(sanitize_name("9lives"), "_9lives");
+        assert_eq!(sanitize_name("a:b_c2"), "a:b_c2");
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let reg = Registry::new();
+        reg.counter("hits_total", &[("path", "a\"b")]).inc();
+        reg.gauge("depth", &[]).set(1.5);
+        reg.histogram("lat", &[]).record(Duration::from_micros(3));
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE hits_total counter"));
+        assert!(text.contains("hits_total{path=\"a\\\"b\"} 1"));
+        assert!(text.contains("# TYPE depth gauge"));
+        assert!(text.contains("depth 1.5"));
+        assert!(text.contains("# TYPE lat histogram"));
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("lat_sum 3"));
+        assert!(text.contains("lat_count 1"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        let reg = Registry::new();
+        reg.counter("c_total", &[]).add(7);
+        reg.histogram("h", &[("k", "v")]).record(Duration::from_micros(42));
+        let text = reg.snapshot_json().to_string_pretty();
+        let parsed = crate::util::json::Value::parse(&text).expect("snapshot must parse");
+        let counters = parsed.req_array("counters").unwrap();
+        assert_eq!(counters[0].req_str("name").unwrap(), "c_total");
+        assert_eq!(counters[0].get("value").and_then(Value::as_f64), Some(7.0));
+        let hists = parsed.req_array("histograms").unwrap();
+        assert_eq!(hists[0].req_usize("count").unwrap(), 1);
+    }
+}

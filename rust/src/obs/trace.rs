@@ -1,0 +1,291 @@
+//! Lightweight scoped span tracing with Chrome trace-event export.
+//!
+//! `let _s = trace::span("coordinator", "route_batch");` records a
+//! complete span when the guard drops. Spans land in per-thread ring
+//! buffers (no cross-thread contention on the hot path; the global
+//! registry of rings is only locked once per thread lifetime and at
+//! export). Parent linkage comes from a thread-local current-span cell,
+//! timestamps from a process-wide monotonic epoch at ~ns precision.
+//!
+//! Cost model:
+//! * disabled (default): one relaxed atomic load per `span()` call and
+//!   a no-op guard drop — asserted < 1% of the serve hot path by
+//!   `benches/obs_overhead.rs`;
+//! * compiled out (`--features obs-compile-out`): `span()` is a
+//!   constant no-op, for deployments that want the branch gone;
+//! * enabled: one `Instant` read at open + one at close, plus a push
+//!   into an uncontended ring (oldest events overwritten past capacity).
+//!
+//! [`export_chrome`] emits the Chrome trace-event JSON format — an
+//! object with a `traceEvents` array of complete `"ph": "X"` events,
+//! `ts`/`dur` in microseconds — loadable in Perfetto or
+//! `chrome://tracing`.
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static RING_CAP: AtomicUsize = AtomicUsize::new(1 << 16);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// All live rings, one per thread that has recorded a span.
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Mutex<Ring>>> = OnceCell::new();
+    /// Innermost open span on this thread (0 = none) — the parent of
+    /// the next span opened here.
+    static CURRENT_SPAN: Cell<u64> = Cell::new(0);
+}
+
+/// Turn span recording on/off at runtime. Off is the default; the serve
+/// example enables it when `OBS_DIR` is set.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Cap (events per thread ring) applied to rings created after the call.
+/// Past capacity the oldest events are overwritten.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(16), Ordering::Relaxed);
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One completed span. `parent == 0` means a root span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub id: u64,
+    pub parent: u64,
+    pub tid: u64,
+}
+
+struct Ring {
+    tid: u64,
+    cap: usize,
+    events: Vec<SpanEvent>,
+    next: usize,
+    total: u64,
+}
+
+impl Ring {
+    fn new(tid: u64, cap: usize) -> Self {
+        Self { tid, cap, events: Vec::new(), next: 0, total: 0 }
+    }
+
+    fn push(&mut self, mut e: SpanEvent) {
+        e.tid = self.tid;
+        self.total += 1;
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            // overwrite the oldest slot
+            self.events[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.events.clear();
+        self.next = 0;
+        self.total = 0;
+    }
+}
+
+fn with_local_ring<R>(f: impl FnOnce(&Mutex<Ring>) -> R) -> R {
+    LOCAL_RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let ring =
+                Arc::new(Mutex::new(Ring::new(tid, RING_CAP.load(Ordering::Relaxed))));
+            RINGS.lock().unwrap().push(ring.clone());
+            ring
+        });
+        f(ring)
+    })
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    id: u64,
+    parent: u64,
+}
+
+/// RAII guard returned by [`span`]; records the event on drop. Inactive
+/// (None) when tracing is disabled or compiled out.
+#[must_use = "a span measures the scope of its guard; binding to _ drops it immediately"]
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let dur_ns = now_ns().saturating_sub(a.start_ns);
+            CURRENT_SPAN.with(|c| c.set(a.parent));
+            with_local_ring(|ring| {
+                ring.lock().unwrap().push(SpanEvent {
+                    name: a.name,
+                    cat: a.cat,
+                    start_ns: a.start_ns,
+                    dur_ns,
+                    id: a.id,
+                    parent: a.parent,
+                    tid: 0, // stamped by the ring
+                });
+            });
+        }
+    }
+}
+
+/// Open a scoped span in category `cat` (layer: "coordinator",
+/// "engine", "microkernel", "probe") named `name`. Returns a guard that
+/// records the span when dropped.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    #[cfg(feature = "obs-compile-out")]
+    {
+        let _ = (cat, name);
+        SpanGuard { active: None }
+    }
+    #[cfg(not(feature = "obs-compile-out"))]
+    {
+        if !enabled() {
+            return SpanGuard { active: None };
+        }
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let parent = CURRENT_SPAN.with(|c| {
+            let p = c.get();
+            c.set(id);
+            p
+        });
+        SpanGuard { active: Some(ActiveSpan { name, cat, start_ns: now_ns(), id, parent }) }
+    }
+}
+
+/// Scoped span macro — `obs_span!("route_batch")` (category "app") or
+/// `obs_span!("coordinator", "route_batch")`. Bind the result:
+/// `let _s = obs_span!(...)`.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        $crate::obs::trace::span("app", $name)
+    };
+    ($cat:expr, $name:expr) => {
+        $crate::obs::trace::span($cat, $name)
+    };
+}
+
+/// Drop all recorded events (rings stay registered for their threads).
+pub fn clear() {
+    for ring in RINGS.lock().unwrap().iter() {
+        ring.lock().unwrap().clear();
+    }
+}
+
+/// Total events recorded since the last [`clear`] (including any that
+/// were overwritten past ring capacity).
+pub fn events_recorded() -> u64 {
+    RINGS.lock().unwrap().iter().map(|r| r.lock().unwrap().total).sum()
+}
+
+/// Snapshot every ring, merged and sorted by start timestamp.
+pub fn export_events() -> Vec<SpanEvent> {
+    let mut all: Vec<SpanEvent> = Vec::new();
+    for ring in RINGS.lock().unwrap().iter() {
+        all.extend(ring.lock().unwrap().events.iter().cloned());
+    }
+    all.sort_by_key(|e| (e.start_ns, e.id));
+    all
+}
+
+/// Chrome trace-event JSON: `{"traceEvents": [...]}` of complete-event
+/// (`"ph": "X"`) records with `ts`/`dur` in µs, sorted by `ts`.
+pub fn export_chrome() -> Value {
+    let events: Vec<Value> = export_events()
+        .iter()
+        .map(|e| {
+            Value::object(vec![
+                ("name", Value::string(e.name)),
+                ("cat", Value::string(e.cat)),
+                ("ph", Value::string("X")),
+                ("pid", Value::number(1.0)),
+                ("tid", Value::number(e.tid as f64)),
+                ("ts", Value::number(e.start_ns as f64 / 1000.0)),
+                ("dur", Value::number(e.dur_ns as f64 / 1000.0)),
+                (
+                    "args",
+                    Value::object(vec![
+                        ("id", Value::number(e.id as f64)),
+                        ("parent", Value::number(e.parent as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Value::object(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", Value::string("ms")),
+    ])
+}
+
+/// Write [`export_chrome`] (pretty-printed) to `path`.
+pub fn write_chrome(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, export_chrome().to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        // Tracing is off by default; the guard must be inert.
+        assert!(!enabled());
+        let before = events_recorded();
+        {
+            let _s = span("engine", "unit_disabled_span");
+        }
+        assert_eq!(events_recorded(), before);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_past_capacity() {
+        let mut ring = Ring::new(7, 2);
+        for i in 0..3u64 {
+            ring.push(SpanEvent {
+                name: "e",
+                cat: "t",
+                start_ns: i,
+                dur_ns: 0,
+                id: i + 1,
+                parent: 0,
+                tid: 0,
+            });
+        }
+        assert_eq!(ring.total, 3);
+        assert_eq!(ring.events.len(), 2);
+        // event with start_ns == 0 was overwritten
+        assert!(ring.events.iter().all(|e| e.start_ns > 0));
+        assert!(ring.events.iter().all(|e| e.tid == 7));
+    }
+}

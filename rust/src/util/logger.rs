@@ -1,5 +1,11 @@
 //! Minimal `log` backend: timestamped stderr lines, level from
 //! `RUST_LOG` (error|warn|info|debug|trace; default info).
+//!
+//! The spec is parsed leniently: levels match case-insensitively, and a
+//! comma-separated env_logger-style spec (`RUST_LOG=debug,foo=trace`)
+//! takes its leading segment as the global level (per-module directives
+//! are not supported here). Unrecognized input falls back to info with
+//! one warning line.
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -28,28 +34,84 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse a `RUST_LOG`-style spec into a level. Returns
+/// `(level, Some(warning))` when the input was unrecognized and the
+/// default had to be used.
+fn parse_spec(spec: &str) -> (Level, Option<String>) {
+    // leading segment of a comma-separated spec is the global level;
+    // per-module directives (`foo=trace`) are ignored by this backend
+    let head = spec.split(',').next().unwrap_or("").trim();
+    if head.is_empty() {
+        return (Level::Info, None);
+    }
+    match head.to_ascii_lowercase().as_str() {
+        "error" => (Level::Error, None),
+        "warn" => (Level::Warn, None),
+        "info" => (Level::Info, None),
+        "debug" => (Level::Debug, None),
+        "trace" => (Level::Trace, None),
+        other => (
+            Level::Info,
+            Some(format!(
+                "unrecognized RUST_LOG level `{other}` (expected error|warn|info|debug|trace); using info"
+            )),
+        ),
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
+    let (level, warning) = match std::env::var("RUST_LOG") {
+        Ok(spec) => parse_spec(&spec),
+        Err(_) => (Level::Info, None),
     };
     let _ = START.set(Instant::now());
     let logger = Box::leak(Box::new(StderrLogger { max_level: level }));
     if log::set_logger(logger).is_ok() {
         log::set_max_level(LevelFilter::Trace);
+        // emit the (single) parse warning through the freshly installed
+        // logger so it carries the standard line format
+        if let Some(msg) = warning {
+            log::warn!("{msg}");
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logger smoke");
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(parse_spec("INFO").0, Level::Info);
+        assert_eq!(parse_spec("Debug").0, Level::Debug);
+        assert_eq!(parse_spec("TRACE").0, Level::Trace);
+        assert_eq!(parse_spec("warn").0, Level::Warn);
+        assert_eq!(parse_spec("ERROR").0, Level::Error);
+    }
+
+    #[test]
+    fn parse_takes_leading_level_of_comma_spec() {
+        let (level, warning) = parse_spec("debug,foo=trace,bar=warn");
+        assert_eq!(level, Level::Debug);
+        assert!(warning.is_none());
+    }
+
+    #[test]
+    fn parse_warns_once_on_unrecognized() {
+        let (level, warning) = parse_spec("verbose");
+        assert_eq!(level, Level::Info);
+        let msg = warning.expect("unrecognized spec must warn");
+        assert!(msg.contains("verbose"));
+        // empty / whitespace specs fall back silently
+        assert_eq!(parse_spec("").0, Level::Info);
+        assert!(parse_spec("  ").1.is_none());
     }
 }

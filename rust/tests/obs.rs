@@ -1,0 +1,167 @@
+//! Integration tests for the observability layer: Prometheus text
+//! exposition, registry JSON snapshots, and Chrome trace-event export,
+//! all round-tripped through `util::json`.
+
+use std::time::Duration;
+
+use distr_attention::metrics::LatencyHistogram;
+use distr_attention::obs::registry::Registry;
+use distr_attention::obs::trace;
+use distr_attention::util::json::Value;
+
+// -- Prometheus text exposition -----------------------------------------
+
+#[test]
+fn prometheus_sanitizes_names_and_escapes_labels() {
+    let reg = Registry::new();
+    reg.counter("kv.blocks-used", &[]).add(3);
+    reg.counter("9starts_with_digit", &[]).inc();
+    reg.gauge("queue_depth", &[("pool", "a\"b\\c\nd")]).set(2.5);
+    let text = reg.render_prometheus();
+
+    assert!(text.contains("# TYPE kv_blocks_used counter"));
+    assert!(text.contains("kv_blocks_used 3"));
+    assert!(text.contains("_9starts_with_digit 1"));
+    // backslash, quote, and newline escaped per the exposition format —
+    // the whole series stays on one physical line
+    assert!(text.contains(r#"queue_depth{pool="a\"b\\c\nd"} 2.5"#), "{text}");
+}
+
+#[test]
+fn prometheus_histogram_buckets_are_cumulative() {
+    let reg = Registry::new();
+    let h = reg.histogram("req_latency", &[("variant", "distr")]);
+    for us in [1u64, 3, 3, 100, 5000, 100_000] {
+        h.record(Duration::from_micros(us));
+    }
+    let text = reg.render_prometheus();
+
+    let mut bucket_counts: Vec<(f64, u64)> = Vec::new();
+    let mut inf_count = None;
+    let mut total_count = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("req_latency_bucket{") {
+            let le = rest
+                .split("le=\"")
+                .nth(1)
+                .and_then(|s| s.split('"').next())
+                .expect("le label");
+            let val: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            if le == "+Inf" {
+                inf_count = Some(val);
+            } else {
+                bucket_counts.push((le.parse::<f64>().unwrap(), val));
+            }
+        } else if line.starts_with("req_latency_count") {
+            total_count = Some(line.rsplit(' ').next().unwrap().parse::<u64>().unwrap());
+        }
+    }
+    assert_eq!(bucket_counts.len(), LatencyHistogram::NUM_BUCKETS);
+    // le thresholds strictly increasing, counts monotone nondecreasing
+    for w in bucket_counts.windows(2) {
+        assert!(w[0].0 < w[1].0, "le must increase: {w:?}");
+        assert!(w[0].1 <= w[1].1, "cumulative counts must not decrease: {w:?}");
+    }
+    assert_eq!(inf_count, Some(6), "+Inf bucket must count every sample");
+    assert_eq!(total_count, Some(6));
+    assert_eq!(bucket_counts.last().unwrap().1, 6, "last finite bucket covers every sample");
+}
+
+// -- JSON snapshot round trip -------------------------------------------
+
+#[test]
+fn json_snapshot_round_trips_through_parser() {
+    let reg = Registry::new();
+    reg.counter("served_total", &[("variant", "flash2")]).add(7);
+    reg.gauge("blocks_free", &[]).set(12.0);
+    let h = reg.histogram("ttft", &[]);
+    h.record(Duration::from_micros(250));
+    h.record(Duration::from_micros(900));
+
+    let text = reg.snapshot_json().to_string_pretty();
+    let parsed = Value::parse(&text).expect("snapshot must be valid JSON");
+    assert_eq!(parsed.req("schema").unwrap().as_f64(), Some(1.0));
+
+    let counters = parsed.req_array("counters").unwrap();
+    let served = counters
+        .iter()
+        .find(|c| c.req_str("name").unwrap() == "served_total")
+        .expect("counter present");
+    assert_eq!(served.req("value").unwrap().as_f64(), Some(7.0));
+    assert_eq!(
+        served.req("labels").unwrap().get("variant").and_then(|v| v.as_str()),
+        Some("flash2")
+    );
+
+    let gauges = parsed.req_array("gauges").unwrap();
+    assert!(gauges.iter().any(|g| {
+        g.req_str("name").unwrap() == "blocks_free"
+            && g.req("value").unwrap().as_f64() == Some(12.0)
+    }));
+
+    let hists = parsed.req_array("histograms").unwrap();
+    let ttft = hists.iter().find(|h| h.req_str("name").unwrap() == "ttft").unwrap();
+    assert_eq!(ttft.req("count").unwrap().as_f64(), Some(2.0));
+    assert_eq!(ttft.req("sum_us").unwrap().as_f64(), Some(1150.0));
+    let buckets = ttft.req_array("buckets").unwrap();
+    assert_eq!(buckets.len(), LatencyHistogram::NUM_BUCKETS);
+    let total: f64 = buckets.iter().map(|b| b.as_f64().unwrap()).sum();
+    assert_eq!(total, 2.0, "per-bucket counts must sum to the sample count");
+}
+
+// -- Chrome trace export ------------------------------------------------
+
+#[test]
+fn chrome_export_is_valid_sorted_and_parent_linked() {
+    // this test owns the global trace state: unit tests in obs::trace
+    // only assert the disabled path, and no other integration test here
+    // enables tracing
+    trace::clear();
+    trace::set_enabled(true);
+    {
+        let _outer = trace::span("coordinator", "it_outer_span");
+        let _inner = trace::span("engine", "it_inner_span");
+    }
+    trace::set_enabled(false);
+
+    let text = trace::export_chrome().to_string_pretty();
+    let parsed = Value::parse(&text).expect("chrome export must be valid JSON");
+    let events = parsed.req_array("traceEvents").unwrap();
+    assert!(events.len() >= 2);
+
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in events {
+        assert_eq!(e.req_str("ph").unwrap(), "X", "complete events only");
+        let ts = e.req("ts").unwrap().as_f64().expect("numeric ts");
+        assert!(e.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ts >= last_ts, "events must be sorted by ts");
+        last_ts = ts;
+    }
+
+    let find = |name: &str| {
+        events
+            .iter()
+            .find(|e| e.req_str("name").unwrap() == name)
+            .unwrap_or_else(|| panic!("span {name} missing from export"))
+    };
+    let outer = find("it_outer_span");
+    let inner = find("it_inner_span");
+    assert_eq!(outer.req_str("cat").unwrap(), "coordinator");
+    assert_eq!(inner.req_str("cat").unwrap(), "engine");
+    // parent linkage: the inner span's parent is the outer span's id,
+    // the outer span is a root
+    let outer_id = outer.req("args").unwrap().req("id").unwrap().as_f64().unwrap();
+    let inner_parent = inner.req("args").unwrap().req("parent").unwrap().as_f64().unwrap();
+    assert_eq!(inner_parent, outer_id);
+    assert_eq!(
+        outer.req("args").unwrap().req("parent").unwrap().as_f64(),
+        Some(0.0),
+        "outer span must be a root"
+    );
+    // both spans ran on this thread, so they share a tid
+    assert_eq!(
+        outer.req("tid").unwrap().as_f64(),
+        inner.req("tid").unwrap().as_f64()
+    );
+    trace::clear();
+}
