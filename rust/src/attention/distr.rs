@@ -164,6 +164,8 @@ fn distr_block(
     }
     flash2::reset_state(ws, bl, bm);
     let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
+    // hot-loop:begin distr_k_sweep — fuse/contract/softmax per K block;
+    // `cargo xtask analyze` rejects allocation idioms inside this fence.
     for jk in 0..n_blocks {
         let k0 = jk * bm;
         {
@@ -188,6 +190,7 @@ fn distr_block(
         }
         flash2::online_softmax_pv_step(v, k0, bl, bm, ws, o_chunk);
     }
+    // hot-loop:end distr_k_sweep
     flash2::normalize_block(ws, bl, d, o_chunk);
 }
 

@@ -44,6 +44,8 @@ pub(super) fn online_softmax_pv_step(
     ws: &mut TileScratch,
     o_chunk: &mut [f32],
 ) {
+    // hot-loop:begin online_softmax_pv — per-K-block work; `cargo xtask
+    // analyze` rejects allocation idioms inside this fence.
     let d = v.cols;
     {
         let _s = trace::span("microkernel", "online_softmax");
@@ -79,6 +81,7 @@ pub(super) fn online_softmax_pv_step(
     microkernel::pack_rows(&ws.s_tile, bl, bm, bm, &mut ws.p_pack);
     microkernel::pack_cols(&v.data[k0 * d..(k0 + bm) * d], bm, d, d, &mut ws.c_pack);
     microkernel::gemm_accum_tile(&ws.p_pack, &ws.c_pack, bl, d, bm, o_chunk, d);
+    // hot-loop:end online_softmax_pv
 }
 
 /// Divide each accumulated output row by its softmax denominator.
@@ -125,6 +128,8 @@ fn flash2_block(
     }
     reset_state(ws, bl, bm);
     let n_blocks = if causal { (q0 + bl) / bm } else { n_kv / bm };
+    // hot-loop:begin flash2_k_sweep — the K/V inner loop must stay
+    // allocation-free (see `kernel_parity_scratch_reused_across_k_blocks`).
     for jk in 0..n_blocks {
         let k0 = jk * bm;
         {
@@ -149,6 +154,7 @@ fn flash2_block(
         }
         online_softmax_pv_step(v, k0, bl, bm, ws, o_chunk);
     }
+    // hot-loop:end flash2_k_sweep
     normalize_block(ws, bl, d, o_chunk);
 }
 

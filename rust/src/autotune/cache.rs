@@ -56,6 +56,9 @@ impl TuningCache {
         self.entries.iter()
     }
 
+    // schema:begin tuning-cache v1 const=CACHE_VERSION
+    // Changing the serialized layout below requires bumping
+    // `CACHE_VERSION` and re-stamping (`cargo xtask analyze --update-stamps`).
     pub fn to_json(&self) -> Value {
         // BTreeMap-backed Value::Object keeps the file diff-stable
         let entries: Vec<(String, Value)> =
@@ -93,6 +96,7 @@ impl TuningCache {
         }
         Ok(Self { gpu, entries })
     }
+    // schema:end tuning-cache
 
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         let text = std::fs::read_to_string(path)

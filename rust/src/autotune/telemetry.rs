@@ -437,6 +437,9 @@ impl TelemetryRecorder {
         Ok(Ewma::from_parts(value, samples, alpha))
     }
 
+    // schema:begin telemetry v1 const=TELEMETRY_VERSION
+    // Changing the serialized layout below requires bumping
+    // `TELEMETRY_VERSION` and re-stamping (`cargo xtask analyze --update-stamps`).
     pub fn to_json(&self) -> Value {
         let keys: Vec<(String, Value)> = self
             .keys
@@ -515,6 +518,7 @@ impl TelemetryRecorder {
         }
         Ok((gpu, keys, promotions))
     }
+    // schema:end telemetry
 
     /// Persist to the configured path if one is set — the serve loop's
     /// shutdown hook, so evidence gathered between promotions (and keys

@@ -154,6 +154,8 @@ impl Batcher {
             // remove (not just drain) the entry: long-lived servers see
             // many distinct shape buckets, and empty leftovers would
             // accumulate in the map forever
+            // lint: allow(serve-panic) — the entry was or_insert'ed above
+            // in this same call; the key cannot be absent.
             let batch = self.pending.remove(&key).expect("entry just filled").requests;
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;
@@ -192,6 +194,8 @@ impl Batcher {
         let mut out = Vec::new();
         for key in expired {
             let _s = trace::span("coordinator", "deadline_flush");
+            // lint: allow(serve-panic) — `expired` keys were copied out
+            // of `pending` just above with no intervening removal.
             let batch = self.pending.remove(&key).expect("key collected above").requests;
             self.stats.batches += 1;
             self.stats.requests += batch.len() as u64;

@@ -131,6 +131,8 @@ impl KvCache {
         }
         let mut blocks = Vec::with_capacity(n_blocks);
         for b in 0..n_blocks {
+            // lint: allow(serve-panic) — capacity was checked above
+            // (`free.len() < n_blocks` already returned Err).
             let id = self.free.pop().unwrap();
             self.meta[id as usize].refcount = 1;
             let t0 = b * self.block_tokens;
@@ -159,13 +161,18 @@ impl KvCache {
                 return Err(anyhow!("kv cache exhausted on append"));
             };
             self.meta[id as usize].refcount = 1;
+            // lint: allow(serve-panic) — `seq` was resolved at the top
+            // of this call; no removal can interleave (&mut self).
             self.seqs.get_mut(&seq).unwrap().blocks.push(id);
             self.sync_gauges();
             id
         } else {
+            // lint: allow(serve-panic) — a registered sequence always
+            // owns at least one block (`register` allocates eagerly).
             *self.seqs[&seq].blocks.last().unwrap()
         };
         self.write_block(block, slot, k_row, v_row);
+        // lint: allow(serve-panic) — same resolved `seq` as above.
         self.seqs.get_mut(&seq).unwrap().tokens = tokens + 1;
         Ok(())
     }

@@ -203,6 +203,62 @@ impl LatencyHistogram {
     }
 }
 
+/// Histogram for dimensionless relative errors (shadow-probe output).
+///
+/// Replaces the old "seconds == error" encoding hack where rel-errs were
+/// stuffed into a [`LatencyHistogram`] via `Duration::from_secs_f64`:
+/// the float API now lives here, while the bucket layout stays the
+/// micro-error (`err × 1e6`) power-of-two grid that encoding produced,
+/// so published `probe_rel_err_{mean,p99}` values are unchanged. Errors
+/// below `1e-6` clamp into the first bucket ("negligible"); the mean is
+/// tracked as an exact f64 sum rather than truncated integer micro-errs.
+#[derive(Clone, Debug, Default)]
+pub struct RelErrHistogram {
+    inner: LatencyHistogram,
+    sum_err: f64,
+}
+
+impl RelErrHistogram {
+    pub fn new() -> Self {
+        Self { inner: LatencyHistogram::new(), sum_err: 0.0 }
+    }
+
+    /// Record one relative error. Non-finite values are ignored;
+    /// negative values clamp to 0 and absurd ones to `1e6`.
+    pub fn record(&mut self, rel_err: f64) {
+        if !rel_err.is_finite() {
+            return;
+        }
+        let err = rel_err.clamp(0.0, 1.0e6);
+        // micro-error units: 0.02 relative error → bucket index of 20_000
+        self.inner.record(Duration::from_micros((err * 1.0e6) as u64));
+        self.sum_err += err;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    /// Exact arithmetic mean of the recorded errors.
+    pub fn mean_err(&self) -> f64 {
+        if self.inner.count() == 0 {
+            return 0.0;
+        }
+        self.sum_err / self.inner.count() as f64
+    }
+
+    /// Quantile as a relative error (bucket upper bound, clamped to the
+    /// observed maximum — same semantics as [`LatencyHistogram::quantile`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.inner.quantile(q).as_secs_f64()
+    }
+
+    pub fn merge(&mut self, other: &RelErrHistogram) {
+        self.inner.merge(&other.inner);
+        self.sum_err += other.sum_err;
+    }
+}
+
 /// Throughput counter over a wall-clock window.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Throughput {
@@ -427,6 +483,54 @@ mod tests {
         h.record(Duration::from_micros(2));
         // (1 + 2) / 2 floors to 1µs by design (integer µs accumulation)
         assert_eq!(h.mean(), Duration::from_micros(1));
+    }
+
+    #[test]
+    fn rel_err_histogram_matches_old_seconds_encoding() {
+        // the old hack recorded err as Duration::from_secs_f64(err); the
+        // dedicated type must produce identical quantile read-backs
+        let mut new_h = RelErrHistogram::new();
+        let mut old_h = LatencyHistogram::new();
+        for err in [0.0005f64, 0.002, 0.02, 0.02, 0.11] {
+            new_h.record(err);
+            old_h.record(Duration::from_secs_f64(err));
+        }
+        assert_eq!(new_h.count(), 5);
+        for q in [0.0, 0.5, 0.9, 0.99] {
+            assert_eq!(new_h.quantile(q), old_h.quantile(q).as_secs_f64(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn rel_err_histogram_mean_is_exact() {
+        let mut h = RelErrHistogram::new();
+        h.record(0.01);
+        h.record(0.03);
+        assert!((h.mean_err() - 0.02).abs() < 1e-12);
+        assert_eq!(RelErrHistogram::new().mean_err(), 0.0);
+    }
+
+    #[test]
+    fn rel_err_histogram_guards_bad_inputs() {
+        let mut h = RelErrHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0, "non-finite errors must be dropped");
+        h.record(-0.5); // clamps to 0 → first bucket
+        h.record(1.0e12); // clamps to 1e6
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.99) <= 1.01e6);
+    }
+
+    #[test]
+    fn rel_err_histogram_merges() {
+        let mut a = RelErrHistogram::new();
+        let mut b = RelErrHistogram::new();
+        a.record(0.01);
+        b.record(0.03);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_err() - 0.02).abs() < 1e-12);
     }
 
     #[test]

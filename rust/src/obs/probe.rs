@@ -5,8 +5,8 @@
 //! a continuously observed serving metric: for a deterministic fraction
 //! of served batches it recomputes *exact* attention on the same inputs
 //! and records the relative error of the served output into a per-
-//! [`TuneKey`] histogram (seconds == relative error, so `p99` reads back
-//! directly as an error quantile).
+//! [`TuneKey`] [`RelErrHistogram`], so `p99` reads back directly as a
+//! dimensionless error quantile.
 //!
 //! Sampling is counter-based (`every = round(1/rate)`), not random or
 //! wall-clock driven, so runs are reproducible and the 0%-sampling fast
@@ -20,11 +20,10 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
 
 use crate::attention::standard_attention;
 use crate::autotune::TuneKey;
-use crate::metrics::{Ewma, LatencyHistogram};
+use crate::metrics::{Ewma, RelErrHistogram};
 use crate::obs::registry::Registry;
 use crate::obs::trace;
 use crate::tensor::Matrix;
@@ -36,11 +35,14 @@ use crate::util::json::Value;
 static LSH_PROBES: AtomicBool = AtomicBool::new(false);
 
 pub fn set_lsh_probes(on: bool) {
+    // ordering: Relaxed — an advisory on/off flag; a stale read only
+    // delays when gauges start/stop updating, never corrupts state.
     LSH_PROBES.store(on, Ordering::Relaxed);
 }
 
 #[inline]
 pub fn lsh_probes_on() -> bool {
+    // ordering: Relaxed — see `set_lsh_probes`; no data is guarded.
     LSH_PROBES.load(Ordering::Relaxed)
 }
 
@@ -73,14 +75,14 @@ pub fn note_lsh_hashes(reg: &Registry, hashes: &[u32]) {
 }
 
 struct ProbeState {
-    rel_err: LatencyHistogram,
+    rel_err: RelErrHistogram,
     mean: Ewma,
     samples: u64,
 }
 
 impl ProbeState {
     fn new() -> Self {
-        Self { rel_err: LatencyHistogram::new(), mean: Ewma::new(0.25), samples: 0 }
+        Self { rel_err: RelErrHistogram::new(), mean: Ewma::new(0.25), samples: 0 }
     }
 }
 
@@ -126,6 +128,9 @@ impl ShadowProbe {
     /// Deterministic sampling decision: true on every `every`-th call.
     /// The disabled path (rate 0) is one relaxed increment + compare.
     pub fn should_sample(&self) -> bool {
+        // ordering: Relaxed — callers only need a unique ticket from the
+        // shared counter; the sampling decision has no associated data
+        // whose visibility this increment must order.
         let n = self.counter.fetch_add(1, Ordering::Relaxed);
         self.every != 0 && n % self.every == 0
     }
@@ -158,9 +163,7 @@ impl ShadowProbe {
         }
         let mut states = self.states.lock().unwrap();
         let state = states.entry(key).or_insert_with(ProbeState::new);
-        // seconds == relative error: 1e-6 lands in the first bucket, so
-        // errors below 1e-6 clamp there (documented in OBSERVABILITY.md)
-        state.rel_err.record(Duration::from_secs_f64(err.min(1.0e6)));
+        state.rel_err.record(err);
         state.mean.observe(err);
         state.samples += 1;
         drop(states);
@@ -186,8 +189,7 @@ impl ShadowProbe {
             let key_str = key.to_string();
             let labels: [(&str, &str); 1] = [("key", key_str.as_str())];
             reg.gauge("probe_rel_err_mean", &labels).set(state.mean.value());
-            reg.gauge("probe_rel_err_p99", &labels)
-                .set(state.rel_err.quantile(0.99).as_secs_f64());
+            reg.gauge("probe_rel_err_p99", &labels).set(state.rel_err.quantile(0.99));
             reg.gauge("probe_samples", &labels).set(state.samples as f64);
         }
         reg.gauge("probe_sampling_rate", &[]).set(self.rate());
@@ -204,14 +206,8 @@ impl ShadowProbe {
                     Value::object(vec![
                         ("samples", Value::number(state.samples as f64)),
                         ("mean_rel_err", Value::number(state.mean.value())),
-                        (
-                            "p50_rel_err",
-                            Value::number(state.rel_err.quantile(0.5).as_secs_f64()),
-                        ),
-                        (
-                            "p99_rel_err",
-                            Value::number(state.rel_err.quantile(0.99).as_secs_f64()),
-                        ),
+                        ("p50_rel_err", Value::number(state.rel_err.quantile(0.5))),
+                        ("p99_rel_err", Value::number(state.rel_err.quantile(0.99))),
                     ]),
                 )
             })

@@ -16,9 +16,19 @@
 //!   [`crate::util::json::Value`], written by `serve_llm` at shutdown.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::Ordering;
+#[cfg(not(feature = "minloom"))]
+use std::sync::atomic::{AtomicU64, AtomicUsize};
+#[cfg(not(feature = "minloom"))]
+use std::sync::Mutex;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
+
+// Under `--features minloom` the registry's sync primitives come from
+// the model checker's shims (pass-through outside a model run), so the
+// write-vs-scrape model test below explores this exact source.
+#[cfg(feature = "minloom")]
+use crate::util::modelcheck::shim::{AtomicU64, AtomicUsize, Mutex};
 
 use crate::metrics::LatencyHistogram;
 use crate::util::json::Value;
@@ -33,6 +43,8 @@ static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
 thread_local! {
     /// Stable slot per thread, assigned on first metric touch. The
     /// persistent worker pool means slots are effectively static.
+    // ordering: Relaxed — slot assignment only needs uniqueness, which
+    // the atomic RMW guarantees on its own; no other memory is published.
     static THREAD_SLOT: usize = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
 }
 
@@ -64,14 +76,19 @@ pub struct Counter {
 
 impl Counter {
     pub fn inc(&self) {
+        // ordering: Relaxed — a monotone event count; scrapes tolerate
+        // arbitrarily stale reads and the RMW itself never loses counts.
         self.cell.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add(&self, n: u64) {
+        // ordering: Relaxed — same monotone-count argument as `inc`.
         self.cell.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — scrapes are advisory; no acquire needed
+        // because no non-atomic state is published alongside the count.
         self.cell.load(Ordering::Relaxed)
     }
 }
@@ -84,16 +101,22 @@ pub struct Gauge {
 
 impl Gauge {
     pub fn set(&self, v: f64) {
+        // ordering: Relaxed — last-writer-wins sample; scrapes only need
+        // *a* recent value, not ordering against other memory.
         self.cell.store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn add(&self, delta: f64) {
+        // ordering: Relaxed — the CAS loop in fetch_update already makes
+        // each delta land exactly once; cross-thread visibility order of
+        // intermediate values is irrelevant for a sampled gauge.
         let _ = self.cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
             Some((f64::from_bits(bits) + delta).to_bits())
         });
     }
 
     pub fn get(&self) -> f64 {
+        // ordering: Relaxed — see `Counter::get`.
         f64::from_bits(self.cell.load(Ordering::Relaxed))
     }
 }
@@ -104,7 +127,19 @@ struct HistShards {
 
 impl HistShards {
     fn new() -> Self {
-        Self { shards: (0..N_SHARDS).map(|_| Mutex::new(LatencyHistogram::new())).collect() }
+        Self::with_shards(N_SHARDS)
+    }
+
+    /// Explicit shard count — the write-vs-scrape model test uses a
+    /// 2-shard instance with explicit indices so the explored schedule
+    /// space does not depend on per-run thread-slot assignment.
+    fn with_shards(n: usize) -> Self {
+        Self { shards: (0..n.max(1)).map(|_| Mutex::new(LatencyHistogram::new())).collect() }
+    }
+
+    /// Record into an explicit shard (callers pick by thread slot).
+    fn record_at(&self, shard: usize, d: Duration) {
+        self.shards[shard % self.shards.len()].lock().unwrap().record(d);
     }
 
     fn merged(&self) -> LatencyHistogram {
@@ -124,8 +159,7 @@ pub struct Histogram {
 
 impl Histogram {
     pub fn record(&self, d: Duration) {
-        let shard = thread_slot() % N_SHARDS;
-        self.inner.shards[shard].lock().unwrap().record(d);
+        self.inner.record_at(thread_slot(), d);
     }
 
     /// Record a dimensionless count (batch size, bucket population) by
@@ -134,16 +168,6 @@ impl Histogram {
     /// `n`. Documented per-metric in docs/OBSERVABILITY.md.
     pub fn record_count(&self, n: u64) {
         self.record(Duration::from_micros(n));
-    }
-
-    /// Record a small non-negative float (e.g. a relative error) by
-    /// mapping seconds == value, so `1e-6` occupies the first bucket and
-    /// quantiles read back directly in the recorded unit.
-    pub fn record_value(&self, v: f64) {
-        if !v.is_finite() {
-            return;
-        }
-        self.record(Duration::from_secs_f64(v.clamp(0.0, 1.0e6)));
     }
 
     /// Merge all shards into one snapshot histogram.
@@ -215,6 +239,7 @@ impl Registry {
                 out.push_str(&format!("# TYPE {name} counter\n"));
                 last_name = name.clone();
             }
+            // ordering: Relaxed — scrape reads are advisory snapshots.
             out.push_str(&format!(
                 "{name}{} {}\n",
                 fmt_labels(&id.labels, None),
@@ -231,6 +256,7 @@ impl Registry {
                 out.push_str(&format!("# TYPE {name} gauge\n"));
                 last_name = name.clone();
             }
+            // ordering: Relaxed — scrape reads are advisory snapshots.
             out.push_str(&format!(
                 "{name}{} {}\n",
                 fmt_labels(&id.labels, None),
@@ -269,6 +295,11 @@ impl Registry {
     }
 
     /// JSON snapshot of every metric, parseable by [`Value::parse`].
+    ///
+    /// The layout is consumed by CI's serve-smoke guard and external
+    /// dashboards: changing any field below requires bumping the
+    /// `schema` number (enforced by `cargo xtask analyze`'s hash stamp).
+    // schema:begin metrics-snapshot v1
     pub fn snapshot_json(&self) -> Value {
         let counters: Vec<Value> = self
             .counters
@@ -279,6 +310,7 @@ impl Registry {
                 Value::object(vec![
                     ("name", Value::string(id.name.clone())),
                     ("labels", labels_json(&id.labels)),
+                    // ordering: Relaxed — advisory scrape read.
                     ("value", Value::number(cell.load(Ordering::Relaxed) as f64)),
                 ])
             })
@@ -292,6 +324,7 @@ impl Registry {
                 Value::object(vec![
                     ("name", Value::string(id.name.clone())),
                     ("labels", labels_json(&id.labels)),
+                    // ordering: Relaxed — advisory scrape read.
                     ("value", Value::number(f64::from_bits(cell.load(Ordering::Relaxed)))),
                 ])
             })
@@ -324,6 +357,7 @@ impl Registry {
             ("histograms", Value::Array(histograms)),
         ])
     }
+    // schema:end metrics-snapshot
 }
 
 /// Sanitize to the Prometheus metric-name charset `[a-zA-Z0-9_:]`,
@@ -458,5 +492,44 @@ mod tests {
         assert_eq!(counters[0].get("value").and_then(Value::as_f64), Some(7.0));
         let hists = parsed.req_array("histograms").unwrap();
         assert_eq!(hists[0].req_usize("count").unwrap(), 1);
+    }
+}
+
+/// Model-checked exploration of the striped histogram's write-vs-scrape
+/// path: two recorders on distinct shards race a merging scraper across
+/// every bounded schedule.
+#[cfg(all(test, feature = "minloom"))]
+mod model_tests {
+    use super::*;
+    use crate::util::modelcheck::{shim, Checker};
+
+    #[test]
+    fn minloom_histogram_write_vs_scrape_is_consistent() {
+        let checker = Checker { max_schedules: 60_000, ..Checker::default() };
+        let report = checker.check(|| {
+            // explicit shard indices: schedules must not depend on the
+            // per-run nondeterminism of thread-slot assignment
+            let h = Arc::new(HistShards::with_shards(2));
+            let w1 = {
+                let h = Arc::clone(&h);
+                shim::thread::spawn(move || h.record_at(0, Duration::from_micros(3)))
+            };
+            let w2 = {
+                let h = Arc::clone(&h);
+                shim::thread::spawn(move || h.record_at(1, Duration::from_micros(900)))
+            };
+            // scrape concurrently with the writers: the merged snapshot
+            // must be internally consistent at any interleaving point
+            let mid = h.merged();
+            let bucket_sum: u64 = mid.buckets().iter().sum();
+            assert_eq!(mid.count(), bucket_sum, "torn scrape: count != bucket sum");
+            assert!(mid.count() <= 2);
+            w1.join().unwrap();
+            w2.join().unwrap();
+            let fin = h.merged();
+            assert_eq!(fin.count(), 2, "a recorded sample was lost");
+            assert_eq!(fin.sum_us(), 903);
+        });
+        assert!(report.complete, "DFS must exhaust the write-vs-scrape model");
     }
 }

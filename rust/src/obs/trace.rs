@@ -47,17 +47,23 @@ thread_local! {
 /// Turn span recording on/off at runtime. Off is the default; the serve
 /// example enables it when `OBS_DIR` is set.
 pub fn set_enabled(on: bool) {
+    // ordering: Relaxed — an advisory gate; a caller racing the flip may
+    // record or skip one span, which tracing tolerates by design. Span
+    // data itself is ordered by the ring mutexes, not this flag.
     ENABLED.store(on, Ordering::Relaxed);
 }
 
 #[inline]
 pub fn enabled() -> bool {
+    // ordering: Relaxed — see `set_enabled`; pairs with the store above.
     ENABLED.load(Ordering::Relaxed)
 }
 
 /// Cap (events per thread ring) applied to rings created after the call.
 /// Past capacity the oldest events are overwritten.
 pub fn set_ring_capacity(cap: usize) {
+    // ordering: Relaxed — a tuning knob sampled once per ring creation;
+    // rings created concurrently with the store may use either value.
     RING_CAP.store(cap.max(16), Ordering::Relaxed);
 }
 
@@ -112,6 +118,9 @@ impl Ring {
 fn with_local_ring<R>(f: impl FnOnce(&Mutex<Ring>) -> R) -> R {
     LOCAL_RING.with(|cell| {
         let ring = cell.get_or_init(|| {
+            // ordering: Relaxed — both atomics are pure ID/config reads:
+            // the tid only needs uniqueness and the cap is advisory; the
+            // RINGS mutex below publishes the ring itself.
             let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
             let ring =
                 Arc::new(Mutex::new(Ring::new(tid, RING_CAP.load(Ordering::Relaxed))));
@@ -172,6 +181,9 @@ pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
         if !enabled() {
             return SpanGuard { active: None };
         }
+        // ordering: Relaxed — span IDs only need to be unique; parent
+        // linkage is thread-local and event publication goes through the
+        // ring mutex.
         let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
         let parent = CURRENT_SPAN.with(|c| {
             let p = c.get();
@@ -206,6 +218,13 @@ pub fn clear() {
 /// were overwritten past ring capacity).
 pub fn events_recorded() -> u64 {
     RINGS.lock().unwrap().iter().map(|r| r.lock().unwrap().total).sum()
+}
+
+/// Number of threads that have registered a span ring. Stays 0 for the
+/// whole process under `--features obs-compile-out`, which the
+/// `compile_out` integration test asserts.
+pub fn registered_threads() -> usize {
+    RINGS.lock().unwrap().len()
 }
 
 /// Snapshot every ring, merged and sorted by start timestamp.

@@ -97,6 +97,9 @@ impl JsonReport {
     }
 
     /// Record one result with extra per-record fields (shape, variant…).
+    // schema:begin bench-report v1
+    // The emitted `schema` field below must track this fence's version;
+    // re-stamp with `cargo xtask analyze --update-stamps` after edits.
     pub fn record_with(&mut self, group: &str, id: &str, stats: &Stats, extra: Vec<(&str, Value)>) {
         let mut pairs = vec![
             ("group", Value::string(group)),
@@ -122,6 +125,7 @@ impl JsonReport {
             ("results", Value::Array(self.results.clone())),
         ])
     }
+    // schema:end bench-report
 
     /// Write the report (pretty-printed, trailing newline) to `path`.
     pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {

@@ -9,12 +9,15 @@
 //! * [`rng`]      — SplitMix64/xoshiro256++ PRNG with uniform + normal draws,
 //! * [`bench`]    — the timing/report harness behind `cargo bench`,
 //! * [`cli`]      — flag parsing for the `distr-attn` binary,
-//! * [`testing`]  — temp-dir helper for filesystem tests.
+//! * [`testing`]  — temp-dir helper for filesystem tests,
+//! * [`modelcheck`] — `minloom`, a bounded-DFS interleaving model checker
+//!   whose shim sync types replace `std::sync` under `--features minloom`.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod modelcheck;
 pub mod parallel;
 pub mod rng;
 pub mod testing;

@@ -1,0 +1,1010 @@
+//! `minloom` — a vendored deterministic-interleaving model checker for
+//! the repo's hand-rolled concurrency (the pool protocol in
+//! [`util::parallel`](crate::util::parallel) and the striped registry in
+//! [`obs::registry`](crate::obs::registry)).
+//!
+//! The idea (a small subset of `loom`): production code is written
+//! against type aliases that resolve to `std::sync` types normally and
+//! to the [`shim`] types under `--features minloom`. Each shim operation
+//! is a *decision point*: a cooperative kernel (real OS threads, but
+//! exactly one runnable task executing at a time) picks which task runs
+//! next, records the choice, and [`Checker::try_check`] replays the
+//! program under every schedule a bounded DFS can reach. A run that
+//! deadlocks, loses an update (caught by an `assert!` in the modeled
+//! protocol), or panics surfaces as a [`Violation`] carrying the
+//! schedule trace that produced it.
+//!
+//! Exploration is kept tractable by *preemption bounding* (Musuvathi &
+//! Qadeer): the currently running task is preferred, and once a run has
+//! spent [`Checker::max_preemptions`] involuntary context switches the
+//! scheduler stops introducing new ones. Small protocol models (2–3
+//! tasks, tens of operations) exhaust in hundreds to thousands of
+//! schedules.
+//!
+//! Deliberate limitations, documented in `docs/ANALYSIS.md`:
+//!
+//! * **Sequentially consistent exploration only.** Shim atomics accept
+//!   an `Ordering` argument for source compatibility but the checker
+//!   does not simulate weak-memory reorderings; it explores thread
+//!   interleavings, not relaxed-memory behaviors.
+//! * **No spurious condvar wakeups.** A shimmed `Condvar::wait` only
+//!   returns after a notify (std permits spurious returns).
+//! * Shim types **pass through** to plain `std::sync` behavior on any
+//!   thread not owned by a running model, so feature-unified test runs
+//!   (`cargo test --features minloom`) leave the production pool intact.
+
+use std::cell::{Cell, RefCell};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex, MutexGuard as OsMutexGuard, Once};
+
+type TaskId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCondvar(usize),
+    BlockedJoin(TaskId),
+    Finished,
+}
+
+/// One scheduling decision: how many tasks were eligible and which
+/// position the scheduler took. The DFS backtracks over `pos`.
+#[derive(Debug, Clone, Copy)]
+struct Decision {
+    enabled: usize,
+    pos: usize,
+}
+
+/// What the checker found on a failing schedule.
+#[derive(Debug, Clone)]
+pub enum Violation {
+    /// No task is runnable but at least one has not finished.
+    Deadlock { blocked: Vec<String>, trace: Vec<String> },
+    /// A single schedule exceeded [`Checker::max_ops`] shim operations.
+    StepBound { ops: usize, trace: Vec<String> },
+    /// A modeled task panicked (e.g. an `assert!` on a protocol
+    /// invariant observed a lost update).
+    TaskPanic { task: TaskId, message: String, trace: Vec<String> },
+}
+
+fn fmt_trace(f: &mut fmt::Formatter<'_>, trace: &[String]) -> fmt::Result {
+    let tail = trace.len().saturating_sub(24);
+    if tail > 0 {
+        write!(f, " [… {tail} earlier ops]")?;
+    }
+    for op in &trace[tail..] {
+        write!(f, " → {op}")?;
+    }
+    Ok(())
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Deadlock { blocked, trace } => {
+                write!(f, "deadlock: unfinished tasks [{}]; schedule:", blocked.join(", "))?;
+                fmt_trace(f, trace)
+            }
+            Violation::StepBound { ops, trace } => {
+                write!(f, "step bound exceeded after {ops} ops; schedule:")?;
+                fmt_trace(f, trace)
+            }
+            Violation::TaskPanic { task, message, trace } => {
+                write!(f, "task t{task} panicked: {message}; schedule:")?;
+                fmt_trace(f, trace)
+            }
+        }
+    }
+}
+
+/// Result of a completed (violation-free) exploration.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Schedules actually executed.
+    pub schedules: usize,
+    /// True when the bounded DFS exhausted every reachable schedule
+    /// within [`Checker::max_schedules`].
+    pub complete: bool,
+}
+
+struct ExecState {
+    tasks: Vec<TaskState>,
+    current: Option<TaskId>,
+    /// decision positions to replay from the previous run (DFS prefix)
+    replay: Vec<usize>,
+    replay_idx: usize,
+    /// decisions taken this run, consumed by the DFS to backtrack
+    decisions: Vec<Decision>,
+    /// human-readable op log for violation reports
+    trace: Vec<String>,
+    mutex_owner: Vec<Option<TaskId>>,
+    cv_waiters: Vec<Vec<TaskId>>,
+    violation: Option<Violation>,
+    ops: usize,
+    preemptions: usize,
+    max_preemptions: usize,
+    max_ops: usize,
+}
+
+struct Kernel {
+    state: OsMutex<ExecState>,
+    cv: OsCondvar,
+    /// distinguishes shim-object registrations across runs
+    epoch: u64,
+}
+
+static NEXT_EPOCH: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (kernel, task id) of the model run owning this thread, if any.
+    static CTX: RefCell<Option<(Arc<Kernel>, TaskId)>> = const { RefCell::new(None) };
+    /// suppress panic-hook output for intentional in-model panics
+    static SUPPRESS_PANIC_OUTPUT: Cell<bool> = const { Cell::new(false) };
+}
+
+fn ctx() -> Option<(Arc<Kernel>, TaskId)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Panic payload used to unwind tasks out of an aborted run.
+struct AbortRun;
+
+fn abort_run() -> ! {
+    std::panic::panic_any(AbortRun)
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn install_panic_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPPRESS_PANIC_OUTPUT.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn klock(k: &Kernel) -> OsMutexGuard<'_, ExecState> {
+    // a task panicking while holding the kernel lock poisons it; every
+    // accessor recovers because the state itself stays consistent
+    k.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pick the next task to run. Called with the kernel lock held, at
+/// every decision point (shim op, block, finish).
+fn pick_locked(st: &mut ExecState) {
+    let runnable: Vec<TaskId> = st
+        .tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| matches!(t, TaskState::Runnable))
+        .map(|(i, _)| i)
+        .collect();
+    if runnable.is_empty() {
+        let blocked: Vec<String> = st
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !matches!(t, TaskState::Finished))
+            .map(|(i, t)| format!("t{i}:{t:?}"))
+            .collect();
+        if !blocked.is_empty() && st.violation.is_none() {
+            st.violation =
+                Some(Violation::Deadlock { blocked, trace: st.trace.clone() });
+        }
+        st.current = None;
+        return;
+    }
+    let mut enabled = runnable;
+    let cur = st.current;
+    if let Some(c) = cur {
+        if let Some(p) = enabled.iter().position(|&t| t == c) {
+            // prefer continuing the current task; once the preemption
+            // budget is spent, never switch away from a runnable task
+            enabled.remove(p);
+            enabled.insert(0, c);
+            if st.preemptions >= st.max_preemptions {
+                enabled.truncate(1);
+            }
+        }
+    }
+    let pos = if st.replay_idx < st.replay.len() {
+        st.replay[st.replay_idx]
+    } else {
+        0
+    };
+    st.replay_idx += 1;
+    debug_assert!(pos < enabled.len(), "replay diverged: {pos} >= {}", enabled.len());
+    st.decisions.push(Decision { enabled: enabled.len(), pos });
+    let chosen = enabled[pos];
+    if let Some(c) = cur {
+        if chosen != c && matches!(st.tasks[c], TaskState::Runnable) {
+            st.preemptions += 1;
+        }
+    }
+    st.current = Some(chosen);
+}
+
+/// Decision point before every shim operation: log it, reschedule, and
+/// wait until this task is current again.
+fn yield_op(k: &Kernel, me: TaskId, label: &str) {
+    let mut st = klock(k);
+    if st.violation.is_some() {
+        drop(st);
+        abort_run();
+    }
+    st.ops += 1;
+    if st.ops > st.max_ops {
+        st.violation = Some(Violation::StepBound { ops: st.ops, trace: st.trace.clone() });
+        k.cv.notify_all();
+        drop(st);
+        abort_run();
+    }
+    st.trace.push(format!("t{me} {label}"));
+    pick_locked(&mut st);
+    k.cv.notify_all();
+    while st.current != Some(me) {
+        if st.violation.is_some() {
+            drop(st);
+            abort_run();
+        }
+        st = k.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Park `me` as `blocked_as` and wait to be made runnable and current.
+/// The caller must have arranged for some other task to wake it.
+fn block_current(k: &Kernel, me: TaskId, blocked_as: TaskState) {
+    let mut st = klock(k);
+    st.tasks[me] = blocked_as;
+    pick_locked(&mut st);
+    k.cv.notify_all();
+    loop {
+        if st.violation.is_some() {
+            drop(st);
+            abort_run();
+        }
+        if matches!(st.tasks[me], TaskState::Runnable) && st.current == Some(me) {
+            return;
+        }
+        st = k.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+fn wake_mutex_waiters(st: &mut ExecState, mid: usize) {
+    for t in st.tasks.iter_mut() {
+        if matches!(*t, TaskState::BlockedMutex(m) if m == mid) {
+            *t = TaskState::Runnable;
+        }
+    }
+}
+
+/// Grant `me` logical ownership of mutex `mid`, blocking (and letting
+/// the scheduler explore) while another task owns it.
+fn acquire_mutex(k: &Kernel, me: TaskId, mid: usize) {
+    loop {
+        {
+            let mut st = klock(k);
+            if st.violation.is_some() {
+                drop(st);
+                abort_run();
+            }
+            if st.mutex_owner[mid].is_none() {
+                st.mutex_owner[mid] = Some(me);
+                return;
+            }
+        }
+        // owned by someone else: park until a release wakes us, then
+        // re-contend (the scheduler decides who wins)
+        block_current(k, me, TaskState::BlockedMutex(mid));
+    }
+}
+
+fn release_mutex(k: &Kernel, mid: usize) {
+    let mut st = klock(k);
+    st.mutex_owner[mid] = None;
+    wake_mutex_waiters(&mut st, mid);
+    k.cv.notify_all();
+}
+
+/// Mark `me` finished, wake joiners, and hand the schedule onward.
+fn finish_task(k: &Kernel, me: TaskId) {
+    let mut st = klock(k);
+    st.tasks[me] = TaskState::Finished;
+    for t in st.tasks.iter_mut() {
+        if matches!(*t, TaskState::BlockedJoin(j) if j == me) {
+            *t = TaskState::Runnable;
+        }
+    }
+    if st.violation.is_none() {
+        pick_locked(&mut st);
+    }
+    k.cv.notify_all();
+}
+
+/// Record a task panic as the run's violation (first panic wins).
+fn record_panic(k: &Kernel, me: TaskId, p: Box<dyn std::any::Any + Send>) {
+    let mut st = klock(k);
+    st.tasks[me] = TaskState::Finished;
+    if p.downcast_ref::<AbortRun>().is_none() && st.violation.is_none() {
+        let message = payload_msg(&p);
+        st.violation =
+            Some(Violation::TaskPanic { task: me, message, trace: st.trace.clone() });
+    }
+    st.current = None;
+    k.cv.notify_all();
+}
+
+/// Serializes concurrent `model()` calls from parallel `cargo test`
+/// threads — the checker owns process-wide panic-hook state and the
+/// schedules themselves must not interleave.
+static MODEL_LOCK: OsMutex<()> = OsMutex::new(());
+
+/// Bounded-DFS schedule explorer. `Default` gives budgets sized for the
+/// repo's protocol models (2–3 tasks, tens of shim ops each).
+#[derive(Debug, Clone, Copy)]
+pub struct Checker {
+    /// stop exploring (reporting `complete: false`) after this many runs
+    pub max_schedules: usize,
+    /// involuntary context switches allowed per schedule
+    pub max_preemptions: usize,
+    /// shim-operation budget per schedule (guards accidental livelock)
+    pub max_ops: usize,
+}
+
+impl Default for Checker {
+    fn default() -> Self {
+        Checker { max_schedules: 8192, max_preemptions: 2, max_ops: 20_000 }
+    }
+}
+
+impl Checker {
+    /// Explore `f` under every reachable bounded schedule, panicking
+    /// with the violating trace if one is found.
+    pub fn check<F: Fn()>(&self, f: F) -> Report {
+        match self.try_check(f) {
+            Ok(r) => r,
+            Err(v) => panic!("model checking found a violation: {v}"),
+        }
+    }
+
+    /// Like [`Checker::check`] but returns the violation for tests that
+    /// expect one (the seeded-bug corpus).
+    pub fn try_check<F: Fn()>(&self, f: F) -> Result<Report, Violation> {
+        let _serial = MODEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(ctx().is_none(), "nested model() is not supported");
+        install_panic_hook();
+        let mut replay: Vec<usize> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            schedules += 1;
+            let (decisions, violation) = self.run_schedule(&f, &replay);
+            if let Some(v) = violation {
+                return Err(v);
+            }
+            // backtrack: deepest decision with an unexplored alternative
+            let mut next: Option<Vec<usize>> = None;
+            for i in (0..decisions.len()).rev() {
+                if decisions[i].pos + 1 < decisions[i].enabled {
+                    let mut r: Vec<usize> =
+                        decisions[..i].iter().map(|d| d.pos).collect();
+                    r.push(decisions[i].pos + 1);
+                    next = Some(r);
+                    break;
+                }
+            }
+            match next {
+                None => return Ok(Report { schedules, complete: true }),
+                Some(_) if schedules >= self.max_schedules => {
+                    return Ok(Report { schedules, complete: false });
+                }
+                Some(r) => replay = r,
+            }
+        }
+    }
+
+    /// Run `f` once as task 0 under the given replay prefix.
+    fn run_schedule<F: Fn()>(
+        &self,
+        f: &F,
+        replay: &[usize],
+    ) -> (Vec<Decision>, Option<Violation>) {
+        let kernel = Arc::new(Kernel {
+            state: OsMutex::new(ExecState {
+                tasks: vec![TaskState::Runnable],
+                current: Some(0),
+                replay: replay.to_vec(),
+                replay_idx: 0,
+                decisions: Vec::new(),
+                trace: Vec::new(),
+                mutex_owner: Vec::new(),
+                cv_waiters: Vec::new(),
+                violation: None,
+                ops: 0,
+                preemptions: 0,
+                max_preemptions: self.max_preemptions,
+                max_ops: self.max_ops,
+            }),
+            cv: OsCondvar::new(),
+            epoch: NEXT_EPOCH.fetch_add(1, AtomicOrdering::Relaxed),
+        });
+        CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&kernel), 0)));
+        let was = SUPPRESS_PANIC_OUTPUT.with(|s| s.replace(true));
+        let res = catch_unwind(AssertUnwindSafe(f));
+        SUPPRESS_PANIC_OUTPUT.with(|s| s.set(was));
+        CTX.with(|c| *c.borrow_mut() = None);
+        match res {
+            Ok(()) => finish_task(&kernel, 0),
+            Err(p) => record_panic(&kernel, 0, p),
+        }
+        // wait for every spawned task to finish (or the run to die)
+        let mut st = klock(&kernel);
+        while st.violation.is_none()
+            && !st.tasks.iter().all(|t| matches!(t, TaskState::Finished))
+        {
+            st = kernel.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        let decisions = std::mem::take(&mut st.decisions);
+        // clone, don't take: parked tasks still unwinding check this
+        let violation = st.violation.clone();
+        (decisions, violation)
+    }
+}
+
+/// Explore `f` with default budgets; panics on any violation.
+pub fn model<F: Fn()>(f: F) -> Report {
+    Checker::default().check(f)
+}
+
+/// Drop-in replacements for the `std::sync` types the serve path uses.
+/// Outside a model run they behave exactly like the types they wrap.
+pub mod shim {
+    use super::*;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{LockResult, PoisonError};
+
+    /// Per-object registration: (kernel epoch, slot id). Objects that
+    /// outlive a run (or are reused across runs) re-register lazily.
+    type Slot = OsMutex<Option<(u64, usize)>>;
+
+    macro_rules! shim_atomic {
+        ($name:ident, $inner:path, $prim:ty) => {
+            /// Model-checked stand-in for the std atomic of the same name.
+            pub struct $name {
+                inner: $inner,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    Self { inner: <$inner>::new(v) }
+                }
+
+                pub fn load(&self, o: AtomicOrdering) -> $prim {
+                    yield_here(concat!(stringify!($name), "::load"));
+                    self.inner.load(o)
+                }
+
+                pub fn store(&self, v: $prim, o: AtomicOrdering) {
+                    yield_here(concat!(stringify!($name), "::store"));
+                    self.inner.store(v, o)
+                }
+
+                pub fn swap(&self, v: $prim, o: AtomicOrdering) -> $prim {
+                    yield_here(concat!(stringify!($name), "::swap"));
+                    self.inner.swap(v, o)
+                }
+            }
+        };
+    }
+
+    shim_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+
+    impl AtomicUsize {
+        pub fn fetch_add(&self, v: usize, o: AtomicOrdering) -> usize {
+            yield_here("AtomicUsize::fetch_add");
+            self.inner.fetch_add(v, o)
+        }
+    }
+
+    impl AtomicU64 {
+        pub fn fetch_add(&self, v: u64, o: AtomicOrdering) -> u64 {
+            yield_here("AtomicU64::fetch_add");
+            self.inner.fetch_add(v, o)
+        }
+
+        pub fn fetch_update<F>(
+            &self,
+            set: AtomicOrdering,
+            fetch: AtomicOrdering,
+            f: F,
+        ) -> Result<u64, u64>
+        where
+            F: FnMut(u64) -> Option<u64>,
+        {
+            yield_here("AtomicU64::fetch_update");
+            self.inner.fetch_update(set, fetch, f)
+        }
+    }
+
+    fn yield_here(label: &str) {
+        if let Some((k, me)) = ctx() {
+            yield_op(&k, me, label);
+        }
+    }
+
+    fn register(slot: &Slot, k: &Kernel, condvar: bool) -> usize {
+        let mut s = slot.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((epoch, id)) = *s {
+            if epoch == k.epoch {
+                return id;
+            }
+        }
+        let id = {
+            let mut st = klock(k);
+            if condvar {
+                st.cv_waiters.push(Vec::new());
+                st.cv_waiters.len() - 1
+            } else {
+                st.mutex_owner.push(None);
+                st.mutex_owner.len() - 1
+            }
+        };
+        *s = Some((k.epoch, id));
+        id
+    }
+
+    /// Model-checked stand-in for `std::sync::Mutex`.
+    pub struct Mutex<T> {
+        inner: OsMutex<T>,
+        slot: Slot,
+    }
+
+    /// Guard pairing the real lock with the kernel's logical ownership.
+    pub struct MutexGuard<'a, T> {
+        mx: &'a Mutex<T>,
+        inner: Option<OsMutexGuard<'a, T>>,
+        model: Option<(Arc<Kernel>, usize)>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Self { inner: OsMutex::new(t), slot: OsMutex::new(None) }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if let Some((k, me)) = ctx() {
+                yield_op(&k, me, "Mutex::lock");
+                let mid = register(&self.slot, &k, false);
+                acquire_mutex(&k, me, mid);
+                // logical ownership is exclusive, so the real lock is
+                // uncontended; poisoning only means an aborted run
+                let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+                Ok(MutexGuard { mx: self, inner: Some(g), model: Some((k, mid)) })
+            } else {
+                match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard { mx: self, inner: Some(g), model: None }),
+                    Err(e) => Err(PoisonError::new(MutexGuard {
+                        mx: self,
+                        inner: Some(e.into_inner()),
+                        model: None,
+                    })),
+                }
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            match self.inner.into_inner() {
+                Ok(t) => Ok(t),
+                Err(e) => Err(PoisonError::new(e.into_inner())),
+            }
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard holds the lock")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard holds the lock")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // release the real lock before the logical one so the next
+            // logical owner finds it free
+            self.inner = None;
+            if let Some((k, mid)) = self.model.take() {
+                release_mutex(&k, mid);
+            }
+        }
+    }
+
+    /// Model-checked stand-in for `std::sync::Condvar`.
+    pub struct Condvar {
+        inner: OsCondvar,
+        slot: Slot,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Self { inner: OsCondvar::new(), slot: OsMutex::new(None) }
+        }
+
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            if let Some((k, mid)) = guard.model.take() {
+                let me = ctx().expect("model guard waited outside its run").1;
+                let cvid = register(&self.slot, &k, true);
+                guard.inner = None;
+                let mx = guard.mx;
+                drop(guard); // fully disarmed: both halves already released below
+                {
+                    let mut st = klock(&k);
+                    // atomically: release the mutex and park on the condvar
+                    st.mutex_owner[mid] = None;
+                    wake_mutex_waiters(&mut st, mid);
+                    st.tasks[me] = TaskState::BlockedCondvar(cvid);
+                    st.cv_waiters[cvid].push(me);
+                    pick_locked(&mut st);
+                    k.cv.notify_all();
+                    loop {
+                        if st.violation.is_some() {
+                            drop(st);
+                            abort_run();
+                        }
+                        if matches!(st.tasks[me], TaskState::Runnable)
+                            && st.current == Some(me)
+                        {
+                            break;
+                        }
+                        st = k.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                }
+                mx.lock()
+            } else {
+                let mx = guard.mx;
+                let inner = guard.inner.take().expect("guard holds the lock");
+                drop(guard);
+                match self.inner.wait(inner) {
+                    Ok(g) => Ok(MutexGuard { mx, inner: Some(g), model: None }),
+                    Err(e) => Err(PoisonError::new(MutexGuard {
+                        mx,
+                        inner: Some(e.into_inner()),
+                        model: None,
+                    })),
+                }
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((k, me)) = ctx() {
+                yield_op(&k, me, "Condvar::notify_one");
+                let cvid = register(&self.slot, &k, true);
+                let mut st = klock(&k);
+                if !st.cv_waiters[cvid].is_empty() {
+                    // deterministic: always the longest waiter
+                    let t = st.cv_waiters[cvid].remove(0);
+                    st.tasks[t] = TaskState::Runnable;
+                }
+                k.cv.notify_all();
+            } else {
+                self.inner.notify_one();
+            }
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((k, me)) = ctx() {
+                yield_op(&k, me, "Condvar::notify_all");
+                let cvid = register(&self.slot, &k, true);
+                let mut st = klock(&k);
+                let waiters = std::mem::take(&mut st.cv_waiters[cvid]);
+                for t in waiters {
+                    st.tasks[t] = TaskState::Runnable;
+                }
+                k.cv.notify_all();
+            } else {
+                self.inner.notify_all();
+            }
+        }
+    }
+
+    /// Model-aware `std::thread` subset: spawned closures become kernel
+    /// tasks inside a run and plain threads outside one.
+    pub mod thread {
+        use super::*;
+
+        pub struct JoinHandle<T> {
+            inner: std::thread::JoinHandle<Option<T>>,
+            model: Option<(Arc<Kernel>, TaskId)>,
+        }
+
+        pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            if let Some((k, me)) = ctx() {
+                let id = {
+                    let mut st = klock(&k);
+                    st.tasks.push(TaskState::Runnable);
+                    st.tasks.len() - 1
+                };
+                let kc = Arc::clone(&k);
+                let inner = std::thread::spawn(move || {
+                    SUPPRESS_PANIC_OUTPUT.with(|s| s.set(true));
+                    CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&kc), id)));
+                    // wait to be scheduled for the first time
+                    {
+                        let mut st = klock(&kc);
+                        loop {
+                            if st.violation.is_some() {
+                                return None;
+                            }
+                            if st.current == Some(id)
+                                && matches!(st.tasks[id], TaskState::Runnable)
+                            {
+                                break;
+                            }
+                            st = kc.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                        }
+                    }
+                    match catch_unwind(AssertUnwindSafe(f)) {
+                        Ok(v) => {
+                            finish_task(&kc, id);
+                            Some(v)
+                        }
+                        Err(p) => {
+                            record_panic(&kc, id, p);
+                            None
+                        }
+                    }
+                });
+                // decision point: the child may run before we continue
+                yield_op(&k, me, "thread::spawn");
+                JoinHandle { inner, model: Some((k, id)) }
+            } else {
+                JoinHandle { inner: std::thread::spawn(move || Some(f())), model: None }
+            }
+        }
+
+        impl<T> JoinHandle<T> {
+            pub fn join(self) -> std::thread::Result<T> {
+                if let Some((k, target)) = self.model {
+                    let me = ctx().expect("model JoinHandle joined outside its run").1;
+                    loop {
+                        {
+                            let st = klock(&k);
+                            if st.violation.is_some() {
+                                drop(st);
+                                abort_run();
+                            }
+                            if matches!(st.tasks[target], TaskState::Finished) {
+                                break;
+                            }
+                        }
+                        block_current(&k, me, TaskState::BlockedJoin(target));
+                    }
+                    match self.inner.join() {
+                        Ok(Some(v)) => Ok(v),
+                        // the child aborted or panicked: the violation is
+                        // already recorded, unwind ourselves out too
+                        _ => abort_run(),
+                    }
+                } else {
+                    self.inner.join().map(|v| v.expect("thread returned a value"))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn single_task_model_is_one_schedule() {
+        let report = model(|| {
+            let a = shim::AtomicUsize::new(0);
+            a.store(a.load(Ordering::SeqCst) + 1, Ordering::SeqCst);
+            assert_eq!(a.load(Ordering::SeqCst), 1);
+        });
+        assert_eq!(report.schedules, 1);
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn finds_lost_update_in_racy_increment() {
+        let err = Checker::default()
+            .try_check(|| {
+                let a = Arc::new(shim::AtomicUsize::new(0));
+                let t = {
+                    let a = Arc::clone(&a);
+                    shim::thread::spawn(move || {
+                        let v = a.load(Ordering::SeqCst);
+                        a.store(v + 1, Ordering::SeqCst);
+                    })
+                };
+                let v = a.load(Ordering::SeqCst);
+                a.store(v + 1, Ordering::SeqCst);
+                t.join().unwrap();
+                assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+            })
+            .expect_err("load;store increments race and must be caught");
+        assert!(
+            matches!(&err, Violation::TaskPanic { message, .. } if message.contains("lost update")),
+            "unexpected violation: {err}"
+        );
+    }
+
+    #[test]
+    fn fetch_add_increment_survives_all_schedules() {
+        let report = model(|| {
+            let a = Arc::new(shim::AtomicUsize::new(0));
+            let t = {
+                let a = Arc::clone(&a);
+                shim::thread::spawn(move || {
+                    a.fetch_add(1, Ordering::SeqCst);
+                })
+            };
+            a.fetch_add(1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+        assert!(report.complete, "exploration must exhaust within budget");
+        assert!(report.schedules > 1, "the race has more than one schedule");
+    }
+
+    #[test]
+    fn finds_ab_ba_deadlock() {
+        let err = Checker::default()
+            .try_check(|| {
+                let a = Arc::new(shim::Mutex::new(0u32));
+                let b = Arc::new(shim::Mutex::new(0u32));
+                let t = {
+                    let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+                    shim::thread::spawn(move || {
+                        let _ga = a.lock().unwrap();
+                        let _gb = b.lock().unwrap();
+                    })
+                };
+                {
+                    let _gb = b.lock().unwrap();
+                    let _ga = a.lock().unwrap();
+                }
+                t.join().unwrap();
+            })
+            .expect_err("AB-BA lock order must deadlock under some schedule");
+        assert!(matches!(err, Violation::Deadlock { .. }), "unexpected violation: {err}");
+    }
+
+    #[test]
+    fn consistent_lock_order_is_deadlock_free() {
+        let report = model(|| {
+            let a = Arc::new(shim::Mutex::new(0u32));
+            let t = {
+                let a = Arc::clone(&a);
+                shim::thread::spawn(move || {
+                    *a.lock().unwrap() += 1;
+                })
+            };
+            *a.lock().unwrap() += 1;
+            t.join().unwrap();
+            assert_eq!(*a.lock().unwrap(), 2);
+        });
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn finds_missing_notify_deadlock() {
+        let err = Checker::default()
+            .try_check(|| {
+                let pair = Arc::new((shim::Mutex::new(false), shim::Condvar::new()));
+                let t = {
+                    let pair = Arc::clone(&pair);
+                    shim::thread::spawn(move || {
+                        // sets the flag but forgets to notify
+                        *pair.0.lock().unwrap() = true;
+                    })
+                };
+                {
+                    let mut done = pair.0.lock().unwrap();
+                    while !*done {
+                        done = pair.1.wait(done).unwrap();
+                    }
+                }
+                t.join().unwrap();
+            })
+            .expect_err("waiting without a notifier must deadlock on some schedule");
+        assert!(matches!(err, Violation::Deadlock { .. }), "unexpected violation: {err}");
+    }
+
+    #[test]
+    fn notify_one_wakes_the_waiter_on_every_schedule() {
+        let report = model(|| {
+            let pair = Arc::new((shim::Mutex::new(false), shim::Condvar::new()));
+            let t = {
+                let pair = Arc::clone(&pair);
+                shim::thread::spawn(move || {
+                    *pair.0.lock().unwrap() = true;
+                    pair.1.notify_one();
+                })
+            };
+            {
+                let mut done = pair.0.lock().unwrap();
+                while !*done {
+                    done = pair.1.wait(done).unwrap();
+                }
+            }
+            t.join().unwrap();
+        });
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn schedule_budget_reports_incomplete() {
+        let checker = Checker { max_schedules: 2, ..Checker::default() };
+        let report = checker
+            .try_check(|| {
+                let a = Arc::new(shim::AtomicUsize::new(0));
+                let t = {
+                    let a = Arc::clone(&a);
+                    shim::thread::spawn(move || {
+                        a.fetch_add(1, Ordering::SeqCst);
+                    })
+                };
+                a.fetch_add(1, Ordering::SeqCst);
+                t.join().unwrap();
+            })
+            .expect("correct protocol has no violation");
+        assert_eq!(report.schedules, 2);
+        assert!(!report.complete, "two schedules cannot exhaust this model");
+    }
+
+    #[test]
+    fn shims_pass_through_outside_a_model() {
+        // no model running: shim types must behave like std types
+        let a = Arc::new(shim::AtomicUsize::new(0));
+        let m = Arc::new(shim::Mutex::new(0u32));
+        let t = {
+            let (a, m) = (Arc::clone(&a), Arc::clone(&m));
+            shim::thread::spawn(move || {
+                a.fetch_add(1, Ordering::SeqCst);
+                *m.lock().unwrap() += 1;
+            })
+        };
+        a.fetch_add(1, Ordering::SeqCst);
+        *m.lock().unwrap() += 1;
+        t.join().unwrap();
+        assert_eq!(a.load(Ordering::SeqCst), 2);
+        assert_eq!(*m.lock().unwrap(), 2);
+    }
+}

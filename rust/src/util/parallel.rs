@@ -18,8 +18,18 @@
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::Ordering;
+#[cfg(not(feature = "minloom"))]
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+#[cfg(not(feature = "minloom"))]
+use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, OnceLock};
+
+// Under `--features minloom` the pool protocol runs on the model
+// checker's shim types (pass-through outside a model run) so the
+// `model_tests` below explore the same source the production pool runs.
+#[cfg(feature = "minloom")]
+use crate::util::modelcheck::shim::{AtomicBool, AtomicUsize, Condvar, Mutex};
 
 thread_local! {
     static SERIAL: Cell<bool> = const { Cell::new(false) };
@@ -82,6 +92,90 @@ struct PoolShared {
     panicked: AtomicBool,
 }
 
+/// The pool's synchronization protocol, factored onto `PoolShared` so
+/// the production `run_on_pool`/`worker_loop` pair and the `minloom`
+/// model tests exercise exactly the same code.
+impl PoolShared {
+    fn new() -> Self {
+        PoolShared {
+            state: Mutex::new(PoolState { job: None, generation: 0, active: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            busy: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Claim the single-job slot. A `false` return means another
+    /// submitter owns the pool and the caller must run inline.
+    fn try_acquire(&self) -> bool {
+        // ordering: Acquire pairs with the Release in `release`, so the
+        // winning submitter observes the previous job's `state` and
+        // `panicked` effects before reusing the slot.
+        !self.busy.swap(true, Ordering::Acquire)
+    }
+
+    /// Release the single-job slot claimed by `try_acquire`.
+    fn release(&self) {
+        // ordering: Release pairs with the Acquire in `try_acquire`,
+        // publishing this job's effects to the next submitter.
+        self.busy.store(false, Ordering::Release);
+    }
+
+    /// Publish `job` to the workers: one generation bump + one wakeup.
+    fn publish(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        st.job = Some(job);
+        st.generation = st.generation.wrapping_add(1);
+        st.active = job.workers;
+        self.work_cv.notify_all();
+    }
+
+    /// Submitter side: block until every participant of the current job
+    /// has finished, then clear the job slot.
+    fn await_workers(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.active != 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Worker side: wait for a generation newer than `seen` and return
+    /// its job (`None` only on a stale wakeup after the slot cleared).
+    fn next_job(&self, seen: &mut u64) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        while st.generation == *seen {
+            st = self.work_cv.wait(st).unwrap();
+        }
+        *seen = st.generation;
+        st.job
+    }
+
+    /// Worker side: mark this participant done, waking the submitter
+    /// when it was the last one.
+    fn worker_finished(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn note_worker_panic(&self) {
+        // ordering: Relaxed — the submitter only reads this flag after
+        // `await_workers` returns, and that mutex/condvar handshake
+        // already orders the store before the read.
+        self.panicked.store(true, Ordering::Relaxed);
+    }
+
+    fn take_worker_panic(&self) -> bool {
+        // ordering: Relaxed — see `note_worker_panic`; the mutex in
+        // `await_workers` provides the needed happens-before edge.
+        self.panicked.swap(false, Ordering::Relaxed)
+    }
+}
+
 struct Pool {
     shared: Arc<PoolShared>,
     size: usize,
@@ -96,27 +190,15 @@ unsafe fn trampoline<F: Fn(usize) + Sync>(ctx: *const (), worker: usize) {
 fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
     let mut seen = 0u64;
     loop {
-        let job = {
-            let mut st = shared.state.lock().unwrap();
-            while st.generation == seen {
-                st = shared.work_cv.wait(st).unwrap();
-            }
-            seen = st.generation;
-            st.job
-        };
-        let Some(job) = job else { continue };
+        let Some(job) = shared.next_job(&mut seen) else { continue };
         if idx >= job.workers {
             continue;
         }
         let res = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.ctx, idx + 1) }));
         if res.is_err() {
-            shared.panicked.store(true, Ordering::Relaxed);
+            shared.note_worker_panic();
         }
-        let mut st = shared.state.lock().unwrap();
-        st.active -= 1;
-        if st.active == 0 {
-            shared.done_cv.notify_all();
-        }
+        shared.worker_finished();
     }
 }
 
@@ -127,13 +209,7 @@ fn pool() -> &'static Pool {
             .map(|n| n.get())
             .unwrap_or(4)
             .saturating_sub(1);
-        let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { job: None, generation: 0, active: 0 }),
-            work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-            busy: AtomicBool::new(false),
-            panicked: AtomicBool::new(false),
-        });
+        let shared = Arc::new(PoolShared::new());
         let mut worker_ids = Vec::with_capacity(size);
         for i in 0..size {
             let sh = Arc::clone(&shared);
@@ -154,11 +230,11 @@ pub fn pool_worker_ids() -> Vec<std::thread::ThreadId> {
 }
 
 /// Releases the pool's busy flag even if the submitter's closure panics.
-struct BusyGuard<'a>(&'a AtomicBool);
+struct BusyGuard<'a>(&'a PoolShared);
 
 impl Drop for BusyGuard<'_> {
     fn drop(&mut self) {
-        self.0.store(false, Ordering::Release);
+        self.0.release();
     }
 }
 
@@ -169,11 +245,7 @@ struct WaitGuard<'a>(&'a PoolShared);
 
 impl Drop for WaitGuard<'_> {
     fn drop(&mut self) {
-        let mut st = self.0.state.lock().unwrap();
-        while st.active != 0 {
-            st = self.0.done_cv.wait(st).unwrap();
-        }
-        st.job = None;
+        self.0.await_workers();
     }
 }
 
@@ -185,26 +257,20 @@ impl Drop for WaitGuard<'_> {
 fn run_on_pool<F: Fn(usize) + Sync>(extra: usize, f: &F) {
     let pool = pool();
     let extra = extra.min(pool.size);
-    if extra == 0 || pool.shared.busy.swap(true, Ordering::Acquire) {
+    if extra == 0 || !pool.shared.try_acquire() {
         f(0);
         return;
     }
-    let _busy = BusyGuard(&pool.shared.busy);
-    {
-        let mut st = pool.shared.state.lock().unwrap();
-        st.job = Some(Job {
-            run: trampoline::<F>,
-            ctx: f as *const F as *const (),
-            workers: extra,
-        });
-        st.generation = st.generation.wrapping_add(1);
-        st.active = extra;
-        pool.shared.work_cv.notify_all();
-    }
+    let _busy = BusyGuard(&pool.shared);
+    pool.shared.publish(Job {
+        run: trampoline::<F>,
+        ctx: f as *const F as *const (),
+        workers: extra,
+    });
     let wait = WaitGuard(&pool.shared);
     let res = catch_unwind(AssertUnwindSafe(|| f(0)));
     drop(wait); // blocks until every worker finished this job
-    let worker_panicked = pool.shared.panicked.swap(false, Ordering::Relaxed);
+    let worker_panicked = pool.shared.take_worker_panic();
     if let Err(p) = res {
         resume_unwind(p);
     }
@@ -240,6 +306,9 @@ where
     let base = SyncPtr(data.as_mut_ptr());
     let next = AtomicUsize::new(0);
     let task = move |_worker: usize| loop {
+        // ordering: Relaxed — the index is a pure work-stealing ticket;
+        // claims are independent and the job publish/drain handshake
+        // (not this atomic) orders the chunk writes with the submitter.
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= n_chunks {
             break;
@@ -266,6 +335,9 @@ where
     let base = SyncPtr(out.as_mut_ptr());
     let next = AtomicUsize::new(0);
     let task = move |_worker: usize| loop {
+        // ordering: Relaxed — the index is a pure work-stealing ticket;
+        // claims are independent and the job publish/drain handshake
+        // (not this atomic) orders the chunk writes with the submitter.
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= n {
             break;
@@ -403,5 +475,128 @@ mod tests {
     fn par_map_moves_non_copy_values() {
         let words = par_map(50, |i| format!("w{i}"));
         assert_eq!(words[49], "w49");
+    }
+}
+
+/// Model-checked exploration of the pool protocol: every reachable
+/// (preemption-bounded) interleaving of the busy-submitter, publish /
+/// drain, nested-dispatch, and panic-propagation paths, over the same
+/// `PoolShared` methods the production pool runs.
+#[cfg(all(test, feature = "minloom"))]
+mod model_tests {
+    use super::*;
+    use crate::util::modelcheck::{model, shim, Checker};
+
+    impl Job {
+        /// A job whose work is a no-op — the model tests drive the
+        /// publish/drain protocol itself, not the work inside it.
+        fn noop(workers: usize) -> Job {
+            unsafe fn nop(_ctx: *const (), _worker: usize) {}
+            Job { run: nop, ctx: std::ptr::null(), workers }
+        }
+    }
+
+    fn checker() -> Checker {
+        // protocol models are ~20 ops across 2–3 tasks: this budget is
+        // far above what bounded DFS needs, so `complete` must hold
+        Checker { max_schedules: 60_000, ..Checker::default() }
+    }
+
+    #[test]
+    fn minloom_publish_drain_leaves_no_busy_flag() {
+        let report = checker().check(|| {
+            let shared = Arc::new(PoolShared::new());
+            let hits = Arc::new(shim::AtomicUsize::new(0));
+            let worker = {
+                let shared = Arc::clone(&shared);
+                let hits = Arc::clone(&hits);
+                shim::thread::spawn(move || {
+                    let mut seen = 0u64;
+                    let job = shared.next_job(&mut seen).expect("published job visible");
+                    assert_eq!(job.workers, 1);
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    shared.worker_finished();
+                })
+            };
+            assert!(shared.try_acquire(), "fresh pool must not be busy");
+            shared.publish(Job::noop(1));
+            hits.fetch_add(1, Ordering::Relaxed); // the submitter is worker 0
+            shared.await_workers();
+            assert!(!shared.take_worker_panic());
+            shared.release();
+            worker.join().unwrap();
+            assert_eq!(hits.load(Ordering::Relaxed), 2, "a participant was lost");
+            assert!(shared.try_acquire(), "busy flag leaked");
+            shared.release();
+        });
+        assert!(report.complete, "DFS must exhaust the publish/drain model");
+    }
+
+    #[test]
+    fn minloom_contending_submitters_never_leak_busy() {
+        fn submit(shared: &PoolShared, total: &shim::AtomicUsize) {
+            if shared.try_acquire() {
+                shared.publish(Job::noop(0));
+                total.fetch_add(1, Ordering::Relaxed);
+                shared.await_workers();
+                shared.release();
+            } else {
+                // pool busy: run inline, exactly like `run_on_pool`
+                total.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let report = checker().check(|| {
+            let shared = Arc::new(PoolShared::new());
+            let total = Arc::new(shim::AtomicUsize::new(0));
+            let t = {
+                let (s, c) = (Arc::clone(&shared), Arc::clone(&total));
+                shim::thread::spawn(move || submit(&s, &c))
+            };
+            submit(&shared, &total);
+            t.join().unwrap();
+            assert_eq!(total.load(Ordering::Relaxed), 2, "a submitter was lost");
+            assert!(shared.try_acquire(), "busy flag leaked");
+            shared.release();
+        });
+        assert!(report.complete, "DFS must exhaust the contention model");
+    }
+
+    #[test]
+    fn minloom_nested_dispatch_falls_back_inline() {
+        let report = model(|| {
+            let shared = PoolShared::new();
+            assert!(shared.try_acquire());
+            assert!(!shared.try_acquire(), "nested submit must see busy and run inline");
+            shared.release();
+            assert!(shared.try_acquire(), "slot must be reusable after release");
+            shared.release();
+        });
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn minloom_worker_panic_reaches_submitter() {
+        let report = checker().check(|| {
+            let shared = Arc::new(PoolShared::new());
+            let worker = {
+                let shared = Arc::clone(&shared);
+                shim::thread::spawn(move || {
+                    let mut seen = 0u64;
+                    shared.next_job(&mut seen).expect("published job visible");
+                    // the job closure "panicked": record it like worker_loop
+                    shared.note_worker_panic();
+                    shared.worker_finished();
+                })
+            };
+            assert!(shared.try_acquire());
+            shared.publish(Job::noop(1));
+            shared.await_workers();
+            let panicked = shared.take_worker_panic();
+            shared.release();
+            worker.join().unwrap();
+            assert!(panicked, "worker panic must be visible after await_workers");
+            assert!(!shared.take_worker_panic(), "panic flag must be consumed");
+        });
+        assert!(report.complete, "DFS must exhaust the panic-propagation model");
     }
 }

@@ -12,6 +12,8 @@ pub struct TempDir {
 
 impl TempDir {
     pub fn new() -> std::io::Result<Self> {
+        // ordering: Relaxed — the counter only disambiguates directory
+        // names within one process; nothing else is ordered by it.
         let id = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
             "distr-attn-test-{}-{}-{}",

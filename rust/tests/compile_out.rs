@@ -1,0 +1,33 @@
+//! Integration check for `--features obs-compile-out`: the span macro
+//! must compile to an inert guard, so even with tracing force-enabled
+//! an instrumented hot path registers no thread rings and records no
+//! events. Runs as its own test binary so no other test can register a
+//! ring in this process first.
+
+#![cfg(feature = "obs-compile-out")]
+
+use distr_attention::attention::{flash2_attention, FlashParams};
+use distr_attention::obs::trace;
+use distr_attention::tensor::Matrix;
+
+#[test]
+fn instrumented_paths_leave_no_trace_state() {
+    // set_enabled is the runtime gate; compile-out must win over it.
+    trace::set_enabled(true);
+
+    {
+        let _s = distr_attention::obs_span!("coordinator", "compile_out_probe");
+    }
+
+    // Drive a real span-instrumented kernel (pack / qk_gemm /
+    // online_softmax spans on every block) through the worker pool.
+    let q = Matrix::randn(64, 32, 1);
+    let k = Matrix::randn(64, 32, 2);
+    let v = Matrix::randn(64, 32, 3);
+    let out = flash2_attention(&q, &k, &v, &FlashParams { block_l: 16, block_m: 16 }, false);
+    assert!(out.data.iter().all(|x| x.is_finite()));
+
+    assert_eq!(trace::events_recorded(), 0, "a span event was recorded");
+    assert_eq!(trace::registered_threads(), 0, "a thread registered a span ring");
+    trace::set_enabled(false);
+}

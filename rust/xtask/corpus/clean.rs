@@ -1,0 +1,27 @@
+// path: rust/src/coordinator/batcher.rs
+// expect:
+//
+// The clean control: every idiom below is allowed — `.lock().unwrap()`
+// poisoning chains (same-line and rustfmt-split), a justified panic
+// site, whitelisted wall-clock use, and a documented metric name. A
+// lint firing on any of these is a self-test failure.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::obs::registry::Registry;
+
+pub fn flush(pending: &Mutex<Vec<u64>>, reg: &Registry) -> usize {
+    let opened = Instant::now();
+    let drained = pending.lock().unwrap().len();
+    let also = pending
+        .lock()
+        .unwrap()
+        .len();
+    // lint: allow(serve-panic) — the entry was inserted two lines up
+    // in this same function; absence is unreachable.
+    let kept = pending.lock().unwrap().first().copied().expect("just checked");
+    reg.gauge("batcher_queue_depth", &[]).set(drained as f64);
+    let _ = (opened, also, kept);
+    drained
+}

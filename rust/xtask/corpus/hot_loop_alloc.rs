@@ -1,0 +1,16 @@
+// path: rust/src/attention/flash2.rs
+// expect: hot-loop
+//
+// Seeded violation: a per-K-block scratch allocation inside a fenced
+// hot loop — exactly the regression the fence exists to catch.
+
+pub fn sweep(n_blocks: usize, bm: usize) -> f32 {
+    let mut acc = 0.0f32;
+    // hot-loop:begin corpus_sweep
+    for _jk in 0..n_blocks {
+        let scratch = vec![0.0f32; bm];
+        acc += scratch.iter().sum::<f32>();
+    }
+    // hot-loop:end corpus_sweep
+    acc
+}

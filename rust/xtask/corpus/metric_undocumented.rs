@@ -1,0 +1,16 @@
+// path: rust/src/obs/bad_metric.rs
+// expect: metric-names
+//
+// Seeded violation: metrics registered under names that never made it
+// into docs/OBSERVABILITY.md — one same-line, one rustfmt-wrapped.
+
+use crate::obs::registry::Registry;
+
+pub fn wire(reg: &Registry) {
+    reg.counter("corpus_not_documented_total", &[]).inc();
+    reg.gauge(
+        "corpus_also_missing",
+        &[],
+    )
+    .set(1.0);
+}

@@ -1,0 +1,13 @@
+// path: rust/src/attention/bad_atomics.rs
+// expect: atomic-ordering
+//
+// Seeded violation: an attention kernel reaching for raw atomics.
+// The whitelist confines Ordering choices to the sync substrate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static HITS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn count() {
+    HITS.fetch_add(1, Ordering::Relaxed);
+}

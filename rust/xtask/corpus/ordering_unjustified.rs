@@ -1,0 +1,14 @@
+// path: rust/src/obs/trace.rs
+// expect: atomic-ordering
+//
+// Seeded violation: a whitelisted module touching an Ordering without
+// the adjacent justification comment the lint demands. (Spelling the
+// marker out here would land inside the lint's search window.)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static FLAG: AtomicBool = AtomicBool::new(false);
+
+pub fn set() {
+    FLAG.store(true, Ordering::SeqCst);
+}

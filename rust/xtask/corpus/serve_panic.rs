@@ -1,0 +1,14 @@
+// path: rust/src/coordinator/bad_panics.rs
+// expect: serve-panic
+//
+// Seeded violation: bare panics on the serve path. Each idiom below
+// must be caught; none carries a `lint: allow` justification.
+
+pub fn lookup(map: &std::collections::HashMap<u64, u64>, k: u64) -> u64 {
+    let a = map.get(&k).unwrap();
+    let b = map.get(&k).expect("present");
+    if *a != *b {
+        panic!("diverged");
+    }
+    *a
+}

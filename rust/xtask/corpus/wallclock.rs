@@ -1,0 +1,11 @@
+// path: rust/src/coordinator/scheduler.rs
+// expect: wallclock
+//
+// Seeded violation: the scheduler reading the wall clock directly.
+// Time must flow in as a parameter so pop-order stays simulable.
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,880 @@
+//! `cargo xtask analyze` — the repo-specific static analysis gate.
+//!
+//! Rust's generic lints (clippy, rustc) can't see this repo's
+//! conventions: which modules are allowed to touch atomic orderings,
+//! which loops must stay allocation-free, which JSON layouts are
+//! frozen behind schema versions. This binary encodes those rules as
+//! line-oriented source lints and runs them over `rust/src`:
+//!
+//! * `atomic-ordering` — `Ordering::*` only in whitelisted modules,
+//!   and every site needs an adjacent `// ordering:` justification.
+//! * `wallclock` — `Instant::now` / `SystemTime` only in modules that
+//!   legitimately tell time; everything else must take time as input.
+//! * `serve-panic` — no `unwrap`/`expect`/`panic!` in serve-path
+//!   modules (`coordinator/`, `obs/`) outside `.lock().unwrap()`
+//!   poisoning chains or sites carrying `// lint: allow(serve-panic)`.
+//! * `hot-loop` — no allocation idioms between `// hot-loop:begin` /
+//!   `// hot-loop:end` fences, and the flash2/distr kernels must
+//!   keep at least one fence each.
+//! * `metric-names` — every metric name registered in `rust/src` must
+//!   appear in `docs/OBSERVABILITY.md`.
+//! * `schema-stamp` — `// schema:begin <name> v<N>` fenced regions are
+//!   content-hashed against `rust/xtask/schema.stamp`; changing a
+//!   fenced layout without bumping its version fails the gate.
+//!
+//! Scanning convention: test modules come last in a file, so each
+//! lint only looks at lines before the first top-level `#[cfg(test…)]`
+//! marker (schema fences are collected from the whole file).
+//!
+//! `--self-test` replays every lint against the seeded violation
+//! corpus in `rust/xtask/corpus/`; `--update-stamps` rewrites the
+//! schema stamp file; `--clippy-args` prints the curated clippy deny
+//! set for CI. See `docs/ANALYSIS.md` for the full catalog.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules allowed to name an `Ordering` (each site still needs an
+/// adjacent `// ordering:` justification).
+const ORDERING_WHITELIST: &[&str] = &[
+    "rust/src/util/parallel.rs",
+    "rust/src/util/testing.rs",
+    "rust/src/obs/registry.rs",
+    "rust/src/obs/trace.rs",
+    "rust/src/obs/probe.rs",
+];
+
+/// The model checker forwards `Ordering` values through its shims; the
+/// orderings are the callers' choices, so no per-site justification.
+const ORDERING_EXEMPT: &[&str] = &["rust/src/util/modelcheck.rs"];
+
+/// Modules that legitimately read wall-clock time.
+const WALLCLOCK_WHITELIST: &[&str] = &[
+    "rust/src/util/bench.rs",
+    "rust/src/util/logger.rs",
+    "rust/src/util/testing.rs",
+    "rust/src/obs/trace.rs",
+    "rust/src/autotune/empirical.rs",
+    "rust/src/coordinator/batcher.rs",
+    "rust/src/coordinator/request.rs",
+    "rust/src/coordinator/multi_device.rs",
+];
+const WALLCLOCK_PREFIX_WHITELIST: &[&str] = &["rust/src/experiments/"];
+
+/// Serve-path modules where a panic kills a request-serving thread.
+const SERVE_PANIC_PREFIXES: &[&str] = &["rust/src/coordinator/", "rust/src/obs/"];
+
+/// Files that must keep at least one `// hot-loop:` fence.
+const HOT_LOOP_FILES: &[&str] =
+    &["rust/src/attention/flash2.rs", "rust/src/attention/distr.rs"];
+
+/// Allocation idioms banned inside `// hot-loop:` fences.
+const HOT_LOOP_BANNED: &[&str] = &[
+    "vec![",
+    "Vec::new",
+    "::with_capacity",
+    ".to_vec(",
+    "Box::new(",
+    "String::new",
+    "format!(",
+    ".collect",
+    ".clone()",
+    ".push(",
+    ".resize(",
+    ".extend(",
+    ".insert(",
+    ".to_string(",
+];
+
+/// Curated clippy denies CI appends to `cargo clippy -- -D warnings`.
+const CLIPPY_DENIES: &[&str] =
+    &["clippy::dbg_macro", "clippy::todo", "clippy::unimplemented", "clippy::mem_forget"];
+
+/// How many lines above a flagged site an `// ordering:` or
+/// `// lint: allow(...)` comment may sit (rustfmt can split one
+/// expression across several lines).
+const COMMENT_WINDOW: usize = 8;
+
+struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    rel: String,
+    lines: Vec<String>,
+    /// Index of the first top-level test-cfg line; lints stop here.
+    code_end: usize,
+}
+
+impl SourceFile {
+    fn load(root: &Path, rel: String) -> std::io::Result<SourceFile> {
+        let text = std::fs::read_to_string(root.join(&rel))?;
+        Ok(SourceFile::from_text(rel, &text))
+    }
+
+    fn from_text(rel: String, text: &str) -> SourceFile {
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let code_end = lines
+            .iter()
+            .position(|l| l.starts_with("#[cfg(test)]") || l.starts_with("#[cfg(all(test"))
+            .unwrap_or(lines.len());
+        SourceFile { rel, lines, code_end }
+    }
+
+    fn code_lines(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.lines[..self.code_end].iter().enumerate().map(|(i, l)| (i + 1, l.as_str()))
+    }
+}
+
+#[derive(Debug)]
+struct Finding {
+    lint: &'static str,
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+impl Finding {
+    fn new(lint: &'static str, file: &str, line: usize, msg: String) -> Finding {
+        Finding { lint, file: file.to_string(), line, msg }
+    }
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// True when `marker` appears on the flagged line or within
+/// `COMMENT_WINDOW` comment-bearing lines above it.
+fn has_adjacent_marker(file: &SourceFile, idx0: usize, marker: &str) -> bool {
+    let lo = idx0.saturating_sub(COMMENT_WINDOW);
+    file.lines[lo..=idx0].iter().any(|l| l.contains(marker))
+}
+
+// ---------------------------------------------------------------- lints
+
+fn lint_atomic_ordering(file: &SourceFile, out: &mut Vec<Finding>) {
+    if ORDERING_EXEMPT.contains(&file.rel.as_str()) {
+        return;
+    }
+    let whitelisted = ORDERING_WHITELIST.contains(&file.rel.as_str());
+    for (ln, line) in file.code_lines() {
+        if is_comment(line) || line.trim_start().starts_with("use ") {
+            continue;
+        }
+        if !line.contains("Ordering::") {
+            continue;
+        }
+        if !whitelisted {
+            out.push(Finding::new(
+                "atomic-ordering",
+                &file.rel,
+                ln,
+                "atomic Ordering used outside the whitelisted modules; \
+                 route shared state through util::parallel or obs::registry"
+                    .to_string(),
+            ));
+        } else if !has_adjacent_marker(file, ln - 1, "// ordering:") {
+            out.push(Finding::new(
+                "atomic-ordering",
+                &file.rel,
+                ln,
+                "Ordering site without an adjacent `// ordering:` justification".to_string(),
+            ));
+        }
+    }
+}
+
+fn lint_wallclock(file: &SourceFile, out: &mut Vec<Finding>) {
+    if WALLCLOCK_WHITELIST.contains(&file.rel.as_str())
+        || WALLCLOCK_PREFIX_WHITELIST.iter().any(|p| file.rel.starts_with(p))
+    {
+        return;
+    }
+    for (ln, line) in file.code_lines() {
+        if is_comment(line) || line.trim_start().starts_with("use ") {
+            continue;
+        }
+        for tok in ["Instant::now", "SystemTime"] {
+            if line.contains(tok) {
+                out.push(Finding::new(
+                    "wallclock",
+                    &file.rel,
+                    ln,
+                    format!(
+                        "`{tok}` outside the wallclock whitelist — take time as a \
+                         parameter so the logic stays simulable and testable"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn lint_serve_panic(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !SERVE_PANIC_PREFIXES.iter().any(|p| file.rel.starts_with(p)) {
+        return;
+    }
+    for (ln, raw) in file.code_lines() {
+        if is_comment(raw) {
+            continue;
+        }
+        // `.lock().unwrap()` is the idiomatic poisoning propagation —
+        // strip those chains before looking for bare panics.
+        let line = raw.replace(".lock().unwrap()", "");
+        // rustfmt splits long chains: a lone `.unwrap()` directly under
+        // a line ending in `.lock()` is the same idiom.
+        let trimmed = line.trim_start();
+        if trimmed.starts_with(".unwrap()") {
+            let prev = file.lines[..ln - 1]
+                .iter()
+                .rev()
+                .find(|l| !l.trim().is_empty() && !is_comment(l));
+            if prev.is_some_and(|p| p.trim_end().ends_with(".lock()")) {
+                continue;
+            }
+        }
+        for tok in [".unwrap()", ".expect(", "panic!(", "unreachable!("] {
+            if line.contains(tok) {
+                if has_adjacent_marker(file, ln - 1, "lint: allow(serve-panic)") {
+                    continue;
+                }
+                out.push(Finding::new(
+                    "serve-panic",
+                    &file.rel,
+                    ln,
+                    format!(
+                        "`{tok}` in a serve-path module — return an error, or \
+                         justify the invariant with `// lint: allow(serve-panic)`"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn lint_hot_loop(file: &SourceFile, out: &mut Vec<Finding>) {
+    let mut fence_open: Option<usize> = None;
+    let mut fences = 0usize;
+    for (ln, line) in file.code_lines() {
+        let t = line.trim_start();
+        if t.starts_with("// hot-loop:begin") {
+            if fence_open.is_some() {
+                out.push(Finding::new(
+                    "hot-loop",
+                    &file.rel,
+                    ln,
+                    "nested `// hot-loop:begin` — close the previous fence first".to_string(),
+                ));
+            }
+            fence_open = Some(ln);
+            fences += 1;
+            continue;
+        }
+        if t.starts_with("// hot-loop:end") {
+            if fence_open.is_none() {
+                out.push(Finding::new(
+                    "hot-loop",
+                    &file.rel,
+                    ln,
+                    "`// hot-loop:end` without a matching begin".to_string(),
+                ));
+            }
+            fence_open = None;
+            continue;
+        }
+        if fence_open.is_some() && !is_comment(line) {
+            for tok in HOT_LOOP_BANNED {
+                if line.contains(tok) {
+                    out.push(Finding::new(
+                        "hot-loop",
+                        &file.rel,
+                        ln,
+                        format!("allocation idiom `{tok}` inside a hot-loop fence"),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(open_ln) = fence_open {
+        out.push(Finding::new(
+            "hot-loop",
+            &file.rel,
+            open_ln,
+            "unterminated `// hot-loop:begin` fence".to_string(),
+        ));
+    }
+    if fences == 0 && HOT_LOOP_FILES.contains(&file.rel.as_str()) {
+        out.push(Finding::new(
+            "hot-loop",
+            &file.rel,
+            1,
+            "kernel file lost its `// hot-loop:` fences — the allocation \
+             gate no longer covers the inner loop"
+                .to_string(),
+        ));
+    }
+}
+
+/// Extract the string literal opening at or after `from` in `line`, or
+/// on the following line (rustfmt may wrap the name argument).
+fn metric_name_at(file: &SourceFile, idx0: usize, after: usize) -> Option<String> {
+    let take = |s: &str| -> Option<String> {
+        let rest = s.trim_start();
+        let rest = rest.strip_prefix('"')?;
+        Some(rest[..rest.find('"')?].to_string())
+    };
+    let line = &file.lines[idx0][after..];
+    take(line).or_else(|| file.lines.get(idx0 + 1).and_then(|l| take(l)))
+}
+
+fn lint_metric_names(file: &SourceFile, docs: &str, out: &mut Vec<Finding>) {
+    for (ln, line) in file.code_lines() {
+        if is_comment(line) {
+            continue;
+        }
+        for method in [".counter(", ".gauge(", ".histogram("] {
+            let Some(pos) = line.find(method) else { continue };
+            let Some(name) = metric_name_at(file, ln - 1, pos + method.len()) else {
+                continue;
+            };
+            if !docs.contains(&name) {
+                out.push(Finding::new(
+                    "metric-names",
+                    &file.rel,
+                    ln,
+                    format!("metric `{name}` is not documented in docs/OBSERVABILITY.md"),
+                ));
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- schema stamps
+
+#[derive(Debug, Clone)]
+struct SchemaFence {
+    name: String,
+    version: usize,
+    /// Optional `const=IDENT` tying the fence version to a Rust const.
+    const_ident: Option<String>,
+    file: String,
+    line: usize,
+    hash: u64,
+}
+
+fn fnv1a64(lines: &[String]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for line in lines {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        for b in t.bytes().chain(std::iter::once(b'\n')) {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+fn collect_fences(file: &SourceFile, out: &mut Vec<Finding>) -> Vec<SchemaFence> {
+    let mut fences = Vec::new();
+    let mut open: Option<(String, usize, Option<String>, usize, Vec<String>)> = None;
+    for (i, line) in file.lines.iter().enumerate() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("// schema:begin ") {
+            let mut words = rest.split_whitespace();
+            let name = words.next().unwrap_or_default().to_string();
+            let version = words
+                .next()
+                .and_then(|v| v.strip_prefix('v'))
+                .and_then(|v| v.parse::<usize>().ok());
+            let const_ident = words
+                .next()
+                .and_then(|w| w.strip_prefix("const="))
+                .map(str::to_string);
+            let (Some(version), false) = (version, name.is_empty()) else {
+                out.push(Finding::new(
+                    "schema-stamp",
+                    &file.rel,
+                    i + 1,
+                    "malformed fence; expected `// schema:begin <name> v<N> [const=IDENT]`"
+                        .to_string(),
+                ));
+                continue;
+            };
+            if open.is_some() {
+                out.push(Finding::new(
+                    "schema-stamp",
+                    &file.rel,
+                    i + 1,
+                    "schema fence opened inside another fence".to_string(),
+                ));
+            }
+            open = Some((name, version, const_ident, i + 1, Vec::new()));
+        } else if let Some(rest) = t.strip_prefix("// schema:end ") {
+            match open.take() {
+                Some((name, version, const_ident, line, body))
+                    if rest.trim() == name =>
+                {
+                    fences.push(SchemaFence {
+                        hash: fnv1a64(&body),
+                        name,
+                        version,
+                        const_ident,
+                        file: file.rel.clone(),
+                        line,
+                    });
+                }
+                _ => out.push(Finding::new(
+                    "schema-stamp",
+                    &file.rel,
+                    i + 1,
+                    format!("`schema:end {}` does not close an open fence", rest.trim()),
+                )),
+            }
+        } else if let Some((_, _, _, _, body)) = open.as_mut() {
+            body.push(line.clone());
+        }
+    }
+    if let Some((name, _, _, line, _)) = open {
+        out.push(Finding::new(
+            "schema-stamp",
+            &file.rel,
+            line,
+            format!("unterminated schema fence `{name}`"),
+        ));
+    }
+    fences
+}
+
+/// Check a fence's `const=IDENT` declaration matches its version.
+fn check_fence_const(fence: &SchemaFence, file: &SourceFile, out: &mut Vec<Finding>) {
+    let Some(ident) = &fence.const_ident else { return };
+    let want = format!("const {ident}: usize = {};", fence.version);
+    if !file.lines.iter().any(|l| l.contains(&want)) {
+        out.push(Finding::new(
+            "schema-stamp",
+            &fence.file,
+            fence.line,
+            format!(
+                "fence `{}` is v{} but `{want}` was not found — keep the \
+                 version const and the fence header in lockstep",
+                fence.name, fence.version
+            ),
+        ));
+    }
+}
+
+type StampMap = BTreeMap<String, (usize, u64)>;
+
+fn parse_stamps(text: &str) -> StampMap {
+    let mut map = StampMap::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut words = t.split_whitespace();
+        let (Some(name), Some(ver), Some(hash)) = (words.next(), words.next(), words.next())
+        else {
+            continue;
+        };
+        let (Some(ver), Ok(hash)) = (
+            ver.strip_prefix('v').and_then(|v| v.parse::<usize>().ok()),
+            u64::from_str_radix(hash, 16),
+        ) else {
+            continue;
+        };
+        map.insert(name.to_string(), (ver, hash));
+    }
+    map
+}
+
+fn render_stamps(fences: &[SchemaFence]) -> String {
+    let mut out = String::from(
+        "# Schema stamps — written by `cargo xtask analyze --update-stamps`.\n\
+         # <fence-name> v<version> <fnv1a64-of-fenced-lines>\n",
+    );
+    let mut sorted: Vec<&SchemaFence> = fences.iter().collect();
+    sorted.sort_by(|a, b| a.name.cmp(&b.name));
+    for f in sorted {
+        out.push_str(&format!("{} v{} {:016x}\n", f.name, f.version, f.hash));
+    }
+    out
+}
+
+fn check_stamps(fences: &[SchemaFence], stamps: &StampMap, out: &mut Vec<Finding>) {
+    for fence in fences {
+        match stamps.get(&fence.name) {
+            None => out.push(Finding::new(
+                "schema-stamp",
+                &fence.file,
+                fence.line,
+                format!(
+                    "fence `{}` has no stamp — run `cargo xtask analyze --update-stamps`",
+                    fence.name
+                ),
+            )),
+            Some(&(ver, hash)) => {
+                if ver == fence.version && hash != fence.hash {
+                    out.push(Finding::new(
+                        "schema-stamp",
+                        &fence.file,
+                        fence.line,
+                        format!(
+                            "fenced layout `{}` changed without a version bump \
+                             (still v{ver}); bump the version, update readers, \
+                             then run `cargo xtask analyze --update-stamps`",
+                            fence.name
+                        ),
+                    ));
+                } else if ver != fence.version {
+                    out.push(Finding::new(
+                        "schema-stamp",
+                        &fence.file,
+                        fence.line,
+                        format!(
+                            "fence `{}` is v{} but the stamp records v{ver} — \
+                             run `cargo xtask analyze --update-stamps`",
+                            fence.name, fence.version
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for name in stamps.keys() {
+        if !fences.iter().any(|f| &f.name == name) {
+            out.push(Finding::new(
+                "schema-stamp",
+                "rust/xtask/schema.stamp",
+                1,
+                format!("stale stamp `{name}`: no such fence in the tree"),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------------------- drivers
+
+fn rust_sources(root: &Path) -> std::io::Result<Vec<String>> {
+    let mut rels = Vec::new();
+    let mut stack = vec![root.join("rust/src")];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .expect("walked paths live under the repo root")
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                rels.push(rel);
+            }
+        }
+    }
+    rels.sort();
+    Ok(rels)
+}
+
+fn run_content_lints(file: &SourceFile, docs: &str, out: &mut Vec<Finding>) {
+    lint_atomic_ordering(file, out);
+    lint_wallclock(file, out);
+    lint_serve_panic(file, out);
+    lint_hot_loop(file, out);
+    lint_metric_names(file, docs, out);
+}
+
+fn analyze(root: &Path, update_stamps: bool) -> Result<usize, String> {
+    let docs = std::fs::read_to_string(root.join("docs/OBSERVABILITY.md"))
+        .map_err(|e| format!("docs/OBSERVABILITY.md: {e}"))?;
+    let mut findings = Vec::new();
+    let mut fences = Vec::new();
+    let rels = rust_sources(root).map_err(|e| format!("walking rust/src: {e}"))?;
+    let n_files = rels.len();
+    for rel in rels {
+        let file = SourceFile::load(root, rel).map_err(|e| format!("read: {e}"))?;
+        run_content_lints(&file, &docs, &mut findings);
+        for fence in collect_fences(&file, &mut findings) {
+            check_fence_const(&fence, &file, &mut findings);
+            fences.push(fence);
+        }
+    }
+
+    let stamp_path = root.join("rust/xtask/schema.stamp");
+    let stamps = match std::fs::read_to_string(&stamp_path) {
+        Ok(text) => parse_stamps(&text),
+        Err(_) => StampMap::new(),
+    };
+    if update_stamps {
+        // a same-version content change still has to fail: stamping over
+        // it would defeat the gate
+        let mut bump_errors = Vec::new();
+        for fence in &fences {
+            if let Some(&(ver, hash)) = stamps.get(&fence.name) {
+                if ver == fence.version && hash != fence.hash {
+                    bump_errors.push(format!(
+                        "{}:{}: `{}` changed but is still v{ver} — bump the version first",
+                        fence.file, fence.line, fence.name
+                    ));
+                }
+            }
+        }
+        if !bump_errors.is_empty() {
+            return Err(bump_errors.join("\n"));
+        }
+        std::fs::write(&stamp_path, render_stamps(&fences))
+            .map_err(|e| format!("writing {}: {e}", stamp_path.display()))?;
+        println!("analyze: stamped {} schema fence(s)", fences.len());
+    } else {
+        check_stamps(&fences, &stamps, &mut findings);
+    }
+
+    if findings.is_empty() {
+        println!(
+            "analyze: {n_files} files clean, {} schema fence(s) verified",
+            fences.len()
+        );
+        Ok(0)
+    } else {
+        findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+        for f in &findings {
+            eprintln!("{}:{}: [{}] {}", f.file, f.line, f.lint, f.msg);
+        }
+        Ok(findings.len())
+    }
+}
+
+// ------------------------------------------------------------ self-test
+
+/// Replay the lints against the seeded corpus: every file declares the
+/// virtual path it pretends to live at and the exact set of lints that
+/// must fire on it. A lint that stays silent on its seeded violation —
+/// or fires on the clean file — fails the self-test.
+fn self_test(root: &Path) -> Result<(), String> {
+    let docs = std::fs::read_to_string(root.join("docs/OBSERVABILITY.md"))
+        .map_err(|e| format!("docs/OBSERVABILITY.md: {e}"))?;
+    let corpus = root.join("rust/xtask/corpus");
+    let mut errors = Vec::new();
+    let mut cases = 0usize;
+
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&corpus)
+        .map_err(|e| format!("{}: {e}", corpus.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+
+    for path in &entries {
+        cases += 1;
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{e}"))?;
+        let mut virt = String::new();
+        let mut expect: Vec<String> = Vec::new();
+        for line in text.lines() {
+            if let Some(p) = line.strip_prefix("// path: ") {
+                virt = p.trim().to_string();
+            } else if let Some(l) = line.strip_prefix("// expect: ") {
+                expect.push(l.trim().to_string());
+            }
+        }
+        expect.sort();
+        let file = SourceFile::from_text(virt.clone(), &text);
+        let mut findings = Vec::new();
+        run_content_lints(&file, &docs, &mut findings);
+        let mut fired: Vec<String> =
+            findings.iter().map(|f| f.lint.to_string()).collect();
+        fired.sort();
+        fired.dedup();
+        if fired != expect {
+            errors.push(format!(
+                "{}: expected lints {expect:?}, got {fired:?}",
+                path.display()
+            ));
+        }
+    }
+
+    // schema-stamp scenarios run against the fence corpus explicitly,
+    // since they need a stamp map to compare with.
+    let fence_path = corpus.join("schema_fence.fixture");
+    let text =
+        std::fs::read_to_string(&fence_path).map_err(|e| format!("schema fixture: {e}"))?;
+    let file = SourceFile::from_text("rust/src/util/fixture.rs".to_string(), &text);
+    let mut parse_errors = Vec::new();
+    let fences = collect_fences(&file, &mut parse_errors);
+    if !parse_errors.is_empty() || fences.len() != 1 {
+        errors.push(format!(
+            "schema fixture must parse to exactly one fence (got {}, {} parse errors)",
+            fences.len(),
+            parse_errors.len()
+        ));
+    } else {
+        let fence = &fences[0];
+        cases += 3;
+        // 1) missing stamp must fire
+        let mut f = Vec::new();
+        check_stamps(&fences, &StampMap::new(), &mut f);
+        if f.len() != 1 {
+            errors.push("schema-stamp: missing stamp did not fire".to_string());
+        }
+        // 2) same version, wrong hash must fire
+        let mut stale = StampMap::new();
+        stale.insert(fence.name.clone(), (fence.version, fence.hash ^ 1));
+        let mut f = Vec::new();
+        check_stamps(&fences, &stale, &mut f);
+        if !f.iter().any(|f| f.msg.contains("without a version bump")) {
+            errors.push("schema-stamp: silent layout change did not fire".to_string());
+        }
+        // 3) matching stamp must stay silent
+        let mut good = StampMap::new();
+        good.insert(fence.name.clone(), (fence.version, fence.hash));
+        let mut f = Vec::new();
+        check_stamps(&fences, &good, &mut f);
+        if !f.is_empty() {
+            errors.push("schema-stamp: clean fence fired".to_string());
+        }
+        // 4) const=IDENT disagreement must fire
+        cases += 1;
+        let bad = SchemaFence {
+            version: fence.version + 1,
+            ..fence.clone()
+        };
+        let mut f = Vec::new();
+        check_fence_const(&bad, &file, &mut f);
+        if f.len() != 1 {
+            errors.push("schema-stamp: version-const mismatch did not fire".to_string());
+        }
+    }
+
+    if errors.is_empty() {
+        println!("analyze --self-test: {cases} corpus cases passed");
+        Ok(())
+    } else {
+        Err(errors.join("\n"))
+    }
+}
+
+fn repo_root() -> PathBuf {
+    // rust/xtask/ -> rust/ -> repo root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask lives two levels under the repo root")
+        .to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str);
+    if cmd != Some("analyze") {
+        eprintln!(
+            "usage: cargo xtask analyze [--self-test | --update-stamps | --clippy-args]"
+        );
+        return ExitCode::from(2);
+    }
+    if args.iter().any(|a| a == "--clippy-args") {
+        let flags: Vec<String> =
+            CLIPPY_DENIES.iter().map(|d| format!("-D {d}")).collect();
+        println!("{}", flags.join(" "));
+        return ExitCode::SUCCESS;
+    }
+    let root = repo_root();
+    if args.iter().any(|a| a == "--self-test") {
+        return match self_test(&root) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("analyze --self-test FAILED:\n{e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    let update = args.iter().any(|a| a == "--update-stamps");
+    match analyze(&root, update) {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(n) => {
+            eprintln!("analyze: {n} finding(s)");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, text: &str) -> SourceFile {
+        SourceFile::from_text(rel.to_string(), text)
+    }
+
+    #[test]
+    fn test_cfg_truncates_scanning() {
+        let f = file(
+            "rust/src/coordinator/x.rs",
+            "fn a() {}\n#[cfg(test)]\nmod tests { fn b() { x.unwrap(); } }\n",
+        );
+        let mut out = Vec::new();
+        lint_serve_panic(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn lock_unwrap_chains_are_exempt() {
+        let src = "fn a() {\n    m.lock().unwrap().push(1);\n    m\n        .lock()\n        .unwrap()\n        .len();\n}\n";
+        let f = file("rust/src/obs/x.rs", src);
+        let mut out = Vec::new();
+        lint_serve_panic(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn bare_unwrap_fires_and_allow_silences() {
+        let f = file("rust/src/coordinator/x.rs", "fn a() { v.unwrap(); }\n");
+        let mut out = Vec::new();
+        lint_serve_panic(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        let f = file(
+            "rust/src/coordinator/x.rs",
+            "// lint: allow(serve-panic) — invariant\nfn a() { v.unwrap(); }\n",
+        );
+        let mut out = Vec::new();
+        lint_serve_panic(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn fnv_matches_reference_vector() {
+        // FNV-1a 64 of "a\n" (one trimmed line + newline)
+        let h = fnv1a64(&["a".to_string()]);
+        let mut want: u64 = 0xcbf29ce484222325;
+        for b in [b'a', b'\n'] {
+            want ^= u64::from(b);
+            want = want.wrapping_mul(0x100000001b3);
+        }
+        assert_eq!(h, want);
+        // indentation and blank lines do not affect the hash
+        assert_eq!(
+            fnv1a64(&["  a".to_string(), String::new()]),
+            fnv1a64(&["a".to_string()])
+        );
+    }
+
+    #[test]
+    fn stamp_roundtrip() {
+        let fences = vec![SchemaFence {
+            name: "x".into(),
+            version: 2,
+            const_ident: None,
+            file: "f.rs".into(),
+            line: 1,
+            hash: 0xdeadbeef,
+        }];
+        let text = render_stamps(&fences);
+        let map = parse_stamps(&text);
+        assert_eq!(map.get("x"), Some(&(2, 0xdeadbeef)));
+    }
+}
