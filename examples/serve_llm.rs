@@ -29,9 +29,10 @@ use distr_attention::attention::{Engine, Variant};
 use distr_attention::autotune::{telemetry, Autotuner, BucketPolicy, DevicePool, TelemetryCfg};
 use distr_attention::config::{Config, PoolDeviceCfg};
 use distr_attention::coordinator::{
-    decode_step, plan_tuned, run_scatter_round_robin, run_scatter_tuned, Batcher, KvCache,
-    Request, Router, ScatterPlan, Scheduler,
+    decode_step, plan_tuned, run_scatter_round_robin, run_scatter_supervised, Batcher, Brownout,
+    KvCache, LaneSupervisor, Pressure, Request, Router, ScatterPlan, Scheduler, ShedReason,
 };
+use distr_attention::fault::{self, FaultPlan};
 use distr_attention::metrics::{LatencyHistogram, Table};
 use distr_attention::obs::{self, ShadowProbe};
 use distr_attention::tensor::Matrix;
@@ -58,6 +59,18 @@ fn embed(tokens: &[i32], n: usize, salt: u64) -> Matrix {
 
 fn main() -> anyhow::Result<()> {
     distr_attention::util::logger::init();
+
+    // FAULT_PLAN=<json|path> arms the seeded fault-injection hooks
+    // (inline JSON or a path to a plan file; see docs/ROBUSTNESS.md).
+    // Only effective when built with `--features fault-inject` —
+    // otherwise install() warns and the serve path is untouched.
+    if let Ok(spec) = std::env::var("FAULT_PLAN") {
+        match FaultPlan::from_spec(&spec) {
+            Ok(plan) if fault::install(plan) => println!("fault: plan armed from FAULT_PLAN"),
+            Ok(_) => {}
+            Err(e) => log::warn!("fault: ignoring unusable FAULT_PLAN: {e:#}"),
+        }
+    }
 
     // SERVE_SMOKE=1 shrinks the run for CI: enough traffic to exercise
     // every serving layer, small enough to finish in seconds
@@ -112,18 +125,29 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let mut router = router.with_autotuner(tuner).with_telemetry(recorder).with_obs(reg.clone());
+    // brownout ladder: under pressure (queue depth, KV alloc failures,
+    // deadline risk) dispatches degrade to a coarser G* before the
+    // admission gate sheds anything
+    let mut router = router
+        .with_autotuner(tuner)
+        .with_telemetry(recorder)
+        .with_brownout(Brownout::new(cfg.brownout).with_obs(reg.clone()))
+        .with_obs(reg.clone());
     println!("serve_llm: {} routes live ({} shapes preloaded from cache)\n", router.num_routes(), preloaded);
 
     // synthetic request stream: two prompt-length populations, two
     // variants, pushed through scheduler + batcher like the real loop
     let short_task = SeqTask::new(512, 96);
     let long_task = SeqTask::new(512, 200);
-    let mut scheduler = Scheduler::new(Duration::from_millis(50)).with_obs(&reg);
+    let mut scheduler = Scheduler::new(Duration::from_millis(50))
+        .with_admission(cfg.admission)
+        .with_obs(&reg);
     for i in 0..requests {
         let (toks, _) = if i % 3 == 0 { long_task.sample(i) } else { short_task.sample(i) };
         let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
-        scheduler.push(Request::new(i, toks, variant));
+        if let Err(reason) = scheduler.admit(Request::new(i, toks, variant)) {
+            log::warn!("admission shed request {i}: {}", reason.as_str());
+        }
     }
 
     // batches group by full TuneKey (variant + length bucket + d +
@@ -148,6 +172,8 @@ fn main() -> anyhow::Result<()> {
         // the batcher groups by full tuning key, so the whole batch
         // legally shares it
         let (engine, _key, tuned, token) = router.route_batch(&batch, D, true)?;
+        // the whole flush served at this brownout level (0 = tuned G*)
+        let degraded_level = router.last_degraded();
         let variant = batch[0].variant;
         let engine = match &tuned {
             Some(p) => Engine::tuned(variant, p).causal(true),
@@ -178,18 +204,31 @@ fn main() -> anyhow::Result<()> {
                 probe.observe(pkey, &q, &k, &v, true, &out);
             }
 
+            // KV residency is the request's claim on completion: when
+            // the pool is exhausted even after the parked-LRU eviction
+            // retry, the request sheds under kv_pressure instead of
+            // failing the serve loop
+            let prompt = req.tokens.len().min(n);
+            if let Err(e) = cache.register(req.id, &k.data[..prompt * D], &v.data[..prompt * D]) {
+                log::warn!("kv pressure shed request {}: {e:#}", req.id);
+                scheduler.shed(&req, ShedReason::KvPressure);
+                continue;
+            }
+
             // the first token exists as soon as the prefill is done —
             // stamp the TTFT here, before the decode loop, so the
             // recorder tracks time-to-FIRST-token, not end-to-end
-            // completion latency
-            let ttft = scheduler.complete(&req, Instant::now());
+            // completion latency (degraded service still completes,
+            // tracked separately in the conservation ledger)
+            let now = Instant::now();
+            let ttft = if degraded_level > 0 {
+                scheduler.complete_degraded(&req, now, degraded_level)
+            } else {
+                scheduler.complete(&req, now)
+            };
             if let Some(token) = &token {
                 router.report_ttft(token, ttft);
             }
-
-            // a few decode steps over the paged KV cache
-            let prompt = req.tokens.len().min(n);
-            cache.register(req.id, &k.data[..prompt * D], &v.data[..prompt * D])?;
             let mut rng = Rng::seed_from_u64(req.id ^ 0xDEC0);
             for _ in 0..decode_steps {
                 let q_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
@@ -215,7 +254,16 @@ fn main() -> anyhow::Result<()> {
     };
 
     let t0 = Instant::now();
+    // one pressure observation per scheduling step feeds the brownout
+    // ladder: queue depth, cumulative KV alloc failures (the ladder
+    // differences them itself), and deadline-at-risk count
+    let kv_failures = reg.counter("kv_alloc_failures_total", &[]);
     while let Some(req) = scheduler.pop(Instant::now()) {
+        router.note_pressure(Pressure {
+            queue_depth: scheduler.len(),
+            kv_alloc_failures: kv_failures.get(),
+            deadline_at_risk: scheduler.deadline_at_risk(Instant::now()),
+        });
         if let Some((_key, batch)) = batcher.push(req) {
             run_batch(&mut router, &mut cache, &mut scheduler, batch)?;
         }
@@ -263,10 +311,15 @@ fn main() -> anyhow::Result<()> {
     }
     println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
 
-    // one-line serve summary + final observability snapshot
+    // one-line serve summary + final observability snapshot (sheds and
+    // degraded completions close the robustness conservation ledger)
     let ttft = reg.histogram("scheduler_ttft", &[]).snapshot();
     println!(
-        "serve summary: {requests} requests, {tokens_served} tokens, ttft p50 {:.2} ms / p99 {:.2} ms, shadow probe mean rel-err {:.4} over {} samples",
+        "serve summary: {requests} requests ({} completed, {} degraded, {} shed, brownout level {}), {tokens_served} tokens, ttft p50 {:.2} ms / p99 {:.2} ms, shadow probe mean rel-err {:.4} over {} samples",
+        scheduler.completed(),
+        scheduler.degraded_completed(),
+        scheduler.sheds(),
+        router.brownout_level(),
         ttft.quantile(0.5).as_secs_f64() * 1e3,
         ttft.quantile(0.99).as_secs_f64() * 1e3,
         probe.mean_rel_err(),
@@ -303,7 +356,11 @@ fn main() -> anyhow::Result<()> {
         block_m: 64,
     };
     let rr = run_scatter_round_robin(&plan, &pool, true, 7);
-    let (sched, tuned_run) = run_scatter_tuned(&plan, &mut pool, true, 7);
+    // the supervised executor: identical to the tuned path when healthy,
+    // but lane faults (injected or real) get bounded retry, failover,
+    // and quarantine instead of corrupting the head accounting
+    let mut sup = LaneSupervisor::new(cfg.supervisor, pool.num_devices());
+    let (sched, tuned_run, sv) = run_scatter_supervised(&plan, &mut pool, &mut sup, true, 7);
     for (idx, lane) in sched.lanes.iter().enumerate() {
         println!(
             "  device {idx} ({}, weight {:.2}): tuned (l={}, m={}, G*={}), share {:.0}%, chunks {} (round-robin gave {})",
@@ -323,6 +380,10 @@ fn main() -> anyhow::Result<()> {
         tuned_run.wall.as_secs_f64() * 1e3,
         (rr.wall.as_secs_f64() / tuned_run.wall.as_secs_f64() - 1.0) * 100.0,
         tuned_run.overlap_efficiency() * 100.0,
+    );
+    println!(
+        "  supervision: {} retries, {} failovers, {} quarantines ({} readmitted), {} chunks lost",
+        sv.retries, sv.failovers, sv.quarantines, sv.readmitted, sv.lost_chunks,
     );
     // the tuned run recorded each lane's measured seconds-per-head;
     // replanning now blends that measurement into the shares, so a

@@ -99,8 +99,12 @@ impl TuningCache {
     // schema:end tuning-cache
 
     pub fn load(path: &Path) -> anyhow::Result<Self> {
-        let text = std::fs::read_to_string(path)
+        let mut text = std::fs::read_to_string(path)
             .with_context(|| format!("reading tuning cache {}", path.display()))?;
+        // chaos hook: a fault plan may mangle the text here, exactly as
+        // a truncated/corrupted file on disk would read (no-op unless
+        // the `fault-inject` feature is armed)
+        crate::fault::corrupt_tuning_json(&mut text);
         let v = Value::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Self::from_json(&v).with_context(|| format!("loading tuning cache {}", path.display()))
     }

@@ -71,6 +71,26 @@ impl TunedParams {
         Self { l: 64, m: 64, group, sample_rate: 1.0 / group as f64 }
     }
 
+    /// The brownout ladder's degradation of this pick: each level
+    /// doubles the fused group (halves the sampled fraction of `d`),
+    /// trading accuracy for throughput along the paper's G* dial.
+    /// Steps that would leave fewer than `MIN_DG` sampled columns or
+    /// not divide `d` are skipped, so the result is always legal; at
+    /// level 0 (or when no coarser group is legal) the pick is
+    /// returned unchanged.
+    pub fn degraded(&self, levels: usize, d: usize) -> Self {
+        let mut p = *self;
+        for _ in 0..levels {
+            let next = p.group * 2;
+            if next == 0 || d % next != 0 || d / next < search::MIN_DG {
+                break;
+            }
+            p.group = next;
+        }
+        p.sample_rate = 1.0 / p.group as f64;
+        p
+    }
+
     pub fn to_json(&self) -> Value {
         Value::object(vec![
             ("l", Value::number(self.l as f64)),
@@ -280,6 +300,22 @@ mod tests {
         // too-narrow head dims cannot sample
         let p = TunedParams::default_for(Variant::Distr, 16);
         assert_eq!(p.group, 1);
+    }
+
+    #[test]
+    fn degraded_walks_the_gstar_ladder_legally() {
+        let p = TunedParams { l: 64, m: 64, group: 1, sample_rate: 1.0 };
+        // d=128, MIN_DG=16: groups 1 -> 2 -> 4 -> 8 are legal, 16 keeps
+        // only 8 sampled columns so the ladder saturates at 8
+        assert_eq!(p.degraded(0, 128), p);
+        assert_eq!(p.degraded(1, 128).group, 2);
+        assert_eq!(p.degraded(3, 128).group, 8);
+        assert_eq!(p.degraded(10, 128).group, 8, "ladder saturates at legality");
+        assert!((p.degraded(3, 128).sample_rate - 0.125).abs() < 1e-12);
+        // block sizes are untouched — only the sampling dial moves
+        assert_eq!((p.degraded(3, 128).l, p.degraded(3, 128).m), (p.l, p.m));
+        // a head dim too narrow to sample never degrades
+        assert_eq!(p.degraded(4, 16), p);
     }
 
     #[test]

@@ -197,7 +197,15 @@ impl TelemetryRecorder {
         let mut rec =
             Self { cfg, gpu, keys: HashMap::new(), path: path.clone(), promotions: 0 };
         if !path.is_empty() && Path::new(&path).exists() {
-            match Self::load_file(Path::new(&path), cfg) {
+            // chaos hook: the load routine sits inside the schema-fenced
+            // region, so persisted-state corruption is injected at this
+            // boundary — the same Err arm a mangled file would take
+            let loaded = if crate::fault::corrupt_telemetry_load() {
+                Err(anyhow::anyhow!("injected corrupt telemetry state"))
+            } else {
+                Self::load_file(Path::new(&path), cfg)
+            };
+            match loaded {
                 Ok((loaded_gpu, keys, promotions)) if loaded_gpu == gpu.name => {
                     rec.keys = keys;
                     rec.promotions = promotions;

@@ -146,6 +146,82 @@ impl DeviceCfg {
     }
 }
 
+/// Admission control on the serve path: hard bounds that turn overload
+/// into explicit shedding instead of unbounded queueing.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionCfg {
+    /// enforce admission bounds; disabled = accept everything (legacy)
+    pub enable: bool,
+    /// shed when this many requests are already queued
+    pub max_queue_depth: usize,
+    /// concurrent admitted-but-unfinished requests (the gate capacity)
+    pub max_inflight: usize,
+    /// per-request deadline budget in milliseconds; 0 = no deadline.
+    /// Requests older than this are shed at pop time rather than run.
+    pub deadline_ms: u64,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        Self { enable: true, max_queue_depth: 1024, max_inflight: 256, deadline_ms: 0 }
+    }
+}
+
+/// Brownout ladder: under pressure the router steps requests to more
+/// aggressive G* sampling (coarser fused groups) before anything sheds.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutCfg {
+    /// arm the ladder; disabled = always serve at the tuned G*
+    pub enable: bool,
+    /// deepest degradation step (each step doubles the fused group)
+    pub max_level: usize,
+    /// queue depth at or above which pressure is "hot"
+    pub queue_high: usize,
+    /// queue depth at or below which pressure reads "calm"
+    pub queue_low: usize,
+    /// deadline-at-risk count at or above which pressure is "hot"
+    pub deadline_risk_high: usize,
+    /// new KV alloc failures per observation that read as "hot"
+    pub kv_failure_step: u64,
+    /// consecutive calm observations before stepping one level back down
+    /// (hysteresis: recovery is deliberately slower than escalation)
+    pub recover_after: u32,
+}
+
+impl Default for BrownoutCfg {
+    fn default() -> Self {
+        Self {
+            enable: true,
+            max_level: 3,
+            queue_high: 16,
+            queue_low: 4,
+            deadline_risk_high: 4,
+            kv_failure_step: 1,
+            recover_after: 8,
+        }
+    }
+}
+
+/// Lane supervision for the multi-device scatter path: bounded retry,
+/// quarantine of repeat offenders, probationary re-admission.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorCfg {
+    /// same-lane attempts per chunk before failing over to a survivor
+    pub retry_limit: usize,
+    /// simulated backoff added to a lane's ready time per retry, µs
+    pub backoff_us: u64,
+    /// consecutive chunk failures before a lane is quarantined
+    pub quarantine_after: u32,
+    /// quarantine rounds served before a probationary re-admission
+    pub probation_rounds: usize,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> Self {
+        Self { retry_limit: 2, backoff_us: 200, quarantine_after: 3, probation_rounds: 2 }
+    }
+}
+
 /// Profile-guided autotuner knobs (see [`crate::autotune`]).
 #[derive(Clone, Debug)]
 pub struct AutotuneCfg {
@@ -184,6 +260,9 @@ pub struct Config {
     pub batcher: BatcherCfg,
     pub kv_cache: KvCacheCfg,
     pub devices: DeviceCfg,
+    pub admission: AdmissionCfg,
+    pub brownout: BrownoutCfg,
+    pub supervisor: SupervisorCfg,
     /// artifacts directory (manifest.json + *.hlo.txt)
     pub artifacts_dir: String,
 }
@@ -299,6 +378,39 @@ impl Config {
                 }
             }
         }
+        if let Some(a) = v.get("admission") {
+            let d = AdmissionCfg::default();
+            cfg.admission.enable = opt_bool(a, "enable", d.enable)?;
+            cfg.admission.max_queue_depth = opt_usize(a, "max_queue_depth", d.max_queue_depth)?;
+            cfg.admission.max_inflight = opt_usize(a, "max_inflight", d.max_inflight)?;
+            cfg.admission.deadline_ms =
+                opt_usize(a, "deadline_ms", d.deadline_ms as usize)? as u64;
+        }
+        if let Some(b) = v.get("brownout") {
+            let d = BrownoutCfg::default();
+            cfg.brownout.enable = opt_bool(b, "enable", d.enable)?;
+            cfg.brownout.max_level = opt_usize(b, "max_level", d.max_level)?;
+            cfg.brownout.queue_high = opt_usize(b, "queue_high", d.queue_high)?;
+            cfg.brownout.queue_low = opt_usize(b, "queue_low", d.queue_low)?;
+            cfg.brownout.deadline_risk_high =
+                opt_usize(b, "deadline_risk_high", d.deadline_risk_high)?;
+            cfg.brownout.kv_failure_step =
+                opt_usize(b, "kv_failure_step", d.kv_failure_step as usize)? as u64;
+            cfg.brownout.recover_after =
+                opt_usize(b, "recover_after", d.recover_after as usize)? as u32;
+            if cfg.brownout.queue_low > cfg.brownout.queue_high {
+                anyhow::bail!("brownout `queue_low` must not exceed `queue_high`");
+            }
+        }
+        if let Some(s) = v.get("supervisor") {
+            let d = SupervisorCfg::default();
+            cfg.supervisor.retry_limit = opt_usize(s, "retry_limit", d.retry_limit)?;
+            cfg.supervisor.backoff_us = opt_usize(s, "backoff_us", d.backoff_us as usize)? as u64;
+            cfg.supervisor.quarantine_after =
+                opt_usize(s, "quarantine_after", d.quarantine_after as usize)? as u32;
+            cfg.supervisor.probation_rounds =
+                opt_usize(s, "probation_rounds", d.probation_rounds)?;
+        }
         if let Some(s) = v.get("artifacts_dir") {
             cfg.artifacts_dir =
                 s.as_str().ok_or_else(|| anyhow::anyhow!("artifacts_dir must be string"))?.into();
@@ -376,6 +488,51 @@ impl Config {
                                 })
                                 .collect(),
                         ),
+                    ),
+                ]),
+            ),
+            (
+                "admission",
+                Value::object(vec![
+                    ("enable", Value::Bool(self.admission.enable)),
+                    (
+                        "max_queue_depth",
+                        Value::number(self.admission.max_queue_depth as f64),
+                    ),
+                    ("max_inflight", Value::number(self.admission.max_inflight as f64)),
+                    ("deadline_ms", Value::number(self.admission.deadline_ms as f64)),
+                ]),
+            ),
+            (
+                "brownout",
+                Value::object(vec![
+                    ("enable", Value::Bool(self.brownout.enable)),
+                    ("max_level", Value::number(self.brownout.max_level as f64)),
+                    ("queue_high", Value::number(self.brownout.queue_high as f64)),
+                    ("queue_low", Value::number(self.brownout.queue_low as f64)),
+                    (
+                        "deadline_risk_high",
+                        Value::number(self.brownout.deadline_risk_high as f64),
+                    ),
+                    (
+                        "kv_failure_step",
+                        Value::number(self.brownout.kv_failure_step as f64),
+                    ),
+                    ("recover_after", Value::number(self.brownout.recover_after as f64)),
+                ]),
+            ),
+            (
+                "supervisor",
+                Value::object(vec![
+                    ("retry_limit", Value::number(self.supervisor.retry_limit as f64)),
+                    ("backoff_us", Value::number(self.supervisor.backoff_us as f64)),
+                    (
+                        "quarantine_after",
+                        Value::number(self.supervisor.quarantine_after as f64),
+                    ),
+                    (
+                        "probation_rounds",
+                        Value::number(self.supervisor.probation_rounds as f64),
                     ),
                 ]),
             ),
@@ -528,6 +685,45 @@ mod tests {
         let v =
             Value::parse(r#"{"devices": {"pool": [{"gpu": "L40", "capacity_weight": 0}]}}"#)
                 .unwrap();
+        assert!(Config::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn robustness_sections_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.admission =
+            AdmissionCfg { enable: false, max_queue_depth: 7, max_inflight: 3, deadline_ms: 150 };
+        cfg.brownout.max_level = 5;
+        cfg.brownout.queue_high = 32;
+        cfg.brownout.recover_after = 2;
+        cfg.supervisor.retry_limit = 4;
+        cfg.supervisor.quarantine_after = 1;
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert!(!back.admission.enable);
+        assert_eq!(back.admission.max_queue_depth, 7);
+        assert_eq!(back.admission.max_inflight, 3);
+        assert_eq!(back.admission.deadline_ms, 150);
+        assert_eq!(back.brownout.max_level, 5);
+        assert_eq!(back.brownout.queue_high, 32);
+        assert_eq!(back.brownout.recover_after, 2);
+        assert_eq!(back.supervisor.retry_limit, 4);
+        assert_eq!(back.supervisor.quarantine_after, 1);
+    }
+
+    #[test]
+    fn robustness_partial_json_fills_defaults() {
+        let v = Value::parse(r#"{"admission": {"deadline_ms": 40}, "brownout": {}}"#).unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert!(cfg.admission.enable);
+        assert_eq!(cfg.admission.deadline_ms, 40);
+        assert_eq!(cfg.admission.max_inflight, AdmissionCfg::default().max_inflight);
+        assert_eq!(cfg.brownout.max_level, BrownoutCfg::default().max_level);
+        assert_eq!(cfg.supervisor.retry_limit, SupervisorCfg::default().retry_limit);
+    }
+
+    #[test]
+    fn brownout_inverted_watermarks_rejected() {
+        let v = Value::parse(r#"{"brownout": {"queue_high": 2, "queue_low": 8}}"#).unwrap();
         assert!(Config::from_json(&v).is_err());
     }
 

@@ -82,6 +82,8 @@ pub struct Batcher {
     causal: bool,
     policy: BucketPolicy,
     pending: HashMap<BatchKey, Pending>,
+    /// upper bound on queued requests; 0 = unbounded
+    max_pending: usize,
     stats: BatcherStats,
     obs: Option<BatcherObs>,
 }
@@ -96,9 +98,26 @@ impl Batcher {
             causal: false,
             policy: BucketPolicy::Pow2,
             pending: HashMap::new(),
+            max_pending: 0,
             stats: BatcherStats::default(),
             obs: None,
         }
+    }
+
+    /// Bound the pending queue: past `limit` queued requests
+    /// [`is_saturated`](Self::is_saturated) reads true and the serve
+    /// loop stops pulling work from the scheduler (backpressure instead
+    /// of unbounded buffering). 0 = unbounded (the legacy behavior).
+    pub fn with_max_pending(mut self, limit: usize) -> Self {
+        self.max_pending = limit;
+        self
+    }
+
+    /// Is the pending queue at or past its bound? The push path never
+    /// refuses work (the request was already admitted); saturation is
+    /// the *backpressure* signal callers check before feeding more.
+    pub fn is_saturated(&self) -> bool {
+        self.max_pending > 0 && self.pending_count() >= self.max_pending
     }
 
     /// Attach metric handles from `reg` (`batcher_*` in the catalog).
@@ -435,5 +454,26 @@ mod tests {
         assert!(b.next_deadline().is_none());
         b.push(req(1, 64, Variant::Distr));
         assert!(b.next_deadline().is_some());
+    }
+
+    #[test]
+    fn saturation_signals_backpressure_without_refusing_work() {
+        let mut b = Batcher::new(cfg(8, 1_000_000)).with_max_pending(2);
+        assert!(!b.is_saturated());
+        b.push(req(1, 64, Variant::Distr));
+        assert!(!b.is_saturated());
+        b.push(req(2, 300, Variant::Distr));
+        assert!(b.is_saturated(), "at the bound the signal trips");
+        // pushes past the bound still land (admission already happened)
+        b.push(req(3, 1000, Variant::Distr));
+        assert_eq!(b.pending_count(), 3);
+        b.drain();
+        assert!(!b.is_saturated(), "draining clears the signal");
+        // unbounded batchers never saturate
+        let mut b = Batcher::new(cfg(8, 1_000_000));
+        for i in 0..100 {
+            b.push(req(i, 64, Variant::Distr));
+        }
+        assert!(!b.is_saturated());
     }
 }

@@ -1,0 +1,242 @@
+//! Brownout ladder: graceful degradation on the paper's G* dial.
+//!
+//! Under pressure the serve path should get *cheaper* before it gets
+//! *smaller*: DistrAttention's sampling rate G* is a continuous
+//! speed/accuracy dial (§3.2), so an overloaded server can step every
+//! request to a coarser fused group — trading a bounded amount of
+//! approximation error for throughput — before admission control sheds
+//! anything outright.
+//!
+//! [`Brownout`] folds three pressure signals ([`Pressure`]) into one
+//! degradation level:
+//!
+//! * scheduler queue depth (work is piling up),
+//! * new KV-cache allocation failures (memory is the bottleneck),
+//! * deadline-at-risk count (queued requests past half their budget).
+//!
+//! Escalation is immediate — any hot signal steps the ladder up one
+//! level per observation. Recovery is hysteresis-guarded: only after
+//! `recover_after` consecutive calm observations does the level step
+//! back down, so a flapping load doesn't oscillate the served quality.
+//! The router applies the level via [`TunedParams::degraded`]
+//! (`crate::autotune::TunedParams::degraded`), which doubles the fused
+//! group per level while the head dim stays legal.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::BrownoutCfg;
+use crate::obs::registry::{Counter, Gauge, Registry};
+use crate::obs::trace;
+
+/// One observation of the serve path's load, fed to
+/// [`Brownout::observe`] once per loop iteration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pressure {
+    /// requests currently queued in the scheduler
+    pub queue_depth: usize,
+    /// *cumulative* KV alloc failures (the `KvCache` stat counter);
+    /// the ladder differences consecutive observations itself
+    pub kv_alloc_failures: u64,
+    /// queued requests past half their deadline budget
+    pub deadline_at_risk: usize,
+}
+
+/// Metric handles (`brownout_level` / `degraded_requests_total` in the
+/// catalog). Per-level counters are created lazily as levels are hit.
+struct BrownoutObs {
+    reg: Arc<Registry>,
+    level: Gauge,
+    degraded: HashMap<usize, Counter>,
+}
+
+impl BrownoutObs {
+    fn new(reg: Arc<Registry>) -> Self {
+        Self { level: reg.gauge("brownout_level", &[]), degraded: HashMap::new(), reg }
+    }
+
+    fn note_degraded(&mut self, level: usize, n: u64) {
+        let counter = self.degraded.entry(level).or_insert_with(|| {
+            let label = level.to_string();
+            self.reg.counter("degraded_requests_total", &[("level", label.as_str())])
+        });
+        counter.add(n);
+    }
+}
+
+/// The ladder's state machine. Owned by the router (the serve loop is
+/// single-threaded through it), so no shared-state machinery is needed.
+pub struct Brownout {
+    cfg: BrownoutCfg,
+    level: usize,
+    /// consecutive calm observations (hysteresis streak)
+    calm: u32,
+    /// cumulative KV failure count at the previous observation
+    last_kv_failures: u64,
+    /// requests served degraded, by the level they were served at
+    degraded: u64,
+    obs: Option<BrownoutObs>,
+}
+
+impl Brownout {
+    pub fn new(cfg: BrownoutCfg) -> Self {
+        Self { cfg, level: 0, calm: 0, last_kv_failures: 0, degraded: 0, obs: None }
+    }
+
+    /// Attach metric handles from `reg` (`brownout_level` and
+    /// `degraded_requests_total` in the catalog).
+    pub fn with_obs(mut self, reg: Arc<Registry>) -> Self {
+        let o = BrownoutObs::new(reg);
+        o.level.set(self.level as f64);
+        self.obs = Some(o);
+        self
+    }
+
+    /// Current degradation level (0 = serving at the tuned G*).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Requests served degraded since construction (any level).
+    pub fn degraded_served(&self) -> u64 {
+        self.degraded
+    }
+
+    /// Fold one load observation into the ladder and return the level
+    /// to serve at. Any hot signal escalates immediately; recovery
+    /// needs `recover_after` consecutive calm observations per step.
+    pub fn observe(&mut self, p: Pressure) -> usize {
+        if !self.cfg.enable {
+            return 0;
+        }
+        let kv_delta = p.kv_alloc_failures.saturating_sub(self.last_kv_failures);
+        self.last_kv_failures = p.kv_alloc_failures;
+        let hot = p.queue_depth >= self.cfg.queue_high
+            || p.deadline_at_risk >= self.cfg.deadline_risk_high
+            || (self.cfg.kv_failure_step > 0 && kv_delta >= self.cfg.kv_failure_step);
+        let calm = p.queue_depth <= self.cfg.queue_low && p.deadline_at_risk == 0 && kv_delta == 0;
+        if hot {
+            self.calm = 0;
+            if self.level < self.cfg.max_level {
+                self.level += 1;
+                let _s = trace::span("robustness", "brownout_up");
+                log::warn!(
+                    "brownout: escalating to level {} (queue={}, kv_failures=+{}, at_risk={})",
+                    self.level,
+                    p.queue_depth,
+                    kv_delta,
+                    p.deadline_at_risk
+                );
+            }
+        } else if calm {
+            self.calm = self.calm.saturating_add(1);
+            if self.level > 0 && self.calm >= self.cfg.recover_after {
+                self.level -= 1;
+                self.calm = 0;
+                let _s = trace::span("robustness", "brownout_down");
+                log::info!("brownout: recovering to level {}", self.level);
+            }
+        } else {
+            // ambiguous load: hold the level, restart the calm streak
+            self.calm = 0;
+        }
+        if let Some(o) = &self.obs {
+            o.level.set(self.level as f64);
+        }
+        self.level
+    }
+
+    /// Record `n` requests served degraded at `level` (no-op at level
+    /// 0 — that is just the tuned pick).
+    pub fn note_degraded(&mut self, level: usize, n: u64) {
+        if level == 0 || n == 0 {
+            return;
+        }
+        self.degraded += n;
+        if let Some(o) = &mut self.obs {
+            o.note_degraded(level, n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BrownoutCfg {
+        BrownoutCfg {
+            enable: true,
+            max_level: 3,
+            queue_high: 16,
+            queue_low: 4,
+            deadline_risk_high: 4,
+            kv_failure_step: 1,
+            recover_after: 2,
+        }
+    }
+
+    fn calm_p() -> Pressure {
+        Pressure { queue_depth: 0, kv_alloc_failures: 0, deadline_at_risk: 0 }
+    }
+
+    #[test]
+    fn escalates_on_queue_depth_and_caps_at_max_level() {
+        let mut b = Brownout::new(cfg());
+        let hot = Pressure { queue_depth: 16, ..calm_p() };
+        assert_eq!(b.observe(hot), 1);
+        assert_eq!(b.observe(hot), 2);
+        assert_eq!(b.observe(hot), 3);
+        assert_eq!(b.observe(hot), 3, "ladder caps at max_level");
+    }
+
+    #[test]
+    fn kv_failures_are_differenced_not_absolute() {
+        let mut b = Brownout::new(cfg());
+        // a standing historical count is not pressure...
+        let p = Pressure { kv_alloc_failures: 10, ..calm_p() };
+        assert_eq!(b.observe(p), 1, "first delta from 0 reads hot");
+        // ...but an unchanged cumulative count afterwards is calm
+        assert_eq!(b.observe(p), 1);
+        assert_eq!(b.observe(p), 0, "recover_after=2 calm observations step down");
+        // a new failure escalates again
+        let p2 = Pressure { kv_alloc_failures: 11, ..calm_p() };
+        assert_eq!(b.observe(p2), 1);
+    }
+
+    #[test]
+    fn recovery_is_hysteresis_guarded() {
+        let mut b = Brownout::new(cfg());
+        let hot = Pressure { deadline_at_risk: 4, ..calm_p() };
+        b.observe(hot);
+        b.observe(hot);
+        assert_eq!(b.level(), 2);
+        assert_eq!(b.observe(calm_p()), 2, "one calm tick is not enough");
+        assert_eq!(b.observe(calm_p()), 1, "second calm tick steps down once");
+        // an ambiguous observation (above low watermark) restarts the streak
+        let mid = Pressure { queue_depth: 10, ..calm_p() };
+        assert_eq!(b.observe(mid), 1, "ambiguous load holds the level");
+        assert_eq!(b.observe(calm_p()), 1);
+        assert_eq!(b.observe(calm_p()), 0, "streak restarted after the ambiguous tick");
+    }
+
+    #[test]
+    fn disabled_ladder_never_degrades() {
+        let mut b = Brownout::new(BrownoutCfg { enable: false, ..cfg() });
+        let hot = Pressure { queue_depth: 1000, kv_alloc_failures: 50, deadline_at_risk: 50 };
+        assert_eq!(b.observe(hot), 0);
+        assert_eq!(b.level(), 0);
+    }
+
+    #[test]
+    fn obs_publishes_level_and_degraded_counts() {
+        let reg = Arc::new(Registry::new());
+        let mut b = Brownout::new(cfg()).with_obs(reg.clone());
+        assert_eq!(reg.gauge("brownout_level", &[]).get(), 0.0);
+        b.observe(Pressure { queue_depth: 16, ..calm_p() });
+        assert_eq!(reg.gauge("brownout_level", &[]).get(), 1.0);
+        b.note_degraded(1, 3);
+        b.note_degraded(0, 5); // level 0 is the tuned pick, not a degradation
+        assert_eq!(reg.counter("degraded_requests_total", &[("level", "1")]).get(), 3);
+        assert_eq!(b.degraded_served(), 3);
+    }
+}

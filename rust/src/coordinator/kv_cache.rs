@@ -6,11 +6,12 @@
 //! reference-counted so prefix sharing (e.g. common system prompts)
 //! costs no extra memory.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::anyhow;
 
 use crate::obs::registry::{Counter, Gauge, Registry};
+use crate::obs::trace;
 
 pub type BlockId = u32;
 pub type SeqId = u64;
@@ -33,8 +34,10 @@ struct KvObs {
     blocks_used: Gauge,
     blocks_free: Gauge,
     seqs: Gauge,
+    parked: Gauge,
     shared_refs: Gauge,
     evicted_total: Counter,
+    seq_evictions_total: Counter,
     fork_shared_total: Counter,
     alloc_failures_total: Counter,
 }
@@ -45,8 +48,10 @@ impl KvObs {
             blocks_used: reg.gauge("kv_blocks_used", &[]),
             blocks_free: reg.gauge("kv_blocks_free", &[]),
             seqs: reg.gauge("kv_seqs", &[]),
+            parked: reg.gauge("kv_parked", &[]),
             shared_refs: reg.gauge("kv_shared_refs", &[]),
             evicted_total: reg.counter("kv_blocks_evicted_total", &[]),
+            seq_evictions_total: reg.counter("kv_evictions_total", &[]),
             fork_shared_total: reg.counter("kv_fork_shared_blocks_total", &[]),
             alloc_failures_total: reg.counter("kv_alloc_failures_total", &[]),
         }
@@ -62,6 +67,9 @@ pub struct KvCache {
     free: Vec<BlockId>,
     meta: Vec<BlockMeta>,
     seqs: HashMap<SeqId, SeqHandle>,
+    /// Finished-but-resident sequences, least-recently-parked first:
+    /// the LRU eviction order under pool pressure.
+    parked: VecDeque<SeqId>,
     obs: Option<KvObs>,
 }
 
@@ -74,6 +82,7 @@ impl KvCache {
             free: (0..num_blocks as BlockId).rev().collect(),
             meta: (0..num_blocks).map(|_| BlockMeta { refcount: 0 }).collect(),
             seqs: HashMap::new(),
+            parked: VecDeque::new(),
             obs: None,
         }
     }
@@ -93,6 +102,7 @@ impl KvCache {
             obs.blocks_used.set((self.meta.len() - free) as f64);
             obs.blocks_free.set(free as f64);
             obs.seqs.set(self.seqs.len() as f64);
+            obs.parked.set(self.parked.len() as f64);
             let shared: u64 =
                 self.meta.iter().map(|m| m.refcount.saturating_sub(1) as u64).sum();
             obs.shared_refs.set(shared as f64);
@@ -111,6 +121,71 @@ impl KvCache {
         self.block_tokens
     }
 
+    /// Pop one free block at refcount 1; `None` when the pool is
+    /// exhausted (or a seeded `fault::kv_exhaust` injection says so).
+    fn take_block(&mut self) -> Option<BlockId> {
+        if crate::fault::kv_exhaust() {
+            return None;
+        }
+        let id = self.free.pop()?;
+        self.meta[id as usize].refcount = 1;
+        Some(id)
+    }
+
+    /// Allocate `n` blocks with partial-allocation rollback: when the
+    /// pool exhausts mid-sequence, one bounded LRU-eviction retry over
+    /// parked sequences runs, and if that still doesn't cover the
+    /// deficit every block popped so far returns to the pool before the
+    /// failure surfaces — the caller sheds, it never leaks.
+    fn alloc_blocks(&mut self, n: usize) -> anyhow::Result<Vec<BlockId>> {
+        let mut blocks = Vec::with_capacity(n);
+        let mut retried = false;
+        while blocks.len() < n {
+            match self.take_block() {
+                Some(id) => blocks.push(id),
+                None => {
+                    if !retried {
+                        retried = true;
+                        if self.evict_parked(n - blocks.len()) {
+                            continue;
+                        }
+                    }
+                    for id in blocks.drain(..) {
+                        self.meta[id as usize].refcount = 0;
+                        self.free.push(id);
+                    }
+                    if let Some(obs) = &self.obs {
+                        obs.alloc_failures_total.inc();
+                    }
+                    self.sync_gauges();
+                    return Err(anyhow!(
+                        "kv cache exhausted: need {n} blocks, {} free",
+                        self.free.len()
+                    ));
+                }
+            }
+        }
+        Ok(blocks)
+    }
+
+    /// Evict least-recently-parked sequences until `deficit` blocks are
+    /// free; refcount-aware (blocks shared with live sequences
+    /// survive). Returns whether the deficit was covered.
+    fn evict_parked(&mut self, deficit: usize) -> bool {
+        let mut freed = 0usize;
+        while freed < deficit {
+            let Some(victim) = self.parked.pop_front() else { return false };
+            let _s = trace::span("robustness", "kv_evict");
+            if let Some(h) = self.seqs.remove(&victim) {
+                freed += self.drop_handle_blocks(h) as usize;
+                if let Some(obs) = &self.obs {
+                    obs.seq_evictions_total.inc();
+                }
+            }
+        }
+        true
+    }
+
     /// Register a new sequence with `tokens` prefilled K/V rows.
     pub fn register(&mut self, seq: SeqId, k: &[f32], v: &[f32]) -> anyhow::Result<()> {
         if self.seqs.contains_key(&seq) {
@@ -120,25 +195,11 @@ impl KvCache {
         assert_eq!(k.len() % self.d, 0);
         let tokens = k.len() / self.d;
         let n_blocks = tokens.div_ceil(self.block_tokens);
-        if self.free.len() < n_blocks {
-            if let Some(obs) = &self.obs {
-                obs.alloc_failures_total.inc();
-            }
-            return Err(anyhow!(
-                "kv cache exhausted: need {n_blocks} blocks, {} free",
-                self.free.len()
-            ));
-        }
-        let mut blocks = Vec::with_capacity(n_blocks);
-        for b in 0..n_blocks {
-            // lint: allow(serve-panic) — capacity was checked above
-            // (`free.len() < n_blocks` already returned Err).
-            let id = self.free.pop().unwrap();
-            self.meta[id as usize].refcount = 1;
+        let blocks = self.alloc_blocks(n_blocks)?;
+        for (b, &id) in blocks.iter().enumerate() {
             let t0 = b * self.block_tokens;
             let t1 = ((b + 1) * self.block_tokens).min(tokens);
             self.write_block(id, 0, &k[t0 * self.d..t1 * self.d], &v[t0 * self.d..t1 * self.d]);
-            blocks.push(id);
         }
         self.seqs.insert(seq, SeqHandle { seq, blocks, tokens });
         self.sync_gauges();
@@ -154,13 +215,7 @@ impl KvCache {
             (h.tokens % self.block_tokens == 0, h.tokens % self.block_tokens, h.tokens)
         };
         let block = if needs_block {
-            let Some(id) = self.free.pop() else {
-                if let Some(obs) = &self.obs {
-                    obs.alloc_failures_total.inc();
-                }
-                return Err(anyhow!("kv cache exhausted on append"));
-            };
-            self.meta[id as usize].refcount = 1;
+            let id = self.alloc_blocks(1)?[0];
             // lint: allow(serve-panic) — `seq` was resolved at the top
             // of this call; no removal can interleave (&mut self).
             self.seqs.get_mut(&seq).unwrap().blocks.push(id);
@@ -175,6 +230,34 @@ impl KvCache {
         // lint: allow(serve-panic) — same resolved `seq` as above.
         self.seqs.get_mut(&seq).unwrap().tokens = tokens + 1;
         Ok(())
+    }
+
+    /// Park a finished-but-resident sequence: it stays servable
+    /// (`gather`/`fork`) but becomes LRU-evictable under pool pressure.
+    /// Idempotent for an already-parked sequence.
+    pub fn park(&mut self, seq: SeqId) -> anyhow::Result<()> {
+        if !self.seqs.contains_key(&seq) {
+            return Err(anyhow!("unknown sequence {seq}"));
+        }
+        if !self.parked.contains(&seq) {
+            self.parked.push_back(seq);
+        }
+        self.sync_gauges();
+        Ok(())
+    }
+
+    /// Pull a parked sequence back into active service (a follow-up
+    /// turn arrived). Returns whether it was still resident and parked.
+    pub fn unpark(&mut self, seq: SeqId) -> bool {
+        let was = self.parked.contains(&seq);
+        self.parked.retain(|s| *s != seq);
+        self.sync_gauges();
+        was
+    }
+
+    /// How many sequences are parked (evictable).
+    pub fn parked(&self) -> usize {
+        self.parked.len()
     }
 
     /// Fork `parent` into `child` sharing all full blocks (copy-on-write
@@ -204,6 +287,15 @@ impl KvCache {
     /// Release a sequence; blocks return to the pool at refcount 0.
     pub fn release(&mut self, seq: SeqId) -> anyhow::Result<()> {
         let h = self.seqs.remove(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        self.parked.retain(|s| *s != seq);
+        self.drop_handle_blocks(h);
+        self.sync_gauges();
+        Ok(())
+    }
+
+    /// Decrement refcounts of a removed handle's blocks; zero-refcount
+    /// blocks return to the pool. Returns how many were freed.
+    fn drop_handle_blocks(&mut self, h: SeqHandle) -> u64 {
         let mut freed = 0u64;
         for b in h.blocks {
             let m = &mut self.meta[b as usize];
@@ -216,8 +308,7 @@ impl KvCache {
         if let Some(obs) = &self.obs {
             obs.evicted_total.add(freed);
         }
-        self.sync_gauges();
-        Ok(())
+        freed
     }
 
     pub fn handle(&self, seq: SeqId) -> Option<&SeqHandle> {
@@ -304,6 +395,92 @@ mod tests {
         assert!(c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).is_err());
         // pool unchanged after failed registration
         assert_eq!(c.num_free(), 1);
+    }
+
+    #[test]
+    fn partial_allocation_rolls_back_mid_sequence() {
+        // pool of 2, request needs 3: two blocks are popped before the
+        // third fails — the earlier blocks of the failing request must
+        // be back in the pool at refcount 0, not leaked
+        let mut c = KvCache::new(2, 2, 2);
+        assert!(c.register(1, &rows(6, 2, 0.0), &rows(6, 2, 0.0)).is_err());
+        assert_eq!(c.num_free(), 2, "partially-allocated blocks leaked");
+        assert!(c.handle(1).is_none());
+        // the rolled-back blocks are genuinely reusable
+        c.register(2, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+        assert_eq!(c.num_free(), 0);
+        c.release(2).unwrap();
+        assert_eq!(c.num_free(), 2);
+    }
+
+    #[test]
+    fn append_exhaustion_keeps_sequence_intact() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.register(1, &rows(2, 2, 0.0), &rows(2, 2, 0.0)).unwrap();
+        // block is full and the pool is empty: the boundary append fails
+        assert!(c.append(1, &[1.0, 2.0], &[3.0, 4.0]).is_err());
+        // the sequence is still servable at its pre-append length
+        let (k, _) = c.gather(1).unwrap();
+        assert_eq!(k.len(), 2 * 2);
+        c.release(1).unwrap();
+        assert_eq!(c.num_free(), 1);
+    }
+
+    #[test]
+    fn parked_sequences_are_evicted_under_pressure() {
+        let reg = Registry::new();
+        let mut c = KvCache::new(4, 2, 2).with_obs(&reg);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap(); // 2 blocks
+        c.park(1).unwrap();
+        assert_eq!(reg.gauge("kv_parked", &[]).get(), 1.0);
+        c.register(2, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap(); // 2 blocks
+        c.park(2).unwrap();
+        // pool is empty; the retry evicts seq 1 (least recently parked)
+        // and the registration succeeds without surfacing an error
+        c.register(3, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+        assert!(c.handle(1).is_none(), "LRU victim should be evicted");
+        assert!(c.handle(2).is_some(), "newer parked seq should survive");
+        assert_eq!(reg.counter("kv_evictions_total", &[]).get(), 1);
+        assert_eq!(reg.counter("kv_alloc_failures_total", &[]).get(), 0);
+        // eviction even after one retry that can't cover still fails
+        assert!(c.register(4, &rows(8, 2, 0.0), &rows(8, 2, 0.0)).is_err());
+        assert_eq!(reg.counter("kv_alloc_failures_total", &[]).get(), 1);
+    }
+
+    #[test]
+    fn eviction_respects_shared_refcounts() {
+        let mut c = KvCache::new(3, 2, 2);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap(); // 2 full blocks
+        c.fork(1, 2).unwrap(); // child shares both blocks
+        c.park(1).unwrap();
+        // 1 block free; a 2-block request evicts parked seq 1, but its
+        // blocks are shared with live seq 2 — nothing is actually freed,
+        // the deficit isn't covered, and the alloc rolls back cleanly
+        assert!(c.register(3, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).is_err());
+        assert_eq!(c.num_free(), 1);
+        // the child's view of the shared prefix is untouched
+        let (k, _) = c.gather(2).unwrap();
+        assert_eq!(k.len(), 4 * 2);
+        c.release(2).unwrap();
+        assert_eq!(c.num_free(), 3);
+    }
+
+    #[test]
+    fn unpark_shields_from_eviction_and_release_unparks() {
+        let mut c = KvCache::new(2, 2, 2);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 0.0)).unwrap();
+        c.park(1).unwrap();
+        assert_eq!(c.parked(), 1);
+        assert!(c.unpark(1));
+        assert!(!c.unpark(1), "double unpark reports not-parked");
+        // no parked victims: the alloc fails instead of evicting seq 1
+        assert!(c.register(2, &rows(2, 2, 0.0), &rows(2, 2, 0.0)).is_err());
+        assert!(c.handle(1).is_some());
+        // release drops any parked entry with the sequence
+        c.park(1).unwrap();
+        c.release(1).unwrap();
+        assert_eq!(c.parked(), 0);
+        assert!(c.park(9).is_err(), "parking an unknown seq errors");
     }
 
     #[test]

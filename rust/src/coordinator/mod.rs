@@ -10,8 +10,17 @@
 //! head-sharded multi-GPU scatter with double buffering (Table 9),
 //! including the tuning-aware planner that drives heterogeneous pools
 //! with per-device `(l, m, G*)` from [`crate::autotune::DevicePool`].
+//!
+//! The robustness layer (see `docs/ROBUSTNESS.md`) threads through all
+//! of it: [`admission`] bounds what enters, [`brownout`] degrades the
+//! served G* under pressure before anything sheds, the KV cache parks
+//! and evicts finished sequences under memory pressure, and
+//! [`multi_device::LaneSupervisor`] retries/quarantines misbehaving
+//! scatter lanes.
 
+pub mod admission;
 pub mod batcher;
+pub mod brownout;
 pub mod decode;
 pub mod engine;
 pub mod kv_cache;
@@ -20,14 +29,17 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
+pub use admission::AdmissionGate;
 pub use batcher::{Batcher, BatcherStats};
+pub use brownout::{Brownout, Pressure};
 pub use decode::{attend_cached, decode_step};
 pub use engine::{Engine, EngineHandle};
 pub use kv_cache::{BlockId, KvCache, SeqHandle};
 pub use multi_device::{
     plan_tuned, record_scatter_telemetry, run_scatter, run_scatter_round_robin,
-    run_scatter_tuned, DeviceLane, ScatterPlan, ScatterReport, ScatterSchedule,
+    run_scatter_supervised, run_scatter_tuned, DeviceLane, LaneSupervisor, ScatterPlan,
+    ScatterReport, ScatterSchedule, SupervisionReport,
 };
 pub use request::{Priority, Request, RequestId, Response};
 pub use router::Router;
-pub use scheduler::Scheduler;
+pub use scheduler::{Scheduler, ShedReason};

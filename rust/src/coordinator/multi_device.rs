@@ -37,7 +37,8 @@ use std::time::{Duration, Instant};
 
 use crate::attention::{Engine, Variant};
 use crate::autotune::{DevicePool, TunedParams};
-use crate::config::DeviceCfg;
+use crate::config::{DeviceCfg, SupervisorCfg};
+use crate::fault::{self, LaneFault};
 use crate::obs::trace;
 use crate::tensor::Matrix;
 use crate::workload;
@@ -448,6 +449,381 @@ impl DeviceCfg {
     }
 }
 
+// -- lane supervision -------------------------------------------------------
+
+/// One lane's health as tracked by the [`LaneSupervisor`].
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneHealth {
+    /// consecutive failed chunk attempts (reset by any success)
+    consecutive_failures: u32,
+    /// round the lane was quarantined at, while quarantined
+    quarantined_at: Option<usize>,
+    /// re-admitted on probation: one failure re-quarantines immediately
+    probing: bool,
+}
+
+/// Per-lane failure tracking across scatter rounds: bounded retry is
+/// the executor's job ([`run_scatter_supervised`]); the supervisor
+/// decides *which lanes may be scheduled at all* — repeat offenders are
+/// quarantined, sit out `probation_rounds` rounds, then get one
+/// probationary chunk; a probation failure re-quarantines immediately.
+///
+/// The last healthy lane is never quarantined: a degraded pool that
+/// still makes progress beats a "safe" pool that computes nothing.
+pub struct LaneSupervisor {
+    cfg: SupervisorCfg,
+    lanes: Vec<LaneHealth>,
+    round: usize,
+}
+
+impl LaneSupervisor {
+    pub fn new(cfg: SupervisorCfg, n_dev: usize) -> Self {
+        Self { cfg, lanes: vec![LaneHealth::default(); n_dev.max(1)], round: 0 }
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// May `dev` be scheduled this round?
+    pub fn healthy(&self, dev: usize) -> bool {
+        self.lanes.get(dev).map(|l| l.quarantined_at.is_none()).unwrap_or(false)
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.lanes.iter().filter(|l| l.quarantined_at.is_none()).count()
+    }
+
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.quarantined_at.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Advance to the next round and re-admit lanes whose quarantine
+    /// has been served, on probation. Returns the re-admitted lanes.
+    pub fn begin_round(&mut self) -> Vec<usize> {
+        self.round += 1;
+        let mut readmitted = Vec::new();
+        for (idx, lane) in self.lanes.iter_mut().enumerate() {
+            if let Some(at) = lane.quarantined_at {
+                if self.round.saturating_sub(at) > self.cfg.probation_rounds {
+                    lane.quarantined_at = None;
+                    lane.consecutive_failures = 0;
+                    lane.probing = true;
+                    readmitted.push(idx);
+                    log::info!("supervisor: lane {idx} re-admitted on probation");
+                }
+            }
+        }
+        readmitted
+    }
+
+    /// Record a failed chunk attempt on `dev`. Returns `true` when
+    /// this failure quarantines the lane (the caller re-plans its
+    /// pending work over the survivors).
+    pub fn note_failure(&mut self, dev: usize) -> bool {
+        if self.healthy_count() <= 1 {
+            // never quarantine the last healthy lane
+            return false;
+        }
+        let Some(lane) = self.lanes.get_mut(dev) else { return false };
+        if lane.quarantined_at.is_some() {
+            return false;
+        }
+        lane.consecutive_failures = lane.consecutive_failures.saturating_add(1);
+        if lane.probing || lane.consecutive_failures >= self.cfg.quarantine_after.max(1) {
+            lane.quarantined_at = Some(self.round);
+            lane.probing = false;
+            let _s = trace::span("robustness", "quarantine");
+            log::warn!(
+                "supervisor: quarantining lane {dev} after {} consecutive failures",
+                lane.consecutive_failures
+            );
+            return true;
+        }
+        false
+    }
+
+    /// Record a successful chunk on `dev`: clears the failure streak
+    /// and ends probation.
+    pub fn note_success(&mut self, dev: usize) {
+        if let Some(lane) = self.lanes.get_mut(dev) {
+            lane.consecutive_failures = 0;
+            lane.probing = false;
+        }
+    }
+}
+
+/// What the supervised executor did beyond the happy path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SupervisionReport {
+    /// same-lane re-attempts after a failed chunk
+    pub retries: u64,
+    /// chunks moved to a different lane after exhausting retries
+    pub failovers: u64,
+    /// lanes quarantined during this run
+    pub quarantines: u64,
+    /// lanes re-admitted on probation during this run
+    pub readmitted: u64,
+    /// chunks abandoned after every recovery avenue failed
+    pub lost_chunks: u64,
+    /// heads those abandoned chunks carried
+    pub lost_heads: u64,
+}
+
+/// A chunk waiting to run: which lane it is currently assigned to and
+/// how many attempts it has consumed.
+struct PendingChunk {
+    chunk: usize,
+    lane: usize,
+    attempts: usize,
+}
+
+/// Execute one chunk attempt on `dev`, honoring any injected lane
+/// fault. Returns the busy duration on success.
+fn attempt_chunk(
+    plan: &ScatterPlan,
+    lane: &DeviceLane,
+    dev: usize,
+    chunk: usize,
+    seed: u64,
+) -> std::thread::Result<Result<Duration, String>> {
+    let plan = *plan;
+    let lane = lane.clone();
+    let handle = std::thread::spawn(move || {
+        if fault::worker_panic(dev) {
+            // lint: allow(serve-panic) — this is the injected fault the
+            // supervisor exists to contain; unreachable without the
+            // `fault-inject` feature and an installed plan.
+            panic!("injected worker panic on lane {dev}");
+        }
+        let injected = fault::lane_fault(dev);
+        if let Some(LaneFault::Error) = injected {
+            return Err(format!("injected transfer error on lane {dev}"));
+        }
+        if let Some(LaneFault::Stall) = injected {
+            // the lane hangs; model the supervisor's detection timeout
+            // as a short stall before the failure surfaces
+            std::thread::sleep(Duration::from_millis(2));
+            return Err(format!("injected stall on lane {dev} (detection timeout)"));
+        }
+        let chunk_len = plan.heads_in_chunk(chunk);
+        let heads: Vec<(Matrix, Matrix, Matrix)> = (0..chunk_len)
+            .map(|h| {
+                workload::qkv_uniform(plan.n, plan.d, seed + (chunk * plan.chunk_heads + h) as u64)
+            })
+            .collect();
+        let engine = Engine::new(plan.variant)
+            .with_blocks(lane.params.l, lane.params.m)
+            .with_group(lane.params.group.max(1));
+        let t0 = Instant::now();
+        crate::util::parallel::with_serial(|| {
+            for (q, k, v) in &heads {
+                std::hint::black_box(engine.run(q, k, v));
+            }
+        });
+        let computed = t0.elapsed();
+        let mut stretch = if lane.capacity_weight < 1.0 { 1.0 / lane.capacity_weight } else { 1.0 };
+        if let Some(LaneFault::Slow(s)) = injected {
+            stretch *= s;
+        }
+        if stretch > 1.0 {
+            std::thread::sleep(Duration::from_secs_f64(computed.as_secs_f64() * (stretch - 1.0)));
+        }
+        Ok(t0.elapsed())
+    });
+    handle.join()
+}
+
+/// Supervised tuned scatter: [`plan_tuned`] shares, executed under a
+/// [`LaneSupervisor`] with bounded same-lane retry (plus simulated
+/// backoff), failover to the healthiest survivor once retries are
+/// exhausted, and quarantine of repeat offenders — their pending chunks
+/// are re-planned over the surviving lanes.
+///
+/// Unlike [`run_scatter_tuned`]'s free-running channel workers, the
+/// supervised executor runs in *waves* (at most one chunk per healthy
+/// lane per wave, joined before outcomes are judged): the supervisor
+/// must observe every attempt's outcome before scheduling the next, so
+/// retry/failover/quarantine decisions are deterministic for a given
+/// fault plan. Faults only fire when `fault-inject` is compiled in and
+/// a plan is installed; otherwise this runs every chunk once, exactly
+/// like the unsupervised path.
+///
+/// Billing is conservation-exact: a chunk's heads are counted on
+/// exactly one lane (the one that completed it) or in
+/// [`SupervisionReport::lost_heads`] — never both, never twice.
+pub fn run_scatter_supervised(
+    plan: &ScatterPlan,
+    pool: &mut DevicePool,
+    sup: &mut LaneSupervisor,
+    double_buffer: bool,
+    seed: u64,
+) -> (ScatterSchedule, ScatterReport, SupervisionReport) {
+    let _s = trace::span("coordinator", "scatter_supervised");
+    let schedule = plan_tuned(plan, pool);
+    let n_dev = schedule.lanes.len();
+    let chunks = plan.num_chunks();
+    let reg = crate::obs::registry::global();
+    let mut sv = SupervisionReport::default();
+
+    // a chunk may burn `retry_limit` attempts on each lane it visits;
+    // cap total attempts so even an all-lanes-faulty plan terminates
+    let per_lane = sup.cfg.retry_limit.max(1);
+    let attempt_cap = per_lane * (n_dev + 1);
+
+    let mut pending: std::collections::VecDeque<PendingChunk> = (0..chunks)
+        .map(|c| PendingChunk { chunk: c, lane: schedule.assignment[c], attempts: 0 })
+        .collect();
+
+    let start = Instant::now();
+    let mut transfer_total = Duration::ZERO;
+    let mut per_device_busy = vec![Duration::ZERO; n_dev];
+    let mut per_device_chunks = vec![0usize; n_dev];
+    let mut per_device_heads = vec![0usize; n_dev];
+    let mut heads_done = 0usize;
+    // transfer time is billed but not overlapped: the supervised
+    // executor trades the pipelined schedule for deterministic
+    // outcome observation, so the flag only keeps signature parity
+    // with `run_scatter_tuned`
+    let _ = double_buffer;
+
+    while !pending.is_empty() {
+        sv.readmitted += sup.begin_round().len() as u64;
+
+        // reassign chunks stranded on quarantined lanes to the healthy
+        // lane with the least work billed so far
+        let fallback_lane = |busy: &[usize], sup: &LaneSupervisor, exclude: Option<usize>| {
+            (0..n_dev)
+                .filter(|&d| sup.healthy(d) && Some(d) != exclude)
+                .min_by_key(|&d| busy[d])
+        };
+        for p in pending.iter_mut() {
+            if !sup.healthy(p.lane) {
+                if let Some(l) = fallback_lane(&per_device_chunks, sup, None) {
+                    p.lane = l;
+                }
+            }
+        }
+
+        // one wave: at most one pending chunk per healthy lane
+        let mut wave: Vec<PendingChunk> = Vec::new();
+        let mut taken = vec![false; n_dev];
+        let mut rest: std::collections::VecDeque<PendingChunk> = std::collections::VecDeque::new();
+        while let Some(p) = pending.pop_front() {
+            if sup.healthy(p.lane) && !taken[p.lane] {
+                taken[p.lane] = true;
+                wave.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        pending = rest;
+
+        if wave.is_empty() {
+            // every pending chunk is stuck behind the same busy lane —
+            // cannot happen (waves drain one per lane), but guard the
+            // loop against a logic regression rather than spinning
+            break;
+        }
+
+        // bill transfers and launch the wave
+        let mut outcomes = Vec::with_capacity(wave.len());
+        for p in &wave {
+            let lane = &schedule.lanes[p.lane];
+            let chunk_len = plan.heads_in_chunk(p.chunk);
+            transfer_total += transfer_time(
+                plan.bytes_for_heads(chunk_len),
+                lane.link_gbps,
+                lane.link_latency_us,
+            );
+            if p.attempts > 0 {
+                // simulated retry backoff on this lane
+                std::thread::sleep(Duration::from_micros(
+                    sup.cfg.backoff_us.saturating_mul(p.attempts as u64),
+                ));
+            }
+            outcomes.push(attempt_chunk(plan, lane, p.lane, p.chunk, seed));
+        }
+
+        for (p, outcome) in wave.into_iter().zip(outcomes) {
+            let mut p = p;
+            p.attempts += 1;
+            let ok = match outcome {
+                Ok(Ok(busy)) => {
+                    sup.note_success(p.lane);
+                    per_device_busy[p.lane] += busy;
+                    per_device_chunks[p.lane] += 1;
+                    per_device_heads[p.lane] += plan.heads_in_chunk(p.chunk);
+                    heads_done += plan.heads_in_chunk(p.chunk);
+                    true
+                }
+                Ok(Err(e)) => {
+                    log::warn!("supervisor: chunk {} failed on lane {}: {e}", p.chunk, p.lane);
+                    false
+                }
+                Err(_) => {
+                    log::warn!(
+                        "supervisor: worker panicked on lane {} (chunk {}), contained",
+                        p.lane,
+                        p.chunk
+                    );
+                    false
+                }
+            };
+            if ok {
+                continue;
+            }
+            let failed_lane = p.lane;
+            if sup.note_failure(failed_lane) {
+                sv.quarantines += 1;
+                let dev = failed_lane.to_string();
+                reg.counter("lane_quarantine_total", &[("device", dev.as_str())]).inc();
+            }
+            if p.attempts >= attempt_cap {
+                sv.lost_chunks += 1;
+                sv.lost_heads += plan.heads_in_chunk(p.chunk) as u64;
+                log::error!(
+                    "supervisor: abandoning chunk {} after {} attempts",
+                    p.chunk,
+                    p.attempts
+                );
+                continue;
+            }
+            if sup.healthy(failed_lane) && p.attempts % per_lane != 0 {
+                // same-lane retry (with backoff next wave)
+                sv.retries += 1;
+                let dev = failed_lane.to_string();
+                reg.counter("lane_retries_total", &[("device", dev.as_str())]).inc();
+            } else if let Some(l) = fallback_lane(&per_device_chunks, sup, Some(failed_lane)) {
+                sv.failovers += 1;
+                p.lane = l;
+            } else {
+                // no other healthy lane: keep trying where we are
+                sv.retries += 1;
+            }
+            pending.push_back(p);
+        }
+    }
+
+    let report = ScatterReport {
+        wall: start.elapsed(),
+        transfer_total,
+        compute_total: per_device_busy.iter().sum(),
+        per_device_busy,
+        per_device_chunks,
+        per_device_heads,
+        chunks,
+        heads: heads_done,
+    };
+    record_scatter_telemetry(pool, plan, &schedule, &report);
+    (schedule, report, sv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -736,5 +1112,88 @@ mod tests {
         assert_eq!(r.heads, 6);
         assert_eq!(r.per_device_chunks.iter().sum::<usize>(), 3);
         assert_eq!(sched.assignment.len(), 3);
+    }
+
+    fn sup_cfg() -> SupervisorCfg {
+        SupervisorCfg { retry_limit: 2, backoff_us: 0, quarantine_after: 3, probation_rounds: 2 }
+    }
+
+    #[test]
+    fn supervisor_quarantines_repeat_offenders_and_readmits_on_probation() {
+        let mut s = LaneSupervisor::new(sup_cfg(), 3);
+        assert_eq!(s.healthy_count(), 3);
+        s.begin_round();
+        assert!(!s.note_failure(1));
+        assert!(!s.note_failure(1));
+        assert!(s.note_failure(1), "third consecutive failure quarantines");
+        assert!(!s.healthy(1));
+        assert_eq!(s.quarantined(), vec![1]);
+        // quarantine is served in rounds, then probation
+        assert!(s.begin_round().is_empty(), "1 round served");
+        assert!(s.begin_round().is_empty(), "2 rounds served");
+        assert_eq!(s.begin_round(), vec![1], "probation after the sentence");
+        assert!(s.healthy(1));
+        // a probation failure re-quarantines immediately
+        assert!(s.note_failure(1));
+        assert!(!s.healthy(1));
+    }
+
+    #[test]
+    fn supervisor_success_clears_streaks_and_probation() {
+        let mut s = LaneSupervisor::new(sup_cfg(), 2);
+        s.begin_round();
+        s.note_failure(0);
+        s.note_failure(0);
+        s.note_success(0);
+        assert!(!s.note_failure(0), "streak was reset by the success");
+        // a re-admitted lane that succeeds leaves probation entirely
+        s.note_failure(1);
+        s.note_failure(1);
+        s.note_failure(1);
+        assert!(!s.healthy(1));
+        s.begin_round();
+        s.begin_round();
+        assert_eq!(s.begin_round(), vec![1]);
+        s.note_success(1);
+        assert!(!s.note_failure(1), "one failure after real success is not probation");
+        assert!(s.healthy(1));
+    }
+
+    #[test]
+    fn supervisor_never_quarantines_the_last_healthy_lane() {
+        let mut s = LaneSupervisor::new(sup_cfg(), 2);
+        s.begin_round();
+        for _ in 0..3 {
+            s.note_failure(0);
+        }
+        assert!(!s.healthy(0));
+        for _ in 0..10 {
+            assert!(!s.note_failure(1), "last lane must keep serving");
+        }
+        assert!(s.healthy(1));
+        assert_eq!(s.healthy_count(), 1);
+    }
+
+    #[test]
+    fn supervised_scatter_without_faults_matches_the_plain_path() {
+        let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]);
+        let plan = ScatterPlan {
+            heads: 6,
+            chunk_heads: 2,
+            n: 256,
+            d: 64,
+            variant: Variant::Distr,
+            group: 2,
+            block_l: 64,
+            block_m: 64,
+        };
+        let mut sup = LaneSupervisor::new(sup_cfg(), pool.num_devices());
+        let (sched, r, sv) = run_scatter_supervised(&plan, &mut pool, &mut sup, true, 4);
+        assert_eq!(r.heads, 6, "every head computed exactly once");
+        assert_eq!(r.per_device_heads.iter().sum::<usize>(), 6);
+        assert_eq!(r.per_device_chunks.iter().sum::<usize>(), 3);
+        assert_eq!(sched.assignment.len(), 3);
+        assert_eq!(sv, SupervisionReport::default(), "no faults => no recovery actions");
+        assert_eq!(sup.healthy_count(), pool.num_devices());
     }
 }

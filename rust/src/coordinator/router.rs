@@ -29,6 +29,7 @@ use crate::autotune::{Autotuner, TelemetryRecorder, TimingToken, TuneKey, TunedP
 use crate::obs::registry::{Counter, Gauge, Registry};
 use crate::obs::trace;
 
+use super::brownout::{Brownout, Pressure};
 use super::request::Request;
 
 /// A route target: engine key = (variant, max prompt bucket it serves).
@@ -113,6 +114,11 @@ pub struct Router<T> {
     rejected: u64,
     tuner: Option<Autotuner>,
     telemetry: Option<TelemetryRecorder>,
+    brownout: Option<Brownout>,
+    /// brownout level applied by the most recent tuned dispatch
+    /// (0 = served at the tuned G*); `route_batch` reads it to bill
+    /// the rest of a flushed batch at the same level
+    last_degraded: usize,
     obs: Option<RouterObs>,
 }
 
@@ -130,6 +136,8 @@ impl<T> Router<T> {
             rejected: 0,
             tuner: None,
             telemetry: None,
+            brownout: None,
+            last_degraded: 0,
             obs: None,
         }
     }
@@ -155,6 +163,38 @@ impl<T> Router<T> {
     pub fn with_telemetry(mut self, recorder: TelemetryRecorder) -> Self {
         self.telemetry = Some(recorder);
         self
+    }
+
+    /// Attach a brownout ladder: tuned dispatches then degrade their
+    /// G* by the current level before anything is shed. Feed load
+    /// observations through [`note_pressure`](Self::note_pressure).
+    pub fn with_brownout(mut self, brownout: Brownout) -> Self {
+        self.brownout = Some(brownout);
+        self
+    }
+
+    /// Fold one load observation into the attached brownout ladder and
+    /// return the level subsequent dispatches will serve at (0 when no
+    /// ladder is attached).
+    pub fn note_pressure(&mut self, p: Pressure) -> usize {
+        self.brownout.as_mut().map(|b| b.observe(p)).unwrap_or(0)
+    }
+
+    /// The brownout level the next tuned dispatch will serve at.
+    pub fn brownout_level(&self) -> usize {
+        self.brownout.as_ref().map(|b| b.level()).unwrap_or(0)
+    }
+
+    /// The brownout level the most recent tuned dispatch actually
+    /// served at (0 when it ran at the tuned G*, including when the
+    /// ladder was saturated for that shape). The serve loop reads this
+    /// to account completions as degraded or not.
+    pub fn last_degraded(&self) -> usize {
+        self.last_degraded
+    }
+
+    pub fn brownout(&self) -> Option<&Brownout> {
+        self.brownout.as_ref()
     }
 
     pub fn autotuner(&self) -> Option<&Autotuner> {
@@ -243,20 +283,50 @@ impl<T> Router<T> {
         let n = req.tokens.len().max(1);
         let mut token = None;
         let mut tune_key = None;
+        let level = self.brownout.as_ref().map(|b| b.level()).unwrap_or(0);
+        let mut degraded_level = 0;
         let tuned = match self.tuner.as_mut() {
             Some(t) => {
                 let tk = t.key_for(req.variant, n, d, causal, batch);
                 tune_key = Some(tk);
                 let mut params = t.tuned(req.variant, n, d, causal, batch);
-                if let Some(rec) = self.telemetry.as_mut() {
-                    let (chosen, tok) = rec.select(tk, params);
-                    params = chosen;
-                    token = Some(tok);
+                let browned = if level > 0 {
+                    let dp = params.degraded(level, d);
+                    if dp != params {
+                        Some(dp)
+                    } else {
+                        None // ladder saturated: this shape can't degrade
+                    }
+                } else {
+                    None
+                };
+                match browned {
+                    Some(dp) => {
+                        // degraded dispatches skip telemetry selection:
+                        // their latencies describe the brownout pick,
+                        // not the tuned one, and must not feed the
+                        // re-tuning loop (no token is issued)
+                        params = dp;
+                        degraded_level = level;
+                    }
+                    None => {
+                        if let Some(rec) = self.telemetry.as_mut() {
+                            let (chosen, tok) = rec.select(tk, params);
+                            params = chosen;
+                            token = Some(tok);
+                        }
+                    }
                 }
                 Some(params)
             }
             None => None,
         };
+        self.last_degraded = degraded_level;
+        if degraded_level > 0 {
+            if let Some(b) = self.brownout.as_mut() {
+                b.note_degraded(degraded_level, 1);
+            }
+        }
         // lint: allow(serve-panic) — `key` came from `select`, which
         // only yields keys registered in `stats`.
         let stats = self.stats.get_mut(&key).unwrap();
@@ -305,6 +375,14 @@ impl<T> Router<T> {
         }
         if let Some(obs) = &mut self.obs {
             obs.note_dispatch(key.variant, extra);
+        }
+        // the whole flush serves at the level route_tuned applied; bill
+        // the remaining batch members at that level too
+        let level = self.last_degraded;
+        if level > 0 && extra > 0 {
+            if let Some(b) = self.brownout.as_mut() {
+                b.note_degraded(level, extra);
+            }
         }
         Ok((&self.routes[&key], key, tuned, token))
     }
@@ -568,5 +646,85 @@ mod tests {
         }
         let key = RouteKey { variant: Variant::Distr, len_bucket: 128 };
         assert_eq!(r.stats()[&key].routed, 3);
+    }
+
+    /// A tuner whose picks are the deterministic legacy defaults
+    /// (disabled tuners skip the analytic search): at d=64 that is
+    /// `group=2`, leaving the brownout ladder known headroom. The
+    /// analytic pick may already sit at the legality cap, which would
+    /// make these tests depend on the cost model.
+    fn fixed_tuner() -> crate::autotune::Autotuner {
+        use crate::config::AutotuneCfg;
+        use crate::simulator::GpuSpec;
+        crate::autotune::Autotuner::new(GpuSpec::RTX4090, AutotuneCfg { enable: false, ..Default::default() })
+    }
+
+    #[test]
+    fn brownout_degrades_gstar_and_recovers() {
+        use crate::config::BrownoutCfg;
+        use crate::coordinator::brownout::{Brownout, Pressure};
+
+        let cfg = BrownoutCfg { recover_after: 1, ..Default::default() };
+        let mut r: Router<()> = Router::new()
+            .with_autotuner(fixed_tuner())
+            .with_brownout(Brownout::new(cfg));
+        r.add_route(Variant::Distr, 1024, ());
+
+        let (_, _, tuned, _) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        let baseline = tuned.unwrap();
+        assert_eq!(baseline.group, 2, "legacy default at d=64");
+
+        // hot pressure: the next dispatch serves a coarser group
+        assert_eq!(r.note_pressure(Pressure { queue_depth: 100, ..Default::default() }), 1);
+        let (_, _, tuned, token) =
+            r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        let degraded = tuned.unwrap();
+        assert_eq!(degraded.group, 4, "level 1 doubles the fused group");
+        assert_eq!((degraded.l, degraded.m), (baseline.l, baseline.m));
+        assert!(token.is_none(), "degraded dispatches must not feed telemetry");
+        assert_eq!(r.brownout().unwrap().degraded_served(), 1);
+
+        // calm again: the ladder steps down and the tuned pick returns
+        r.note_pressure(Pressure::default());
+        assert_eq!(r.brownout_level(), 0);
+        let (_, _, tuned, _) = r.route_tuned(&req(1000, Variant::Distr), 64, false, 1).unwrap();
+        assert_eq!(tuned.unwrap(), baseline);
+        assert_eq!(r.brownout().unwrap().degraded_served(), 1, "recovered dispatches aren't billed");
+    }
+
+    #[test]
+    fn brownout_bills_whole_batches() {
+        use crate::config::BrownoutCfg;
+        use crate::coordinator::brownout::{Brownout, Pressure};
+
+        let mut r: Router<()> = Router::new()
+            .with_autotuner(fixed_tuner())
+            .with_brownout(Brownout::new(BrownoutCfg::default()));
+        r.add_route(Variant::Distr, 128, ());
+        r.note_pressure(Pressure { queue_depth: 100, ..Default::default() });
+        let batch: Vec<Request> = (0..3).map(|i| req(100 + i, Variant::Distr)).collect();
+        let (_, _, tuned, _) = r.route_batch(&batch, 64, false).unwrap();
+        assert_eq!(tuned.unwrap().group, 4);
+        assert_eq!(r.brownout().unwrap().degraded_served(), 3, "all 3 batch members billed");
+    }
+
+    #[test]
+    fn brownout_saturated_shapes_keep_their_token() {
+        use crate::autotune::{TelemetryCfg, TelemetryRecorder};
+        use crate::config::BrownoutCfg;
+        use crate::coordinator::brownout::{Brownout, Pressure};
+        use crate::simulator::GpuSpec;
+
+        let mut r: Router<()> = Router::new()
+            .with_autotuner(fixed_tuner())
+            .with_telemetry(TelemetryRecorder::in_memory(GpuSpec::RTX4090, TelemetryCfg::default()))
+            .with_brownout(Brownout::new(BrownoutCfg::default()));
+        r.add_route(Variant::Distr, 1024, ());
+        r.note_pressure(Pressure { queue_depth: 100, ..Default::default() });
+        // d=16 cannot sample at all: the ladder has nowhere to go, so
+        // the dispatch serves the tuned pick and stays in the telemetry loop
+        let (_, _, _, token) = r.route_tuned(&req(1000, Variant::Distr), 16, false, 1).unwrap();
+        assert!(token.is_some(), "undegradable shapes still feed telemetry");
+        assert_eq!(r.brownout().unwrap().degraded_served(), 0);
     }
 }

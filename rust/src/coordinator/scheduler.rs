@@ -13,15 +13,51 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::config::AdmissionCfg;
 use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+use crate::obs::trace;
 
+use super::admission::AdmissionGate;
 use super::request::{Priority, Request};
+
+/// Why a request was refused or abandoned (`shed_total{reason}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue-depth bound was hit at admission.
+    QueueFull = 0,
+    /// The concurrency gate was at capacity at admission.
+    Concurrency = 1,
+    /// The per-request deadline budget was already blown at pop.
+    Deadline = 2,
+    /// A KV-cache allocation failed after eviction retry.
+    KvPressure = 3,
+}
+
+impl ShedReason {
+    pub const ALL: [ShedReason; 4] = [
+        ShedReason::QueueFull,
+        ShedReason::Concurrency,
+        ShedReason::Deadline,
+        ShedReason::KvPressure,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Concurrency => "concurrency",
+            ShedReason::Deadline => "deadline",
+            ShedReason::KvPressure => "kv_pressure",
+        }
+    }
+}
 
 /// Optional metric handles (`scheduler_*` in the catalog).
 struct SchedulerObs {
     queue_depth: Gauge,
     completed_total: Counter,
     ttft: Histogram,
+    inflight: Gauge,
+    shed: [Counter; 4],
 }
 
 impl SchedulerObs {
@@ -30,7 +66,18 @@ impl SchedulerObs {
             queue_depth: reg.gauge("scheduler_queue_depth", &[]),
             completed_total: reg.counter("scheduler_completed_total", &[]),
             ttft: reg.histogram("scheduler_ttft", &[]),
+            inflight: reg.gauge("admission_inflight", &[]),
+            shed: [
+                reg.counter("shed_total", &[("reason", "queue_full")]),
+                reg.counter("shed_total", &[("reason", "concurrency")]),
+                reg.counter("shed_total", &[("reason", "deadline")]),
+                reg.counter("shed_total", &[("reason", "kv_pressure")]),
+            ],
         }
+    }
+
+    fn shed_counter(&self, reason: ShedReason) -> &Counter {
+        &self.shed[reason as usize]
     }
 }
 
@@ -39,6 +86,11 @@ pub struct Scheduler {
     batch: VecDeque<Request>,
     starvation_limit: Duration,
     completed: u64,
+    degraded: u64,
+    sheds: u64,
+    admission: Option<AdmissionCfg>,
+    deadline: Duration,
+    gate: Option<AdmissionGate>,
     obs: Option<SchedulerObs>,
 }
 
@@ -49,6 +101,11 @@ impl Scheduler {
             batch: VecDeque::new(),
             starvation_limit,
             completed: 0,
+            degraded: 0,
+            sheds: 0,
+            admission: None,
+            deadline: Duration::ZERO,
+            gate: None,
             obs: None,
         }
     }
@@ -59,9 +116,82 @@ impl Scheduler {
         self
     }
 
+    /// Enable admission control (queue-depth bound, concurrency cap,
+    /// per-request deadline budget) from config. A disabled cfg leaves
+    /// the scheduler unbounded, as before.
+    pub fn with_admission(mut self, cfg: AdmissionCfg) -> Self {
+        if cfg.enable {
+            self.gate = Some(AdmissionGate::new(cfg.max_inflight));
+            self.deadline = Duration::from_millis(cfg.deadline_ms);
+            self.admission = Some(cfg);
+        }
+        self
+    }
+
+    /// The concurrency gate, when admission control is enabled.
+    pub fn gate(&self) -> Option<&AdmissionGate> {
+        self.gate.as_ref()
+    }
+
+    /// Admit `req` into the queue or shed it with an explicit reason.
+    /// Without admission control this always enqueues.
+    pub fn admit(&mut self, req: Request) -> Result<(), ShedReason> {
+        if let Some(cfg) = self.admission {
+            if self.len() >= cfg.max_queue_depth {
+                self.note_shed(ShedReason::QueueFull);
+                return Err(ShedReason::QueueFull);
+            }
+            let acquired = match &self.gate {
+                Some(gate) => {
+                    let ok = gate.try_acquire();
+                    if ok {
+                        if let Some(obs) = &self.obs {
+                            obs.inflight.set(gate.in_flight() as f64);
+                        }
+                    }
+                    ok
+                }
+                None => true,
+            };
+            if !acquired {
+                self.note_shed(ShedReason::Concurrency);
+                return Err(ShedReason::Concurrency);
+            }
+        }
+        self.push(req);
+        Ok(())
+    }
+
+    /// Terminally shed an *admitted* request (deadline blown, KV
+    /// pressure): counts the reason and returns its concurrency slot.
+    /// Exactly one of `shed`/`complete`/`complete_degraded` must be
+    /// called per admitted request.
+    pub fn shed(&mut self, _req: &Request, reason: ShedReason) {
+        self.note_shed(reason);
+        self.release_slot();
+    }
+
+    fn note_shed(&mut self, reason: ShedReason) {
+        self.sheds += 1;
+        let _s = trace::span("robustness", "shed");
+        if let Some(obs) = &self.obs {
+            obs.shed_counter(reason).inc();
+        }
+    }
+
+    fn release_slot(&mut self) {
+        if let Some(gate) = &self.gate {
+            gate.release();
+            if let Some(obs) = &self.obs {
+                obs.inflight.set(gate.in_flight() as f64);
+            }
+        }
+    }
+
     /// Report a request completion at `now`; returns its measured
     /// time-to-first-token (arrival to completion).
     pub fn complete(&mut self, req: &Request, now: Instant) -> Duration {
+        self.release_slot();
         self.completed += 1;
         let ttft = now.saturating_duration_since(req.arrived);
         if let Some(obs) = &self.obs {
@@ -71,9 +201,41 @@ impl Scheduler {
         ttft
     }
 
-    /// Completions reported so far.
+    /// A completion that was served degraded at a brownout `level`:
+    /// still a completion (TTFT stamps normally), tracked separately
+    /// for the conservation ledger.
+    pub fn complete_degraded(&mut self, req: &Request, now: Instant, _level: usize) -> Duration {
+        self.degraded += 1;
+        self.complete(req, now)
+    }
+
+    /// Completions reported so far (including degraded completions).
     pub fn completed(&self) -> u64 {
         self.completed
+    }
+
+    /// Degraded completions reported so far (subset of `completed`).
+    pub fn degraded_completed(&self) -> u64 {
+        self.degraded
+    }
+
+    /// Requests shed so far, at admission or after.
+    pub fn sheds(&self) -> u64 {
+        self.sheds
+    }
+
+    /// Queued requests that have consumed over half their deadline
+    /// budget — a leading pressure signal for the brownout ladder.
+    pub fn deadline_at_risk(&self, now: Instant) -> usize {
+        if self.admission.is_none() || self.deadline.is_zero() {
+            return 0;
+        }
+        let half = self.deadline / 2;
+        self.interactive
+            .iter()
+            .chain(self.batch.iter())
+            .filter(|r| now.saturating_duration_since(r.arrived) >= half)
+            .count()
     }
 
     pub fn push(&mut self, req: Request) {
@@ -85,12 +247,23 @@ impl Scheduler {
     }
 
     /// Next request to run, honouring priority + anti-starvation aging.
+    /// Under admission control, requests whose deadline budget is
+    /// already blown are shed here — running them would spend a batch
+    /// slot on an answer nobody is waiting for.
     pub fn pop(&mut self, now: Instant) -> Option<Request> {
-        let popped = self.pop_inner(now);
-        if popped.is_some() {
+        loop {
+            let popped = self.pop_inner(now)?;
+            if self.admission.is_some()
+                && !self.deadline.is_zero()
+                && now.saturating_duration_since(popped.arrived) > self.deadline
+            {
+                self.shed(&popped, ShedReason::Deadline);
+                self.sync_gauges();
+                continue;
+            }
             self.sync_gauges();
+            return Some(popped);
         }
-        popped
     }
 
     fn pop_inner(&mut self, now: Instant) -> Option<Request> {
@@ -193,5 +366,128 @@ mod tests {
         s.push(req(1, Priority::Batch));
         s.push(req(2, Priority::Interactive));
         assert_eq!(s.len(), 2);
+    }
+
+    fn admission(depth: usize, inflight: usize, deadline_ms: u64) -> AdmissionCfg {
+        AdmissionCfg {
+            enable: true,
+            max_queue_depth: depth,
+            max_inflight: inflight,
+            deadline_ms,
+        }
+    }
+
+    #[test]
+    fn starved_request_beats_newer_arrivals_and_stamps_ttft() {
+        // regression: `pop` must prefer a starved batch request over a
+        // newer interactive arrival, and `scheduler_ttft` must still
+        // stamp correctly on that starvation path
+        let reg = Registry::new();
+        let mut s = Scheduler::new(Duration::from_millis(10)).with_obs(&reg);
+        let old = req(1, Priority::Batch);
+        let t0 = old.arrived;
+        s.push(old);
+        s.push(req(2, Priority::Interactive));
+        let popped = s.pop(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(popped.id, 1, "starved batch request must run before newer work");
+        let ttft = s.complete(&popped, t0 + Duration::from_millis(15));
+        assert_eq!(ttft, Duration::from_millis(15));
+        let snap = reg.histogram("scheduler_ttft", &[]).snapshot();
+        assert_eq!(snap.count(), 1, "TTFT must stamp on the starvation path");
+        assert!(snap.max() >= Duration::from_millis(12));
+    }
+
+    #[test]
+    fn queue_bound_sheds_at_admission() {
+        let reg = Registry::new();
+        let mut s =
+            Scheduler::new(Duration::from_secs(60)).with_obs(&reg).with_admission(admission(2, 16, 0));
+        assert!(s.admit(req(1, Priority::Interactive)).is_ok());
+        assert!(s.admit(req(2, Priority::Interactive)).is_ok());
+        assert_eq!(s.admit(req(3, Priority::Interactive)), Err(ShedReason::QueueFull));
+        assert_eq!(s.sheds(), 1);
+        assert_eq!(reg.counter("shed_total", &[("reason", "queue_full")]).get(), 1);
+        assert_eq!(s.len(), 2, "the shed request never entered the queue");
+    }
+
+    #[test]
+    fn concurrency_cap_sheds_until_a_terminal_releases() {
+        let reg = Registry::new();
+        let mut s =
+            Scheduler::new(Duration::from_secs(60)).with_obs(&reg).with_admission(admission(64, 2, 0));
+        assert!(s.admit(req(1, Priority::Interactive)).is_ok());
+        assert!(s.admit(req(2, Priority::Interactive)).is_ok());
+        assert_eq!(reg.gauge("admission_inflight", &[]).get(), 2.0);
+        assert_eq!(s.admit(req(3, Priority::Interactive)), Err(ShedReason::Concurrency));
+        assert_eq!(reg.counter("shed_total", &[("reason", "concurrency")]).get(), 1);
+        // completing one admitted request frees a slot
+        let popped = s.pop(Instant::now()).unwrap();
+        s.complete(&popped, popped.arrived + Duration::from_millis(1));
+        assert_eq!(reg.gauge("admission_inflight", &[]).get(), 1.0);
+        assert!(s.admit(req(4, Priority::Interactive)).is_ok());
+        // shedding an admitted request also frees its slot
+        let popped = s.pop(Instant::now()).unwrap();
+        s.shed(&popped, ShedReason::KvPressure);
+        assert_eq!(reg.counter("shed_total", &[("reason", "kv_pressure")]).get(), 1);
+        assert_eq!(s.gate().unwrap().in_flight(), 1);
+    }
+
+    #[test]
+    fn blown_deadlines_shed_on_pop() {
+        let reg = Registry::new();
+        let mut s =
+            Scheduler::new(Duration::from_secs(60)).with_obs(&reg).with_admission(admission(64, 16, 20));
+        let stale = req(1, Priority::Interactive);
+        let t0 = stale.arrived;
+        s.admit(stale).unwrap();
+        let mut fresh = req(2, Priority::Interactive);
+        fresh.arrived = t0 + Duration::from_millis(10);
+        s.admit(fresh).unwrap();
+        // at t0+25ms request 1 blew its 20ms budget: pop sheds it and
+        // hands back request 2, which is only 15ms into its own budget
+        let popped = s.pop(t0 + Duration::from_millis(25)).unwrap();
+        assert_eq!(popped.id, 2);
+        assert_eq!(reg.counter("shed_total", &[("reason", "deadline")]).get(), 1);
+        // the deadline shed released its concurrency slot
+        assert_eq!(s.gate().unwrap().in_flight(), 1);
+        s.complete(&popped, t0 + Duration::from_millis(26));
+        assert_eq!(s.gate().unwrap().in_flight(), 0);
+    }
+
+    #[test]
+    fn deadline_at_risk_counts_queued_over_half_budget() {
+        let mut s = Scheduler::new(Duration::from_secs(60)).with_admission(admission(64, 16, 100));
+        let r = req(1, Priority::Interactive);
+        let t0 = r.arrived;
+        s.admit(r).unwrap();
+        s.admit(req(2, Priority::Batch)).unwrap();
+        assert_eq!(s.deadline_at_risk(t0), 0);
+        assert_eq!(s.deadline_at_risk(t0 + Duration::from_millis(60)), 2);
+        // without a deadline budget the signal is always quiet
+        let mut unbounded = Scheduler::new(Duration::from_secs(60));
+        unbounded.push(req(3, Priority::Interactive));
+        assert_eq!(unbounded.deadline_at_risk(t0 + Duration::from_secs(5)), 0);
+    }
+
+    #[test]
+    fn disabled_admission_cfg_is_unbounded() {
+        let cfg = AdmissionCfg { enable: false, max_queue_depth: 1, max_inflight: 1, deadline_ms: 1 };
+        let mut s = Scheduler::new(Duration::from_secs(60)).with_admission(cfg);
+        for i in 0..8 {
+            assert!(s.admit(req(i, Priority::Interactive)).is_ok());
+        }
+        assert!(s.gate().is_none());
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn degraded_completions_count_in_both_ledgers() {
+        let mut s = Scheduler::new(Duration::from_secs(60)).with_admission(admission(64, 4, 0));
+        s.admit(req(1, Priority::Interactive)).unwrap();
+        let popped = s.pop(Instant::now()).unwrap();
+        s.complete_degraded(&popped, popped.arrived + Duration::from_millis(2), 1);
+        assert_eq!(s.completed(), 1);
+        assert_eq!(s.degraded_completed(), 1);
+        assert_eq!(s.gate().unwrap().in_flight(), 0);
     }
 }

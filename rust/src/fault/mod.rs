@@ -1,0 +1,322 @@
+//! Seeded, deterministic fault injection for the serve path.
+//!
+//! A [`FaultPlan`] names injection sites (KV pool exhaustion, scatter
+//! lane error/slow/stall, worker panic, corrupt persisted JSON on
+//! load) and a seeded schedule for each. Production code consults the
+//! hooks below at its natural failure points; `tests/chaos.rs` installs
+//! plans and asserts the recovery machinery holds its invariants.
+//!
+//! Compiled out by default: without `--features fault-inject` every
+//! hook is an inlined constant (`false`/`None`), [`install`] warns and
+//! arms nothing, and the serve path is bit-identical to a tree without
+//! this module. Schedules are pure functions of `(seed, site, stream,
+//! tick)` — never the wall clock, which the xtask `wallclock` lint
+//! enforces by deliberately leaving `fault/` off its whitelist.
+
+pub mod plan;
+
+pub use plan::{Family, FaultPlan, Site, SitePlan};
+
+use std::collections::BTreeMap;
+
+/// Lane misbehavior selected for one chunk.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LaneFault {
+    /// The chunk fails outright (transfer/compute error).
+    Error,
+    /// The chunk completes, stretched by this factor.
+    Slow(f64),
+    /// The lane hangs; the supervisor's detection timeout trips.
+    Stall,
+}
+
+/// Compute stretch applied by an injected [`LaneFault::Slow`].
+pub const SLOW_STRETCH: f64 = 4.0;
+
+/// Fire counts per site since the last [`install`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    fires: BTreeMap<Site, u64>,
+}
+
+impl FaultStats {
+    pub fn fired(&self, site: Site) -> u64 {
+        self.fires.get(&site).copied().unwrap_or(0)
+    }
+
+    pub fn family_fired(&self, family: Family) -> u64 {
+        Site::ALL
+            .iter()
+            .filter(|s| s.family() == family)
+            .map(|s| self.fired(*s))
+            .sum()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.fires.values().sum()
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+mod armed {
+    use super::{FaultPlan, FaultStats, Site};
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+
+    /// Stateful schedule replay: per-(site, stream) probe ticks, burst
+    /// continuation, and total-fire caps layered over the pure plan.
+    pub(super) struct Injector {
+        plan: FaultPlan,
+        ticks: BTreeMap<(Site, u64), u64>,
+        burst_left: BTreeMap<(Site, u64), u32>,
+        pub(super) stats: FaultStats,
+    }
+
+    impl Injector {
+        pub(super) fn new(plan: FaultPlan) -> Self {
+            Injector {
+                plan,
+                ticks: BTreeMap::new(),
+                burst_left: BTreeMap::new(),
+                stats: FaultStats::default(),
+            }
+        }
+
+        /// One probe of `site` on `stream`; returns whether it fires.
+        /// Probes within a stream are totally ordered by the caller, so
+        /// a stream's fire sequence is deterministic regardless of how
+        /// streams interleave.
+        pub(super) fn probe(&mut self, site: Site, stream: u64) -> bool {
+            let Some(sp) = self.plan.sites.get(&site).copied() else {
+                return false;
+            };
+            if sp.max_fires > 0 && self.stats.fired(site) >= sp.max_fires {
+                return false;
+            }
+            let tick = self.ticks.entry((site, stream)).or_insert(0);
+            let t = *tick;
+            *tick += 1;
+            let burst = self.burst_left.entry((site, stream)).or_insert(0);
+            let fired = if *burst > 0 {
+                *burst -= 1;
+                true
+            } else if self.plan.fires(site, stream, t) {
+                *burst = sp.burst.saturating_sub(1);
+                true
+            } else {
+                false
+            };
+            if fired {
+                *self.stats.fires.entry(site).or_insert(0) += 1;
+            }
+            fired
+        }
+    }
+
+    pub(super) fn cell() -> &'static Mutex<Option<Injector>> {
+        static CELL: OnceLock<Mutex<Option<Injector>>> = OnceLock::new();
+        CELL.get_or_init(|| Mutex::new(None))
+    }
+
+    /// Probe the global injector; inert until a plan is installed.
+    pub(super) fn probe(site: Site, stream: u64) -> bool {
+        let mut guard = cell().lock().unwrap();
+        let Some(inj) = guard.as_mut() else { return false };
+        let fired = inj.probe(site, stream);
+        drop(guard);
+        if fired {
+            crate::obs::registry::global()
+                .counter("fault_injected_total", &[("site", site.as_str())])
+                .inc();
+        }
+        fired
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn burst_continues_and_max_fires_caps() {
+            let plan = FaultPlan::new(3).with_site(Site::KvExhaust, 1_000_000, 3, 4);
+            let mut inj = Injector::new(plan);
+            let fires: Vec<bool> = (0..8).map(|_| inj.probe(Site::KvExhaust, 0)).collect();
+            // rate 100% but capped at 4 total fires
+            assert_eq!(fires, [true, true, true, true, false, false, false, false]);
+            assert_eq!(inj.stats.fired(Site::KvExhaust), 4);
+        }
+
+        #[test]
+        fn burst_rides_on_seeded_fires() {
+            // low base rate, burst 2: every seeded fire is followed by
+            // exactly one forced continuation on the same stream
+            let plan = FaultPlan::new(11).with_site(Site::LaneError, 150_000, 2, 0);
+            let mut inj = Injector::new(plan.clone());
+            let fires: Vec<bool> = (0..256).map(|_| inj.probe(Site::LaneError, 5)).collect();
+            let mut i = 0;
+            let mut seeded = 0;
+            while i < fires.len() {
+                if fires[i] {
+                    seeded += 1;
+                    assert!(
+                        i + 1 >= fires.len() || fires[i + 1],
+                        "fire at {i} lacked its burst continuation"
+                    );
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            assert!(seeded > 0, "seed 11 at 15% should fire within 256 probes");
+            assert_eq!(inj.stats.fired(Site::LaneError), fires.iter().filter(|f| **f).count() as u64);
+        }
+
+        #[test]
+        fn unplanned_sites_stay_silent() {
+            let plan = FaultPlan::new(1).with_site(Site::LaneError, 1_000_000, 1, 0);
+            let mut inj = Injector::new(plan);
+            assert!((0..32).all(|_| !inj.probe(Site::WorkerPanic, 0)));
+        }
+    }
+}
+
+/// Arm the global injector with `plan`. Returns `true` when armed;
+/// without the `fault-inject` feature this warns and returns `false`.
+#[cfg(feature = "fault-inject")]
+pub fn install(plan: FaultPlan) -> bool {
+    *armed::cell().lock().unwrap() = Some(armed::Injector::new(plan));
+    true
+}
+
+/// Arm the global injector with `plan`. Returns `true` when armed;
+/// without the `fault-inject` feature this warns and returns `false`.
+#[cfg(not(feature = "fault-inject"))]
+pub fn install(_plan: FaultPlan) -> bool {
+    log::warn!("fault: install ignored — build with `--features fault-inject` to arm hooks");
+    false
+}
+
+/// Disarm and drop all injection state.
+#[cfg(feature = "fault-inject")]
+pub fn clear() {
+    *armed::cell().lock().unwrap() = None;
+}
+
+/// Disarm and drop all injection state.
+#[cfg(not(feature = "fault-inject"))]
+pub fn clear() {}
+
+/// True when a plan is installed and hooks can fire.
+#[cfg(feature = "fault-inject")]
+pub fn active() -> bool {
+    armed::cell().lock().unwrap().is_some()
+}
+
+/// True when a plan is installed and hooks can fire.
+#[cfg(not(feature = "fault-inject"))]
+pub fn active() -> bool {
+    false
+}
+
+/// Fire counts per site since the last [`install`].
+#[cfg(feature = "fault-inject")]
+pub fn stats() -> FaultStats {
+    armed::cell().lock().unwrap().as_ref().map(|inj| inj.stats.clone()).unwrap_or_default()
+}
+
+/// Fire counts per site since the last [`install`].
+#[cfg(not(feature = "fault-inject"))]
+pub fn stats() -> FaultStats {
+    FaultStats::default()
+}
+
+/// Should this KV block allocation report the pool exhausted?
+#[cfg(feature = "fault-inject")]
+pub fn kv_exhaust() -> bool {
+    armed::probe(Site::KvExhaust, 0)
+}
+
+/// Should this KV block allocation report the pool exhausted?
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn kv_exhaust() -> bool {
+    false
+}
+
+/// Lane misbehavior for the next chunk on `device`, if any. Error wins
+/// over stall wins over slow when several fire on the same probe; all
+/// three sites tick so their schedules stay independent.
+#[cfg(feature = "fault-inject")]
+pub fn lane_fault(device: usize) -> Option<LaneFault> {
+    let stream = device as u64;
+    let error = armed::probe(Site::LaneError, stream);
+    let stall = armed::probe(Site::LaneStall, stream);
+    let slow = armed::probe(Site::LaneSlow, stream);
+    if error {
+        Some(LaneFault::Error)
+    } else if stall {
+        Some(LaneFault::Stall)
+    } else if slow {
+        Some(LaneFault::Slow(SLOW_STRETCH))
+    } else {
+        None
+    }
+}
+
+/// Lane misbehavior for the next chunk on `device`, if any.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn lane_fault(_device: usize) -> Option<LaneFault> {
+    None
+}
+
+/// Should this device worker panic mid-chunk?
+#[cfg(feature = "fault-inject")]
+pub fn worker_panic(device: usize) -> bool {
+    armed::probe(Site::WorkerPanic, device as u64)
+}
+
+/// Should this device worker panic mid-chunk?
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn worker_panic(_device: usize) -> bool {
+    false
+}
+
+/// Mangle the tuning-cache text as if the file were corrupt on disk.
+/// Returns whether corruption was injected.
+#[cfg(feature = "fault-inject")]
+pub fn corrupt_tuning_json(text: &mut String) -> bool {
+    if armed::probe(Site::TuningCacheCorrupt, 0) {
+        let keep = text.len() / 2;
+        text.truncate(keep);
+        text.push_str("\u{0}garbage{{{");
+        true
+    } else {
+        false
+    }
+}
+
+/// Mangle the tuning-cache text as if the file were corrupt on disk.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn corrupt_tuning_json(_text: &mut String) -> bool {
+    false
+}
+
+/// Should this telemetry-state load behave as if the persisted JSON
+/// failed to parse? (The telemetry loader reads inside a schema-fenced
+/// region, so the fault is injected at the load boundary rather than by
+/// mangling the text mid-parse — the recovery path is identical.)
+#[cfg(feature = "fault-inject")]
+pub fn corrupt_telemetry_load() -> bool {
+    armed::probe(Site::TelemetryCorrupt, 0)
+}
+
+/// Should this telemetry-state load behave as if the persisted JSON
+/// failed to parse?
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn corrupt_telemetry_load() -> bool {
+    false
+}

@@ -1,0 +1,304 @@
+//! Fault-plan schema: which injection sites fire, how often, and on
+//! what seeded schedule.
+//!
+//! A plan is a pure description — `FaultPlan::fires(site, tick)` is a
+//! deterministic function of `(seed, site, tick)` and nothing else.
+//! Burst continuation and total-fire caps are stateful and live in the
+//! armed runtime (`fault::Injector`), not here, so the same plan can be
+//! replayed against any probe stream. No wall-clock anywhere: `fault/`
+//! is deliberately absent from the xtask wallclock whitelist.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One injection-point family the serve path consults.
+///
+/// The chaos contract groups these into four families: KV pressure
+/// (`KvExhaust`), lane misbehavior (`LaneError`/`LaneSlow`/`LaneStall`),
+/// worker panics (`WorkerPanic`), and corrupt persisted JSON on load
+/// (`TuningCacheCorrupt`/`TelemetryCorrupt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Site {
+    /// `KvCache` block pop reports the pool exhausted.
+    KvExhaust,
+    /// A scatter lane fails a chunk outright.
+    LaneError,
+    /// A scatter lane computes correctly but stretched in time.
+    LaneSlow,
+    /// A scatter lane hangs past its detection timeout.
+    LaneStall,
+    /// A device worker panics mid-chunk.
+    WorkerPanic,
+    /// The persisted tuning cache is mangled before parsing.
+    TuningCacheCorrupt,
+    /// The persisted telemetry state fails to parse on load.
+    TelemetryCorrupt,
+}
+
+/// The four injection-point families asserted by `tests/chaos.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Kv,
+    Lane,
+    Panic,
+    CorruptJson,
+}
+
+impl Site {
+    pub const ALL: [Site; 7] = [
+        Site::KvExhaust,
+        Site::LaneError,
+        Site::LaneSlow,
+        Site::LaneStall,
+        Site::WorkerPanic,
+        Site::TuningCacheCorrupt,
+        Site::TelemetryCorrupt,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Site::KvExhaust => "kv_exhaust",
+            Site::LaneError => "lane_error",
+            Site::LaneSlow => "lane_slow",
+            Site::LaneStall => "lane_stall",
+            Site::WorkerPanic => "worker_panic",
+            Site::TuningCacheCorrupt => "tuning_cache_corrupt",
+            Site::TelemetryCorrupt => "telemetry_corrupt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|site| site.as_str() == s)
+    }
+
+    pub fn family(&self) -> Family {
+        match self {
+            Site::KvExhaust => Family::Kv,
+            Site::LaneError | Site::LaneSlow | Site::LaneStall => Family::Lane,
+            Site::WorkerPanic => Family::Panic,
+            Site::TuningCacheCorrupt | Site::TelemetryCorrupt => Family::CorruptJson,
+        }
+    }
+
+    /// Stable small integer mixed into the firing hash.
+    fn id(&self) -> u64 {
+        match self {
+            Site::KvExhaust => 1,
+            Site::LaneError => 2,
+            Site::LaneSlow => 3,
+            Site::LaneStall => 4,
+            Site::WorkerPanic => 5,
+            Site::TuningCacheCorrupt => 6,
+            Site::TelemetryCorrupt => 7,
+        }
+    }
+}
+
+/// Seeded firing schedule for one site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SitePlan {
+    /// Fires per million probes (0 = never, 1_000_000 = every probe).
+    pub rate_ppm: u32,
+    /// Once fired, the next `burst - 1` probes of the same stream fire
+    /// too (models correlated failures; 1 = independent fires).
+    pub burst: u32,
+    /// Cap on total fires across all streams (0 = unlimited).
+    pub max_fires: u64,
+}
+
+impl Default for SitePlan {
+    fn default() -> Self {
+        SitePlan { rate_ppm: 0, burst: 1, max_fires: 0 }
+    }
+}
+
+/// The full plan: a seed plus per-site schedules.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub sites: BTreeMap<Site, SitePlan>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, sites: BTreeMap::new() }
+    }
+
+    /// Builder: schedule `site` at `rate_ppm` with the given burst
+    /// length and total-fire cap (0 = unlimited).
+    pub fn with_site(mut self, site: Site, rate_ppm: u32, burst: u32, max_fires: u64) -> Self {
+        self.sites
+            .insert(site, SitePlan { rate_ppm, burst: burst.max(1), max_fires });
+        self
+    }
+
+    /// True when no site can ever fire.
+    pub fn is_empty(&self) -> bool {
+        self.sites.values().all(|s| s.rate_ppm == 0)
+    }
+
+    /// Does `site` fire on the `tick`-th probe of `stream`? Pure in
+    /// `(seed, site, stream, tick)`; burst/max_fires are applied by the
+    /// armed runtime on top of this base schedule.
+    pub fn fires(&self, site: Site, stream: u64, tick: u64) -> bool {
+        let Some(sp) = self.sites.get(&site) else { return false };
+        if sp.rate_ppm == 0 {
+            return false;
+        }
+        if sp.rate_ppm >= 1_000_000 {
+            return true;
+        }
+        let mix = self.seed
+            ^ site.id().wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ stream.wrapping_mul(0xd6e8_feb8_6659_fd93)
+            ^ tick.wrapping_mul(0x2545_f491_4f6c_dd1d);
+        let mut rng = Rng::seed_from_u64(mix);
+        (rng.next_u64() % 1_000_000) < u64::from(sp.rate_ppm)
+    }
+
+    // schema:begin fault-plan v1
+    // {"seed": <u64>, "sites": {"<site>": {"rate_ppm": <u32>,
+    //  "burst": <u32>, "max_fires": <u64>}, ...}}
+    pub fn to_json(&self) -> Value {
+        let mut sites = std::collections::BTreeMap::new();
+        for (site, sp) in &self.sites {
+            sites.insert(
+                site.as_str().to_string(),
+                Value::object(vec![
+                    ("rate_ppm", Value::number(f64::from(sp.rate_ppm))),
+                    ("burst", Value::number(f64::from(sp.burst))),
+                    ("max_fires", Value::number(sp.max_fires as f64)),
+                ]),
+            );
+        }
+        Value::object(vec![
+            ("seed", Value::number(self.seed as f64)),
+            ("sites", Value::Object(sites)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let seed = v.req_usize("seed").context("fault plan")? as u64;
+        let mut plan = FaultPlan::new(seed);
+        if let Some(sites) = v.get("sites") {
+            let map = sites
+                .as_object()
+                .ok_or_else(|| anyhow!("fault plan `sites` must be an object"))?;
+            for (name, sv) in map {
+                let site = Site::parse(name)
+                    .ok_or_else(|| anyhow!("unknown fault site `{name}`"))?;
+                let d = SitePlan::default();
+                let rate_ppm = match sv.get("rate_ppm") {
+                    Some(r) => r
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("`{name}.rate_ppm` must be a number"))?
+                        as u32,
+                    None => d.rate_ppm,
+                };
+                let burst = match sv.get("burst") {
+                    Some(b) => b
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("`{name}.burst` must be a number"))?
+                        as u32,
+                    None => d.burst,
+                };
+                let max_fires = match sv.get("max_fires") {
+                    Some(m) => m
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("`{name}.max_fires` must be a number"))?
+                        as u64,
+                    None => d.max_fires,
+                };
+                plan = plan.with_site(site, rate_ppm, burst, max_fires);
+            }
+        }
+        Ok(plan)
+    }
+    // schema:end fault-plan
+
+    /// Parse a `FAULT_PLAN` spec: inline JSON when it starts with `{`,
+    /// otherwise a path to a JSON file.
+    pub fn from_spec(spec: &str) -> anyhow::Result<Self> {
+        let text = if spec.trim_start().starts_with('{') {
+            spec.to_string()
+        } else {
+            std::fs::read_to_string(spec)
+                .with_context(|| format!("reading fault plan {spec}"))?
+        };
+        let v = Value::parse(&text).map_err(|e| anyhow!("fault plan: {e}"))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_rate_shaped() {
+        let plan = FaultPlan::new(42).with_site(Site::KvExhaust, 250_000, 1, 0);
+        let a: Vec<bool> = (0..512).map(|t| plan.fires(Site::KvExhaust, 0, t)).collect();
+        let b: Vec<bool> = (0..512).map(|t| plan.fires(Site::KvExhaust, 0, t)).collect();
+        assert_eq!(a, b, "same (seed, site, stream, tick) must replay identically");
+        let fired = a.iter().filter(|f| **f).count();
+        // 25% nominal over 512 probes; generous band, deterministic seed
+        assert!((64..=192).contains(&fired), "fired {fired}/512 at 250k ppm");
+        // unconfigured sites never fire
+        assert!((0..512).all(|t| !plan.fires(Site::LaneError, 0, t)));
+    }
+
+    #[test]
+    fn streams_and_seeds_decorrelate() {
+        let plan = FaultPlan::new(7).with_site(Site::LaneError, 500_000, 1, 0);
+        let s0: Vec<bool> = (0..256).map(|t| plan.fires(Site::LaneError, 0, t)).collect();
+        let s1: Vec<bool> = (0..256).map(|t| plan.fires(Site::LaneError, 1, t)).collect();
+        assert_ne!(s0, s1, "per-stream schedules must differ");
+        let other = FaultPlan::new(8).with_site(Site::LaneError, 500_000, 1, 0);
+        let o0: Vec<bool> = (0..256).map(|t| other.fires(Site::LaneError, 0, t)).collect();
+        assert_ne!(s0, o0, "per-seed schedules must differ");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let plan = FaultPlan::new(1)
+            .with_site(Site::WorkerPanic, 1_000_000, 1, 0)
+            .with_site(Site::LaneStall, 0, 1, 0);
+        assert!((0..64).all(|t| plan.fires(Site::WorkerPanic, 3, t)));
+        assert!((0..64).all(|t| !plan.fires(Site::LaneStall, 3, t)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let plan = FaultPlan::new(99)
+            .with_site(Site::KvExhaust, 120_000, 2, 0)
+            .with_site(Site::TuningCacheCorrupt, 1_000_000, 1, 1);
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn spec_parses_inline_json_and_rejects_unknown_sites() {
+        let plan = FaultPlan::from_spec(
+            r#"{"seed": 5, "sites": {"lane_error": {"rate_ppm": 1000}}}"#,
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 5);
+        assert_eq!(
+            plan.sites.get(&Site::LaneError),
+            Some(&SitePlan { rate_ppm: 1000, burst: 1, max_fires: 0 })
+        );
+        assert!(FaultPlan::from_spec(r#"{"seed": 5, "sites": {"nope": {}}}"#).is_err());
+    }
+
+    #[test]
+    fn site_names_roundtrip() {
+        for site in Site::ALL {
+            assert_eq!(Site::parse(site.as_str()), Some(site));
+        }
+        assert_eq!(Site::parse("bogus"), None);
+    }
+}

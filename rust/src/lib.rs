@@ -29,6 +29,7 @@ pub mod autotune;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;

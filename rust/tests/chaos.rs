@@ -1,0 +1,424 @@
+//! Chaos suite: seeded fault plans versus the serve path's recovery
+//! machinery (`--features fault-inject`).
+//!
+//! Each seeded run arms a [`FaultPlan`] covering all four injection
+//! families — KV pool exhaustion, scatter-lane misbehavior, worker
+//! panics, corrupt persisted JSON — and asserts the conservation
+//! invariants the robustness layer guarantees:
+//!
+//! 1. every admitted request terminates exactly once, as completed,
+//!    degraded-completed, or shed;
+//! 2. no KV blocks leak — the pool is whole once the traffic drains,
+//!    even though allocations failed mid-sequence;
+//! 3. scatter billing is exact — every head is billed on exactly one
+//!    lane or counted lost, and a lane that never completed a chunk is
+//!    never billed;
+//! 4. corrupt persisted state is contained at the load boundary — the
+//!    process starts fresh instead of crashing.
+//!
+//! A faults-disabled control run closes the file: zero sheds, zero
+//! degradations, and bit-identical serve output whether or not the
+//! robustness machinery (admission control + brownout ladder) is wired
+//! in at all.
+#![cfg(feature = "fault-inject")]
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use distr_attention::attention::{Engine, Variant};
+use distr_attention::autotune::{
+    Autotuner, BucketPolicy, DevicePool, TelemetryCfg, TelemetryRecorder, TuneKey, TunedParams,
+    TuningCache,
+};
+use distr_attention::config::{AdmissionCfg, AutotuneCfg, BrownoutCfg, SupervisorCfg};
+use distr_attention::coordinator::{
+    run_scatter_supervised, Brownout, KvCache, LaneSupervisor, Pressure, Request, Router,
+    ScatterPlan, Scheduler, ShedReason,
+};
+use distr_attention::fault::{self, Family, FaultPlan, Site};
+use distr_attention::simulator::GpuSpec;
+use distr_attention::tensor::Matrix;
+use distr_attention::util::rng::Rng;
+use distr_attention::util::testing::TempDir;
+
+/// Head dim of the chaos model: d=64 leaves the brownout ladder exactly
+/// one legal rung (G* 2 -> 4) under the deterministic disabled-tuner
+/// defaults, so degraded completions are observable but bounded.
+const D: usize = 64;
+/// Tokens per request (also the route bucket).
+const N: usize = 128;
+/// Prefilled K/V rows registered per request.
+const PROMPT: usize = 32;
+
+/// The injector is process-global state: every test serializes on this
+/// lock so plans never bleed across tests.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Injected worker panics are expected and contained by the supervisor;
+/// keep their backtraces out of the test output while leaving real
+/// panics (assertion failures) fully reported.
+fn quiet_injected_panics() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains("injected"))
+                .or_else(|| info.payload().downcast_ref::<&str>().map(|s| s.contains("injected")))
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A tuner whose picks are the deterministic legacy defaults: disabled
+/// tuners skip the analytic search entirely, so both the faulted and
+/// control runs serve the same baseline G* and the output comparison is
+/// about the serve path, not the cost model.
+fn fixed_tuner() -> Autotuner {
+    Autotuner::new(GpuSpec::RTX4090, AutotuneCfg { enable: false, ..Default::default() })
+}
+
+fn qkv(id: u64, salt: u64) -> Matrix {
+    let mut m = Matrix::zeros(N, D);
+    let mut rng = Rng::seed_from_u64(id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ salt);
+    for r in 0..N {
+        for c in 0..D {
+            *m.at_mut(r, c) = rng.gen_f32();
+        }
+    }
+    m
+}
+
+/// What one serve run did, for the conservation ledger.
+#[derive(Debug)]
+struct ServeRun {
+    admitted: u64,
+    completed: u64,
+    degraded: u64,
+    sheds: u64,
+    kv_failures: u64,
+    /// concatenated attention outputs of every completed request, in
+    /// service order — the bit-identical comparison payload
+    output: Vec<f32>,
+}
+
+/// A miniature serve loop over real engines: admission -> scheduler ->
+/// brownout-aware tuned routing -> attention -> KV register/release.
+/// With `robust` false the request stream takes the plain unbounded
+/// path (no admission gate, no brownout ladder) — the control run's
+/// "non-instrumented" baseline.
+fn run_serve(seed: u64, requests: u64, robust: bool) -> ServeRun {
+    let mut router: Router<Engine> = Router::new().with_autotuner(fixed_tuner());
+    if robust {
+        router = router.with_brownout(Brownout::new(BrownoutCfg {
+            // queue depth alone must not trip the ladder: the control
+            // run fills the queue too, and it must stay at level 0. A
+            // single injected KV allocation failure is the hot signal.
+            queue_high: 1_000_000,
+            queue_low: 1_000,
+            kv_failure_step: 1,
+            recover_after: 4,
+            ..Default::default()
+        }));
+    }
+    router.add_route(Variant::Distr, N, Engine::new(Variant::Distr).causal(true));
+
+    let mut sched = Scheduler::new(Duration::from_millis(50));
+    if robust {
+        sched = sched.with_admission(AdmissionCfg {
+            enable: true,
+            max_queue_depth: 64,
+            max_inflight: 64,
+            deadline_ms: 0,
+        });
+    }
+
+    let mut cache = KvCache::new(8, 16, D);
+    // terminal-event count per request id: the conservation invariant
+    // is that every admitted id ends at exactly 1
+    let mut terminals: HashMap<u64, u32> = HashMap::new();
+    let mut admitted = 0u64;
+    let mut kv_failures = 0u64;
+    let mut output = Vec::new();
+
+    for i in 0..requests {
+        let req = Request::new(i, vec![7; N], Variant::Distr);
+        if robust {
+            match sched.admit(req) {
+                Ok(()) => admitted += 1,
+                Err(_) => {
+                    *terminals.entry(i).or_insert(0) += 1;
+                }
+            }
+        } else {
+            sched.push(req);
+            admitted += 1;
+        }
+    }
+
+    while let Some(req) = sched.pop(Instant::now()) {
+        if robust {
+            router.note_pressure(Pressure {
+                queue_depth: sched.len(),
+                kv_alloc_failures: kv_failures,
+                deadline_at_risk: sched.deadline_at_risk(Instant::now()),
+            });
+        }
+        let (engine, _key, tuned, _token) =
+            router.route_tuned(&req, D, true, 1).expect("route exists");
+        let engine = match &tuned {
+            Some(p) => Engine::tuned(req.variant, p).causal(true),
+            None => engine.clone(),
+        };
+        let q = qkv(req.id, seed ^ 1);
+        let k = qkv(req.id, seed ^ 2);
+        let v = qkv(req.id, seed ^ 3);
+        let out = engine.run(&q, &k, &v);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+
+        match cache.register(req.id, &k.data[..PROMPT * D], &v.data[..PROMPT * D]) {
+            Ok(()) => {
+                cache.release(req.id).expect("registered sequence releases");
+                output.extend_from_slice(&out.data);
+                let level = router.last_degraded();
+                if level > 0 {
+                    sched.complete_degraded(&req, Instant::now(), level);
+                } else {
+                    sched.complete(&req, Instant::now());
+                }
+                *terminals.entry(req.id).or_insert(0) += 1;
+            }
+            Err(_) => {
+                kv_failures += 1;
+                sched.shed(&req, ShedReason::KvPressure);
+                *terminals.entry(req.id).or_insert(0) += 1;
+            }
+        }
+    }
+
+    // invariant 1: every request terminated exactly once
+    assert_eq!(terminals.len() as u64, requests, "every request must reach a terminal state");
+    for (id, count) in &terminals {
+        assert_eq!(*count, 1, "request {id} terminated {count} times");
+    }
+    // invariant 2: the KV pool is whole — failed registrations rolled
+    // back, successful ones released
+    assert_eq!(cache.num_free(), cache.num_blocks(), "leaked KV blocks");
+    // the scheduler's own ledger agrees with ours
+    assert_eq!(admitted, sched.completed() + sched.sheds() - (requests - admitted));
+    if let Some(gate) = sched.gate() {
+        assert_eq!(gate.in_flight(), 0, "concurrency slots must all be returned");
+    }
+
+    ServeRun {
+        admitted,
+        completed: sched.completed(),
+        degraded: sched.degraded_completed(),
+        sheds: sched.sheds(),
+        kv_failures,
+        output,
+    }
+}
+
+fn scatter_plan() -> ScatterPlan {
+    ScatterPlan {
+        heads: 12,
+        chunk_heads: 2,
+        n: 128,
+        d: 32,
+        variant: Variant::Flash2,
+        group: 1,
+        block_l: 32,
+        block_m: 32,
+    }
+}
+
+fn sup_cfg() -> SupervisorCfg {
+    SupervisorCfg { retry_limit: 2, backoff_us: 0, quarantine_after: 2, probation_rounds: 1 }
+}
+
+/// Run supervised scatters under the installed plan until the lane and
+/// panic families have both fired, asserting head/chunk conservation on
+/// every round.
+fn chaos_scatter(seed: u64) {
+    let plan = scatter_plan();
+    let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40, GpuSpec::RTX4090]);
+    let mut sup = LaneSupervisor::new(sup_cfg(), pool.num_devices());
+    for round in 0..40u64 {
+        let (_, r, sv) = run_scatter_supervised(
+            &plan,
+            &mut pool,
+            &mut sup,
+            true,
+            seed.wrapping_add(round),
+        );
+        // invariant 3: heads/chunks billed exactly once or counted lost
+        assert_eq!(
+            r.per_device_heads.iter().sum::<usize>() as u64 + sv.lost_heads,
+            plan.heads as u64,
+            "heads billed + lost must cover the plan"
+        );
+        assert_eq!(r.heads as u64 + sv.lost_heads, plan.heads as u64);
+        assert_eq!(
+            r.per_device_chunks.iter().sum::<usize>() as u64 + sv.lost_chunks,
+            plan.num_chunks() as u64,
+            "chunks completed + lost must cover the plan"
+        );
+        let st = fault::stats();
+        if st.family_fired(Family::Lane) > 0 && st.family_fired(Family::Panic) > 0 {
+            return;
+        }
+    }
+    panic!("lane/panic sites never fired within 40 scatter rounds");
+}
+
+/// Exercise both corrupt-JSON sites against valid files on disk: the
+/// injected corruption must surface as a contained load failure, the
+/// recovery path must start fresh, and once the plan's fire caps are
+/// exhausted the very same files load cleanly.
+fn chaos_corrupt_json() {
+    let dir = TempDir::new().unwrap();
+    let cache_path = dir.path().join("tuning.json");
+    let key = TuneKey::for_shape(Variant::Distr, 1024, D, false, 4, BucketPolicy::Pow2);
+    let params = TunedParams { l: 128, m: 64, group: 2, sample_rate: 0.5 };
+    let mut tc = TuningCache::new("RTX 4090");
+    tc.insert(key, params);
+    tc.save(&cache_path).unwrap();
+
+    let tel_path = dir.path().join("telemetry.json").to_string_lossy().into_owned();
+    let mut rec = TelemetryRecorder::new(GpuSpec::RTX4090, TelemetryCfg::default(), tel_path.clone());
+    rec.select(key, params);
+    rec.save().unwrap();
+
+    // invariant 4a: corruption surfaces as an error, never a panic
+    assert!(
+        TuningCache::load(&cache_path).is_err(),
+        "injected tuning-cache corruption must surface as a load error"
+    );
+    // invariant 4b: the telemetry recorder recovers by starting fresh
+    let fresh = TelemetryRecorder::new(GpuSpec::RTX4090, TelemetryCfg::default(), tel_path.clone());
+    assert_eq!(fresh.len(), 0, "corrupt telemetry state must be dropped, not served");
+    // both sites were capped at one fire: the same files now load clean
+    assert_eq!(TuningCache::load(&cache_path).unwrap().len(), 1);
+    let reloaded = TelemetryRecorder::new(GpuSpec::RTX4090, TelemetryCfg::default(), tel_path);
+    assert_eq!(reloaded.len(), 1, "with fires exhausted the valid state loads");
+}
+
+/// One full chaos pass under `seed`: all four families armed, all four
+/// exercised, every invariant asserted.
+fn chaos_pass(seed: u64) {
+    let _g = serial();
+    quiet_injected_panics();
+    let plan = FaultPlan::new(seed)
+        .with_site(Site::KvExhaust, 250_000, 1, 0)
+        .with_site(Site::LaneError, 250_000, 1, 0)
+        .with_site(Site::LaneSlow, 150_000, 1, 0)
+        .with_site(Site::LaneStall, 100_000, 1, 0)
+        .with_site(Site::WorkerPanic, 200_000, 2, 0)
+        .with_site(Site::TuningCacheCorrupt, 1_000_000, 1, 1)
+        .with_site(Site::TelemetryCorrupt, 1_000_000, 1, 1);
+    assert!(fault::install(plan), "feature is on, install must arm");
+
+    let run = run_serve(seed, 24, true);
+    assert_eq!(run.admitted, 24, "bounds are generous: admission passes everything");
+    assert!(run.kv_failures > 0, "seeded KV exhaustion must fire during the serve run");
+    assert_eq!(run.sheds, run.kv_failures, "every KV failure sheds exactly once");
+    assert_eq!(run.completed + run.sheds, 24);
+    assert!(
+        run.degraded >= 1,
+        "KV pressure must push the brownout ladder into degraded service"
+    );
+    assert!(run.degraded <= run.completed);
+
+    chaos_scatter(seed);
+    chaos_corrupt_json();
+
+    let st = fault::stats();
+    for family in [Family::Kv, Family::Lane, Family::Panic, Family::CorruptJson] {
+        assert!(
+            st.family_fired(family) > 0,
+            "family {family:?} never fired under seed {seed} (stats: {st:?})"
+        );
+    }
+    fault::clear();
+}
+
+#[test]
+fn chaos_seed_a_holds_all_invariants() {
+    chaos_pass(0xC0FFEE);
+}
+
+#[test]
+fn chaos_seed_b_holds_all_invariants() {
+    chaos_pass(42);
+}
+
+#[test]
+fn chaos_seed_c_holds_all_invariants() {
+    chaos_pass(20_260_808);
+}
+
+#[test]
+fn quarantined_lanes_are_never_billed_heads() {
+    let _g = serial();
+    quiet_injected_panics();
+    // every attempt on every lane fails outright: nothing can ever be
+    // billed, repeat offenders are quarantined (except the last healthy
+    // lane), and every chunk is eventually counted lost — once each
+    fault::install(FaultPlan::new(5).with_site(Site::LaneError, 1_000_000, 1, 0));
+    let plan = scatter_plan();
+    let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40, GpuSpec::RTX4090]);
+    let mut sup = LaneSupervisor::new(sup_cfg(), pool.num_devices());
+    let (_, r, sv) = run_scatter_supervised(&plan, &mut pool, &mut sup, true, 5);
+    for q in sup.quarantined() {
+        assert_eq!(r.per_device_heads[q], 0, "quarantined lane {q} was billed heads");
+        assert_eq!(r.per_device_chunks[q], 0, "quarantined lane {q} was billed chunks");
+    }
+    assert!(sv.quarantines >= 1, "all-faulty lanes must quarantine");
+    assert_eq!(r.heads, 0, "no attempt succeeded, nothing may be billed");
+    assert_eq!(sv.lost_chunks, plan.num_chunks() as u64, "every chunk counted lost exactly once");
+    assert_eq!(sv.lost_heads, plan.heads as u64);
+    assert!(sup.healthy_count() >= 1, "the last healthy lane is never quarantined");
+    fault::clear();
+}
+
+#[test]
+fn control_run_is_clean_and_bit_identical() {
+    let _g = serial();
+    fault::clear();
+
+    // robustness machinery armed, faults disabled: nothing sheds,
+    // nothing degrades
+    let robust = run_serve(7, 24, true);
+    assert_eq!(robust.sheds, 0, "control run must not shed");
+    assert_eq!(robust.degraded, 0, "control run must not degrade");
+    assert_eq!(robust.kv_failures, 0);
+    assert_eq!(robust.completed, 24);
+
+    // and the served output is bit-identical to the plain path with no
+    // admission gate or brownout ladder wired in at all
+    let plain = run_serve(7, 24, false);
+    assert_eq!(plain.sheds, 0);
+    assert_eq!(robust.output.len(), plain.output.len());
+    assert!(
+        robust.output == plain.output,
+        "robustness machinery must be invisible on the happy path"
+    );
+
+    // supervised scatter with no faults is exactly the plain path too
+    let plan = scatter_plan();
+    let mut pool = DevicePool::in_memory(&[GpuSpec::RTX4090, GpuSpec::L40]);
+    let mut sup = LaneSupervisor::new(sup_cfg(), pool.num_devices());
+    let (_, r, sv) = run_scatter_supervised(&plan, &mut pool, &mut sup, true, 7);
+    assert_eq!(r.heads, plan.heads);
+    assert_eq!(sv, Default::default(), "no faults => no recovery actions");
+}

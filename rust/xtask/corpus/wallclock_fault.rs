@@ -1,0 +1,13 @@
+// path: rust/src/fault/schedule.rs
+// expect: wallclock
+//
+// Seeded violation: fault/ is deliberately NOT on the wallclock
+// whitelist. Injection schedules must be pure in (seed, site, stream,
+// tick) so a chaos run replays bit-identically; a schedule that reads
+// the wall clock would make every failure unreproducible.
+
+use std::time::Instant;
+
+pub fn fire_now() -> Instant {
+    Instant::now()
+}

@@ -50,6 +50,11 @@ const ORDERING_WHITELIST: &[&str] = &[
 const ORDERING_EXEMPT: &[&str] = &["rust/src/util/modelcheck.rs"];
 
 /// Modules that legitimately read wall-clock time.
+///
+/// `rust/src/fault/` is deliberately ABSENT: fault schedules must be
+/// pure functions of `(seed, site, stream, tick)` so a chaos run
+/// replays identically — a wall-clock read there is a bug, and the
+/// corpus pins the lint to keep firing on it (`wallclock_fault.rs`).
 const WALLCLOCK_WHITELIST: &[&str] = &[
     "rust/src/util/bench.rs",
     "rust/src/util/logger.rs",
