@@ -1,0 +1,258 @@
+//! Open-loop serve-latency bench: a seeded Poisson arrival trace
+//! replayed against both serving disciplines —
+//!
+//! - **flush**: the legacy batcher path (wait for a size/deadline
+//!   flush, prefill the batch, hold it to the last token before the
+//!   next batch runs);
+//! - **continuous**: the iteration-level loop (`distr_attention::serve`)
+//!   that injects waiting prefills into the in-flight decode batch
+//!   every iteration.
+//!
+//! Open loop means arrivals do not wait for the system: each request's
+//! clock starts at its scheduled offset, so queueing delay lands in
+//! the percentiles instead of being absorbed by a closed-loop driver.
+//! Reports TTFT and inter-token p50/p95/p99 per mode to stdout and to
+//! `BENCH_serve.json` at the repo root (schema-fenced; see
+//! `docs/SERVING.md`).
+
+use std::time::{Duration, Instant};
+
+use distr_attention::attention::{Engine, Variant};
+use distr_attention::autotune::Autotuner;
+use distr_attention::config::{AdmissionCfg, AutotuneCfg, BatcherCfg, ServeCfg};
+use distr_attention::coordinator::{
+    decode_batch, Batcher, DecodeInput, KvCache, Request, Router, Scheduler,
+};
+use distr_attention::metrics::LatencyHistogram;
+use distr_attention::serve::{ContinuousLoop, HashModel, RecvResult, ServeLoadReport, TokenModel};
+use distr_attention::simulator::GpuSpec;
+use distr_attention::util::rng::Rng;
+
+const D: usize = 32;
+const PROMPT: usize = 96;
+const MAX_NEW: usize = 8;
+const MEAN_GAP_US: u64 = 1_500;
+
+/// Seeded Poisson process: exponential inter-arrival gaps, returned as
+/// monotone offsets from the run's t0. The same trace drives both
+/// modes, so the comparison is discipline-only.
+fn poisson_trace(n: usize, mean_gap_us: u64, seed: u64) -> Vec<Duration> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = (rng.gen_f32() as f64).max(1e-9);
+            t += -u.ln() * mean_gap_us as f64;
+            Duration::from_micros(t as u64)
+        })
+        .collect()
+}
+
+struct ModeResult {
+    ttft: LatencyHistogram,
+    inter: LatencyHistogram,
+    completed: u64,
+}
+
+fn request(id: u64, arrived: Instant) -> Request {
+    let mut req = Request::new(id, vec![id as i32 % 97 + 1; PROMPT], Variant::Distr);
+    req.arrived = arrived;
+    req
+}
+
+fn router() -> Router<Engine> {
+    let tuner = Autotuner::new(GpuSpec::RTX4090, AutotuneCfg { enable: false, ..Default::default() });
+    let mut router: Router<Engine> = Router::new().with_autotuner(tuner);
+    router.add_route(Variant::Distr, 128, Engine::new(Variant::Distr).causal(true));
+    router
+}
+
+/// 96 prompt tokens + 7 decode appends = 103 cached tokens -> 7 blocks
+/// of 16 per sequence; size the pool for the whole trace in flight at
+/// once so the bench measures scheduling, not KV pressure.
+fn cache_for(n: usize) -> KvCache {
+    KvCache::new(n * 8, 16, D)
+}
+
+/// The continuous loop under the trace: submit each request at its
+/// offset, step the loop, and stamp every streamed token as it is
+/// observed. TTFT runs from the *scheduled* arrival, inter-token from
+/// the previous observed token of the same request.
+fn run_continuous(trace: &[Duration]) -> ModeResult {
+    let cfg = ServeCfg { max_new_tokens: MAX_NEW, ..Default::default() };
+    let scheduler = Scheduler::new(Duration::from_secs(60)).with_admission(AdmissionCfg {
+        enable: true,
+        max_queue_depth: 4096,
+        max_inflight: 4096,
+        deadline_ms: 0,
+    });
+    let mut serve = ContinuousLoop::new(
+        cfg,
+        HashModel::new(D),
+        router(),
+        scheduler,
+        cache_for(trace.len()),
+    );
+
+    let mut ttft = LatencyHistogram::default();
+    let mut inter = LatencyHistogram::default();
+    let mut completed = 0u64;
+    // (stream, scheduled arrival, last token stamp) per submitted request
+    let mut live = Vec::with_capacity(trace.len());
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while completed < trace.len() as u64 {
+        let now = Instant::now();
+        while next < trace.len() && now.duration_since(t0) >= trace[next] {
+            let arrived = t0 + trace[next];
+            let rx = serve.submit(request(next as u64, arrived)).expect("admission is open");
+            live.push(Some((rx, arrived, None::<Instant>)));
+            next += 1;
+        }
+        serve.step(Instant::now());
+        for slot in live.iter_mut() {
+            let Some((rx, arrived, last)) = slot else { continue };
+            let done = loop {
+                match rx.try_recv() {
+                    RecvResult::Token(_) => {
+                        let stamp = Instant::now();
+                        match last {
+                            None => ttft.record(stamp.duration_since(*arrived)),
+                            Some(prev) => inter.record(stamp.duration_since(*prev)),
+                        }
+                        *last = Some(stamp);
+                    }
+                    RecvResult::Empty => break false,
+                    RecvResult::Finished => {
+                        completed += 1;
+                        break true;
+                    }
+                    RecvResult::Aborted(reason) => {
+                        panic!("bench request aborted ({reason}): pool is sized for the trace")
+                    }
+                }
+            };
+            if done {
+                *slot = None;
+            }
+        }
+    }
+    ModeResult { ttft, inter, completed }
+}
+
+/// The legacy discipline on the same trace: requests wait for a
+/// size-4/5ms batcher flush, the batch prefills together, then holds
+/// the decode loop to its last token before the next flush is served —
+/// no injection mid-decode, which is exactly what the continuous mode
+/// removes.
+fn run_flush(trace: &[Duration]) -> ModeResult {
+    let mut batcher =
+        Batcher::new(BatcherCfg { max_batch: 4, max_wait_us: 5_000 }).with_model(D, true);
+    let mut router = router();
+    let mut cache = cache_for(trace.len());
+    let model = HashModel::new(D);
+
+    let mut ttft = LatencyHistogram::default();
+    let mut inter = LatencyHistogram::default();
+    let mut completed = 0u64;
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while completed < trace.len() as u64 {
+        let now = Instant::now();
+        let mut batches = Vec::new();
+        while next < trace.len() && now.duration_since(t0) >= trace[next] {
+            let req = request(next as u64, t0 + trace[next]);
+            if let Some(b) = batcher.push(req) {
+                batches.push(b);
+            }
+            next += 1;
+        }
+        batches.extend(batcher.poll_deadlines(Instant::now()));
+
+        for (_key, batch) in batches {
+            let (engine, _k, tuned, _t) = router.route_batch(&batch, D, true).expect("route exists");
+            let engine = match &tuned {
+                Some(p) => Engine::tuned(batch[0].variant, p).causal(true),
+                None => engine.clone(),
+            };
+            // prefill the whole flush together; first tokens stamp here
+            let mut members = Vec::with_capacity(batch.len());
+            for req in batch {
+                let n = req.len_bucket();
+                let (q, k, v) = model.prefill(&req, n);
+                std::hint::black_box(engine.run(&q, &k, &v));
+                let prompt = req.tokens.len().min(n);
+                cache
+                    .register(req.id, &k.data[..prompt * D], &v.data[..prompt * D])
+                    .expect("pool is sized for the trace");
+                let stamp = Instant::now();
+                ttft.record(stamp.duration_since(req.arrived));
+                members.push((req.id, stamp));
+            }
+            // decode the batch to the end: arrivals queue outside
+            for step in 1..MAX_NEW {
+                let rows: Vec<_> =
+                    members.iter().map(|(id, _)| model.decode_rows(*id, step)).collect();
+                let inputs: Vec<DecodeInput> = members
+                    .iter()
+                    .zip(&rows)
+                    .map(|((id, _), (q, k, v))| DecodeInput { seq: *id, q_row: q, k_row: k, v_row: v })
+                    .collect();
+                let outs = decode_batch(&mut cache, &inputs);
+                let stamp = Instant::now();
+                for ((_, last), out) in members.iter_mut().zip(&outs) {
+                    std::hint::black_box(out.as_ref().expect("pool is sized for the trace"));
+                    inter.record(stamp.duration_since(*last));
+                    *last = stamp;
+                }
+            }
+            for (id, _) in &members {
+                cache.release(*id).expect("registered sequence releases");
+                completed += 1;
+            }
+        }
+    }
+    ModeResult { ttft, inter, completed }
+}
+
+fn print_mode(mode: &str, metric: &str, h: &LatencyHistogram) {
+    println!(
+        "{mode:>10} {metric:<11} p50 {:>9.1}us  p95 {:>9.1}us  p99 {:>9.1}us  (n={})",
+        h.quantile(0.5).as_secs_f64() * 1e6,
+        h.quantile(0.95).as_secs_f64() * 1e6,
+        h.quantile(0.99).as_secs_f64() * 1e6,
+        h.count(),
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let n = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 16 } else { 64 });
+    let trace = poisson_trace(n, MEAN_GAP_US, 0xA11CE);
+    println!(
+        "serve_load: {n} Poisson arrivals, mean gap {MEAN_GAP_US}us, prompt {PROMPT}, \
+         {MAX_NEW} tokens/request\n"
+    );
+
+    let mut report = ServeLoadReport::new();
+    for (mode, result) in
+        [("flush", run_flush(&trace)), ("continuous", run_continuous(&trace))]
+    {
+        assert_eq!(result.completed, n as u64, "{mode}: every request must be served");
+        print_mode(mode, "ttft", &result.ttft);
+        print_mode(mode, "inter_token", &result.inter);
+        report.record(mode, "ttft", &result.ttft);
+        report.record(mode, "inter_token", &result.inter);
+    }
+    assert!(!report.is_empty(), "both modes served traffic, the report cannot be empty");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    report.write(std::path::Path::new(path)).expect("write BENCH_serve.json");
+    println!("\nwrote {path}");
+}

@@ -1,7 +1,11 @@
 //! End-to-end serving demo on the Rust-native engines: build autotuned
-//! attention engines, push a batched prefill workload through the
-//! scheduler -> batcher -> router pipeline, run a few decode steps per
-//! sequence over the paged KV cache, and report per-variant latency.
+//! attention engines, then drive mixed-length, mixed-variant traffic
+//! through the iteration-level continuous batching loop
+//! (`serve::ContinuousLoop`, see docs/SERVING.md). Arrivals are
+//! staggered so waiting prefills join the *running* decode batch under
+//! the token budgets, every request streams its tokens through a
+//! bounded per-request channel, and one consumer walks away
+//! mid-generation to demo disconnect -> cancel -> KV reclaim.
 //!
 //! Unlike the artifact-backed path this needs no `make artifacts` or
 //! PJRT runtime, so it runs on a fresh checkout:
@@ -10,52 +14,36 @@
 //! cargo run --release --example serve_llm
 //! ```
 //!
-//! The serve loop is telemetry-fed end to end: each flushed batch
-//! resolves *one* tuned engine at its realized size (`route_batch`),
-//! the measured attention latency and TTFT flow back through the
-//! router's timing tokens, and measured winners are promoted into the
-//! tuning cache online. Both the tuning caches and the telemetry state
-//! persist in the system temp dir — a second run resolves every shape
-//! from cache (watch the hit counter) and keeps re-tuning from live
-//! measurements. The final section scatters a multi-head job across a
-//! simulated heterogeneous pool (RTX 4090 + capped L40), comparing
-//! round-robin against the tuning-aware planner, whose shares blend
-//! measured lane throughput fed back from each run.
+//! The serve loop is telemetry-fed end to end: each injected prefill
+//! slice resolves *one* tuned engine at its realized composition
+//! (`route_batch`), TTFT and per-token decode latency flow back through
+//! the router's timing tokens, and measured winners are promoted into
+//! the tuning cache online. Both the tuning caches and the telemetry
+//! state persist in the system temp dir — a second run resolves every
+//! shape from cache (watch the hit counter) and keeps re-tuning from
+//! live measurements. The final section scatters a multi-head job
+//! across a simulated heterogeneous pool (RTX 4090 + capped L40),
+//! comparing round-robin against the tuning-aware planner, whose shares
+//! blend measured lane throughput fed back from each run.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use distr_attention::attention::{Engine, Variant};
-use distr_attention::autotune::{telemetry, Autotuner, BucketPolicy, DevicePool, TelemetryCfg};
+use distr_attention::autotune::{telemetry, Autotuner, DevicePool, TelemetryCfg};
 use distr_attention::config::{Config, PoolDeviceCfg};
 use distr_attention::coordinator::{
-    decode_step, plan_tuned, run_scatter_round_robin, run_scatter_supervised, Batcher, Brownout,
-    KvCache, LaneSupervisor, Pressure, Request, Router, ScatterPlan, Scheduler, ShedReason,
+    plan_tuned, run_scatter_round_robin, run_scatter_supervised, Brownout, KvCache,
+    LaneSupervisor, Request, Router, ScatterPlan, Scheduler,
 };
 use distr_attention::fault::{self, FaultPlan};
-use distr_attention::metrics::{LatencyHistogram, Table};
+use distr_attention::metrics::Table;
 use distr_attention::obs::{self, ShadowProbe};
-use distr_attention::tensor::Matrix;
-use distr_attention::util::rng::Rng;
+use distr_attention::serve::{ContinuousLoop, HashModel, RecvResult, TokenStream};
 use distr_attention::workload::SeqTask;
 
 /// Head dim of the demo model.
 const D: usize = 64;
-
-/// Deterministic token embedding: row r of the (n, d) matrix is a
-/// pseudo-random function of (token, position) — a stand-in for the
-/// model's embedding table that keeps the demo self-contained.
-fn embed(tokens: &[i32], n: usize, salt: u64) -> Matrix {
-    let mut m = Matrix::zeros(n, D);
-    for r in 0..n {
-        let tok = tokens.get(r).copied().unwrap_or(0) as u64;
-        let mut rng = Rng::seed_from_u64(tok.wrapping_mul(0x9E37_79B9).wrapping_add(r as u64) ^ salt);
-        for c in 0..D {
-            *m.at_mut(r, c) = rng.gen_f32();
-        }
-    }
-    m
-}
 
 fn main() -> anyhow::Result<()> {
     distr_attention::util::logger::init();
@@ -76,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     // every serving layer, small enough to finish in seconds
     let smoke = std::env::var("SERVE_SMOKE").is_ok();
     let requests: u64 = if smoke { 8 } else { 24 };
-    let decode_steps: usize = if smoke { 2 } else { 4 };
+    let max_new_tokens: usize = if smoke { 3 } else { 5 };
 
     // OBS_DIR=<dir> turns on span tracing + LSH probes and writes
     // metrics_snapshot.json / trace.json there at shutdown
@@ -127,168 +115,103 @@ fn main() -> anyhow::Result<()> {
     }
     // brownout ladder: under pressure (queue depth, KV alloc failures,
     // deadline risk) dispatches degrade to a coarser G* before the
-    // admission gate sheds anything
-    let mut router = router
+    // admission gate sheds anything — the loop feeds it every iteration
+    let router = router
         .with_autotuner(tuner)
         .with_telemetry(recorder)
         .with_brownout(Brownout::new(cfg.brownout).with_obs(reg.clone()))
         .with_obs(reg.clone());
-    println!("serve_llm: {} routes live ({} shapes preloaded from cache)\n", router.num_routes(), preloaded);
+    println!(
+        "serve_llm: {} routes live ({} shapes preloaded from cache)\n",
+        router.num_routes(),
+        preloaded
+    );
 
-    // synthetic request stream: two prompt-length populations, two
-    // variants, pushed through scheduler + batcher like the real loop
+    // the continuous loop owns the whole serve stack; with_obs wires
+    // the serve_ family plus the scheduler, waiting set, and KV cache
+    // into the one registry (no per-component with_obs needed)
+    let mut serve_cfg = cfg.serve;
+    serve_cfg.max_new_tokens = max_new_tokens;
+    let scheduler = Scheduler::new(Duration::from_millis(50)).with_admission(cfg.admission);
+    let cache = KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D);
+    let mut serve = ContinuousLoop::new(serve_cfg, HashModel::new(D), router, scheduler, cache)
+        .with_obs(&reg)
+        .with_probe(probe);
+
+    // synthetic open-ish traffic: two prompt-length populations, two
+    // variants, a couple of arrivals per iteration so prefills join a
+    // batch that is already decoding (iteration-level injection)
     let short_task = SeqTask::new(512, 96);
     let long_task = SeqTask::new(512, 200);
-    let mut scheduler = Scheduler::new(Duration::from_millis(50))
-        .with_admission(cfg.admission)
-        .with_obs(&reg);
-    for i in 0..requests {
-        let (toks, _) = if i % 3 == 0 { long_task.sample(i) } else { short_task.sample(i) };
-        let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
-        if let Err(reason) = scheduler.admit(Request::new(i, toks, variant)) {
-            log::warn!("admission shed request {i}: {}", reason.as_str());
-        }
-    }
-
-    // batches group by full TuneKey (variant + length bucket + d +
-    // masking + batch bucket): one flushed batch = one tuned config
-    let mut batcher = Batcher::new(cfg.batcher).with_model(D, true).with_obs(&reg);
-    let mut cache =
-        KvCache::new(cfg.kv_cache.num_blocks, cfg.kv_cache.block_tokens, D).with_obs(&reg);
-    let mut prefill_ms: HashMap<Variant, LatencyHistogram> = HashMap::new();
-    let mut decode_us: HashMap<Variant, LatencyHistogram> = HashMap::new();
-    let mut served: HashMap<Variant, u64> = HashMap::new();
-    let inter_token = reg.histogram("serve_inter_token", &[]);
-    let mut tokens_served: u64 = 0;
-
-    let mut run_batch = |router: &mut Router<Engine>,
-                         cache: &mut KvCache,
-                         scheduler: &mut Scheduler,
-                         batch: Vec<Request>|
-     -> anyhow::Result<()> {
-        // flush-side tuning-aware execution: ONE tuned engine per
-        // flushed batch, resolved at the realized batch size (a
-        // deadline flush of 3 tunes as a batch of 3, not max_batch) —
-        // the batcher groups by full tuning key, so the whole batch
-        // legally shares it
-        let (engine, _key, tuned, token) = router.route_batch(&batch, D, true)?;
-        // the whole flush served at this brownout level (0 = tuned G*)
-        let degraded_level = router.last_degraded();
-        let variant = batch[0].variant;
-        let engine = match &tuned {
-            Some(p) => Engine::tuned(variant, p).causal(true),
-            None => engine.clone(),
-        };
-
-        let batch_len = batch.len() as u32;
-        let mut attn_total = Duration::ZERO;
-        for req in batch {
-            let n = req.len_bucket();
-            // prefill at the bucketed length
-            let t0 = Instant::now();
-            let q = embed(&req.tokens, n, 1);
-            let k = embed(&req.tokens, n, 2);
-            let v = embed(&req.tokens, n, 3);
-            let ta = Instant::now();
-            let out = engine.run(&q, &k, &v);
-            attn_total += ta.elapsed();
-            prefill_ms.entry(req.variant).or_default().record(t0.elapsed());
-            assert!(out.data.iter().all(|x| x.is_finite()));
-
-            // shadow-evaluate a sampled fraction of served heads: exact
-            // attention recomputed off the hot path, rel-err per TuneKey
-            if probe.should_sample() {
-                let pkey = token.as_ref().map(|t| t.key).unwrap_or_else(|| {
-                    req.tune_key(D, true, batch_len as usize, BucketPolicy::Pow2)
-                });
-                probe.observe(pkey, &q, &k, &v, true, &out);
-            }
-
-            // KV residency is the request's claim on completion: when
-            // the pool is exhausted even after the parked-LRU eviction
-            // retry, the request sheds under kv_pressure instead of
-            // failing the serve loop
-            let prompt = req.tokens.len().min(n);
-            if let Err(e) = cache.register(req.id, &k.data[..prompt * D], &v.data[..prompt * D]) {
-                log::warn!("kv pressure shed request {}: {e:#}", req.id);
-                scheduler.shed(&req, ShedReason::KvPressure);
-                continue;
-            }
-
-            // the first token exists as soon as the prefill is done —
-            // stamp the TTFT here, before the decode loop, so the
-            // recorder tracks time-to-FIRST-token, not end-to-end
-            // completion latency (degraded service still completes,
-            // tracked separately in the conservation ledger)
-            let now = Instant::now();
-            let ttft = if degraded_level > 0 {
-                scheduler.complete_degraded(&req, now, degraded_level)
-            } else {
-                scheduler.complete(&req, now)
-            };
-            if let Some(token) = &token {
-                router.report_ttft(token, ttft);
-            }
-            let mut rng = Rng::seed_from_u64(req.id ^ 0xDEC0);
-            for _ in 0..decode_steps {
-                let q_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
-                let k_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
-                let v_row: Vec<f32> = (0..D).map(|_| rng.gen_f32()).collect();
-                let t0 = Instant::now();
-                let o = decode_step(cache, req.id, &q_row, &k_row, &v_row)?;
-                let step = t0.elapsed();
-                decode_us.entry(req.variant).or_default().record(step);
-                inter_token.record(step);
-                assert_eq!(o.len(), D);
-            }
-            cache.release(req.id)?;
-            tokens_served += (prompt + decode_steps) as u64;
-            *served.entry(req.variant).or_default() += 1;
-        }
-        // measured ns/call for the batch's tuned config closes the loop
-        // (promotions land in the tuning cache as measured overrides)
-        if let Some(token) = token {
-            router.report(&token, attn_total / batch_len.max(1));
-        }
-        Ok(())
-    };
+    let mut next_id: u64 = 0;
+    let mut active: Vec<(Variant, TokenStream)> = Vec::new();
+    // one consumer disconnects after its first token: dropping the
+    // stream is the cancellation signal, the next iteration frees its
+    // KV blocks and counts serve_aborted_total{reason="disconnect"}
+    let walkaway_id = requests / 2;
+    let mut walkaway: Option<(u64, TokenStream)> = None;
+    let mut by_variant: HashMap<Variant, (u64, u64)> = HashMap::new();
+    let mut aborted_streams: u64 = 0;
 
     let t0 = Instant::now();
-    // one pressure observation per scheduling step feeds the brownout
-    // ladder: queue depth, cumulative KV alloc failures (the ladder
-    // differences them itself), and deadline-at-risk count
-    let kv_failures = reg.counter("kv_alloc_failures_total", &[]);
-    while let Some(req) = scheduler.pop(Instant::now()) {
-        router.note_pressure(Pressure {
-            queue_depth: scheduler.len(),
-            kv_alloc_failures: kv_failures.get(),
-            deadline_at_risk: scheduler.deadline_at_risk(Instant::now()),
-        });
-        if let Some((_key, batch)) = batcher.push(req) {
-            run_batch(&mut router, &mut cache, &mut scheduler, batch)?;
+    while next_id < requests || !serve.is_idle() {
+        for _ in 0..2 {
+            if next_id >= requests {
+                break;
+            }
+            let i = next_id;
+            next_id += 1;
+            let (toks, _) = if i % 3 == 0 { long_task.sample(i) } else { short_task.sample(i) };
+            let variant = if i % 2 == 0 { Variant::Distr } else { Variant::Flash2 };
+            match serve.submit(Request::new(i, toks, variant)) {
+                Ok(rx) if i == walkaway_id => walkaway = Some((i, rx)),
+                Ok(rx) => active.push((variant, rx)),
+                Err(reason) => log::warn!("admission shed request {i}: {}", reason.as_str()),
+            }
         }
-    }
-    for (_key, batch) in batcher.drain() {
-        run_batch(&mut router, &mut cache, &mut scheduler, batch)?;
+        serve.step(Instant::now());
+
+        if let Some((id, rx)) = walkaway.take() {
+            match rx.try_recv() {
+                RecvResult::Token(_) => {
+                    println!("request {id}: consumer walked away after the first token");
+                }
+                RecvResult::Empty => walkaway = Some((id, rx)),
+                RecvResult::Finished | RecvResult::Aborted(_) => {}
+            }
+        }
+        active.retain(|(variant, rx)| loop {
+            match rx.try_recv() {
+                RecvResult::Token(_) => by_variant.entry(*variant).or_default().1 += 1,
+                RecvResult::Empty => return true,
+                RecvResult::Finished => {
+                    by_variant.entry(*variant).or_default().0 += 1;
+                    return false;
+                }
+                RecvResult::Aborted(reason) => {
+                    aborted_streams += 1;
+                    log::warn!("stream aborted: {reason}");
+                    return false;
+                }
+            }
+        });
     }
     let elapsed = t0.elapsed();
 
-    println!("served {requests} requests in {:.2}s\n", elapsed.as_secs_f64());
-    let mut t = Table::new(&["variant", "requests", "prefill p50 (ms)", "prefill mean (ms)", "decode mean (us)"]);
+    let stats = serve.stats();
+    println!(
+        "\nserved {requests} requests in {:.2}s over {} iterations\n",
+        elapsed.as_secs_f64(),
+        stats.iterations
+    );
+    let mut t = Table::new(&["variant", "completed", "tokens streamed"]);
     for variant in [Variant::Flash2, Variant::Distr] {
-        let p = &prefill_ms[&variant];
-        let d = &decode_us[&variant];
-        t.row(&[
-            variant.to_string(),
-            served[&variant].to_string(),
-            format!("{:.2}", p.quantile(0.5).as_secs_f64() * 1e3),
-            format!("{:.2}", p.mean().as_secs_f64() * 1e3),
-            format!("{:.1}", d.mean().as_secs_f64() * 1e6),
-        ]);
+        let (completed, tokens) = by_variant.get(&variant).copied().unwrap_or_default();
+        t.row(&[variant.to_string(), completed.to_string(), tokens.to_string()]);
     }
     print!("{}", t.render());
 
-    let tuner = router.autotuner().expect("tuner attached");
+    let tuner = serve.router().autotuner().expect("tuner attached");
     let s = tuner.stats();
     println!(
         "\nautotune: {} cached shapes ({} hits / {} searches / {} measured overrides this run)",
@@ -297,12 +220,12 @@ fn main() -> anyhow::Result<()> {
         s.searches,
         s.overrides
     );
-    let rec = router.telemetry().expect("telemetry attached");
+    let rec = serve.router().telemetry().expect("telemetry attached");
     println!(
         "telemetry: {} keys under measurement, {} promotions, {} completions reported",
         rec.len(),
         rec.promotions(),
-        scheduler.completed()
+        serve.scheduler().completed()
     );
     // shutdown hook: evidence gathered between promotions survives the
     // restart too (promotions already write through as they happen)
@@ -311,17 +234,36 @@ fn main() -> anyhow::Result<()> {
     }
     println!("tuning cache: {} (rerun to serve entirely from cache)", cfg.autotune.cache_path);
 
-    // one-line serve summary + final observability snapshot (sheds and
-    // degraded completions close the robustness conservation ledger)
+    // shutdown summary: the conservation ledger (completed + aborted +
+    // cancelled + shed covers every admitted request) plus the latency
+    // and occupancy shape of the run
     let ttft = reg.histogram("scheduler_ttft", &[]).snapshot();
+    let inter = serve.inter_token();
     println!(
-        "serve summary: {requests} requests ({} completed, {} degraded, {} shed, brownout level {}), {tokens_served} tokens, ttft p50 {:.2} ms / p99 {:.2} ms, shadow probe mean rel-err {:.4} over {} samples",
-        scheduler.completed(),
-        scheduler.degraded_completed(),
-        scheduler.sheds(),
-        router.brownout_level(),
+        "serve summary: {requests} requests ({} completed, {} degraded, {} shed, {} aborted, {} cancelled, brownout level {}), {} tokens",
+        stats.completed,
+        serve.scheduler().degraded_completed(),
+        serve.scheduler().sheds(),
+        stats.aborted,
+        stats.cancelled,
+        serve.router().brownout_level(),
+        stats.tokens,
+    );
+    println!(
+        "  ttft p50 {:.2} ms / p99 {:.2} ms, inter-token p50 {:.1} us / p99 {:.1} us",
         ttft.quantile(0.5).as_secs_f64() * 1e3,
         ttft.quantile(0.99).as_secs_f64() * 1e3,
+        inter.quantile(0.5).as_secs_f64() * 1e6,
+        inter.quantile(0.99).as_secs_f64() * 1e6,
+    );
+    let probe = serve.probe().expect("probe attached");
+    println!(
+        "  decode-batch occupancy mean {:.1} / max {} ({} backpressure pauses, {} decode retries, {} streams seen aborted), shadow probe mean rel-err {:.4} over {} samples",
+        stats.occupancy_mean(),
+        stats.occupancy_max,
+        stats.backpressured,
+        stats.retried,
+        aborted_streams,
         probe.mean_rel_err(),
         probe.samples(),
     );

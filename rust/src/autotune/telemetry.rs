@@ -46,7 +46,7 @@ use super::{empirical, Autotuner, TunedParams};
 
 /// Bump when the telemetry schema or the meaning of a field changes;
 /// stale files are rejected at load (the evidence is cheap to re-earn).
-pub const TELEMETRY_VERSION: usize = 1;
+pub const TELEMETRY_VERSION: usize = 2;
 
 /// Knobs of the online re-tuning loop.
 #[derive(Clone, Copy, Debug)]
@@ -130,6 +130,9 @@ pub struct KeyTelemetry {
     dispatches: u64,
     /// EWMA of measured time-to-first-token, ns.
     ttft_ns: Ewma,
+    /// EWMA of measured per-token decode latency, ns (fed by the
+    /// continuous serve loop's iteration timer).
+    decode_ns: Ewma,
     promotions: u64,
 }
 
@@ -153,6 +156,12 @@ impl KeyTelemetry {
     /// Measured TTFT estimate, if any completions were reported.
     pub fn ttft(&self) -> Option<Duration> {
         (!self.ttft_ns.is_empty()).then(|| Duration::from_nanos(self.ttft_ns.value() as u64))
+    }
+
+    /// Measured per-token decode latency estimate, if any decode
+    /// iterations were reported.
+    pub fn decode(&self) -> Option<Duration> {
+        (!self.decode_ns.is_empty()).then(|| Duration::from_nanos(self.decode_ns.value() as u64))
     }
 
     fn stats_of(&self, params: &TunedParams) -> Option<&CandidateStats> {
@@ -257,6 +266,7 @@ impl TelemetryRecorder {
                 incumbent,
                 dispatches: 0,
                 ttft_ns: Ewma::new(cfg.alpha),
+                decode_ns: Ewma::new(cfg.alpha),
                 promotions: 0,
             }
         });
@@ -272,6 +282,7 @@ impl TelemetryRecorder {
                 c.ns.decay(cfg.decay);
             }
             kt.ttft_ns.decay(cfg.decay);
+            kt.decode_ns.decay(cfg.decay);
         }
         let explore = cfg.explore_every > 0
             && kt.candidates.len() > 1
@@ -360,6 +371,18 @@ impl TelemetryRecorder {
         }
     }
 
+    /// Fold one measured per-token decode latency for `key` (the
+    /// continuous serve loop reports its iteration time divided by the
+    /// tokens the iteration produced). Like TTFT, unknown keys are
+    /// ignored — decode samples without a dispatch have nothing to
+    /// tune. Closes the PR 5 leftover: until now only prefill ns/call
+    /// and TTFT fed back from serving.
+    pub fn record_decode(&mut self, key: &TuneKey, per_token: Duration) {
+        if let Some(kt) = self.keys.get_mut(key) {
+            kt.decode_ns.observe(per_token.as_nanos() as f64);
+        }
+    }
+
     /// The recorder's current incumbent for `key`, if tracked.
     pub fn incumbent(&self, key: &TuneKey) -> Option<TunedParams> {
         self.keys.get(key).map(|kt| kt.incumbent)
@@ -390,6 +413,7 @@ impl TelemetryRecorder {
                 c.ns.decay(factor);
             }
             kt.ttft_ns.decay(factor);
+            kt.decode_ns.decay(factor);
         }
     }
 
@@ -445,7 +469,7 @@ impl TelemetryRecorder {
         Ok(Ewma::from_parts(value, samples, alpha))
     }
 
-    // schema:begin telemetry v1 const=TELEMETRY_VERSION
+    // schema:begin telemetry v2 const=TELEMETRY_VERSION
     // Changing the serialized layout below requires bumping
     // `TELEMETRY_VERSION` and re-stamping (`cargo xtask analyze --update-stamps`).
     pub fn to_json(&self) -> Value {
@@ -470,6 +494,7 @@ impl TelemetryRecorder {
                         ("dispatches", Value::number(kt.dispatches as f64)),
                         ("promotions", Value::number(kt.promotions as f64)),
                         ("ttft", Self::ewma_json(&kt.ttft_ns)),
+                        ("decode", Self::ewma_json(&kt.decode_ns)),
                         ("candidates", Value::Array(candidates)),
                     ]),
                 )
@@ -520,6 +545,7 @@ impl TelemetryRecorder {
                     incumbent,
                     dispatches: kv.req_usize("dispatches")? as u64,
                     ttft_ns: Self::ewma_from_json(kv.req("ttft")?, cfg.alpha)?,
+                    decode_ns: Self::ewma_from_json(kv.req("decode")?, cfg.alpha)?,
                     promotions: kv.req_usize("promotions")? as u64,
                 },
             );
@@ -710,6 +736,41 @@ mod tests {
         rec.record_ttft(&key(), Duration::from_millis(5));
         let ttft = rec.key_state(&key()).unwrap().ttft().unwrap();
         assert_eq!(ttft, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn decode_latency_recorded_per_key() {
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::in_memory(gpu, test_cfg());
+        let incumbent = analytic(&gpu, &key());
+        // unknown keys are ignored, like TTFT
+        rec.record_decode(&key(), Duration::from_micros(40));
+        assert!(rec.key_state(&key()).is_none());
+        rec.select(key(), incumbent);
+        assert!(rec.key_state(&key()).unwrap().decode().is_none(), "no samples yet");
+        rec.record_decode(&key(), Duration::from_micros(40));
+        rec.record_decode(&key(), Duration::from_micros(40));
+        let decode = rec.key_state(&key()).unwrap().decode().unwrap();
+        assert_eq!(decode, Duration::from_micros(40));
+        // decode evidence decays with everything else
+        rec.decay_all(0.5);
+        let kt = rec.key_state(&key()).unwrap();
+        assert!(kt.decode().is_some(), "decayed, not erased");
+    }
+
+    #[test]
+    fn decode_latency_survives_persistence() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("tel.json").to_string_lossy().into_owned();
+        let gpu = GpuSpec::RTX4090;
+        let mut rec = TelemetryRecorder::new(gpu, test_cfg(), path.clone());
+        let incumbent = analytic(&gpu, &key());
+        rec.select(key(), incumbent);
+        rec.record_decode(&key(), Duration::from_micros(25));
+        rec.save().unwrap();
+        let again = TelemetryRecorder::new(gpu, test_cfg(), path);
+        let decode = again.key_state(&key()).unwrap().decode().unwrap();
+        assert_eq!(decode, Duration::from_micros(25), "restart decay scales samples, not value");
     }
 
     #[test]

@@ -222,6 +222,42 @@ impl Default for SupervisorCfg {
     }
 }
 
+/// Iteration-level continuous batching (see [`crate::serve`]): token
+/// budgets bounding what each iteration may inject, the waiting/served
+/// admission ratio, and per-request stream geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// prompt tokens one iteration may spend on injected prefills
+    pub max_batch_prefill_tokens: usize,
+    /// cap on KV-resident tokens across all in-flight sequences;
+    /// injection stops when the resident count leaves no room
+    pub max_batch_total_tokens: usize,
+    /// inject only when waiting >= ratio * in-flight (or nothing is in
+    /// flight): decodes keep their iteration share under bursty arrivals
+    pub waiting_served_ratio: f64,
+    /// bounded per-request token channel capacity (min 1); a full
+    /// channel pauses that sequence's decode instead of buffering
+    pub stream_capacity: usize,
+    /// default generation length when the caller doesn't specify one
+    pub max_new_tokens: usize,
+    /// transient decode faults tolerated per sequence before its stream
+    /// aborts (each retry re-attempts on the next iteration)
+    pub decode_retry_limit: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        Self {
+            max_batch_prefill_tokens: 4096,
+            max_batch_total_tokens: 16384,
+            waiting_served_ratio: 1.2,
+            stream_capacity: 32,
+            max_new_tokens: 8,
+            decode_retry_limit: 3,
+        }
+    }
+}
+
 /// Profile-guided autotuner knobs (see [`crate::autotune`]).
 #[derive(Clone, Debug)]
 pub struct AutotuneCfg {
@@ -263,6 +299,7 @@ pub struct Config {
     pub admission: AdmissionCfg,
     pub brownout: BrownoutCfg,
     pub supervisor: SupervisorCfg,
+    pub serve: ServeCfg,
     /// artifacts directory (manifest.json + *.hlo.txt)
     pub artifacts_dir: String,
 }
@@ -411,6 +448,30 @@ impl Config {
             cfg.supervisor.probation_rounds =
                 opt_usize(s, "probation_rounds", d.probation_rounds)?;
         }
+        if let Some(s) = v.get("serve") {
+            let d = ServeCfg::default();
+            cfg.serve.max_batch_prefill_tokens =
+                opt_usize(s, "max_batch_prefill_tokens", d.max_batch_prefill_tokens)?;
+            cfg.serve.max_batch_total_tokens =
+                opt_usize(s, "max_batch_total_tokens", d.max_batch_total_tokens)?;
+            cfg.serve.waiting_served_ratio =
+                opt_f64(s, "waiting_served_ratio", d.waiting_served_ratio)?;
+            cfg.serve.stream_capacity = opt_usize(s, "stream_capacity", d.stream_capacity)?;
+            cfg.serve.max_new_tokens = opt_usize(s, "max_new_tokens", d.max_new_tokens)?;
+            cfg.serve.decode_retry_limit =
+                opt_usize(s, "decode_retry_limit", d.decode_retry_limit)?;
+            if cfg.serve.waiting_served_ratio <= 0.0 {
+                anyhow::bail!("serve `waiting_served_ratio` must be positive");
+            }
+            if cfg.serve.stream_capacity == 0 {
+                anyhow::bail!("serve `stream_capacity` must be at least 1");
+            }
+            if cfg.serve.max_batch_total_tokens < cfg.serve.max_batch_prefill_tokens {
+                anyhow::bail!(
+                    "serve `max_batch_total_tokens` must cover `max_batch_prefill_tokens`"
+                );
+            }
+        }
         if let Some(s) = v.get("artifacts_dir") {
             cfg.artifacts_dir =
                 s.as_str().ok_or_else(|| anyhow::anyhow!("artifacts_dir must be string"))?.into();
@@ -533,6 +594,29 @@ impl Config {
                     (
                         "probation_rounds",
                         Value::number(self.supervisor.probation_rounds as f64),
+                    ),
+                ]),
+            ),
+            (
+                "serve",
+                Value::object(vec![
+                    (
+                        "max_batch_prefill_tokens",
+                        Value::number(self.serve.max_batch_prefill_tokens as f64),
+                    ),
+                    (
+                        "max_batch_total_tokens",
+                        Value::number(self.serve.max_batch_total_tokens as f64),
+                    ),
+                    (
+                        "waiting_served_ratio",
+                        Value::number(self.serve.waiting_served_ratio),
+                    ),
+                    ("stream_capacity", Value::number(self.serve.stream_capacity as f64)),
+                    ("max_new_tokens", Value::number(self.serve.max_new_tokens as f64)),
+                    (
+                        "decode_retry_limit",
+                        Value::number(self.serve.decode_retry_limit as f64),
                     ),
                 ]),
             ),
@@ -719,6 +803,46 @@ mod tests {
         assert_eq!(cfg.admission.max_inflight, AdmissionCfg::default().max_inflight);
         assert_eq!(cfg.brownout.max_level, BrownoutCfg::default().max_level);
         assert_eq!(cfg.supervisor.retry_limit, SupervisorCfg::default().retry_limit);
+    }
+
+    #[test]
+    fn serve_section_roundtrips() {
+        let mut cfg = Config::default();
+        cfg.serve.max_batch_prefill_tokens = 2048;
+        cfg.serve.max_batch_total_tokens = 8192;
+        cfg.serve.waiting_served_ratio = 0.3;
+        cfg.serve.stream_capacity = 4;
+        cfg.serve.max_new_tokens = 12;
+        cfg.serve.decode_retry_limit = 1;
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.serve.max_batch_prefill_tokens, 2048);
+        assert_eq!(back.serve.max_batch_total_tokens, 8192);
+        assert!((back.serve.waiting_served_ratio - 0.3).abs() < 1e-9);
+        assert_eq!(back.serve.stream_capacity, 4);
+        assert_eq!(back.serve.max_new_tokens, 12);
+        assert_eq!(back.serve.decode_retry_limit, 1);
+    }
+
+    #[test]
+    fn serve_partial_json_fills_defaults() {
+        let v = Value::parse(r#"{"serve": {"stream_capacity": 2}}"#).unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.serve.stream_capacity, 2);
+        let d = ServeCfg::default();
+        assert_eq!(cfg.serve.max_batch_prefill_tokens, d.max_batch_prefill_tokens);
+        assert!((cfg.serve.waiting_served_ratio - d.waiting_served_ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_invalid_knobs_rejected() {
+        for bad in [
+            r#"{"serve": {"waiting_served_ratio": 0}}"#,
+            r#"{"serve": {"stream_capacity": 0}}"#,
+            r#"{"serve": {"max_batch_prefill_tokens": 64, "max_batch_total_tokens": 32}}"#,
+        ] {
+            let v = Value::parse(bad).unwrap();
+            assert!(Config::from_json(&v).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

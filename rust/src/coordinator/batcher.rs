@@ -30,6 +30,7 @@ pub struct BatcherStats {
     pub requests: u64,
     pub size_flushes: u64,
     pub deadline_flushes: u64,
+    pub inject_flushes: u64,
 }
 
 impl BatcherStats {
@@ -45,6 +46,10 @@ impl BatcherStats {
 struct Pending {
     requests: Vec<Request>,
     opened: Instant,
+    /// Monotone stamp taken when the bucket went empty→non-empty:
+    /// wall-clock-free age ordering for budgeted injection (`opened`
+    /// can tie at Instant resolution).
+    opened_seq: u64,
 }
 
 /// Optional metric handles (`batcher_*` in the catalog). The flush
@@ -56,6 +61,7 @@ struct BatcherObs {
     size_flushes: Counter,
     deadline_flushes: Counter,
     drain_flushes: Counter,
+    inject_flushes: Counter,
     /// Realized flush sizes, recorded as counts (1 unit == 1 request).
     batch_size: Histogram,
 }
@@ -68,6 +74,7 @@ impl BatcherObs {
             size_flushes: reg.counter("batcher_flush_total", &[("reason", "size")]),
             deadline_flushes: reg.counter("batcher_flush_total", &[("reason", "deadline")]),
             drain_flushes: reg.counter("batcher_flush_total", &[("reason", "drain")]),
+            inject_flushes: reg.counter("batcher_flush_total", &[("reason", "inject")]),
             batch_size: reg.histogram("batcher_batch_size", &[]),
         }
     }
@@ -84,6 +91,8 @@ pub struct Batcher {
     pending: HashMap<BatchKey, Pending>,
     /// upper bound on queued requests; 0 = unbounded
     max_pending: usize,
+    /// source for `Pending::opened_seq` stamps
+    seq: u64,
     stats: BatcherStats,
     obs: Option<BatcherObs>,
 }
@@ -99,6 +108,7 @@ impl Batcher {
             policy: BucketPolicy::Pow2,
             pending: HashMap::new(),
             max_pending: 0,
+            seq: 0,
             stats: BatcherStats::default(),
             obs: None,
         }
@@ -161,12 +171,16 @@ impl Batcher {
     /// Enqueue a request; returns a full batch if this push filled one.
     pub fn push(&mut self, req: Request) -> Option<(BatchKey, Vec<Request>)> {
         let key = self.key_of(&req);
-        let entry = self
-            .pending
-            .entry(key)
-            .or_insert_with(|| Pending { requests: Vec::new(), opened: Instant::now() });
+        self.seq += 1;
+        let seq = self.seq;
+        let entry = self.pending.entry(key).or_insert_with(|| Pending {
+            requests: Vec::new(),
+            opened: Instant::now(),
+            opened_seq: seq,
+        });
         if entry.requests.is_empty() {
             entry.opened = Instant::now();
+            entry.opened_seq = seq;
         }
         entry.requests.push(req);
         if entry.requests.len() >= self.cfg.max_batch {
@@ -197,6 +211,59 @@ impl Batcher {
             obs.queue_depth.set(self.pending_count() as f64);
             obs.open_buckets.set(self.pending.len() as f64);
         }
+    }
+
+    /// Take a budgeted slice of the *oldest* open bucket for
+    /// iteration-level injection: the longest FIFO prefix of that
+    /// bucket whose prompt tokens fit `max_tokens`, capped at
+    /// `max_requests`. At least one request is always taken — the
+    /// budget bounds batch *composition*, not single-request
+    /// admissibility (a prompt larger than the whole budget would
+    /// otherwise wedge the queue forever; KV-pressure shedding is the
+    /// backstop for genuinely oversized work). Requests left behind
+    /// keep their bucket's age stamp, so the remainder stays first in
+    /// line. Returns `None` only when nothing is pending.
+    pub fn take_under_budget(
+        &mut self,
+        max_requests: usize,
+        max_tokens: usize,
+    ) -> Option<(BatchKey, Vec<Request>)> {
+        let key = *self
+            .pending
+            .iter()
+            .filter(|(_, e)| !e.requests.is_empty())
+            .min_by_key(|(_, e)| e.opened_seq)
+            .map(|(k, _)| k)?;
+        // lint: allow(serve-panic) — `key` was read out of `pending`
+        // just above with no intervening removal.
+        let entry = self.pending.get_mut(&key).expect("key selected above");
+        let mut take = 0;
+        let mut spent = 0usize;
+        for req in &entry.requests {
+            if take >= max_requests.max(1) {
+                break;
+            }
+            let cost = req.tokens.len();
+            if take > 0 && spent + cost > max_tokens {
+                break;
+            }
+            spent += cost;
+            take += 1;
+        }
+        let mut batch: Vec<Request> = entry.requests.drain(..take).collect();
+        if entry.requests.is_empty() {
+            self.pending.remove(&key);
+        }
+        batch.shrink_to_fit();
+        self.stats.batches += 1;
+        self.stats.requests += batch.len() as u64;
+        self.stats.inject_flushes += 1;
+        if let Some(obs) = &self.obs {
+            obs.inject_flushes.inc();
+            obs.batch_size.record_count(batch.len() as u64);
+        }
+        self.sync_gauges();
+        Some((Self::realized_key(key, batch.len()), batch))
     }
 
     /// Flush every batch whose deadline has passed.
@@ -367,6 +434,53 @@ mod tests {
         }
         let drained = b.drain();
         assert_eq!(drained[0].0.batch_bucket, 8, "drain of 5 buckets to 8");
+    }
+
+    #[test]
+    fn take_under_budget_slices_fifo_prefix() {
+        let reg = Registry::new();
+        let mut b = Batcher::new(cfg(64, 1_000_000)).with_obs(&reg);
+        for i in 0..4 {
+            assert!(b.push(req(i, 100, Variant::Distr)).is_none());
+        }
+        // 250-token budget fits two 100-token prompts, not three
+        let (key, batch) = b.take_under_budget(usize::MAX, 250).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 0, "FIFO prefix");
+        assert_eq!(batch[1].id, 1);
+        assert_eq!(key.batch_bucket, 2, "key realized at the taken size");
+        assert_eq!(b.pending_count(), 2, "remainder stays queued");
+        assert_eq!(reg.counter("batcher_flush_total", &[("reason", "inject")]).get(), 1);
+        assert_eq!(b.stats().inject_flushes, 1);
+        // the remainder is next in line
+        let (_, batch) = b.take_under_budget(usize::MAX, 10_000).unwrap();
+        assert_eq!(batch[0].id, 2);
+        assert_eq!(b.pending_count(), 0);
+        assert_eq!(b.open_buckets(), 0, "emptied bucket leaves the map");
+        assert!(b.take_under_budget(usize::MAX, 10_000).is_none());
+    }
+
+    #[test]
+    fn take_under_budget_prefers_oldest_bucket_and_never_wedges() {
+        let mut b = Batcher::new(cfg(64, 1_000_000));
+        // bucket A (long prompts) opened first, bucket B (short) second
+        b.push(req(1, 300, Variant::Distr));
+        for i in 2..6 {
+            b.push(req(i, 50, Variant::Distr));
+        }
+        // even with a budget smaller than the long prompt, the oldest
+        // bucket is served and at least one request always comes out
+        let (_, batch) = b.take_under_budget(usize::MAX, 100).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1, "oldest bucket first, budget notwithstanding");
+        // now the short bucket is oldest; request cap applies
+        let (_, batch) = b.take_under_budget(2, 10_000).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        // a refilled bucket re-stamps its age: B's remainder (opened
+        // before C's arrival) still precedes a fresh bucket C
+        b.push(req(7, 1000, Variant::Distr));
+        let (_, batch) = b.take_under_budget(usize::MAX, 10_000).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5]);
     }
 
     #[test]

@@ -61,6 +61,33 @@ pub fn decode_step(
     attend_cached(cache, seq, q_row)
 }
 
+/// One sequence's contribution to an iteration-level decode batch.
+/// The rows borrow from the caller (the serve loop's token model), so
+/// composing a batch allocates nothing per member.
+pub struct DecodeInput<'a> {
+    pub seq: SeqId,
+    pub q_row: &'a [f32],
+    pub k_row: &'a [f32],
+    pub v_row: &'a [f32],
+}
+
+/// Run one decode step for every member of an iteration batch whose
+/// membership may differ from the previous iteration's (continuous
+/// batching). Failures are isolated per sequence: one member hitting
+/// KV exhaustion must not poison its batchmates, so the result is a
+/// per-member `Result` in input order rather than a single short-
+/// circuiting one.
+pub fn decode_batch(
+    cache: &mut KvCache,
+    inputs: &[DecodeInput<'_>],
+) -> Vec<anyhow::Result<Vec<f32>>> {
+    let _s = trace::span("coordinator", "decode_batch");
+    inputs
+        .iter()
+        .map(|i| decode_step(cache, i.seq, i.q_row, i.k_row, i.v_row))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +142,50 @@ mod tests {
     fn unknown_sequence_is_error() {
         let cache = KvCache::new(4, 2, 4);
         assert!(attend_cached(&cache, 42, &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn batch_isolates_member_failures() {
+        let d = 4;
+        let mut cache = KvCache::new(8, 2, d);
+        cache.register(1, &[0.5; 4], &[1.0; 4]).unwrap();
+        let q = [1.0f32, 0.0, 0.0, 0.0];
+        let k = [0.2f32; 4];
+        let v = [2.0f32; 4];
+        let inputs = [
+            DecodeInput { seq: 1, q_row: &q, k_row: &k, v_row: &v },
+            // seq 99 was never registered: its step must fail alone
+            DecodeInput { seq: 99, q_row: &q, k_row: &k, v_row: &v },
+        ];
+        let outs = decode_batch(&mut cache, &inputs);
+        assert_eq!(outs.len(), 2);
+        assert!(outs[0].is_ok(), "healthy member unaffected by a failing batchmate");
+        assert!(outs[1].is_err());
+        // batch result order follows input order
+        assert_eq!(outs[0].as_ref().unwrap().len(), d);
+    }
+
+    #[test]
+    fn batch_step_matches_sequential_steps() {
+        let d = 4;
+        let mut batched = KvCache::new(16, 2, d);
+        let mut sequential = KvCache::new(16, 2, d);
+        for cache in [&mut batched, &mut sequential] {
+            cache.register(1, &[0.1; 4], &[1.0; 4]).unwrap();
+            cache.register(2, &[0.9; 4], &[-1.0; 4]).unwrap();
+        }
+        let q = [0.3f32, -0.2, 0.5, 0.1];
+        let k = [0.4f32; 4];
+        let v = [3.0f32; 4];
+        let inputs = [
+            DecodeInput { seq: 1, q_row: &q, k_row: &k, v_row: &v },
+            DecodeInput { seq: 2, q_row: &q, k_row: &k, v_row: &v },
+        ];
+        let outs = decode_batch(&mut batched, &inputs);
+        for (seq, out) in [(1, &outs[0]), (2, &outs[1])] {
+            let solo = decode_step(&mut sequential, seq, &q, &k, &v).unwrap();
+            assert_eq!(out.as_ref().unwrap(), &solo);
+        }
     }
 
     #[test]

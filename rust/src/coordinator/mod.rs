@@ -32,7 +32,7 @@ pub mod scheduler;
 pub use admission::AdmissionGate;
 pub use batcher::{Batcher, BatcherStats};
 pub use brownout::{Brownout, Pressure};
-pub use decode::{attend_cached, decode_step};
+pub use decode::{attend_cached, decode_batch, decode_step, DecodeInput};
 pub use engine::{Engine, EngineHandle};
 pub use kv_cache::{BlockId, KvCache, SeqHandle};
 pub use multi_device::{

@@ -411,6 +411,17 @@ impl<T> Router<T> {
         }
     }
 
+    /// Report a measured per-token decode latency for `key` (the
+    /// continuous serve loop's iteration timer divided by the tokens
+    /// the iteration produced). Keyed directly rather than by token:
+    /// decode happens long after the prefill dispatch, and one
+    /// iteration covers sequences from many dispatches.
+    pub fn report_decode(&mut self, key: &TuneKey, per_token: Duration) {
+        if let Some(rec) = self.telemetry.as_mut() {
+            rec.record_decode(key, per_token);
+        }
+    }
+
     fn buckets_for(&self, v: Variant) -> Vec<usize> {
         let mut b: Vec<usize> = self
             .routes
@@ -570,6 +581,9 @@ mod tests {
         // TTFT reporting is accepted for the dispatched key
         r.report_ttft(&token, Duration::from_millis(7));
         assert!(r.telemetry().unwrap().key_state(&token.key).unwrap().ttft().is_some());
+        // ... and so is per-token decode latency, keyed directly
+        r.report_decode(&token.key, Duration::from_micros(30));
+        assert!(r.telemetry().unwrap().key_state(&token.key).unwrap().decode().is_some());
     }
 
     #[test]

@@ -55,6 +55,7 @@ impl ShedReason {
 struct SchedulerObs {
     queue_depth: Gauge,
     completed_total: Counter,
+    cancelled_total: Counter,
     ttft: Histogram,
     inflight: Gauge,
     shed: [Counter; 4],
@@ -65,6 +66,7 @@ impl SchedulerObs {
         Self {
             queue_depth: reg.gauge("scheduler_queue_depth", &[]),
             completed_total: reg.counter("scheduler_completed_total", &[]),
+            cancelled_total: reg.counter("scheduler_cancelled_total", &[]),
             ttft: reg.histogram("scheduler_ttft", &[]),
             inflight: reg.gauge("admission_inflight", &[]),
             shed: [
@@ -87,6 +89,7 @@ pub struct Scheduler {
     starvation_limit: Duration,
     completed: u64,
     degraded: u64,
+    cancelled: u64,
     sheds: u64,
     admission: Option<AdmissionCfg>,
     deadline: Duration,
@@ -102,6 +105,7 @@ impl Scheduler {
             starvation_limit,
             completed: 0,
             degraded: 0,
+            cancelled: 0,
             sheds: 0,
             admission: None,
             deadline: Duration::ZERO,
@@ -188,6 +192,20 @@ impl Scheduler {
         }
     }
 
+    /// Terminal for an admitted request whose caller went away before
+    /// its prefill ran (stream receiver dropped while the request was
+    /// still queued): not a completion, not an overload shed — the
+    /// client simply stopped waiting. Releases the concurrency slot
+    /// like every other terminal. Must not be called once `complete`
+    /// has run for the request (the slot is already released there).
+    pub fn cancel(&mut self, _req: &Request) {
+        self.cancelled += 1;
+        self.release_slot();
+        if let Some(obs) = &self.obs {
+            obs.cancelled_total.inc();
+        }
+    }
+
     /// Report a request completion at `now`; returns its measured
     /// time-to-first-token (arrival to completion).
     pub fn complete(&mut self, req: &Request, now: Instant) -> Duration {
@@ -217,6 +235,11 @@ impl Scheduler {
     /// Degraded completions reported so far (subset of `completed`).
     pub fn degraded_completed(&self) -> u64 {
         self.degraded
+    }
+
+    /// Requests cancelled by their caller before prefill.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
     }
 
     /// Requests shed so far, at admission or after.
@@ -251,13 +274,26 @@ impl Scheduler {
     /// already blown are shed here — running them would spend a batch
     /// slot on an answer nobody is waiting for.
     pub fn pop(&mut self, now: Instant) -> Option<Request> {
+        let mut dropped = Vec::new();
+        self.pop_with_shed(now, &mut dropped)
+    }
+
+    /// [`pop`](Self::pop), but deadline-shed requests are handed back
+    /// through `shed_out` instead of vanishing — the continuous serve
+    /// loop still owns a live stream per request and must tell each
+    /// abandoned caller *why* its stream ended.
+    pub fn pop_with_shed(&mut self, now: Instant, shed_out: &mut Vec<Request>) -> Option<Request> {
         loop {
-            let popped = self.pop_inner(now)?;
+            let Some(popped) = self.pop_inner(now) else {
+                self.sync_gauges();
+                return None;
+            };
             if self.admission.is_some()
                 && !self.deadline.is_zero()
                 && now.saturating_duration_since(popped.arrived) > self.deadline
             {
                 self.shed(&popped, ShedReason::Deadline);
+                shed_out.push(popped);
                 self.sync_gauges();
                 continue;
             }
@@ -478,6 +514,42 @@ mod tests {
         }
         assert!(s.gate().is_none());
         assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn cancel_is_a_terminal_that_frees_the_slot() {
+        let reg = Registry::new();
+        let mut s =
+            Scheduler::new(Duration::from_secs(60)).with_obs(&reg).with_admission(admission(64, 2, 0));
+        s.admit(req(1, Priority::Interactive)).unwrap();
+        s.admit(req(2, Priority::Interactive)).unwrap();
+        assert_eq!(s.admit(req(3, Priority::Interactive)), Err(ShedReason::Concurrency));
+        let popped = s.pop(Instant::now()).unwrap();
+        s.cancel(&popped);
+        assert_eq!(s.cancelled(), 1);
+        assert_eq!(reg.counter("scheduler_cancelled_total", &[]).get(), 1);
+        assert_eq!(s.gate().unwrap().in_flight(), 1);
+        // a cancel is neither a completion nor a shed
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.sheds(), 1, "only the concurrency refusal counted");
+        assert!(s.admit(req(4, Priority::Interactive)).is_ok());
+    }
+
+    #[test]
+    fn pop_with_shed_returns_deadline_victims() {
+        let mut s = Scheduler::new(Duration::from_secs(60)).with_admission(admission(64, 16, 20));
+        let stale = req(1, Priority::Interactive);
+        let t0 = stale.arrived;
+        s.admit(stale).unwrap();
+        let mut fresh = req(2, Priority::Interactive);
+        fresh.arrived = t0 + Duration::from_millis(10);
+        s.admit(fresh).unwrap();
+        let mut dropped = Vec::new();
+        let popped = s.pop_with_shed(t0 + Duration::from_millis(25), &mut dropped).unwrap();
+        assert_eq!(popped.id, 2);
+        assert_eq!(dropped.len(), 1, "the blown request is handed back, not swallowed");
+        assert_eq!(dropped[0].id, 1);
+        assert!(s.pop_with_shed(t0 + Duration::from_millis(25), &mut dropped).is_none());
     }
 
     #[test]

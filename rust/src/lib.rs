@@ -33,6 +33,7 @@ pub mod fault;
 pub mod metrics;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod tensor;
 pub mod util;

@@ -1,0 +1,74 @@
+//! Token-budget arithmetic for iteration-level injection.
+//!
+//! Pure functions, deliberately: the fairness properties of the
+//! continuous loop reduce to this module plus the batcher's
+//! FIFO-prefix slicing, so the regression tests can pin the budget
+//! math directly without driving a whole serve loop.
+//!
+//! Two budgets bound what one iteration may inject (tgimagik-style):
+//!
+//! - `max_batch_prefill_tokens` caps the *prompt* tokens of newly
+//!   injected prefills — prefill is the quadratic, iteration-stalling
+//!   work, so this is the knob that protects in-flight decodes from
+//!   injection stalls.
+//! - `max_batch_total_tokens` caps *KV-resident* tokens across all
+//!   in-flight sequences — the memory budget; injection stops when the
+//!   resident population leaves no room.
+//!
+//! On top of both sits the waiting/served ratio: injection happens
+//! only when the waiting queue is at least `ratio ×` the in-flight
+//! count (or nothing is in flight). Below the threshold the loop keeps
+//! iterations pure-decode, so a trickle of arrivals can't convert
+//! every iteration into a prefill stall.
+
+use crate::config::ServeCfg;
+
+/// Should this iteration consider injecting prefills at all?
+/// `inflight == 0` always injects — with nobody decoding there is
+/// nothing to protect, and waiting work must not deadlock.
+pub fn injection_allowed(waiting: usize, inflight: usize, ratio: f64) -> bool {
+    inflight == 0 || waiting as f64 >= ratio * inflight as f64
+}
+
+/// Prompt-token budget for this iteration's injection, given the
+/// KV-resident token count of the current in-flight population.
+/// Zero means "no room this iteration" — the caller must skip
+/// injection entirely (the batcher's take-at-least-one rule only
+/// applies once a positive budget opened the door).
+pub fn prefill_budget(cfg: &ServeCfg, resident_tokens: usize) -> usize {
+    cfg.max_batch_prefill_tokens.min(cfg.max_batch_total_tokens.saturating_sub(resident_tokens))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_loop_always_injects() {
+        assert!(injection_allowed(1, 0, 100.0));
+        assert!(injection_allowed(0, 0, 100.0), "vacuously true; nothing to inject anyway");
+    }
+
+    #[test]
+    fn ratio_gates_injection_under_load() {
+        // 4 in flight, ratio 1.2: need at least 4.8 waiting
+        assert!(!injection_allowed(4, 4, 1.2));
+        assert!(injection_allowed(5, 4, 1.2));
+        // ratio below 1 injects eagerly
+        assert!(injection_allowed(1, 4, 0.25));
+        assert!(!injection_allowed(0, 4, 0.25), "nothing waiting, nothing to inject");
+    }
+
+    #[test]
+    fn budget_is_min_of_prefill_cap_and_kv_headroom() {
+        let cfg = ServeCfg {
+            max_batch_prefill_tokens: 100,
+            max_batch_total_tokens: 400,
+            ..Default::default()
+        };
+        assert_eq!(prefill_budget(&cfg, 0), 100, "prefill cap binds when KV is empty");
+        assert_eq!(prefill_budget(&cfg, 350), 50, "KV headroom binds near the ceiling");
+        assert_eq!(prefill_budget(&cfg, 400), 0, "full KV => no injection");
+        assert_eq!(prefill_budget(&cfg, 1000), 0, "over-full saturates, not underflows");
+    }
+}

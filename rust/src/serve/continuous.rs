@@ -1,0 +1,928 @@
+//! The iteration-level continuous batching loop.
+//!
+//! One [`step`](ContinuousLoop::step) is one iteration of an
+//! Orca/vLLM/TGI-style serve loop:
+//!
+//! 1. **Drain admissions** — requests the scheduler releases move into
+//!    the waiting set (deadline-blown requests shed here, and their
+//!    streams abort with reason `deadline`).
+//! 2. **Observe pressure** — queue depth, KV allocation failures, and
+//!    deadline risk feed the brownout ladder before anything routes.
+//! 3. **Inject prefills** — if the waiting/served ratio allows and the
+//!    token budgets leave room, a FIFO prefix of the oldest waiting
+//!    bucket prefills *into the running batch*: one tuned engine at
+//!    the realized composition, first token streamed, TTFT stamped.
+//! 4. **Decode** — every in-flight sequence advances one token through
+//!    [`decode_batch`], with per-member fault isolation; full streams
+//!    pause (backpressure), dropped streams cancel and free their KV
+//!    blocks, finished streams close.
+//! 5. **Feed telemetry** — the iteration time divided by the tokens it
+//!    produced is the per-token decode latency reported to the
+//!    autotune recorder per tuning key.
+//!
+//! The loop never reads a clock: the driver passes `now` into `step`,
+//! which makes every scheduling decision replayable in tests. The
+//! price is that *prefill ns/call* (which needs a timer around the
+//! engine call) cannot be fed from here — the legacy flush path
+//! remains the source of that signal; this loop feeds TTFT and
+//! per-token decode latency instead.
+//!
+//! Terminal accounting: each admitted request ends in exactly one of
+//! `complete`/`complete_degraded`/`shed`/`cancel` on the scheduler —
+//! but note `complete` fires at the *first token* (TTFT semantics, the
+//! admission slot frees once prefill is done). A request that dies
+//! mid-decode (disconnect, KV exhaustion, fault-retry exhaustion) is
+//! therefore already complete in the scheduler's ledger; the serve
+//! layer accounts those endings separately in
+//! `serve_aborted_total{reason}` and always releases the KV blocks.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::attention::Engine;
+use crate::autotune::TuneKey;
+use crate::config::ServeCfg;
+use crate::coordinator::{
+    decode_batch, Batcher, DecodeInput, KvCache, Pressure, Request, RequestId, Router, Scheduler,
+    ShedReason,
+};
+use crate::metrics::LatencyHistogram;
+use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
+use crate::obs::trace;
+use crate::obs::ShadowProbe;
+
+use super::budget;
+use super::model::TokenModel;
+use super::stream::{token_stream, SendResult, TokenSender, TokenStream};
+
+/// What one iteration did (returned by [`ContinuousLoop::step`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepReport {
+    /// Prefills injected into the running batch this iteration.
+    pub injected: usize,
+    /// Decode tokens produced this iteration.
+    pub decoded: usize,
+    /// Streams that finished their full sequence this iteration.
+    pub completed: usize,
+    /// Streams aborted this iteration (disconnect, KV pressure,
+    /// deadline, fault-retry exhaustion).
+    pub aborted: usize,
+    /// Waiting-phase cancellations (receiver dropped before prefill).
+    pub cancelled: usize,
+    /// Requests shed this iteration (deadline at drain, KV pressure at
+    /// prefill).
+    pub shed: usize,
+    /// Sequences paused this iteration because their stream was full.
+    pub backpressured: usize,
+    /// Sequences skipped this iteration by an injected/transient
+    /// decode fault (bounded retry).
+    pub retried: usize,
+    /// In-flight sequences after this iteration.
+    pub inflight: usize,
+    /// Waiting (admitted, not yet prefilled) requests after this
+    /// iteration.
+    pub waiting: usize,
+}
+
+/// Cumulative serve-loop statistics (the shutdown summary's source).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub iterations: u64,
+    pub injected: u64,
+    pub tokens: u64,
+    pub completed: u64,
+    pub aborted: u64,
+    pub cancelled: u64,
+    pub backpressured: u64,
+    pub retried: u64,
+    /// Sum over iterations of the decode-batch occupancy.
+    pub occupancy_sum: u64,
+    /// Iterations that had a non-empty decode batch.
+    pub occupied_iterations: u64,
+    /// Largest decode-batch occupancy seen.
+    pub occupancy_max: u64,
+}
+
+impl ServeStats {
+    /// Mean decode-batch occupancy over non-idle iterations.
+    pub fn occupancy_mean(&self) -> f64 {
+        if self.occupied_iterations == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.occupied_iterations as f64
+        }
+    }
+}
+
+/// Metric handles for the `serve_` family (see docs/OBSERVABILITY.md).
+struct ServeObs {
+    iterations: Counter,
+    injected: Counter,
+    tokens: Counter,
+    completed: Counter,
+    backpressure: Counter,
+    retry: Counter,
+    aborted_disconnect: Counter,
+    aborted_kv: Counter,
+    aborted_deadline: Counter,
+    aborted_error: Counter,
+    inflight: Gauge,
+    waiting: Gauge,
+    occupancy: Histogram,
+    inter_token: Histogram,
+}
+
+impl ServeObs {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            iterations: reg.counter("serve_iterations_total", &[]),
+            injected: reg.counter("serve_injected_total", &[]),
+            tokens: reg.counter("serve_tokens_total", &[]),
+            completed: reg.counter("serve_completed_total", &[]),
+            backpressure: reg.counter("serve_backpressure_total", &[]),
+            retry: reg.counter("serve_decode_retry_total", &[]),
+            aborted_disconnect: reg.counter("serve_aborted_total", &[("reason", "disconnect")]),
+            aborted_kv: reg.counter("serve_aborted_total", &[("reason", "kv_pressure")]),
+            aborted_deadline: reg.counter("serve_aborted_total", &[("reason", "deadline")]),
+            aborted_error: reg.counter("serve_aborted_total", &[("reason", "error")]),
+            inflight: reg.gauge("serve_inflight", &[]),
+            waiting: reg.gauge("serve_waiting", &[]),
+            occupancy: reg.histogram("serve_batch_occupancy", &[]),
+            inter_token: reg.histogram("serve_inter_token", &[]),
+        }
+    }
+
+    fn aborted(&self, reason: &str) -> &Counter {
+        match reason {
+            "disconnect" => &self.aborted_disconnect,
+            "kv_pressure" => &self.aborted_kv,
+            "deadline" => &self.aborted_deadline,
+            _ => &self.aborted_error,
+        }
+    }
+}
+
+/// A sequence currently in the decode batch.
+struct Inflight {
+    req: Request,
+    /// Tuning key of the prefill composition this sequence joined
+    /// under — the key its decode telemetry reports against.
+    key: TuneKey,
+    tx: TokenSender,
+    /// Tokens emitted so far (step 0 was the prefill's first token).
+    emitted: usize,
+    max_new: usize,
+    retries: usize,
+}
+
+/// A submitted request that has not prefilled yet (queued in the
+/// scheduler or the waiting set).
+struct PendingStream {
+    tx: TokenSender,
+    max_new: usize,
+}
+
+/// How an in-flight sequence leaves the batch.
+enum Term {
+    Complete,
+    Abort(&'static str),
+}
+
+/// The continuous serve loop. Owns the serving stack (router,
+/// scheduler, KV cache) for its lifetime; accessors expose the parts
+/// the shutdown path reads.
+pub struct ContinuousLoop<M: TokenModel> {
+    cfg: ServeCfg,
+    model: M,
+    router: Router<Engine>,
+    scheduler: Scheduler,
+    /// Admitted-but-not-prefilled requests, grouped by tuning key. The
+    /// effective max_batch is pinned huge so this batcher never
+    /// size-flushes — injection *pulls* budgeted slices instead.
+    waiting: Batcher,
+    cache: KvCache,
+    inflight: Vec<Inflight>,
+    pending: HashMap<RequestId, PendingStream>,
+    probe: Option<ShadowProbe>,
+    obs: Option<ServeObs>,
+    /// KV allocation failures observed by this loop (pressure signal).
+    kv_failures: u64,
+    /// `now` of the previous iteration (per-token latency baseline).
+    last_now: Option<Instant>,
+    inter_token: LatencyHistogram,
+    stats: ServeStats,
+}
+
+/// The waiting batcher must never flush on size — injection decides
+/// composition. Any request count below this is unreachable.
+const NO_SIZE_FLUSH: usize = 1 << 20;
+
+impl<M: TokenModel> ContinuousLoop<M> {
+    pub fn new(
+        cfg: ServeCfg,
+        model: M,
+        router: Router<Engine>,
+        scheduler: Scheduler,
+        cache: KvCache,
+    ) -> Self {
+        let waiting = Batcher::new(crate::config::BatcherCfg {
+            max_batch: NO_SIZE_FLUSH,
+            max_wait_us: u64::MAX,
+        })
+        .with_model(model.d(), true);
+        Self {
+            cfg,
+            model,
+            router,
+            scheduler,
+            waiting,
+            cache,
+            inflight: Vec::new(),
+            pending: HashMap::new(),
+            probe: None,
+            obs: None,
+            kv_failures: 0,
+            last_now: None,
+            inter_token: LatencyHistogram::default(),
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// Attach metric handles from `reg`: the `serve_` family plus the
+    /// scheduler (`shed_total`, TTFT), waiting-set batcher, and KV
+    /// cache gauges, so one registry observes the whole serve stack.
+    pub fn with_obs(mut self, reg: &Registry) -> Self {
+        self.obs = Some(ServeObs::new(reg));
+        let placeholder =
+            Batcher::new(crate::config::BatcherCfg { max_batch: NO_SIZE_FLUSH, max_wait_us: u64::MAX });
+        self.waiting = std::mem::replace(&mut self.waiting, placeholder).with_obs(reg);
+        let placeholder = Scheduler::new(std::time::Duration::ZERO);
+        self.scheduler = std::mem::replace(&mut self.scheduler, placeholder).with_obs(reg);
+        let placeholder = KvCache::new(0, 1, 1);
+        self.cache = std::mem::replace(&mut self.cache, placeholder).with_obs(reg);
+        self
+    }
+
+    /// Attach a shadow-accuracy probe: a sampled fraction of injected
+    /// prefills is re-checked against exact attention off the hot path.
+    pub fn with_probe(mut self, probe: ShadowProbe) -> Self {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Submit a request for `cfg.max_new_tokens` generated tokens.
+    pub fn submit(&mut self, req: Request) -> Result<TokenStream, ShedReason> {
+        let max_new = self.cfg.max_new_tokens;
+        self.submit_with(req, max_new)
+    }
+
+    /// Submit a request for `max_new` generated tokens (min 1: the
+    /// prefill's first token always exists). Admission control decides
+    /// acceptance; a shed here never allocated anything.
+    pub fn submit_with(
+        &mut self,
+        req: Request,
+        max_new: usize,
+    ) -> Result<TokenStream, ShedReason> {
+        let id = req.id;
+        self.scheduler.admit(req)?;
+        let (tx, rx) = token_stream(self.cfg.stream_capacity);
+        self.pending.insert(id, PendingStream { tx, max_new: max_new.max(1) });
+        Ok(rx)
+    }
+
+    /// Run one iteration at logical time `now`.
+    pub fn step(&mut self, now: Instant) -> StepReport {
+        let _s = trace::span("serve", "iteration");
+        let mut report = StepReport::default();
+        self.stats.iterations += 1;
+        if let Some(obs) = &self.obs {
+            obs.iterations.inc();
+        }
+
+        self.drain_admissions(now, &mut report);
+        self.observe_pressure(now);
+        self.inject_prefills(now, &mut report);
+        let occupancy = self.inflight.len();
+        let decoded_keys = self.decode_iteration(now, &mut report);
+        self.record_iteration_latency(now, &report, occupancy, &decoded_keys);
+
+        report.inflight = self.inflight.len();
+        report.waiting = self.waiting.pending_count();
+        if let Some(obs) = &self.obs {
+            obs.inflight.set(report.inflight as f64);
+            obs.waiting.set(report.waiting as f64);
+        }
+        self.last_now = Some(now);
+        report
+    }
+
+    /// Nothing queued, waiting, or decoding.
+    pub fn is_idle(&self) -> bool {
+        self.scheduler.is_empty() && self.waiting.pending_count() == 0 && self.inflight.is_empty()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Per-token latency distribution observed by the iteration timer.
+    pub fn inter_token(&self) -> &LatencyHistogram {
+        &self.inter_token
+    }
+
+    pub fn router(&self) -> &Router<Engine> {
+        &self.router
+    }
+
+    pub fn router_mut(&mut self) -> &mut Router<Engine> {
+        &mut self.router
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    pub fn probe(&self) -> Option<&ShadowProbe> {
+        self.probe.as_ref()
+    }
+
+    // -- iteration phases -------------------------------------------------
+
+    /// Move everything the scheduler releases into the waiting set;
+    /// deadline-blown requests shed on the way out and their streams
+    /// abort so the caller learns why.
+    fn drain_admissions(&mut self, now: Instant, report: &mut StepReport) {
+        let mut deadline_shed = Vec::new();
+        while let Some(req) = self.scheduler.pop_with_shed(now, &mut deadline_shed) {
+            self.waiting.push(req);
+        }
+        for req in deadline_shed {
+            report.shed += 1;
+            if let Some(p) = self.pending.remove(&req.id) {
+                p.tx.abort("deadline");
+            }
+            self.note_aborted("deadline", report);
+        }
+    }
+
+    fn observe_pressure(&mut self, now: Instant) {
+        self.router.note_pressure(Pressure {
+            queue_depth: self.scheduler.len() + self.waiting.pending_count(),
+            kv_alloc_failures: self.kv_failures,
+            deadline_at_risk: self.scheduler.deadline_at_risk(now),
+        });
+    }
+
+    /// Inject a budgeted FIFO slice of the oldest waiting bucket into
+    /// the running batch: one tuned prefill at the realized
+    /// composition, first token streamed, TTFT stamped.
+    fn inject_prefills(&mut self, now: Instant, report: &mut StepReport) {
+        let waiting = self.waiting.pending_count();
+        if waiting == 0
+            || !budget::injection_allowed(waiting, self.inflight.len(), self.cfg.waiting_served_ratio)
+        {
+            return;
+        }
+        let resident: usize =
+            self.inflight.iter().filter_map(|f| self.cache.handle(f.req.id)).map(|h| h.tokens).sum();
+        let tokens = budget::prefill_budget(&self.cfg, resident);
+        if tokens == 0 {
+            return;
+        }
+        let Some((_, batch)) = self.waiting.take_under_budget(usize::MAX, tokens) else {
+            return;
+        };
+        let _s = trace::span("serve", "inject_prefill");
+
+        // a receiver dropped while its request queued: cancel before
+        // spending prefill compute (the scheduler terminal releases the
+        // admission slot; nothing was allocated yet)
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            let disconnected =
+                self.pending.get(&req.id).map(|p| p.tx.is_disconnected()).unwrap_or(true);
+            if disconnected {
+                self.pending.remove(&req.id);
+                self.scheduler.cancel(&req);
+                report.cancelled += 1;
+                self.stats.cancelled += 1;
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            return;
+        }
+
+        let d = self.model.d();
+        let variant = live[0].variant;
+        let (engine, token) = match self.router.route_batch(&live, d, true) {
+            Ok((engine, _key, tuned, token)) => {
+                let engine = match &tuned {
+                    Some(p) => Engine::tuned(variant, p).causal(true),
+                    None => engine.clone(),
+                };
+                (engine, token)
+            }
+            Err(e) => {
+                // no route for this shape: a wiring error, not load —
+                // end each stream with `error` and release the slots
+                log::error!("serve: cannot route injected batch: {e:#}");
+                for req in live {
+                    if let Some(p) = self.pending.remove(&req.id) {
+                        p.tx.abort("error");
+                    }
+                    self.scheduler.cancel(&req);
+                    self.note_aborted("error", report);
+                }
+                return;
+            }
+        };
+        let degraded = self.router.last_degraded();
+        let realized = Batcher::realized_key(self.waiting.key_of(&live[0]), live.len());
+
+        for req in live {
+            let n = req.len_bucket();
+            let (q, k, v) = self.model.prefill(&req, n);
+            let out = engine.run(&q, &k, &v);
+            if let Some(probe) = &self.probe {
+                if probe.should_sample() {
+                    probe.observe(realized, &q, &k, &v, true, &out);
+                }
+            }
+
+            let prompt = req.tokens.len().min(n);
+            if let Err(e) = self.cache.register(req.id, &k.data[..prompt * d], &v.data[..prompt * d])
+            {
+                log::warn!("serve: kv pressure shed request {}: {e:#}", req.id);
+                self.kv_failures += 1;
+                self.scheduler.shed(&req, ShedReason::KvPressure);
+                if let Some(p) = self.pending.remove(&req.id) {
+                    p.tx.abort("kv_pressure");
+                }
+                report.shed += 1;
+                self.note_aborted("kv_pressure", report);
+                continue;
+            }
+
+            // first token: prefill done, TTFT stamps here (not at end
+            // of generation), releasing the admission slot
+            let ttft = if degraded > 0 {
+                self.scheduler.complete_degraded(&req, now, degraded)
+            } else {
+                self.scheduler.complete(&req, now)
+            };
+            if let Some(tok) = &token {
+                self.router.report_ttft(tok, ttft);
+            }
+
+            let Some(p) = self.pending.remove(&req.id) else {
+                // unreachable (filtered above); never leak the blocks
+                if let Err(e) = self.cache.release(req.id) {
+                    log::warn!("serve: releasing orphaned request {}: {e:#}", req.id);
+                }
+                continue;
+            };
+            match p.tx.try_send(self.model.token_of(req.id, 0)) {
+                SendResult::Sent => {
+                    report.injected += 1;
+                    self.stats.injected += 1;
+                    self.stats.tokens += 1;
+                    if let Some(obs) = &self.obs {
+                        obs.injected.inc();
+                        obs.tokens.inc();
+                    }
+                    if p.max_new <= 1 {
+                        p.tx.finish();
+                        if let Err(e) = self.cache.release(req.id) {
+                            log::warn!("serve: releasing request {}: {e:#}", req.id);
+                        }
+                        report.completed += 1;
+                        self.stats.completed += 1;
+                        if let Some(obs) = &self.obs {
+                            obs.completed.inc();
+                        }
+                    } else {
+                        self.inflight.push(Inflight {
+                            req,
+                            key: realized,
+                            tx: p.tx,
+                            emitted: 1,
+                            max_new: p.max_new,
+                            retries: 0,
+                        });
+                    }
+                }
+                // capacity >= 1 and the buffer was empty, so only a
+                // disconnect lands here: already complete in the
+                // scheduler's ledger — free the blocks and move on
+                SendResult::Full | SendResult::Disconnected => {
+                    if let Err(e) = self.cache.release(req.id) {
+                        log::warn!("serve: releasing request {}: {e:#}", req.id);
+                    }
+                    self.note_aborted("disconnect", report);
+                }
+            }
+        }
+    }
+
+    /// Advance every in-flight sequence one token, with per-member
+    /// fault isolation, backpressure pause, and disconnect→cancel.
+    /// Returns the distinct tuning keys of the members that produced a
+    /// token (the keys the iteration's decode latency reports against).
+    fn decode_iteration(&mut self, _now: Instant, report: &mut StepReport) -> Vec<TuneKey> {
+        let mut decoded_keys: Vec<TuneKey> = Vec::new();
+        if self.inflight.is_empty() {
+            return decoded_keys;
+        }
+        let _s = trace::span("serve", "decode_iteration");
+
+        let mut terms: HashMap<usize, Term> = HashMap::new();
+        let mut rows: Vec<(usize, Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::new();
+        for (idx, f) in self.inflight.iter_mut().enumerate() {
+            if f.tx.is_disconnected() {
+                terms.insert(idx, Term::Abort("disconnect"));
+                continue;
+            }
+            if f.tx.is_full() {
+                // the caller isn't keeping up: pause this sequence,
+                // its KV stays resident, the iteration moves on
+                report.backpressured += 1;
+                self.stats.backpressured += 1;
+                if let Some(obs) = &self.obs {
+                    obs.backpressure.inc();
+                }
+                continue;
+            }
+            // mid-iteration fault injection site: lane = in-flight slot
+            if crate::fault::lane_fault(idx).is_some() {
+                f.retries += 1;
+                report.retried += 1;
+                self.stats.retried += 1;
+                if let Some(obs) = &self.obs {
+                    obs.retry.inc();
+                }
+                if f.retries > self.cfg.decode_retry_limit {
+                    terms.insert(idx, Term::Abort("error"));
+                }
+                continue;
+            }
+            let (q, k, v) = self.model.decode_rows(f.req.id, f.emitted);
+            rows.push((idx, q, k, v));
+        }
+
+        let inputs: Vec<DecodeInput<'_>> = rows
+            .iter()
+            .map(|(idx, q, k, v)| DecodeInput {
+                seq: self.inflight[*idx].req.id,
+                q_row: q,
+                k_row: k,
+                v_row: v,
+            })
+            .collect();
+        let outs = decode_batch(&mut self.cache, &inputs);
+
+        for ((idx, ..), out) in rows.iter().zip(outs) {
+            let f = &mut self.inflight[*idx];
+            match out {
+                Ok(row) => {
+                    debug_assert_eq!(row.len(), self.model.d());
+                    match f.tx.try_send(self.model.token_of(f.req.id, f.emitted)) {
+                        SendResult::Sent => {
+                            f.emitted += 1;
+                            report.decoded += 1;
+                            self.stats.tokens += 1;
+                            if let Some(obs) = &self.obs {
+                                obs.tokens.inc();
+                            }
+                            if !decoded_keys.contains(&f.key) {
+                                decoded_keys.push(f.key);
+                            }
+                            if f.emitted >= f.max_new {
+                                terms.insert(*idx, Term::Complete);
+                            }
+                        }
+                        // fullness was probed before computing, and only
+                        // the receiver removes tokens — so a refused send
+                        // here can only be a disconnect
+                        SendResult::Full | SendResult::Disconnected => {
+                            terms.insert(*idx, Term::Abort("disconnect"));
+                        }
+                    }
+                }
+                Err(e) => {
+                    log::warn!("serve: decode failed for request {}: {e:#}", f.req.id);
+                    self.kv_failures += 1;
+                    terms.insert(*idx, Term::Abort("kv_pressure"));
+                }
+            }
+        }
+
+        if terms.is_empty() {
+            return decoded_keys;
+        }
+        let mut survivors = Vec::with_capacity(self.inflight.len());
+        for (idx, f) in std::mem::take(&mut self.inflight).into_iter().enumerate() {
+            match terms.get(&idx) {
+                None => survivors.push(f),
+                Some(Term::Complete) => {
+                    f.tx.finish();
+                    if let Err(e) = self.cache.release(f.req.id) {
+                        log::warn!("serve: releasing request {}: {e:#}", f.req.id);
+                    }
+                    report.completed += 1;
+                    self.stats.completed += 1;
+                    if let Some(obs) = &self.obs {
+                        obs.completed.inc();
+                    }
+                }
+                Some(&Term::Abort(reason)) => {
+                    f.tx.abort(reason);
+                    if let Err(e) = self.cache.release(f.req.id) {
+                        log::warn!("serve: releasing request {}: {e:#}", f.req.id);
+                    }
+                    self.note_aborted(reason, report);
+                }
+            }
+        }
+        self.inflight = survivors;
+        decoded_keys
+    }
+
+    /// Close the telemetry loop for decode: this iteration's elapsed
+    /// time over the tokens it produced is the measured per-token
+    /// latency, reported once per distinct tuning key in the batch.
+    fn record_iteration_latency(
+        &mut self,
+        now: Instant,
+        report: &StepReport,
+        occupancy: usize,
+        decoded_keys: &[TuneKey],
+    ) {
+        if occupancy > 0 {
+            self.stats.occupancy_sum += occupancy as u64;
+            self.stats.occupied_iterations += 1;
+            self.stats.occupancy_max = self.stats.occupancy_max.max(occupancy as u64);
+            if let Some(obs) = &self.obs {
+                obs.occupancy.record_count(occupancy as u64);
+            }
+        }
+        if report.decoded == 0 {
+            return;
+        }
+        let Some(prev) = self.last_now else {
+            return;
+        };
+        let dt = now.saturating_duration_since(prev);
+        if dt.is_zero() {
+            return;
+        }
+        let per_token = dt / report.decoded as u32;
+        for _ in 0..report.decoded {
+            self.inter_token.record(per_token);
+            if let Some(obs) = &self.obs {
+                obs.inter_token.record(per_token);
+            }
+        }
+        for key in decoded_keys {
+            self.router.report_decode(key, per_token);
+        }
+    }
+
+    fn note_aborted(&mut self, reason: &'static str, report: &mut StepReport) {
+        report.aborted += 1;
+        self.stats.aborted += 1;
+        if let Some(obs) = &self.obs {
+            obs.aborted(reason).inc();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+    use crate::autotune::{Autotuner, BucketPolicy, TelemetryCfg, TelemetryRecorder};
+    use crate::config::{AdmissionCfg, AutotuneCfg, ServeCfg};
+    use crate::serve::model::HashModel;
+    use crate::serve::stream::RecvResult;
+    use crate::simulator::GpuSpec;
+    use std::time::Duration;
+
+    const D: usize = 16;
+
+    /// A logical clock base without reading a wall clock in this file:
+    /// `Request::new` stamps an arrival Instant internally.
+    fn base_now() -> Instant {
+        Request::new(u64::MAX, vec![0], Variant::Distr).arrived
+    }
+
+    fn fixed_tuner() -> Autotuner {
+        Autotuner::new(GpuSpec::RTX4090, AutotuneCfg { enable: false, ..Default::default() })
+    }
+
+    fn serve_loop(cfg: ServeCfg, blocks: usize, with_telemetry: bool) -> ContinuousLoop<HashModel> {
+        let mut router: Router<Engine> = Router::new().with_autotuner(fixed_tuner());
+        if with_telemetry {
+            router = router
+                .with_telemetry(TelemetryRecorder::in_memory(GpuSpec::RTX4090, TelemetryCfg::default()));
+        }
+        for variant in [Variant::Distr, Variant::Flash2] {
+            for bucket in [128usize, 256] {
+                router.add_route(variant, bucket, Engine::new(variant).causal(true));
+            }
+        }
+        let scheduler = Scheduler::new(Duration::from_secs(60)).with_admission(AdmissionCfg {
+            enable: true,
+            max_queue_depth: 256,
+            max_inflight: 256,
+            deadline_ms: 0,
+        });
+        let cache = KvCache::new(blocks, 16, D);
+        ContinuousLoop::new(cfg, HashModel::new(D), router, scheduler, cache)
+    }
+
+    fn req_at(id: u64, len: usize, now: Instant) -> Request {
+        let mut r = Request::new(id, vec![id as i32 + 1; len], Variant::Distr);
+        r.arrived = now;
+        r
+    }
+
+    /// Drain a stream's buffered tokens, then return its terminal if
+    /// one is visible.
+    fn drain_stream(rx: &TokenStream, into: &mut Vec<i32>) -> Option<RecvResult> {
+        loop {
+            match rx.try_recv() {
+                RecvResult::Token(t) => into.push(t),
+                RecvResult::Empty => return None,
+                term => return Some(term),
+            }
+        }
+    }
+
+    #[test]
+    fn injection_joins_a_live_decode_batch_and_streams_exact_sequences() {
+        let cfg = ServeCfg { max_new_tokens: 4, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, false);
+
+        let rx1 = serve.submit(req_at(1, 96, t0)).unwrap();
+        let r = serve.step(t0);
+        assert_eq!(r.injected, 1, "first iteration prefills the only request");
+        assert_eq!(r.decoded, 0, "nothing was in flight yet");
+        assert_eq!(r.inflight, 1);
+
+        // two more arrive while request 1 decodes: the next iteration
+        // must inject them AND advance request 1 (the tentpole property)
+        let rx2 = serve.submit(req_at(2, 96, t0 + Duration::from_millis(1))).unwrap();
+        let rx3 = serve.submit(req_at(3, 200, t0 + Duration::from_millis(1))).unwrap();
+        let r = serve.step(t0 + Duration::from_millis(2));
+        assert!(r.injected >= 1, "waiting prefills join mid-stream: {r:?}");
+        assert_eq!(r.decoded, 1, "the in-flight request decoded in the same iteration");
+
+        let mut step = 3u64;
+        while !serve.is_idle() {
+            serve.step(t0 + Duration::from_millis(step));
+            step += 1;
+            assert!(step < 64, "loop must converge");
+        }
+        assert_eq!(serve.stats().completed, 3);
+
+        // every stream yields exactly its model-defined sequence, once
+        let model = HashModel::new(D);
+        for (id, rx) in [(1u64, &rx1), (2, &rx2), (3, &rx3)] {
+            let mut got = Vec::new();
+            let term = drain_stream(rx, &mut got);
+            assert_eq!(term, Some(RecvResult::Finished), "request {id}");
+            let want: Vec<i32> = (0..4).map(|s| model.token_of(id, s)).collect();
+            assert_eq!(got, want, "request {id} token sequence");
+            assert_eq!(rx.try_recv(), RecvResult::Finished, "no further tokens after the terminal");
+        }
+    }
+
+    #[test]
+    fn dropping_the_stream_cancels_and_frees_kv_blocks() {
+        let cfg = ServeCfg { max_new_tokens: 8, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, false);
+        let baseline = serve.cache().num_free();
+
+        let rx = serve.submit(req_at(1, 96, t0)).unwrap();
+        serve.step(t0);
+        serve.step(t0 + Duration::from_millis(1));
+        assert!(serve.cache().num_free() < baseline, "decode holds KV blocks");
+
+        drop(rx);
+        let r = serve.step(t0 + Duration::from_millis(2));
+        assert_eq!(r.aborted, 1, "disconnect terminates the sequence");
+        assert_eq!(serve.cache().num_free(), baseline, "all blocks return to the pool");
+        assert_eq!(serve.stats().aborted, 1);
+        assert!(serve.is_idle());
+
+        // dropping before prefill is a waiting-phase cancel instead
+        let rx = serve.submit(req_at(2, 96, t0 + Duration::from_millis(3))).unwrap();
+        drop(rx);
+        let r = serve.step(t0 + Duration::from_millis(4));
+        assert_eq!(r.cancelled, 1, "pre-prefill disconnects cancel without compute");
+        assert_eq!(r.injected, 0);
+        assert_eq!(serve.scheduler().cancelled(), 1);
+        assert_eq!(serve.cache().num_free(), baseline);
+    }
+
+    #[test]
+    fn prefill_token_budget_caps_injection_per_iteration() {
+        let cfg = ServeCfg { max_batch_prefill_tokens: 100, max_new_tokens: 2, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, false);
+        let rxs: Vec<TokenStream> =
+            (1..=3).map(|id| serve.submit(req_at(id, 96, t0)).unwrap()).collect();
+
+        // 96-token prompts against a 100-token budget: one per iteration
+        let r = serve.step(t0);
+        assert_eq!(r.injected, 1, "budget admits exactly one 96-token prefill");
+        assert_eq!(r.waiting, 2);
+        let mut step = 1u64;
+        while !serve.is_idle() {
+            serve.step(t0 + Duration::from_millis(step));
+            step += 1;
+            assert!(step < 64);
+        }
+        assert_eq!(serve.stats().completed, 3, "budget defers, never starves");
+        for rx in &rxs {
+            assert!(matches!(rx.try_recv(), RecvResult::Token(_)));
+        }
+    }
+
+    #[test]
+    fn waiting_served_ratio_keeps_iterations_pure_decode() {
+        let cfg =
+            ServeCfg { waiting_served_ratio: 2.0, max_new_tokens: 8, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, false);
+        let _rx1 = serve.submit(req_at(1, 96, t0)).unwrap();
+        serve.step(t0);
+
+        // one waiting vs one in flight is under the 2.0 ratio: decode only
+        let _rx2 = serve.submit(req_at(2, 96, t0 + Duration::from_millis(1))).unwrap();
+        let r = serve.step(t0 + Duration::from_millis(2));
+        assert_eq!(r.injected, 0, "ratio defers injection: {r:?}");
+        assert_eq!(r.decoded, 1);
+        assert_eq!(r.waiting, 1);
+
+        // a second waiting request crosses the threshold
+        let _rx3 = serve.submit(req_at(3, 96, t0 + Duration::from_millis(2))).unwrap();
+        let r = serve.step(t0 + Duration::from_millis(3));
+        assert_eq!(r.injected, 2, "at the ratio the whole bucket fits the budget");
+        assert_eq!(r.decoded, 1);
+    }
+
+    #[test]
+    fn full_stream_pauses_decode_without_losing_tokens() {
+        let cfg = ServeCfg { stream_capacity: 1, max_new_tokens: 3, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, false);
+        let rx = serve.submit(req_at(1, 96, t0)).unwrap();
+        serve.step(t0);
+
+        // the first token fills the 1-slot buffer: decode must pause
+        let r = serve.step(t0 + Duration::from_millis(1));
+        assert_eq!(r.decoded, 0);
+        assert_eq!(r.backpressured, 1, "paused, not dropped: {r:?}");
+        assert_eq!(r.inflight, 1, "the sequence stays resident");
+
+        // consuming reopens the window; the sequence resumes where it was
+        let model = HashModel::new(D);
+        assert_eq!(rx.try_recv(), RecvResult::Token(model.token_of(1, 0)));
+        let r = serve.step(t0 + Duration::from_millis(2));
+        assert_eq!(r.decoded, 1);
+        assert_eq!(rx.try_recv(), RecvResult::Token(model.token_of(1, 1)));
+        assert_eq!(serve.stats().backpressured, 1);
+    }
+
+    #[test]
+    fn iteration_timer_feeds_decode_telemetry_per_key() {
+        let cfg = ServeCfg { max_new_tokens: 4, ..Default::default() };
+        let t0 = base_now();
+        let mut serve = serve_loop(cfg, 256, true);
+        let _rx = serve.submit(req_at(1, 96, t0)).unwrap();
+        let mut step = 0u64;
+        while !serve.is_idle() {
+            serve.step(t0 + Duration::from_millis(step));
+            step += 1;
+            assert!(step < 64);
+        }
+        assert!(serve.inter_token().count() > 0, "iteration timer recorded per-token samples");
+        // the decode EWMA landed on the realized tuning key (batch of 1)
+        let key = req_at(1, 96, t0).tune_key(D, true, 1, BucketPolicy::Pow2);
+        let rec = serve.router().telemetry().unwrap();
+        let state = rec.key_state(&key).expect("dispatched key has telemetry state");
+        let decode = state.decode().expect("decode EWMA fed from the iteration timer");
+        assert!(decode > Duration::ZERO);
+        assert!(state.ttft().is_some(), "TTFT stamped at first token");
+    }
+}

@@ -1,0 +1,37 @@
+//! Iteration-level continuous batching — the serve loop that keeps
+//! DistrAttention's batches full.
+//!
+//! The legacy serve path is flush-oriented: the [`Batcher`] accumulates
+//! compatible requests, a size/deadline flush fires, `route_batch` runs
+//! the whole batch to completion (prefill *and* every decode step),
+//! and only then does the next batch form. Bursty arrivals, mixed
+//! prompt lengths, and long generations all become flush artifacts.
+//!
+//! [`ContinuousLoop`] replaces that with the Orca/vLLM/TGI iteration
+//! model: every iteration decodes one token for each in-flight
+//! sequence *and* may inject waiting prefills into the running batch,
+//! bounded by explicit token budgets and a waiting/served admission
+//! ratio (see [`budget`]). Per-request results stream through bounded
+//! token channels ([`stream`]) whose receivers can disconnect at any
+//! point — a disconnect cancels the request and frees its KV blocks.
+//! Overload shedding stays delegated to the existing admission gate
+//! and `shed_total{reason}` machinery; this module adds no second
+//! admission policy.
+//!
+//! Everything here is wall-clock-free: the loop takes `now: Instant`
+//! from its driver, so tests replay arrival schedules deterministically
+//! (see `rust/tests/serve.rs`). See `docs/SERVING.md` for the loop
+//! architecture, knobs, and streaming/cancel semantics.
+//!
+//! [`Batcher`]: crate::coordinator::Batcher
+
+pub mod budget;
+pub mod continuous;
+pub mod model;
+pub mod report;
+pub mod stream;
+
+pub use continuous::{ContinuousLoop, ServeStats, StepReport};
+pub use model::{HashModel, TokenModel};
+pub use report::ServeLoadReport;
+pub use stream::{token_stream, RecvResult, SendResult, TokenSender, TokenStream};

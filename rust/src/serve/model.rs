@@ -1,0 +1,128 @@
+//! The token model the serve loop drives: where Q/K/V rows and output
+//! tokens come from.
+//!
+//! The serving machinery doesn't care what produces embeddings and
+//! tokens — only that prefill yields `(Q, K, V)` at the bucketed
+//! prompt length and each decode step yields one row triple and one
+//! token. [`TokenModel`] is that seam. [`HashModel`] is the
+//! self-contained stand-in the demo, tests, and bench share: every
+//! row and token is a pure function of `(request id, step)`, so two
+//! runs of the same workload produce bit-identical streams — the
+//! property the chaos suite's faults-off control run asserts — and a
+//! test can precompute the exact token sequence a stream must yield.
+
+use crate::coordinator::{Request, RequestId};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// What the continuous loop needs from a model.
+pub trait TokenModel {
+    /// Head dim of the model (every row triple has this length).
+    fn d(&self) -> usize;
+
+    /// Q/K/V for `req`'s prefill at bucketed length `n`.
+    fn prefill(&self, req: &Request, n: usize) -> (Matrix, Matrix, Matrix);
+
+    /// The `(q, k, v)` rows for decode step `step` of request `id`
+    /// (step 0 is the prefill-produced first token; decode steps start
+    /// at 1).
+    fn decode_rows(&self, id: RequestId, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>);
+
+    /// The token emitted at `step` of request `id`. Pure: callers may
+    /// precompute the exact sequence a request's stream must deliver.
+    fn token_of(&self, id: RequestId, step: usize) -> i32;
+}
+
+/// Deterministic hash-seeded model (no weights, no I/O): row `r` of an
+/// embedding is a pseudo-random function of `(token, position, salt)`,
+/// decode rows and output tokens are pure functions of
+/// `(request id, step)`.
+pub struct HashModel {
+    d: usize,
+}
+
+impl HashModel {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+
+    fn embed(&self, tokens: &[i32], n: usize, salt: u64) -> Matrix {
+        let mut m = Matrix::zeros(n, self.d);
+        for r in 0..n {
+            let tok = tokens.get(r).copied().unwrap_or(0) as u64;
+            let mut rng =
+                Rng::seed_from_u64(tok.wrapping_mul(0x9E37_79B9).wrapping_add(r as u64) ^ salt);
+            for c in 0..self.d {
+                *m.at_mut(r, c) = rng.gen_f32();
+            }
+        }
+        m
+    }
+}
+
+impl TokenModel for HashModel {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn prefill(&self, req: &Request, n: usize) -> (Matrix, Matrix, Matrix) {
+        (self.embed(&req.tokens, n, 1), self.embed(&req.tokens, n, 2), self.embed(&req.tokens, n, 3))
+    }
+
+    fn decode_rows(&self, id: RequestId, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut out = Vec::with_capacity(3);
+        for salt in 0xA1u64..=0xA3 {
+            let mut rng = Rng::seed_from_u64(
+                id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(step as u64) ^ salt,
+            );
+            out.push((0..self.d).map(|_| rng.gen_f32()).collect::<Vec<f32>>());
+        }
+        let v = out.pop().unwrap_or_default();
+        let k = out.pop().unwrap_or_default();
+        let q = out.pop().unwrap_or_default();
+        (q, k, v)
+    }
+
+    fn token_of(&self, id: RequestId, step: usize) -> i32 {
+        let h = id
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((step as u64).wrapping_mul(0x85EB_CA6B));
+        ((h >> 33) & 0x7FFF_FFFF) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Variant;
+
+    #[test]
+    fn model_is_deterministic() {
+        let m = HashModel::new(16);
+        let req = Request::new(7, vec![1, 2, 3], Variant::Distr);
+        let (q1, k1, v1) = m.prefill(&req, 16);
+        let (q2, k2, v2) = m.prefill(&req, 16);
+        assert_eq!(q1.data, q2.data);
+        assert_eq!(k1.data, k2.data);
+        assert_eq!(v1.data, v2.data);
+        assert_eq!(m.decode_rows(7, 3), m.decode_rows(7, 3));
+        assert_eq!(m.token_of(7, 3), m.token_of(7, 3));
+    }
+
+    #[test]
+    fn tokens_vary_by_request_and_step() {
+        let m = HashModel::new(8);
+        assert_ne!(m.token_of(1, 0), m.token_of(2, 0), "requests diverge");
+        assert_ne!(m.token_of(1, 0), m.token_of(1, 1), "steps diverge");
+        assert!(m.token_of(1, 0) >= 0, "token ids stay non-negative");
+    }
+
+    #[test]
+    fn decode_rows_have_model_dim_and_distinct_roles() {
+        let m = HashModel::new(32);
+        let (q, k, v) = m.decode_rows(5, 1);
+        assert_eq!((q.len(), k.len(), v.len()), (32, 32, 32));
+        assert_ne!(q, k, "salts separate the roles");
+        assert_ne!(k, v);
+    }
+}

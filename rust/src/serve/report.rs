@@ -1,0 +1,113 @@
+//! Machine-readable serve-latency report (`BENCH_serve.json`).
+//!
+//! `benches/serve_load.rs` drives an open-loop arrival process through
+//! both the legacy flush path and the continuous loop and records TTFT
+//! and inter-token latency distributions per mode. This report is the
+//! serving analogue of [`crate::util::bench::JsonReport`]: same
+//! `schema`/`bench`/`results` envelope, but each record is a latency
+//! *distribution* (p50/p95/p99 + count) rather than a timed closure,
+//! because open-loop percentiles — not means — are what distinguish
+//! continuous batching from flush batching under bursty arrivals.
+
+use std::path::Path;
+
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Value;
+
+/// Accumulates per-(mode, metric) latency distributions and writes the
+/// `BENCH_serve.json` trajectory artifact.
+pub struct ServeLoadReport {
+    results: Vec<Value>,
+}
+
+impl Default for ServeLoadReport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeLoadReport {
+    pub fn new() -> Self {
+        Self { results: Vec::new() }
+    }
+
+    /// Record one latency distribution, e.g. `("continuous", "ttft")`.
+    /// Empty histograms are skipped — a mode that served nothing must
+    /// not fabricate zero percentiles (CI separately fails an empty
+    /// results array).
+    // schema:begin serve-load-report v1
+    // The emitted `schema` field below must track this fence's version;
+    // re-stamp with `cargo xtask analyze --update-stamps` after edits.
+    pub fn record(&mut self, mode: &str, metric: &str, hist: &LatencyHistogram) {
+        if hist.count() == 0 {
+            return;
+        }
+        self.results.push(Value::object(vec![
+            ("mode", Value::string(mode)),
+            ("metric", Value::string(metric)),
+            ("p50_ns", Value::number(hist.quantile(0.5).as_nanos() as f64)),
+            ("p95_ns", Value::number(hist.quantile(0.95).as_nanos() as f64)),
+            ("p99_ns", Value::number(hist.quantile(0.99).as_nanos() as f64)),
+            ("mean_ns", Value::number(hist.mean().as_nanos() as f64)),
+            ("max_ns", Value::number(hist.max().as_nanos() as f64)),
+            ("count", Value::number(hist.count() as f64)),
+        ]));
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("schema", Value::number(1.0)),
+            ("bench", Value::string("serve_load")),
+            ("results", Value::Array(self.results.clone())),
+        ])
+    }
+    // schema:end serve-load-report
+
+    /// Recorded distributions so far.
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// Write the report (pretty-printed) to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn report_shape_matches_bench_convention() {
+        let mut r = ServeLoadReport::new();
+        let mut h = LatencyHistogram::default();
+        for ms in [1u64, 2, 3, 10] {
+            h.record(Duration::from_millis(ms));
+        }
+        r.record("continuous", "ttft", &h);
+        let v = r.to_value();
+        assert_eq!(v.req_usize("schema").unwrap(), 1);
+        assert_eq!(v.req_str("bench").unwrap(), "serve_load");
+        let results = v.req_array("results").unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req_str("mode").unwrap(), "continuous");
+        assert_eq!(results[0].req_str("metric").unwrap(), "ttft");
+        assert_eq!(results[0].req_usize("count").unwrap(), 4);
+        let p50 = results[0].req("p50_ns").unwrap().as_f64().unwrap();
+        let p99 = results[0].req("p99_ns").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p99 >= p50, "{p50} vs {p99}");
+    }
+
+    #[test]
+    fn empty_distributions_are_skipped() {
+        let mut r = ServeLoadReport::new();
+        r.record("flush", "ttft", &LatencyHistogram::default());
+        assert!(r.is_empty(), "no samples, no record");
+    }
+}

@@ -1,0 +1,222 @@
+//! Bounded per-request token channels with backpressure and
+//! disconnect detection.
+//!
+//! One channel pairs each served request with its caller: the serve
+//! loop holds the [`TokenSender`], the caller polls the
+//! [`TokenStream`]. The buffer is bounded — a full channel reads as
+//! [`SendResult::Full`] and the loop *pauses that sequence's decode*
+//! instead of buffering unboundedly (per-request backpressure). A
+//! dropped receiver reads as [`SendResult::Disconnected`], the signal
+//! the loop turns into a cancellation that frees the request's KV
+//! blocks.
+//!
+//! The channel is deliberately dumb: a mutex-wrapped ring shared by
+//! exactly one sender and one receiver. The serve loop is
+//! single-threaded per iteration, so there is no contention to
+//! engineer around, and the mutex keeps the channel sound if a caller
+//! polls its stream from another thread.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Why a stream ended without delivering its full sequence.
+/// `&'static str` reasons match the `serve_aborted_total{reason}`
+/// label values: `disconnect`, `kv_pressure`, `deadline`, `error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendResult {
+    /// The token was buffered.
+    Sent,
+    /// The buffer is at capacity; the sequence should pause.
+    Full,
+    /// The receiver is gone; the request should cancel.
+    Disconnected,
+}
+
+/// What a poll of the stream observed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RecvResult {
+    /// The next generated token.
+    Token(i32),
+    /// Nothing buffered yet; the request is still being served.
+    Empty,
+    /// The full sequence was delivered and the stream is closed.
+    Finished,
+    /// The stream ended early; the reason names the
+    /// `serve_aborted_total{reason}` label it was counted under.
+    Aborted(&'static str),
+}
+
+/// Terminal state of the channel, set once by the sender.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EndState {
+    Open,
+    Finished,
+    Aborted(&'static str),
+}
+
+struct StreamState {
+    buf: VecDeque<i32>,
+    capacity: usize,
+    end: EndState,
+    receiver_alive: bool,
+}
+
+/// The serve loop's half of a request's channel.
+pub struct TokenSender {
+    state: Arc<Mutex<StreamState>>,
+}
+
+/// The caller's half: poll for tokens until a terminal state.
+/// Dropping it mid-generation is the disconnect→cancel path.
+pub struct TokenStream {
+    state: Arc<Mutex<StreamState>>,
+}
+
+/// Build a bounded channel of `capacity` tokens (min 1).
+pub fn token_stream(capacity: usize) -> (TokenSender, TokenStream) {
+    let state = Arc::new(Mutex::new(StreamState {
+        buf: VecDeque::with_capacity(capacity.max(1)),
+        capacity: capacity.max(1),
+        end: EndState::Open,
+        receiver_alive: true,
+    }));
+    (TokenSender { state: state.clone() }, TokenStream { state })
+}
+
+impl TokenSender {
+    /// Offer one token. Never blocks: a full buffer or a dead receiver
+    /// is reported back so the loop can pause or cancel the sequence.
+    pub fn try_send(&self, token: i32) -> SendResult {
+        let mut s = self.state.lock().unwrap();
+        if !s.receiver_alive {
+            return SendResult::Disconnected;
+        }
+        if s.buf.len() >= s.capacity {
+            return SendResult::Full;
+        }
+        s.buf.push_back(token);
+        SendResult::Sent
+    }
+
+    /// Would a send be refused right now? The loop probes this before
+    /// spending compute on a sequence whose caller isn't keeping up.
+    pub fn is_full(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.buf.len() >= s.capacity
+    }
+
+    /// Has the receiver been dropped?
+    pub fn is_disconnected(&self) -> bool {
+        !self.state.lock().unwrap().receiver_alive
+    }
+
+    /// Close the stream normally: buffered tokens stay readable, then
+    /// the receiver observes [`RecvResult::Finished`].
+    pub fn finish(&self) {
+        let mut s = self.state.lock().unwrap();
+        if s.end == EndState::Open {
+            s.end = EndState::Finished;
+        }
+    }
+
+    /// Close the stream early with a reason (an aborted-stream label
+    /// value). Buffered tokens stay readable first — the caller keeps
+    /// everything that was generated before the failure.
+    pub fn abort(&self, reason: &'static str) {
+        let mut s = self.state.lock().unwrap();
+        if s.end == EndState::Open {
+            s.end = EndState::Aborted(reason);
+        }
+    }
+}
+
+impl TokenStream {
+    /// Poll for the next token or terminal state. Buffered tokens are
+    /// always delivered before a terminal, so an abort never loses
+    /// already-generated output.
+    pub fn try_recv(&self) -> RecvResult {
+        let mut s = self.state.lock().unwrap();
+        if let Some(t) = s.buf.pop_front() {
+            return RecvResult::Token(t);
+        }
+        match s.end {
+            EndState::Open => RecvResult::Empty,
+            EndState::Finished => RecvResult::Finished,
+            EndState::Aborted(reason) => RecvResult::Aborted(reason),
+        }
+    }
+
+    /// Pull every currently buffered token (drains the backlog without
+    /// consuming the terminal state).
+    pub fn drain(&self) -> Vec<i32> {
+        let mut s = self.state.lock().unwrap();
+        s.buf.drain(..).collect()
+    }
+}
+
+impl Drop for TokenStream {
+    fn drop(&mut self) {
+        self.state.lock().unwrap().receiver_alive = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_flow_in_order_until_finished() {
+        let (tx, rx) = token_stream(8);
+        assert_eq!(rx.try_recv(), RecvResult::Empty);
+        assert_eq!(tx.try_send(1), SendResult::Sent);
+        assert_eq!(tx.try_send(2), SendResult::Sent);
+        tx.finish();
+        assert_eq!(rx.try_recv(), RecvResult::Token(1));
+        assert_eq!(rx.try_recv(), RecvResult::Token(2));
+        assert_eq!(rx.try_recv(), RecvResult::Finished);
+        assert_eq!(rx.try_recv(), RecvResult::Finished, "terminal is sticky");
+    }
+
+    #[test]
+    fn full_buffer_backpressures_without_losing_tokens() {
+        let (tx, rx) = token_stream(2);
+        assert_eq!(tx.try_send(1), SendResult::Sent);
+        assert!(!tx.is_full());
+        assert_eq!(tx.try_send(2), SendResult::Sent);
+        assert!(tx.is_full());
+        assert_eq!(tx.try_send(3), SendResult::Full, "bounded: third send refused");
+        assert_eq!(rx.try_recv(), RecvResult::Token(1));
+        assert!(!tx.is_full(), "consuming reopens the window");
+        assert_eq!(tx.try_send(3), SendResult::Sent);
+        assert_eq!(rx.drain(), vec![2, 3]);
+    }
+
+    #[test]
+    fn capacity_zero_is_clamped_to_one() {
+        let (tx, _rx) = token_stream(0);
+        assert_eq!(tx.try_send(7), SendResult::Sent, "capacity clamps to 1");
+        assert_eq!(tx.try_send(8), SendResult::Full);
+    }
+
+    #[test]
+    fn dropped_receiver_reads_as_disconnect() {
+        let (tx, rx) = token_stream(4);
+        assert!(!tx.is_disconnected());
+        drop(rx);
+        assert!(tx.is_disconnected());
+        assert_eq!(tx.try_send(1), SendResult::Disconnected);
+    }
+
+    #[test]
+    fn abort_preserves_buffered_tokens_and_reason() {
+        let (tx, rx) = token_stream(4);
+        tx.try_send(1);
+        tx.abort("kv_pressure");
+        tx.abort("disconnect");
+        assert_eq!(rx.try_recv(), RecvResult::Token(1), "pre-abort output survives");
+        assert_eq!(rx.try_recv(), RecvResult::Aborted("kv_pressure"), "first terminal wins");
+        // a finish after an abort does not resurrect the stream
+        tx.finish();
+        assert_eq!(rx.try_recv(), RecvResult::Aborted("kv_pressure"));
+    }
+}

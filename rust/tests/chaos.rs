@@ -20,6 +20,12 @@
 //! degradations, and bit-identical serve output whether or not the
 //! robustness machinery (admission control + brownout ladder) is wired
 //! in at all.
+//!
+//! The continuous-batching loop gets the same treatment
+//! (`chaos_continuous_loop_*`): KV exhaustion and lane faults injected
+//! mid-iteration must leave every request's stream with exactly one
+//! terminal, every KV block back in the pool, and the faults-off
+//! control bit-identical across runs.
 #![cfg(feature = "fault-inject")]
 
 use std::collections::HashMap;
@@ -31,12 +37,13 @@ use distr_attention::autotune::{
     Autotuner, BucketPolicy, DevicePool, TelemetryCfg, TelemetryRecorder, TuneKey, TunedParams,
     TuningCache,
 };
-use distr_attention::config::{AdmissionCfg, AutotuneCfg, BrownoutCfg, SupervisorCfg};
+use distr_attention::config::{AdmissionCfg, AutotuneCfg, BrownoutCfg, ServeCfg, SupervisorCfg};
 use distr_attention::coordinator::{
     run_scatter_supervised, Brownout, KvCache, LaneSupervisor, Pressure, Request, Router,
     ScatterPlan, Scheduler, ShedReason,
 };
 use distr_attention::fault::{self, Family, FaultPlan, Site};
+use distr_attention::serve::{ContinuousLoop, HashModel, RecvResult, ServeStats, TokenModel, TokenStream};
 use distr_attention::simulator::GpuSpec;
 use distr_attention::tensor::Matrix;
 use distr_attention::util::rng::Rng;
@@ -389,6 +396,193 @@ fn quarantined_lanes_are_never_billed_heads() {
     assert_eq!(sv.lost_heads, plan.heads as u64);
     assert!(sup.healthy_count() >= 1, "the last healthy lane is never quarantined");
     fault::clear();
+}
+
+// -- continuous-batching loop under chaos ---------------------------------
+
+/// Head dim of the continuous-loop chaos model.
+const SERVE_D: usize = 16;
+/// Prompt length (buckets to 128 under the pow2 policy).
+const SERVE_PROMPT: usize = 96;
+/// Generated tokens per request, prefill first token included.
+const SERVE_MAX_NEW: usize = 6;
+
+/// Ledger of one continuous-loop run, for conservation and
+/// bit-identity checks.
+struct ContinuousRun {
+    /// every received token in submission order, with a per-request
+    /// terminal marker (-1 finished, -2 aborted) — the bit-identity
+    /// payload (model tokens are non-negative, so markers can't collide)
+    ledger: Vec<i32>,
+    finished: u64,
+    aborted: u64,
+    tokens_received: u64,
+    stats: ServeStats,
+}
+
+/// Drive `requests` staggered arrivals through a fresh continuous loop
+/// until it drains, polling every stream each iteration, and assert
+/// the loop-level conservation invariants:
+///
+/// 1. every submitted request's stream reaches exactly one terminal
+///    (sticky thereafter) — finished streams hold the model's exact
+///    token sequence, aborted streams a strict prefix of it;
+/// 2. every token the loop counted as sent was received — nothing is
+///    dropped or duplicated on the way out;
+/// 3. the KV pool drains back to whole and every admission slot
+///    returns, even when registration or decode appends failed
+///    mid-iteration.
+fn run_continuous(requests: u64) -> ContinuousRun {
+    let cfg = ServeCfg { max_new_tokens: SERVE_MAX_NEW, ..Default::default() };
+    let mut router: Router<Engine> = Router::new().with_autotuner(fixed_tuner());
+    router.add_route(Variant::Distr, 128, Engine::new(Variant::Distr).causal(true));
+    let scheduler = Scheduler::new(Duration::from_secs(60)).with_admission(AdmissionCfg {
+        enable: true,
+        max_queue_depth: 1024,
+        max_inflight: 1024,
+        deadline_ms: 0,
+    });
+    let cache = KvCache::new(128, 16, SERVE_D);
+    let mut serve = ContinuousLoop::new(cfg, HashModel::new(SERVE_D), router, scheduler, cache);
+
+    let t0 = Instant::now();
+    let mut streams: Vec<(u64, TokenStream, Vec<i32>, Option<RecvResult>)> = Vec::new();
+    let mut next = 0u64;
+    let mut tick = 0u64;
+    loop {
+        // two fresh arrivals per iteration: injections and faults land
+        // mid-flight, not in a single up-front prefill wave
+        for _ in 0..2 {
+            if next < requests {
+                let mut req =
+                    Request::new(next, vec![next as i32 + 1; SERVE_PROMPT], Variant::Distr);
+                req.arrived = t0 + Duration::from_millis(tick);
+                let rx = serve.submit(req).expect("bounds are generous: admission passes");
+                streams.push((next, rx, Vec::new(), None));
+                next += 1;
+            }
+        }
+        serve.step(t0 + Duration::from_millis(tick));
+        for (_, rx, tokens, term) in streams.iter_mut() {
+            if term.is_some() {
+                continue;
+            }
+            loop {
+                match rx.try_recv() {
+                    RecvResult::Token(t) => tokens.push(t),
+                    RecvResult::Empty => break,
+                    terminal => {
+                        *term = Some(terminal);
+                        break;
+                    }
+                }
+            }
+        }
+        tick += 1;
+        if next >= requests && serve.is_idle() {
+            break;
+        }
+        assert!(tick < 10_000, "continuous loop must drain under faults");
+    }
+
+    let model = HashModel::new(SERVE_D);
+    let mut ledger = Vec::new();
+    let mut finished = 0u64;
+    let mut aborted = 0u64;
+    let mut tokens_received = 0u64;
+    for (id, rx, tokens, term) in &streams {
+        let term = match term {
+            Some(t) => t.clone(),
+            None => panic!("request {id} never reached a terminal state"),
+        };
+        // exactly once: the terminal is sticky, re-polling never yields
+        // another token or a different ending
+        assert_eq!(rx.try_recv(), term, "terminal must be sticky for request {id}");
+        let want: Vec<i32> = (0..SERVE_MAX_NEW).map(|s| model.token_of(*id, s)).collect();
+        match term {
+            RecvResult::Finished => {
+                finished += 1;
+                assert_eq!(tokens, &want, "request {id} must stream its exact sequence once");
+                ledger.extend_from_slice(tokens);
+                ledger.push(-1);
+            }
+            RecvResult::Aborted(reason) => {
+                aborted += 1;
+                assert!(
+                    tokens.len() < want.len() && tokens[..] == want[..tokens.len()],
+                    "aborted request {id} ({reason}) must hold a strict prefix, \
+                     got {tokens:?}"
+                );
+                ledger.extend_from_slice(tokens);
+                ledger.push(-2);
+            }
+            other => panic!("request {id} ended in a non-terminal state {other:?}"),
+        }
+        tokens_received += tokens.len() as u64;
+    }
+
+    assert_eq!(finished + aborted, requests, "every stream terminates exactly once");
+    let stats = serve.stats();
+    assert_eq!(stats.completed, finished, "loop ledger agrees with the streams");
+    assert_eq!(stats.tokens, tokens_received, "every sent token was received");
+    assert_eq!(
+        serve.cache().num_free(),
+        serve.cache().num_blocks(),
+        "KV blocks must drain to zero in use"
+    );
+    assert_eq!(serve.scheduler().gate().unwrap().in_flight(), 0, "admission slots all return");
+
+    ContinuousRun { ledger, finished, aborted, tokens_received, stats }
+}
+
+#[test]
+fn chaos_continuous_loop_conserves_streams_and_blocks() {
+    let _g = serial();
+    quiet_injected_panics();
+    // KV exhaustion hits prefill registration and decode appends; lane
+    // faults hit the per-member decode retry path, all mid-iteration
+    let plan = FaultPlan::new(0xBEEF)
+        .with_site(Site::KvExhaust, 60_000, 1, 4)
+        .with_site(Site::LaneError, 120_000, 1, 3)
+        .with_site(Site::LaneSlow, 80_000, 1, 2)
+        .with_site(Site::LaneStall, 60_000, 1, 2);
+    assert!(fault::install(plan), "feature is on, install must arm");
+
+    let mut kv_fired = false;
+    let mut lane_fired = false;
+    for _round in 0..6u32 {
+        let run = run_continuous(16);
+        // aborts are legal under faults, silent losses are not — and a
+        // faulted run still makes forward progress
+        assert!(run.finished >= 1, "faults must not wedge the loop entirely");
+        let st = fault::stats();
+        kv_fired = st.family_fired(Family::Kv) > 0;
+        lane_fired = st.family_fired(Family::Lane) > 0;
+        if kv_fired && lane_fired {
+            break;
+        }
+    }
+    assert!(kv_fired, "seeded KV exhaustion never fired against the continuous loop");
+    assert!(lane_fired, "seeded lane faults never fired against the continuous loop");
+    fault::clear();
+}
+
+#[test]
+fn chaos_continuous_control_run_is_clean_and_bit_identical() {
+    let _g = serial();
+    fault::clear();
+
+    let a = run_continuous(16);
+    assert_eq!(a.aborted, 0, "faults-off control must not abort");
+    assert_eq!(a.finished, 16);
+    assert_eq!(a.stats.retried, 0, "no lane faults, no retries");
+    assert_eq!(a.stats.backpressured, 0, "drained streams never pause");
+    assert_eq!(a.tokens_received, 16 * SERVE_MAX_NEW as u64);
+
+    // the whole run replays bit-identically: same tokens, same order,
+    // same terminals
+    let b = run_continuous(16);
+    assert!(a.ledger == b.ledger, "faults-off continuous serving must be bit-identical");
 }
 
 #[test]

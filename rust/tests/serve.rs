@@ -1,0 +1,340 @@
+//! Integration tests for the iteration-level continuous batching loop
+//! (`distr_attention::serve`).
+//!
+//! Everything here runs on a *logical* clock: the base `Instant` is
+//! captured once (from a request's own arrival stamp) and every
+//! subsequent timestamp is an offset from it, so scheduling decisions
+//! — injection, deadline sheds, fairness — replay identically on every
+//! run. The fairness tests in particular are regression proofs, not
+//! load tests: they assert structural properties of one iteration
+//! (every in-flight sequence advances, injected prompt tokens respect
+//! the budget, the oldest bucket is served first), not throughput.
+
+use std::time::{Duration, Instant};
+
+use distr_attention::attention::{Engine, Variant};
+use distr_attention::autotune::Autotuner;
+use distr_attention::config::{AdmissionCfg, AutotuneCfg, ServeCfg};
+use distr_attention::coordinator::{KvCache, Request, Router, Scheduler};
+use distr_attention::obs::registry::Registry;
+use distr_attention::serve::{ContinuousLoop, HashModel, RecvResult, TokenModel, TokenStream};
+use distr_attention::simulator::GpuSpec;
+
+const D: usize = 16;
+
+/// Logical-clock base: `Request::new` stamps an arrival `Instant`
+/// internally, which this suite reuses instead of reading a clock.
+fn base_now() -> Instant {
+    Request::new(u64::MAX, vec![0], Variant::Distr).arrived
+}
+
+/// Disabled tuner: deterministic legacy-default picks, no analytic
+/// search, so runs are reproducible and fast.
+fn fixed_tuner() -> Autotuner {
+    Autotuner::new(GpuSpec::RTX4090, AutotuneCfg { enable: false, ..Default::default() })
+}
+
+fn serve_loop(cfg: ServeCfg, blocks: usize, reg: Option<&Registry>) -> ContinuousLoop<HashModel> {
+    let mut router: Router<Engine> = Router::new().with_autotuner(fixed_tuner());
+    for variant in [Variant::Distr, Variant::Flash2] {
+        for bucket in [128usize, 256] {
+            router.add_route(variant, bucket, Engine::new(variant).causal(true));
+        }
+    }
+    let scheduler = Scheduler::new(Duration::from_secs(60)).with_admission(AdmissionCfg {
+        enable: true,
+        max_queue_depth: 1024,
+        max_inflight: 1024,
+        deadline_ms: 0,
+    });
+    let cache = KvCache::new(blocks, 16, D);
+    let mut serve = ContinuousLoop::new(cfg, HashModel::new(D), router, scheduler, cache);
+    if let Some(reg) = reg {
+        serve = serve.with_obs(reg);
+    }
+    serve
+}
+
+fn req_at(id: u64, len: usize, variant: Variant, now: Instant) -> Request {
+    let mut r = Request::new(id, vec![id as i32 + 1; len], variant);
+    r.arrived = now;
+    r
+}
+
+/// Pull everything currently visible on a stream: buffered tokens into
+/// `into`, and the terminal state if one is exposed.
+fn drain_stream(rx: &TokenStream, into: &mut Vec<i32>) -> Option<RecvResult> {
+    loop {
+        match rx.try_recv() {
+            RecvResult::Token(t) => into.push(t),
+            RecvResult::Empty => return None,
+            term => return Some(term),
+        }
+    }
+}
+
+/// The tentpole, end to end: mixed prompt lengths and staggered
+/// arrivals, with the key assertions that (a) at least one iteration
+/// both injects a prefill AND advances in-flight decodes, and (b)
+/// every stream delivers its model-defined token sequence exactly
+/// once.
+#[test]
+fn mixed_lengths_staggered_arrivals_stream_exact_sequences() {
+    let reg = Registry::new();
+    let cfg = ServeCfg { max_new_tokens: 5, ..Default::default() };
+    let t0 = base_now();
+    let mut serve = serve_loop(cfg, 512, Some(&reg));
+
+    // wave 1 arrives before the first iteration; waves 2 and 3 land
+    // while wave 1 is mid-decode — they must join the running batch
+    let specs: Vec<(u64, usize, Variant, u64)> = vec![
+        (1, 200, Variant::Distr, 0),
+        (2, 96, Variant::Distr, 0),
+        (3, 96, Variant::Flash2, 1),
+        (4, 200, Variant::Distr, 2),
+        (5, 96, Variant::Distr, 3),
+    ];
+    let mut streams: Vec<(u64, TokenStream)> = Vec::new();
+    let mut pending = specs.into_iter().peekable();
+    let mut coinjection_seen = false;
+    let mut tick = 0u64;
+    loop {
+        while let Some((id, len, variant, at)) = pending.peek().copied() {
+            if at <= tick {
+                let now = t0 + Duration::from_millis(at);
+                let rx = serve.submit(req_at(id, len, variant, now)).expect("admission is open");
+                streams.push((id, rx));
+                pending.next();
+            } else {
+                break;
+            }
+        }
+        let r = serve.step(t0 + Duration::from_millis(tick));
+        // decoded > injected: sequences that were already in flight
+        // advanced in the very iteration that admitted new prefills
+        if r.injected >= 1 && r.decoded > r.injected {
+            coinjection_seen = true;
+        }
+        tick += 1;
+        if pending.peek().is_none() && serve.is_idle() {
+            break;
+        }
+        assert!(tick < 256, "serve loop must converge");
+    }
+    assert!(
+        coinjection_seen,
+        "at least one iteration must inject prefills into a live decode batch"
+    );
+
+    // every stream yields its full sequence exactly once, then closes
+    let model = HashModel::new(D);
+    for (id, rx) in &streams {
+        let mut got = Vec::new();
+        let term = drain_stream(rx, &mut got);
+        assert_eq!(term, Some(RecvResult::Finished), "request {id} must finish");
+        let want: Vec<i32> = (0..5).map(|s| model.token_of(*id, s)).collect();
+        assert_eq!(got, want, "request {id} must stream its exact token sequence");
+        assert_eq!(rx.try_recv(), RecvResult::Finished, "terminal is sticky, no duplicates");
+    }
+
+    // ledgers agree across every layer
+    let stats = serve.stats();
+    assert_eq!(stats.completed, 5);
+    assert_eq!(stats.tokens, 25, "5 requests x 5 tokens");
+    assert_eq!(serve.scheduler().completed(), 5);
+    assert_eq!(serve.cache().num_free(), serve.cache().num_blocks(), "KV pool drains");
+    assert_eq!(reg.counter("serve_completed_total", &[]).get(), 5);
+    assert_eq!(reg.counter("serve_tokens_total", &[]).get(), 25);
+    assert!(reg.counter("serve_iterations_total", &[]).get() >= 5);
+    assert!(reg.counter("serve_injected_total", &[]).get() >= 1);
+    assert_eq!(reg.gauge("serve_inflight", &[]).get(), 0.0);
+    assert_eq!(reg.gauge("serve_waiting", &[]).get(), 0.0);
+    let occ = reg.histogram("serve_batch_occupancy", &[]).snapshot();
+    assert!(occ.count() > 0, "occupancy recorded for non-idle iterations");
+}
+
+/// Cancellation mid-generation: dropping the stream receiver is the
+/// disconnect signal; the next iteration must terminate the sequence,
+/// count it under `serve_aborted_total{reason="disconnect"}`, and
+/// return every KV block it held.
+#[test]
+fn cancellation_mid_generation_frees_all_kv_blocks() {
+    let reg = Registry::new();
+    let cfg = ServeCfg { max_new_tokens: 16, ..Default::default() };
+    let t0 = base_now();
+    let mut serve = serve_loop(cfg, 512, Some(&reg));
+    let baseline = serve.cache().num_free();
+
+    let dropped = serve.submit(req_at(1, 96, Variant::Distr, t0)).unwrap();
+    let kept = serve.submit(req_at(2, 96, Variant::Distr, t0)).unwrap();
+    serve.step(t0);
+    serve.step(t0 + Duration::from_millis(1));
+    assert!(serve.cache().num_free() < baseline, "both sequences hold KV blocks");
+
+    drop(dropped);
+    let r = serve.step(t0 + Duration::from_millis(2));
+    assert_eq!(r.aborted, 1, "the dropped stream cancels: {r:?}");
+    assert_eq!(r.decoded, 1, "the surviving sequence still advances");
+    assert_eq!(reg.counter("serve_aborted_total", &[("reason", "disconnect")]).get(), 1);
+
+    let mut tick = 3u64;
+    while !serve.is_idle() {
+        serve.step(t0 + Duration::from_millis(tick));
+        // keep the survivor's bounded stream drained so it never pauses
+        let mut sink = Vec::new();
+        drain_stream(&kept, &mut sink);
+        tick += 1;
+        assert!(tick < 64);
+    }
+    assert_eq!(serve.cache().num_free(), baseline, "cancelled blocks return to the pool");
+    assert_eq!(serve.stats().completed, 1);
+    assert_eq!(serve.stats().aborted, 1);
+}
+
+/// Fairness half 1: a flood of fresh prefill arrivals cannot starve
+/// in-flight decodes. Structurally: every iteration, every sequence
+/// that was in flight going in produces exactly one token (none are
+/// paused — streams are drained each tick), and injected prompt
+/// tokens never exceed the per-iteration prefill budget.
+#[test]
+fn prefill_flood_cannot_starve_inflight_decodes() {
+    let cfg = ServeCfg {
+        max_batch_prefill_tokens: 200, // two 96-token prompts per iteration
+        max_new_tokens: 6,
+        waiting_served_ratio: 0.0, // injection allowed every iteration: worst case for decodes
+        ..Default::default()
+    };
+    let t0 = base_now();
+    let mut serve = serve_loop(cfg, 1024, None);
+
+    let mut streams: Vec<TokenStream> = Vec::new();
+    let mut next_id = 1u64;
+    let mut prev_inflight = 0usize;
+    for tick in 0..24u64 {
+        // two fresh short arrivals every iteration, forever
+        for _ in 0..2 {
+            let now = t0 + Duration::from_millis(tick);
+            streams.push(serve.submit(req_at(next_id, 96, Variant::Distr, now)).unwrap());
+            next_id += 1;
+        }
+        let r = serve.step(t0 + Duration::from_millis(tick));
+        assert!(
+            r.decoded >= prev_inflight,
+            "iteration {tick}: only {} tokens for {} in-flight sequences — \
+             prefill injection starved the decode batch ({r:?})",
+            r.decoded,
+            prev_inflight
+        );
+        assert!(
+            r.injected * 96 <= 200,
+            "iteration {tick}: injected {} prefills x 96 tokens breaks the 200-token budget",
+            r.injected
+        );
+        assert_eq!(r.backpressured, 0, "streams are drained; nothing should pause");
+        prev_inflight = r.inflight;
+        for rx in &streams {
+            let mut sink = Vec::new();
+            drain_stream(rx, &mut sink);
+        }
+    }
+    // under the token budget the loop still makes continuous progress
+    assert!(serve.stats().completed >= 10, "flood must not stall completions");
+}
+
+/// Fairness half 2: a long-queued prefill cannot starve behind a
+/// stream of short ones. The long request opens the oldest bucket, and
+/// budgeted injection always serves the oldest bucket first — even
+/// though the short bucket refills every iteration and the long prompt
+/// alone overflows the per-iteration budget.
+#[test]
+fn long_queued_prefill_is_served_before_fresh_short_ones() {
+    let cfg = ServeCfg {
+        max_batch_prefill_tokens: 100, // below the long prompt: take-at-least-one applies
+        max_new_tokens: 3,
+        waiting_served_ratio: 0.0,
+        ..Default::default()
+    };
+    let t0 = base_now();
+    let mut serve = serve_loop(cfg, 1024, None);
+
+    // the long request arrives first...
+    let long_rx = serve.submit(req_at(1, 200, Variant::Distr, t0)).unwrap();
+    // ...followed by a burst of short ones in a different shape bucket
+    let mut short_rxs = Vec::new();
+    for id in 2..8u64 {
+        short_rxs.push(serve.submit(req_at(id, 96, Variant::Distr, t0)).unwrap());
+    }
+
+    let r = serve.step(t0);
+    assert_eq!(r.injected, 1, "oldest bucket first: exactly the long request injects: {r:?}");
+    let model = HashModel::new(D);
+    assert_eq!(
+        long_rx.try_recv(),
+        RecvResult::Token(model.token_of(1, 0)),
+        "the long-queued request gets the first token of the whole run"
+    );
+
+    // shorts keep arriving while the long one decodes; it still finishes
+    let mut next_id = 100u64;
+    let mut tick = 1u64;
+    let mut long_tokens = vec![model.token_of(1, 0)];
+    let mut long_done = false;
+    while !long_done {
+        let now = t0 + Duration::from_millis(tick);
+        short_rxs.push(serve.submit(req_at(next_id, 96, Variant::Distr, now)).unwrap());
+        next_id += 1;
+        serve.step(now);
+        if let Some(term) = drain_stream(&long_rx, &mut long_tokens) {
+            assert_eq!(term, RecvResult::Finished);
+            long_done = true;
+        }
+        tick += 1;
+        assert!(tick < 16, "the long request must finish despite the short flood");
+    }
+    let want: Vec<i32> = (0..3).map(|s| model.token_of(1, s)).collect();
+    assert_eq!(long_tokens, want);
+}
+
+/// Deadline sheds surface on the stream: a request whose budget blew
+/// while queued aborts with reason `deadline` instead of silently
+/// vanishing, and its admission slot comes back.
+#[test]
+fn blown_deadline_aborts_the_stream_with_a_reason() {
+    let reg = Registry::new();
+    let cfg = ServeCfg { max_new_tokens: 2, ..Default::default() };
+    let t0 = base_now();
+    let mut router: Router<Engine> = Router::new().with_autotuner(fixed_tuner());
+    router.add_route(Variant::Distr, 128, Engine::new(Variant::Distr).causal(true));
+    let scheduler = Scheduler::new(Duration::from_secs(60)).with_admission(AdmissionCfg {
+        enable: true,
+        max_queue_depth: 64,
+        max_inflight: 64,
+        deadline_ms: 10,
+    });
+    let cache = KvCache::new(64, 16, D);
+    let mut serve = ContinuousLoop::new(cfg, HashModel::new(D), router, scheduler, cache)
+        .with_obs(&reg);
+
+    let stale = serve.submit(req_at(1, 96, Variant::Distr, t0)).unwrap();
+    let fresh_arrival = t0 + Duration::from_millis(20);
+    let fresh = serve.submit(req_at(2, 96, Variant::Distr, fresh_arrival)).unwrap();
+
+    // at t0+25ms request 1 blew its 10ms budget; request 2 is fine
+    let r = serve.step(t0 + Duration::from_millis(25));
+    assert_eq!(r.shed, 1, "{r:?}");
+    assert_eq!(r.injected, 1);
+    assert_eq!(stale.try_recv(), RecvResult::Aborted("deadline"));
+    assert!(matches!(fresh.try_recv(), RecvResult::Token(_)));
+    assert_eq!(reg.counter("serve_aborted_total", &[("reason", "deadline")]).get(), 1);
+    assert_eq!(reg.counter("shed_total", &[("reason", "deadline")]).get(), 1);
+
+    let mut tick = 26u64;
+    while !serve.is_idle() {
+        serve.step(t0 + Duration::from_millis(tick));
+        tick += 1;
+        assert!(tick < 64);
+    }
+    // every admission slot came back despite the mixed endings
+    assert_eq!(serve.scheduler().gate().unwrap().in_flight(), 0);
+    assert_eq!(serve.cache().num_free(), serve.cache().num_blocks());
+}

@@ -68,7 +68,8 @@ const WALLCLOCK_WHITELIST: &[&str] = &[
 const WALLCLOCK_PREFIX_WHITELIST: &[&str] = &["rust/src/experiments/"];
 
 /// Serve-path modules where a panic kills a request-serving thread.
-const SERVE_PANIC_PREFIXES: &[&str] = &["rust/src/coordinator/", "rust/src/obs/"];
+const SERVE_PANIC_PREFIXES: &[&str] =
+    &["rust/src/coordinator/", "rust/src/obs/", "rust/src/serve/"];
 
 /// Files that must keep at least one `// hot-loop:` fence.
 const HOT_LOOP_FILES: &[&str] =
