@@ -1,0 +1,190 @@
+//! Decode step-cost bench: scalar-gather vs block-wise batched decode
+//! over the paged KV cache, at {1, 8, 64} concurrent sequences ×
+//! {contiguous, fragmented} cache layouts.
+//!
+//! - **gather**: the reference path — each member copies its entire
+//!   cached K/V out of the pool (`KvCache::gather` via
+//!   `attend_cached`) every generated token, one member at a time.
+//! - **blockwise**: the serve path — `decode_batch` stages every
+//!   member's q row into one packed GEMM panel and sweeps borrowed
+//!   block views in place with a streaming online softmax (zero
+//!   gather copy).
+//!
+//! The fragmented layout registers every sequence at one token and
+//! then appends round-robin, interleaving block ownership across the
+//! pool — the case a gather copy pays for and a block-wise sweep does
+//! not. Both modes replay identical pre-generated rows on identically
+//! laid-out pools, and their outputs must match bit-for-bit (the two
+//! paths share one chunk kernel at the same block boundaries).
+//! Writes `BENCH_decode.json` at the repo root (schema-fenced).
+
+use std::time::Instant;
+
+use distr_attention::coordinator::{
+    attend_cached, decode_batch, DecodeBenchReport, DecodeInput, KvCache,
+};
+use distr_attention::util::rng::Rng;
+
+const D: usize = 64;
+const BT: usize = 16;
+
+/// `n` K/V-dimension rows of seeded noise, flat row-major.
+fn randn_rows(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n * D).map(|_| rng.gen_f32()).collect()
+}
+
+/// Per-sequence prompt K/V plus per-(step, seq) decode rows, generated
+/// once so every mode and layout replays identical data.
+struct Workload {
+    prompt_k: Vec<Vec<f32>>,
+    prompt_v: Vec<Vec<f32>>,
+    /// `[step][seq]` → (q, k, v) rows
+    steps: Vec<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+}
+
+fn workload(seqs: usize, prompt: usize, steps: usize) -> Workload {
+    let prompt_k =
+        (0..seqs).map(|s| randn_rows(prompt, 0x1000 + s as u64)).collect();
+    let prompt_v =
+        (0..seqs).map(|s| randn_rows(prompt, 0x2000 + s as u64)).collect();
+    let steps = (0..steps)
+        .map(|t| {
+            (0..seqs)
+                .map(|s| {
+                    let salt = (t * seqs + s) as u64;
+                    (
+                        randn_rows(1, 0x3000 + salt),
+                        randn_rows(1, 0x4000 + salt),
+                        randn_rows(1, 0x5000 + salt),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    Workload { prompt_k, prompt_v, steps }
+}
+
+/// Build the pool with every sequence prefilled to `prompt` tokens.
+/// Contiguous: whole prompts register at once, so each sequence owns a
+/// consecutive run of block ids. Fragmented: one-token registers then
+/// round-robin appends interleave block ownership across sequences.
+fn build_cache(w: &Workload, seqs: usize, prompt: usize, steps: usize, fragmented: bool) -> KvCache {
+    let blocks = seqs * ((prompt + steps).div_ceil(BT) + 2);
+    let mut cache = KvCache::new(blocks, BT, D);
+    if fragmented {
+        for s in 0..seqs {
+            cache
+                .register(s as u64, &w.prompt_k[s][..D], &w.prompt_v[s][..D])
+                .expect("pool is sized for the workload");
+        }
+        for t in 1..prompt {
+            for s in 0..seqs {
+                cache
+                    .append(s as u64, &w.prompt_k[s][t * D..(t + 1) * D], &w.prompt_v[s][t * D..(t + 1) * D])
+                    .expect("pool is sized for the workload");
+            }
+        }
+    } else {
+        for s in 0..seqs {
+            cache
+                .register(s as u64, &w.prompt_k[s], &w.prompt_v[s])
+                .expect("pool is sized for the workload");
+        }
+    }
+    cache
+}
+
+/// Replay the decode steps in one mode; returns per-step wall time and
+/// the concatenated outputs in (step, seq) order for the bit-exactness
+/// check.
+fn run_mode(
+    w: &Workload,
+    seqs: usize,
+    prompt: usize,
+    steps: usize,
+    fragmented: bool,
+    blockwise: bool,
+) -> (Vec<u64>, Vec<f32>) {
+    let mut cache = build_cache(w, seqs, prompt, steps, fragmented);
+    let mut step_ns = Vec::with_capacity(steps);
+    let mut outputs = Vec::with_capacity(steps * seqs * D);
+    for row in &w.steps {
+        let t0 = Instant::now();
+        if blockwise {
+            let inputs: Vec<DecodeInput<'_>> = row
+                .iter()
+                .enumerate()
+                .map(|(s, (q, k, v))| DecodeInput {
+                    seq: s as u64,
+                    q_row: q,
+                    k_row: k,
+                    v_row: v,
+                })
+                .collect();
+            let outs = decode_batch(&mut cache, &inputs);
+            step_ns.push(t0.elapsed().as_nanos() as u64);
+            for out in outs {
+                outputs.extend(out.expect("pool is sized for the workload"));
+            }
+        } else {
+            let mut outs = Vec::with_capacity(seqs);
+            for (s, (q, k, v)) in row.iter().enumerate() {
+                cache.append(s as u64, k, v).expect("pool is sized for the workload");
+                outs.push(attend_cached(&cache, s as u64, q).expect("registered sequence attends"));
+            }
+            step_ns.push(t0.elapsed().as_nanos() as u64);
+            for out in outs {
+                outputs.extend(out);
+            }
+        }
+    }
+    (step_ns, outputs)
+}
+
+fn p50(ns: &[u64]) -> f64 {
+    let mut sorted = ns.to_vec();
+    sorted.sort_unstable();
+    sorted[sorted.len() / 2] as f64
+}
+
+fn mean(ns: &[u64]) -> f64 {
+    ns.iter().sum::<u64>() as f64 / ns.len() as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let (prompt, steps) = if quick { (48, 8) } else { (192, 24) };
+    println!("decode_bench: d {D}, block_tokens {BT}, prompt {prompt}, {steps} decode steps\n");
+
+    let mut report = DecodeBenchReport::new();
+    for seqs in [1usize, 8, 64] {
+        let w = workload(seqs, prompt, steps);
+        for fragmented in [false, true] {
+            let layout = if fragmented { "fragmented" } else { "contiguous" };
+            let (gather_ns, gather_out) = run_mode(&w, seqs, prompt, steps, fragmented, false);
+            let (block_ns, block_out) = run_mode(&w, seqs, prompt, steps, fragmented, true);
+            let bit_exact = gather_out == block_out;
+            assert!(
+                bit_exact,
+                "{seqs} seqs / {layout}: block-wise outputs diverged from the gather reference"
+            );
+            for (mode, ns) in [("gather", &gather_ns), ("blockwise", &block_ns)] {
+                report.record(seqs, layout, mode, prompt, steps, p50(ns), mean(ns), bit_exact);
+            }
+            println!(
+                "{seqs:>3} seqs {layout:<11} gather p50 {:>10.0}ns  blockwise p50 {:>10.0}ns  \
+                 ({:.2}x)",
+                p50(&gather_ns),
+                p50(&block_ns),
+                p50(&gather_ns) / p50(&block_ns).max(1.0),
+            );
+        }
+    }
+    assert!(!report.is_empty(), "every cell served traffic, the report cannot be empty");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    report.write(std::path::Path::new(path)).expect("write BENCH_decode.json");
+    println!("\nwrote {path}");
+}

@@ -5,50 +5,242 @@
 //! paper, whose contribution targets the quadratic prefill) the decode
 //! path runs exact row attention against the cached K/V. The cache is
 //! the [`KvCache`] block allocator; this module is the compute half.
+//!
+//! Two paths share one chunk kernel ([`attend_chunk`]):
+//!
+//! * **Block-wise in place** ([`attend_blockwise`], [`decode_batch`]) —
+//!   the serve path. KV blocks are borrowed straight out of cache
+//!   storage via [`KvCache::block_views`] (zero gather copy) and
+//!   consumed with a streaming online softmax: per block, S = q·Kᵀ
+//!   through [`gemm_bt_tile`], rescale-by-`exp(m_old − m_new)`, then
+//!   O += P·V through [`gemm_accum_tile`]. A batch stages every
+//!   member's q row into one shared packed panel so the per-block
+//!   register tiles serve up to [`MR`] sequences at once.
+//! * **Gather reference** ([`attend_cached`]) — copies the sequence's
+//!   K/V out of the cache ([`KvCache::gather`], counted by
+//!   `kv_gather_total`) and runs the *same* chunk kernel at the same
+//!   block-sized boundaries. Kept for tests, shadow probes, and as the
+//!   bench baseline; because both paths execute identical operations
+//!   in identical order, their outputs are bit-exact — the tile
+//!   kernel's row accumulators are independent, so a member's scores
+//!   do not depend on which panel row it occupies or who its
+//!   batchmates are.
 
-use anyhow::Context;
+use std::path::Path;
 
+use anyhow::{anyhow, Context};
+
+use crate::obs::registry::{Counter, Registry};
 use crate::obs::trace;
-use crate::tensor::dot;
+use crate::tensor::microkernel::{
+    gemm_accum_tile, gemm_bt_tile, pack_cols, pack_rows, with_scratch, TileScratch, MR,
+};
+use crate::util::json::Value;
 
 use super::kv_cache::{KvCache, SeqId};
 
-/// One decode step's attention: `q_row` against the sequence's cached
-/// K/V rows. Returns the attended output row (length d).
+/// Streaming online-softmax state for one query row: the running max
+/// and the running denominator, carried across KV chunks.
+struct RowState {
+    m: f32,
+    denom: f32,
+}
+
+impl RowState {
+    fn start() -> Self {
+        Self { m: f32::NEG_INFINITY, denom: 0.0 }
+    }
+}
+
+/// Finish a row: the accumulated numerator divides by the softmax
+/// denominator exactly once, after the last chunk.
+fn finish_row(state: &RowState, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o /= state.denom;
+    }
+}
+
+/// What a block sweep touched — fed into the `decode_*` counters.
+#[derive(Default)]
+struct SweepStats {
+    blocks: u64,
+    tokens: u64,
+}
+
+/// One KV chunk of one query row's attention: S = q·Kᵀ via the tile
+/// GEMM, online-softmax rescale, O += P·V via the tile GEMM. `panel`
+/// is one packed MR-row q panel and `row` this member's row within it;
+/// `k`/`v` are the chunk's contiguous K and V rows (`tokens × d`).
+/// Both decode paths funnel through here with identical chunk
+/// boundaries, which is what makes them bit-exact.
+#[allow(clippy::too_many_arguments)]
+fn attend_chunk(
+    panel: &[f32],
+    row: usize,
+    bt: usize,
+    k: &[f32],
+    v: &[f32],
+    tokens: usize,
+    d: usize,
+    scale: f32,
+    b_pack: &mut Vec<f32>,
+    c_pack: &mut Vec<f32>,
+    p_pack: &mut Vec<f32>,
+    s_tile: &mut [f32],
+    state: &mut RowState,
+    out: &mut [f32],
+) {
+    // hot-loop:begin decode_chunk — the per-KV-block decode body runs
+    // once per resident block per member per generated token; it must
+    // stay allocation-free (the pack buffers grow once and are reused
+    // via the thread-local scratch).
+    {
+        let _s = trace::span("decode", "pack");
+        pack_rows(k, tokens, d, d, b_pack);
+    }
+    {
+        let _s = trace::span("decode", "qk_gemm");
+        gemm_bt_tile(panel, b_pack, MR, tokens, d, scale, s_tile, bt);
+    }
+    let srow = &mut s_tile[row * bt..row * bt + tokens];
+    {
+        let _s = trace::span("decode", "online_softmax");
+        let mut chunk_max = f32::NEG_INFINITY;
+        for &s in srow.iter() {
+            chunk_max = chunk_max.max(s);
+        }
+        let new_m = state.m.max(chunk_max);
+        let alpha = (state.m - new_m).exp();
+        if alpha != 1.0 {
+            state.denom *= alpha;
+            for o in out.iter_mut() {
+                *o *= alpha;
+            }
+        }
+        for s in srow.iter_mut() {
+            let p = (*s - new_m).exp();
+            state.denom += p;
+            *s = p;
+        }
+        state.m = new_m;
+    }
+    {
+        let _s = trace::span("decode", "pv_accum");
+        pack_rows(srow, 1, tokens, tokens, p_pack);
+        pack_cols(v, tokens, d, d, c_pack);
+        gemm_accum_tile(p_pack, c_pack, 1, d, tokens, out, d);
+    }
+    // hot-loop:end decode_chunk
+}
+
+/// Sweep one sequence's resident KV blocks in place — borrowed views
+/// straight into cache storage, no gather copy — accumulating the
+/// attended output for the q row at `panel`/`row`.
+#[allow(clippy::too_many_arguments)]
+fn attend_views(
+    cache: &KvCache,
+    seq: SeqId,
+    panel: &[f32],
+    row: usize,
+    d: usize,
+    scale: f32,
+    b_pack: &mut Vec<f32>,
+    c_pack: &mut Vec<f32>,
+    p_pack: &mut Vec<f32>,
+    s_tile: &mut [f32],
+    out: &mut [f32],
+) -> anyhow::Result<SweepStats> {
+    let bt = cache.block_tokens();
+    let mut state = RowState::start();
+    let mut stats = SweepStats::default();
+    // hot-loop:begin decode_block_sweep — the zero-copy K-block loop:
+    // each iteration lends the block's K/V planes out of storage and
+    // folds them into the running softmax; nothing here may allocate.
+    for view in cache.block_views(seq)? {
+        attend_chunk(
+            panel, row, bt, view.k, view.v, view.tokens, d, scale, b_pack, c_pack, p_pack,
+            s_tile, &mut state, out,
+        );
+        stats.blocks += 1;
+        stats.tokens += view.tokens as u64;
+    }
+    // hot-loop:end decode_block_sweep
+    anyhow::ensure!(stats.tokens > 0, "empty cache for sequence {seq}");
+    finish_row(&state, out);
+    Ok(stats)
+}
+
+/// One decode step's attention, block-wise in place over the sequence's
+/// resident KV blocks (zero gather copy). Returns the attended output
+/// row (length d). Bit-exact with [`attend_cached`].
+pub fn attend_blockwise(cache: &KvCache, seq: SeqId, q_row: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let d = q_row.len();
+    anyhow::ensure!(d == cache.dim(), "query dim {d} != cache dim {}", cache.dim());
+    let bt = cache.block_tokens();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    with_scratch(|ws| {
+        let TileScratch { a_pack, b_pack, c_pack, p_pack, s_tile, .. } = ws;
+        {
+            let _s = trace::span("decode", "pack");
+            pack_rows(q_row, 1, d, d, a_pack);
+        }
+        s_tile.resize(MR * bt, 0.0);
+        attend_views(cache, seq, a_pack, 0, d, scale, b_pack, c_pack, p_pack, s_tile, &mut out)
+    })?;
+    Ok(out)
+}
+
+/// One decode step's attention via a gather copy of the cached K/V —
+/// the reference path. Chunked at the same block-sized boundaries
+/// through the same kernel as [`attend_blockwise`], so the two are
+/// bit-exact; each call bumps the `kv_gather_total` counter, which the
+/// serve-path regression test holds flat.
 pub fn attend_cached(cache: &KvCache, seq: SeqId, q_row: &[f32]) -> anyhow::Result<Vec<f32>> {
     let (k, v) = cache.gather(seq).context("gathering cached K/V")?;
     let d = q_row.len();
     anyhow::ensure!(k.len() % d == 0, "cache dim mismatch: {} % {d}", k.len());
     let tokens = k.len() / d;
     anyhow::ensure!(tokens > 0, "empty cache for sequence {seq}");
+    let bt = cache.block_tokens();
     let scale = 1.0 / (d as f32).sqrt();
-
-    // scores + online softmax over the cached rows
-    let mut m = f32::NEG_INFINITY;
-    let mut scores = Vec::with_capacity(tokens);
-    for t in 0..tokens {
-        let s = dot(q_row, &k[t * d..(t + 1) * d]) * scale;
-        m = m.max(s);
-        scores.push(s);
-    }
     let mut out = vec![0.0f32; d];
-    let mut denom = 0.0f32;
-    for (t, s) in scores.iter().enumerate() {
-        let p = (s - m).exp();
-        denom += p;
-        let vrow = &v[t * d..(t + 1) * d];
-        for (o, &vv) in out.iter_mut().zip(vrow) {
-            *o += p * vv;
+    with_scratch(|ws| {
+        let TileScratch { a_pack, b_pack, c_pack, p_pack, s_tile, .. } = ws;
+        {
+            let _s = trace::span("decode", "pack");
+            pack_rows(q_row, 1, d, d, a_pack);
         }
-    }
-    for o in &mut out {
-        *o /= denom;
-    }
+        s_tile.resize(MR * bt, 0.0);
+        let mut state = RowState::start();
+        let mut t0 = 0usize;
+        while t0 < tokens {
+            let t1 = (t0 + bt).min(tokens);
+            attend_chunk(
+                a_pack,
+                0,
+                bt,
+                &k[t0 * d..t1 * d],
+                &v[t0 * d..t1 * d],
+                t1 - t0,
+                d,
+                scale,
+                b_pack,
+                c_pack,
+                p_pack,
+                s_tile,
+                &mut state,
+                &mut out,
+            );
+            t0 = t1;
+        }
+        finish_row(&state, &mut out);
+    });
     Ok(out)
 }
 
-/// A full decode step: attend over the cache, then append this step's
-/// K/V row (the serving loop's per-token cycle).
+/// A full decode step: append this step's K/V row, then attend over
+/// the cache block-wise (the serving loop's per-token cycle).
 pub fn decode_step(
     cache: &mut KvCache,
     seq: SeqId,
@@ -58,7 +250,7 @@ pub fn decode_step(
 ) -> anyhow::Result<Vec<f32>> {
     let _s = trace::span("coordinator", "decode_step");
     cache.append(seq, k_row, v_row).context("appending decode K/V")?;
-    attend_cached(cache, seq, q_row)
+    attend_blockwise(cache, seq, q_row)
 }
 
 /// One sequence's contribution to an iteration-level decode batch.
@@ -71,21 +263,269 @@ pub struct DecodeInput<'a> {
     pub v_row: &'a [f32],
 }
 
+/// Partition of an iteration batch: members whose q rows match the
+/// cache's head dimension share one packed GEMM panel; anyone else
+/// degrades to the solo gather path so an odd member can't poison the
+/// shared batch.
+pub struct DecodeBatchPlan {
+    batched: Vec<usize>,
+    solo: Vec<usize>,
+    d: usize,
+}
+
+impl DecodeBatchPlan {
+    pub fn build(cache: &KvCache, inputs: &[DecodeInput<'_>]) -> Self {
+        let d = cache.dim();
+        let mut batched = Vec::with_capacity(inputs.len());
+        let mut solo = Vec::new();
+        for (i, inp) in inputs.iter().enumerate() {
+            if inp.q_row.len() == d {
+                batched.push(i);
+            } else {
+                solo.push(i);
+            }
+        }
+        Self { batched, solo, d }
+    }
+
+    /// Input indices sharing the packed q panel, in input order.
+    pub fn batched(&self) -> &[usize] {
+        &self.batched
+    }
+
+    /// Input indices routed to the solo gather path, in input order.
+    pub fn solo(&self) -> &[usize] {
+        &self.solo
+    }
+
+    /// The shared head dimension the batched panel is packed at.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+/// Metric handles for the decode path (`decode_*` in the catalog).
+pub struct DecodeObs {
+    pub batched_total: Counter,
+    pub solo_total: Counter,
+    pub blocks_total: Counter,
+    pub tokens_attended_total: Counter,
+}
+
+impl DecodeObs {
+    pub fn new(reg: &Registry) -> Self {
+        Self {
+            batched_total: reg.counter("decode_batched_total", &[]),
+            solo_total: reg.counter("decode_solo_total", &[]),
+            blocks_total: reg.counter("decode_blocks_total", &[]),
+            tokens_attended_total: reg.counter("decode_tokens_attended_total", &[]),
+        }
+    }
+}
+
 /// Run one decode step for every member of an iteration batch whose
 /// membership may differ from the previous iteration's (continuous
-/// batching). Failures are isolated per sequence: one member hitting
-/// KV exhaustion must not poison its batchmates, so the result is a
-/// per-member `Result` in input order rather than a single short-
-/// circuiting one.
+/// batching). All members' q rows are staged and packed once; the
+/// per-block tile GEMMs then serve up to [`MR`] members per panel.
+/// Failures are isolated per sequence: one member hitting KV
+/// exhaustion must not poison its batchmates, so the result is a
+/// per-member `Result` in input order rather than a single
+/// short-circuiting one; a member the block-wise path cannot serve
+/// retries on the solo gather path before giving up.
+pub fn decode_batch_obs(
+    cache: &mut KvCache,
+    inputs: &[DecodeInput<'_>],
+    obs: Option<&DecodeObs>,
+) -> Vec<anyhow::Result<Vec<f32>>> {
+    let _s = trace::span("coordinator", "decode_batch");
+    let plan = DecodeBatchPlan::build(cache, inputs);
+    let d = plan.dim();
+    let bt = cache.block_tokens();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut results: Vec<Option<anyhow::Result<Vec<f32>>>> =
+        inputs.iter().map(|_| None).collect();
+
+    // Append phase: every batched member's step K/V row lands before
+    // any attention runs, preserving the sequential path's pool
+    // allocation order (members' sequences are disjoint, so attention
+    // results are unaffected by the regrouping).
+    for &i in plan.batched() {
+        if let Err(e) = cache.append(inputs[i].seq, inputs[i].k_row, inputs[i].v_row) {
+            results[i] = Some(Err(e.context("appending decode K/V")));
+        }
+    }
+
+    let mut stats = SweepStats::default();
+    let mut batched_n = 0u64;
+    let mut retry_n = 0u64;
+    let mut retry: Vec<usize> = Vec::new();
+    let cache_ro: &KvCache = cache;
+    with_scratch(|ws| {
+        let TileScratch { a_pack, b_pack, c_pack, p_pack, s_tile, q_stage, .. } = ws;
+        // stage the surviving members' q rows contiguously so one
+        // pack_rows covers the whole batch
+        q_stage.clear();
+        let mut rows = 0usize;
+        for &i in plan.batched() {
+            if results[i].is_none() {
+                q_stage.extend_from_slice(inputs[i].q_row);
+                rows += 1;
+            }
+        }
+        if rows == 0 {
+            return;
+        }
+        {
+            let _s = trace::span("decode", "pack");
+            pack_rows(q_stage, rows, d, d, a_pack);
+        }
+        s_tile.resize(MR * bt, 0.0);
+        let mut b = 0usize;
+        for &i in plan.batched() {
+            if results[i].is_some() {
+                continue;
+            }
+            let panel = &a_pack[(b / MR) * MR * d..(b / MR + 1) * MR * d];
+            let row = b % MR;
+            b += 1;
+            let mut out = vec![0.0f32; d];
+            match attend_views(
+                cache_ro,
+                inputs[i].seq,
+                panel,
+                row,
+                d,
+                scale,
+                b_pack,
+                c_pack,
+                p_pack,
+                s_tile,
+                &mut out,
+            ) {
+                Ok(st) => {
+                    stats.blocks += st.blocks;
+                    stats.tokens += st.tokens;
+                    batched_n += 1;
+                    results[i] = Some(Ok(out));
+                }
+                // degrade outside the scratch closure (the solo path
+                // re-enters with_scratch)
+                Err(_) => retry.push(i),
+            }
+        }
+    });
+    for &i in &retry {
+        retry_n += 1;
+        results[i] = Some(attend_cached(cache, inputs[i].seq, inputs[i].q_row).with_context(
+            || format!("block-wise decode degraded to solo for sequence {}", inputs[i].seq),
+        ));
+    }
+
+    // Solo members: the full sequential step (append + gather attend),
+    // preserving the pre-batching error semantics for odd shapes.
+    let mut solo_n = retry_n;
+    for &i in plan.solo() {
+        solo_n += 1;
+        let r = cache
+            .append(inputs[i].seq, inputs[i].k_row, inputs[i].v_row)
+            .context("appending decode K/V")
+            .and_then(|()| attend_cached(cache, inputs[i].seq, inputs[i].q_row));
+        results[i] = Some(r);
+    }
+
+    if let Some(o) = obs {
+        o.batched_total.add(batched_n);
+        o.solo_total.add(solo_n);
+        o.blocks_total.add(stats.blocks);
+        o.tokens_attended_total.add(stats.tokens);
+    }
+
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| Err(anyhow!("decode member {i} was never planned"))))
+        .collect()
+}
+
+/// [`decode_batch_obs`] without metric handles — the bare batch seam
+/// the serve loop and benches share.
 pub fn decode_batch(
     cache: &mut KvCache,
     inputs: &[DecodeInput<'_>],
 ) -> Vec<anyhow::Result<Vec<f32>>> {
-    let _s = trace::span("coordinator", "decode_batch");
-    inputs
-        .iter()
-        .map(|i| decode_step(cache, i.seq, i.q_row, i.k_row, i.v_row))
-        .collect()
+    decode_batch_obs(cache, inputs, None)
+}
+
+/// Accumulates per-(seqs, layout, mode) decode step-cost records and
+/// writes the `BENCH_decode.json` trajectory artifact
+/// (`benches/decode_bench.rs` drives it).
+pub struct DecodeBenchReport {
+    results: Vec<Value>,
+}
+
+impl Default for DecodeBenchReport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeBenchReport {
+    pub fn new() -> Self {
+        Self { results: Vec::new() }
+    }
+
+    /// Record one (concurrency × cache layout × path) cell, e.g.
+    /// `(64, "fragmented", "blockwise")`. `bit_exact` reports whether
+    /// this mode's outputs matched the gather reference exactly.
+    // schema:begin decode-bench-report v1
+    // The emitted `schema` field below must track this fence's version;
+    // re-stamp with `cargo xtask analyze --update-stamps` after edits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        seqs: usize,
+        layout: &str,
+        mode: &str,
+        tokens_per_seq: usize,
+        steps: usize,
+        ns_per_step_p50: f64,
+        ns_per_step_mean: f64,
+        bit_exact: bool,
+    ) {
+        self.results.push(Value::object(vec![
+            ("seqs", Value::number(seqs as f64)),
+            ("layout", Value::string(layout)),
+            ("mode", Value::string(mode)),
+            ("tokens_per_seq", Value::number(tokens_per_seq as f64)),
+            ("steps", Value::number(steps as f64)),
+            ("ns_per_step_p50", Value::number(ns_per_step_p50)),
+            ("ns_per_step_mean", Value::number(ns_per_step_mean)),
+            ("bit_exact", Value::Bool(bit_exact)),
+        ]));
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("schema", Value::number(1.0)),
+            ("bench", Value::string("decode")),
+            ("results", Value::Array(self.results.clone())),
+        ])
+    }
+    // schema:end decode-bench-report
+
+    /// Recorded cells so far.
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// Write the report (pretty-printed) to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +568,55 @@ mod tests {
     }
 
     #[test]
+    fn blockwise_parity_at_block_boundaries() {
+        // exact-shape sensitivity: token counts straddling the block
+        // boundary (tokens % block_tokens ∈ {0, 1, bt-1}) vs the causal
+        // rows of standard attention
+        let d = 8;
+        let bt = 4;
+        for tokens in [bt, bt + 1, 2 * bt - 1, 2 * bt, 3 * bt + 1] {
+            let q = Matrix::randn(tokens, d, 10 + tokens as u64);
+            let k = Matrix::randn(tokens, d, 20 + tokens as u64);
+            let v = Matrix::randn(tokens, d, 30 + tokens as u64);
+            let full = standard_attention(&q, &k, &v, true);
+            let mut cache = KvCache::new(32, bt, d);
+            cache
+                .register(1, &k.data[..tokens * d], &v.data[..tokens * d])
+                .unwrap();
+            let out = attend_blockwise(&cache, 1, q.row(tokens - 1)).unwrap();
+            for c in 0..d {
+                assert!(
+                    (out[c] - full.at(tokens - 1, c)).abs() < 1e-4,
+                    "tokens={tokens} c={c}: {} vs {}",
+                    out[c],
+                    full.at(tokens - 1, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blockwise_matches_gather_path_bit_exact() {
+        // the acceptance bar: both paths run the same kernel at the
+        // same chunk boundaries, so outputs are bitwise identical —
+        // including at partial tail blocks
+        let d = 16;
+        let bt = 4;
+        for tokens in [1, 3, bt, bt + 1, 5 * bt - 1, 5 * bt] {
+            let k = Matrix::randn(tokens, d, 40 + tokens as u64);
+            let v = Matrix::randn(tokens, d, 50 + tokens as u64);
+            let q = Matrix::randn(1, d, 60 + tokens as u64);
+            let mut cache = KvCache::new(64, bt, d);
+            cache
+                .register(7, &k.data[..tokens * d], &v.data[..tokens * d])
+                .unwrap();
+            let gathered = attend_cached(&cache, 7, q.row(0)).unwrap();
+            let blockwise = attend_blockwise(&cache, 7, q.row(0)).unwrap();
+            assert_eq!(gathered, blockwise, "tokens={tokens}");
+        }
+    }
+
+    #[test]
     fn first_token_attends_to_itself() {
         let d = 4;
         let mut cache = KvCache::new(4, 2, d);
@@ -136,12 +625,15 @@ mod tests {
         cache.register(5, &k, &v).unwrap();
         let out = attend_cached(&cache, 5, &[1.0, 0.0, 0.0, 0.0]).unwrap();
         assert_eq!(out, v);
+        let out = attend_blockwise(&cache, 5, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(out, v);
     }
 
     #[test]
     fn unknown_sequence_is_error() {
         let cache = KvCache::new(4, 2, 4);
         assert!(attend_cached(&cache, 42, &[0.0; 4]).is_err());
+        assert!(attend_blockwise(&cache, 42, &[0.0; 4]).is_err());
     }
 
     #[test]
@@ -189,6 +681,43 @@ mod tests {
     }
 
     #[test]
+    fn batch_matches_sequential_at_mixed_lengths() {
+        // 10 members (two packed panels) at staggered lengths: a shared
+        // panel must not perturb any member's output vs its solo step
+        let d = 8;
+        let bt = 4;
+        let n = 10;
+        let mut batched = KvCache::new(256, bt, d);
+        let mut sequential = KvCache::new(256, bt, d);
+        for s in 0..n {
+            let tokens = 1 + (s * 3) % 11; // 1..=11, straddles blocks
+            let k = Matrix::randn(tokens, d, 100 + s as u64);
+            let v = Matrix::randn(tokens, d, 200 + s as u64);
+            for cache in [&mut batched, &mut sequential] {
+                cache.register(s as u64, &k.data, &v.data).unwrap();
+            }
+        }
+        let steps = Matrix::randn(3 * n, d, 300);
+        for step in 0..3 {
+            let rows: Vec<&[f32]> = (0..n).map(|s| steps.row(step * n + s)).collect();
+            let inputs: Vec<DecodeInput<'_>> = (0..n)
+                .map(|s| DecodeInput {
+                    seq: s as u64,
+                    q_row: rows[s],
+                    k_row: rows[s],
+                    v_row: rows[s],
+                })
+                .collect();
+            let outs = decode_batch(&mut batched, &inputs);
+            for (s, out) in outs.iter().enumerate() {
+                let solo =
+                    decode_step(&mut sequential, s as u64, rows[s], rows[s], rows[s]).unwrap();
+                assert_eq!(out.as_ref().unwrap(), &solo, "step={step} seq={s}");
+            }
+        }
+    }
+
+    #[test]
     fn forked_sequences_decode_independently() {
         let d = 4;
         let mut cache = KvCache::new(16, 2, d);
@@ -200,5 +729,90 @@ mod tests {
         let out1 = decode_step(&mut cache, 1, &q, &[1.0; 4], &[100.0; 4]).unwrap();
         let out2 = decode_step(&mut cache, 2, &q, &[1.0; 4], &[-100.0; 4]).unwrap();
         assert!(out1[0] > out2[0], "branches should diverge: {out1:?} vs {out2:?}");
+    }
+
+    #[test]
+    fn forked_decode_matches_unforked_replica() {
+        // post-divergence, a CoW child's block-wise decode must equal a
+        // standalone cache holding the same logical history bit-for-bit
+        let d = 8;
+        let bt = 2;
+        let prefix = Matrix::randn(4, d, 400);
+        let vfix = Matrix::randn(4, d, 401);
+        let mut forked = KvCache::new(64, bt, d);
+        forked.register(1, &prefix.data, &vfix.data).unwrap();
+        forked.fork(1, 2).unwrap();
+        let mut replica = KvCache::new(64, bt, d);
+        replica.register(2, &prefix.data, &vfix.data).unwrap();
+        let steps = Matrix::randn(6, d, 402);
+        for t in 0..3 {
+            let (q, kv) = (steps.row(2 * t), steps.row(2 * t + 1));
+            let a = decode_step(&mut forked, 2, q, kv, kv).unwrap();
+            let b = decode_step(&mut replica, 2, q, kv, kv).unwrap();
+            assert_eq!(a, b, "t={t}");
+        }
+    }
+
+    #[test]
+    fn plan_routes_odd_query_dims_to_solo() {
+        let d = 4;
+        let mut cache = KvCache::new(8, 2, d);
+        cache.register(1, &[0.5; 4], &[1.0; 4]).unwrap();
+        cache.register(2, &[0.2; 4], &[2.0; 4]).unwrap();
+        let q_ok = [1.0f32; 4];
+        let q_odd = [1.0f32; 6];
+        let k = [0.2f32; 4];
+        let v = [2.0f32; 4];
+        let inputs = [
+            DecodeInput { seq: 1, q_row: &q_ok, k_row: &k, v_row: &v },
+            DecodeInput { seq: 2, q_row: &q_odd, k_row: &k, v_row: &v },
+        ];
+        let plan = DecodeBatchPlan::build(&cache, &inputs);
+        assert_eq!(plan.batched(), &[0]);
+        assert_eq!(plan.solo(), &[1]);
+        assert_eq!(plan.dim(), d);
+        // the odd member fails alone (dim mismatch), batchmate serves
+        let outs = decode_batch(&mut cache, &inputs);
+        assert!(outs[0].is_ok());
+        assert!(outs[1].is_err());
+    }
+
+    #[test]
+    fn decode_obs_counts_batched_work() {
+        use crate::obs::registry::Registry;
+        let reg = Registry::new();
+        let obs = DecodeObs::new(&reg);
+        let d = 4;
+        let mut cache = KvCache::new(16, 2, d);
+        cache.register(1, &[0.1; 8], &[1.0; 8]).unwrap(); // 2 tokens
+        cache.register(2, &[0.9; 4], &[-1.0; 4]).unwrap(); // 1 token
+        let q = [0.3f32, -0.2, 0.5, 0.1];
+        let inputs = [
+            DecodeInput { seq: 1, q_row: &q, k_row: &q, v_row: &q },
+            DecodeInput { seq: 2, q_row: &q, k_row: &q, v_row: &q },
+        ];
+        let outs = decode_batch_obs(&mut cache, &inputs, Some(&obs));
+        assert!(outs.iter().all(|o| o.is_ok()));
+        assert_eq!(reg.counter("decode_batched_total", &[]).get(), 2);
+        assert_eq!(reg.counter("decode_solo_total", &[]).get(), 0);
+        // seq 1: 3 tokens over bt=2 → 2 blocks; seq 2: 2 tokens → 1 block
+        assert_eq!(reg.counter("decode_blocks_total", &[]).get(), 3);
+        assert_eq!(reg.counter("decode_tokens_attended_total", &[]).get(), 5);
+    }
+
+    #[test]
+    fn bench_report_shape_matches_convention() {
+        let mut r = DecodeBenchReport::new();
+        assert!(r.is_empty());
+        r.record(64, "fragmented", "blockwise", 128, 16, 1234.5, 1300.0, true);
+        assert_eq!(r.len(), 1);
+        let v = r.to_value();
+        assert_eq!(v.req_usize("schema").unwrap(), 1);
+        assert_eq!(v.req_str("bench").unwrap(), "decode");
+        let results = v.req_array("results").unwrap();
+        assert_eq!(results[0].req_str("layout").unwrap(), "fragmented");
+        assert_eq!(results[0].req_str("mode").unwrap(), "blockwise");
+        assert_eq!(results[0].req_usize("seqs").unwrap(), 64);
+        assert!(results[0].req("bit_exact").unwrap().as_bool().unwrap());
     }
 }

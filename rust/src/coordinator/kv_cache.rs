@@ -40,6 +40,7 @@ struct KvObs {
     seq_evictions_total: Counter,
     fork_shared_total: Counter,
     alloc_failures_total: Counter,
+    gather_total: Counter,
 }
 
 impl KvObs {
@@ -54,6 +55,7 @@ impl KvObs {
             seq_evictions_total: reg.counter("kv_evictions_total", &[]),
             fork_shared_total: reg.counter("kv_fork_shared_blocks_total", &[]),
             alloc_failures_total: reg.counter("kv_alloc_failures_total", &[]),
+            gather_total: reg.counter("kv_gather_total", &[]),
         }
     }
 }
@@ -61,7 +63,11 @@ impl KvObs {
 /// Block-granular KV cache pool.
 pub struct KvCache {
     block_tokens: usize,
-    /// K and V storage: `num_blocks × block_tokens × 2 × d` f32
+    /// K and V storage: `num_blocks × block_tokens × 2 × d` f32. Each
+    /// block is two contiguous planes — `block_tokens × d` of K rows,
+    /// then `block_tokens × d` of V rows — so a block's resident rows
+    /// can be lent out as two plain slices ([`KvCache::block_views`])
+    /// and packed straight into the tile GEMMs without a gather copy.
     storage: Vec<f32>,
     d: usize,
     free: Vec<BlockId>,
@@ -119,6 +125,11 @@ impl KvCache {
 
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Head dimension of the cached K/V rows.
+    pub fn dim(&self) -> usize {
+        self.d
     }
 
     /// Pop one free block at refcount 1; `None` when the pool is
@@ -315,19 +326,45 @@ impl KvCache {
         self.seqs.get(&seq)
     }
 
-    /// Gather a sequence's K and V as contiguous matrices (rows = tokens).
+    /// Gather a sequence's K and V as contiguous matrices (rows =
+    /// tokens). This *copies* the whole cached sequence and is kept for
+    /// tests and off-hot-path shadow probes; the serve decode path
+    /// iterates [`KvCache::block_views`] in place instead. Every call
+    /// bumps `kv_gather_total` so a regression test can hold the decode
+    /// path to zero copies.
     pub fn gather(&self, seq: SeqId) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let h = self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        if let Some(obs) = &self.obs {
+            obs.gather_total.inc();
+        }
         let mut k = Vec::with_capacity(h.tokens * self.d);
         let mut v = Vec::with_capacity(h.tokens * self.d);
-        for t in 0..h.tokens {
-            let block = h.blocks[t / self.block_tokens];
-            let slot = t % self.block_tokens;
-            let base = self.block_base(block) + slot * 2 * self.d;
-            k.extend_from_slice(&self.storage[base..base + self.d]);
-            v.extend_from_slice(&self.storage[base + self.d..base + 2 * self.d]);
+        let mut remaining = h.tokens;
+        for &b in &h.blocks {
+            if remaining == 0 {
+                break;
+            }
+            let tokens = remaining.min(self.block_tokens);
+            let base = self.block_base(b);
+            let vbase = base + self.block_tokens * self.d;
+            k.extend_from_slice(&self.storage[base..base + tokens * self.d]);
+            v.extend_from_slice(&self.storage[vbase..vbase + tokens * self.d]);
+            remaining -= tokens;
         }
         Ok((k, v))
+    }
+
+    /// Iterate a sequence's cached K/V block by block as borrowed
+    /// slices straight into `storage` — the zero-copy counterpart of
+    /// [`KvCache::gather`]. Each item lends the block's resident K and
+    /// V planes (`tokens × d` row-major each). The borrow on `&self`
+    /// makes the views fork/CoW-safe by construction: shared prefix
+    /// blocks (refcount > 1 after [`KvCache::fork`]) are read-only
+    /// while any view is live, and a forked child's views alias the
+    /// parent's storage for the shared blocks without copying.
+    pub fn block_views(&self, seq: SeqId) -> anyhow::Result<BlockViews<'_>> {
+        let h = self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        Ok(BlockViews { cache: self, handle: h, next: 0, remaining: h.tokens })
     }
 
     fn block_base(&self, id: BlockId) -> usize {
@@ -337,11 +374,50 @@ impl KvCache {
     fn write_block(&mut self, id: BlockId, start_slot: usize, k: &[f32], v: &[f32]) {
         let d = self.d;
         let base = self.block_base(id);
-        for (t, (krow, vrow)) in k.chunks(d).zip(v.chunks(d)).enumerate() {
-            let off = base + (start_slot + t) * 2 * d;
-            self.storage[off..off + d].copy_from_slice(krow);
-            self.storage[off + d..off + 2 * d].copy_from_slice(vrow);
+        let koff = base + start_slot * d;
+        self.storage[koff..koff + k.len()].copy_from_slice(k);
+        let voff = base + self.block_tokens * d + start_slot * d;
+        self.storage[voff..voff + v.len()].copy_from_slice(v);
+    }
+}
+
+/// One block's resident rows, borrowed from [`KvCache`] storage.
+pub struct BlockView<'a> {
+    /// K rows, `tokens × d` row-major, contiguous in storage.
+    pub k: &'a [f32],
+    /// V rows, `tokens × d` row-major, contiguous in storage.
+    pub v: &'a [f32],
+    /// Rows resident in this block (= `block_tokens` except the tail).
+    pub tokens: usize,
+}
+
+/// Iterator over a sequence's blocks; see [`KvCache::block_views`].
+pub struct BlockViews<'a> {
+    cache: &'a KvCache,
+    handle: &'a SeqHandle,
+    next: usize,
+    remaining: usize,
+}
+
+impl<'a> Iterator for BlockViews<'a> {
+    type Item = BlockView<'a>;
+
+    fn next(&mut self) -> Option<BlockView<'a>> {
+        if self.remaining == 0 {
+            return None;
         }
+        let id = *self.handle.blocks.get(self.next)?;
+        self.next += 1;
+        let tokens = self.remaining.min(self.cache.block_tokens);
+        self.remaining -= tokens;
+        let d = self.cache.d;
+        let base = self.cache.block_base(id);
+        let vbase = base + self.cache.block_tokens * d;
+        Some(BlockView {
+            k: &self.cache.storage[base..base + tokens * d],
+            v: &self.cache.storage[vbase..vbase + tokens * d],
+            tokens,
+        })
     }
 }
 
@@ -510,6 +586,65 @@ mod tests {
     fn append_to_unknown_seq_rejected() {
         let mut c = KvCache::new(4, 2, 2);
         assert!(c.append(9, &[0.0, 0.0], &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn block_views_match_gather_with_partial_tail() {
+        let mut c = KvCache::new(8, 4, 2);
+        // 6 tokens over block_tokens=4: one full block + a 2-row tail
+        let k = rows(6, 2, 0.0);
+        let v = rows(6, 2, 100.0);
+        c.register(1, &k, &v).unwrap();
+        let views: Vec<_> = c.block_views(1).unwrap().collect();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].tokens, 4);
+        assert_eq!(views[1].tokens, 2);
+        let mut vk = Vec::new();
+        let mut vv = Vec::new();
+        for view in c.block_views(1).unwrap() {
+            assert_eq!(view.k.len(), view.tokens * 2);
+            assert_eq!(view.v.len(), view.tokens * 2);
+            vk.extend_from_slice(view.k);
+            vv.extend_from_slice(view.v);
+        }
+        assert_eq!(vk, k, "views must reassemble exactly what gather copies");
+        assert_eq!(vv, v);
+        assert!(c.block_views(42).is_err(), "unknown sequence errors");
+    }
+
+    #[test]
+    fn block_views_alias_parent_storage_across_fork() {
+        let mut c = KvCache::new(8, 2, 2);
+        c.register(1, &rows(4, 2, 0.0), &rows(4, 2, 10.0)).unwrap(); // 2 full blocks
+        c.fork(1, 2).unwrap();
+        let parent: Vec<_> = c.block_views(1).unwrap().map(|b| b.k.as_ptr()).collect();
+        let child: Vec<_> = c.block_views(2).unwrap().map(|b| b.k.as_ptr()).collect();
+        assert_eq!(parent, child, "shared prefix views must alias, not copy");
+        // post-divergence: the child's append opens a fresh block the
+        // parent's views never see
+        c.append(2, &[7.0, 8.0], &[9.0, 10.0]).unwrap();
+        assert_eq!(c.block_views(1).unwrap().count(), 2);
+        let diverged: Vec<_> = c.block_views(2).unwrap().collect();
+        assert_eq!(diverged.len(), 3);
+        assert_eq!(diverged[2].k, &[7.0, 8.0]);
+        assert_eq!(diverged[2].v, &[9.0, 10.0]);
+    }
+
+    #[test]
+    fn gather_is_counted_and_block_views_are_not() {
+        let reg = Registry::new();
+        let mut c = KvCache::new(4, 2, 2).with_obs(&reg);
+        c.register(1, &rows(3, 2, 0.0), &rows(3, 2, 1.0)).unwrap();
+        assert_eq!(reg.counter("kv_gather_total", &[]).get(), 0);
+        for _ in c.block_views(1).unwrap() {}
+        assert_eq!(
+            reg.counter("kv_gather_total", &[]).get(),
+            0,
+            "block_views must not count as a gather copy"
+        );
+        c.gather(1).unwrap();
+        c.gather(1).unwrap();
+        assert_eq!(reg.counter("kv_gather_total", &[]).get(), 2);
     }
 
     #[test]

@@ -32,9 +32,12 @@ pub mod scheduler;
 pub use admission::AdmissionGate;
 pub use batcher::{Batcher, BatcherStats};
 pub use brownout::{Brownout, Pressure};
-pub use decode::{attend_cached, decode_batch, decode_step, DecodeInput};
+pub use decode::{
+    attend_blockwise, attend_cached, decode_batch, decode_batch_obs, decode_step,
+    DecodeBatchPlan, DecodeBenchReport, DecodeInput, DecodeObs,
+};
 pub use engine::{Engine, EngineHandle};
-pub use kv_cache::{BlockId, KvCache, SeqHandle};
+pub use kv_cache::{BlockId, BlockView, BlockViews, KvCache, SeqHandle};
 pub use multi_device::{
     plan_tuned, record_scatter_telemetry, run_scatter, run_scatter_round_robin,
     run_scatter_supervised, run_scatter_tuned, DeviceLane, LaneSupervisor, ScatterPlan,

@@ -13,7 +13,7 @@
 //!    bucket prefills *into the running batch*: one tuned engine at
 //!    the realized composition, first token streamed, TTFT stamped.
 //! 4. **Decode** — every in-flight sequence advances one token through
-//!    [`decode_batch`], with per-member fault isolation; full streams
+//!    [`decode_batch_obs`], with per-member fault isolation; full streams
 //!    pause (backpressure), dropped streams cancel and free their KV
 //!    blocks, finished streams close.
 //! 5. **Feed telemetry** — the iteration time divided by the tokens it
@@ -43,8 +43,8 @@ use crate::attention::Engine;
 use crate::autotune::TuneKey;
 use crate::config::ServeCfg;
 use crate::coordinator::{
-    decode_batch, Batcher, DecodeInput, KvCache, Pressure, Request, RequestId, Router, Scheduler,
-    ShedReason,
+    decode_batch_obs, Batcher, DecodeInput, DecodeObs, KvCache, Pressure, Request, RequestId,
+    Router, Scheduler, ShedReason,
 };
 use crate::metrics::LatencyHistogram;
 use crate::obs::registry::{Counter, Gauge, Histogram, Registry};
@@ -126,6 +126,7 @@ struct ServeObs {
     aborted_kv: Counter,
     aborted_deadline: Counter,
     aborted_error: Counter,
+    decode: DecodeObs,
     inflight: Gauge,
     waiting: Gauge,
     occupancy: Histogram,
@@ -145,6 +146,7 @@ impl ServeObs {
             aborted_kv: reg.counter("serve_aborted_total", &[("reason", "kv_pressure")]),
             aborted_deadline: reg.counter("serve_aborted_total", &[("reason", "deadline")]),
             aborted_error: reg.counter("serve_aborted_total", &[("reason", "error")]),
+            decode: DecodeObs::new(reg),
             inflight: reg.gauge("serve_inflight", &[]),
             waiting: reg.gauge("serve_waiting", &[]),
             occupancy: reg.histogram("serve_batch_occupancy", &[]),
@@ -585,7 +587,7 @@ impl<M: TokenModel> ContinuousLoop<M> {
                 v_row: v,
             })
             .collect();
-        let outs = decode_batch(&mut self.cache, &inputs);
+        let outs = decode_batch_obs(&mut self.cache, &inputs, self.obs.as_ref().map(|o| &o.decode));
 
         for ((idx, ..), out) in rows.iter().zip(outs) {
             let f = &mut self.inflight[*idx];

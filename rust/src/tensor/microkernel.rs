@@ -67,6 +67,8 @@ pub struct TileScratch {
     pub p_pack: Vec<f32>,
     /// the l×m score tile
     pub s_tile: Vec<f32>,
+    /// decode's staged batch q rows (B × d), packed once per iteration
+    pub q_stage: Vec<f32>,
     /// online-softmax running max per Q row
     pub m_i: Vec<f32>,
     /// online-softmax running sum per Q row

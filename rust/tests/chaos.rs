@@ -567,6 +567,32 @@ fn chaos_continuous_loop_conserves_streams_and_blocks() {
     fault::clear();
 }
 
+/// The block-wise *batched* decode path under seeded KV exhaustion:
+/// a member whose decode append loses its block mid-iteration must
+/// fail alone — its batchmates keep decoding through the shared GEMM
+/// panel — and the loop-level conservation ledger still holds (every
+/// stream terminates exactly once, KV blocks drain to zero, admission
+/// slots return; `run_continuous` asserts all three internally).
+#[test]
+fn chaos_batched_decode_kv_exhaust_conserves_streams_and_blocks() {
+    let _g = serial();
+    quiet_injected_panics();
+    let plan = FaultPlan::new(0xDEC0DE).with_site(Site::KvExhaust, 60_000, 1, 4);
+    assert!(fault::install(plan), "feature is on, install must arm");
+
+    let mut kv_fired = false;
+    for _round in 0..6u32 {
+        let run = run_continuous(16);
+        assert!(run.finished >= 1, "exhaustion must not wedge the batched decode loop");
+        kv_fired = fault::stats().family_fired(Family::Kv) > 0;
+        if kv_fired {
+            break;
+        }
+    }
+    assert!(kv_fired, "seeded KV exhaustion never fired against the batched decode path");
+    fault::clear();
+}
+
 #[test]
 fn chaos_continuous_control_run_is_clean_and_bit_identical() {
     let _g = serial();

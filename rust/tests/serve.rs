@@ -338,3 +338,46 @@ fn blown_deadline_aborts_the_stream_with_a_reason() {
     assert_eq!(serve.scheduler().gate().unwrap().in_flight(), 0);
     assert_eq!(serve.cache().num_free(), serve.cache().num_blocks());
 }
+
+/// The tentpole regression for zero-copy decode: a full serve run —
+/// prefill injection plus many decode iterations — must perform *zero*
+/// gather copies out of the paged KV cache. `KvCache::gather` bumps
+/// `kv_gather_total`; the block-wise batched path borrows block views
+/// instead, so the counter stays flat while the `decode_*` family
+/// proves the batched path actually ran.
+#[test]
+fn serve_decode_path_performs_zero_gather_copies() {
+    let reg = Registry::new();
+    let cfg = ServeCfg { max_new_tokens: 8, ..Default::default() };
+    let t0 = base_now();
+    let mut serve = serve_loop(cfg, 512, Some(&reg));
+
+    let mut streams = Vec::new();
+    for id in 1..=6u64 {
+        streams.push(serve.submit(req_at(id, 96, Variant::Distr, t0)).unwrap());
+    }
+    let mut tick = 0u64;
+    while !serve.is_idle() {
+        serve.step(t0 + Duration::from_millis(tick));
+        tick += 1;
+        assert!(tick < 256, "serve loop must converge");
+    }
+    for rx in &streams {
+        let mut got = Vec::new();
+        assert_eq!(drain_stream(rx, &mut got), Some(RecvResult::Finished));
+        assert_eq!(got.len(), 8);
+    }
+
+    // the batched block-wise path served every decode...
+    let batched = reg.counter("decode_batched_total", &[]).get();
+    assert!(batched >= 6 * 7, "decode_batched_total = {batched}");
+    assert_eq!(reg.counter("decode_solo_total", &[]).get(), 0);
+    assert!(reg.counter("decode_blocks_total", &[]).get() >= batched);
+    assert!(reg.counter("decode_tokens_attended_total", &[]).get() >= batched);
+    // ...and never once copied K/V out of the cache
+    assert_eq!(
+        reg.counter("kv_gather_total", &[]).get(),
+        0,
+        "serve decode path must not gather"
+    );
+}

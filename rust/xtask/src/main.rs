@@ -72,8 +72,11 @@ const SERVE_PANIC_PREFIXES: &[&str] =
     &["rust/src/coordinator/", "rust/src/obs/", "rust/src/serve/"];
 
 /// Files that must keep at least one `// hot-loop:` fence.
-const HOT_LOOP_FILES: &[&str] =
-    &["rust/src/attention/flash2.rs", "rust/src/attention/distr.rs"];
+const HOT_LOOP_FILES: &[&str] = &[
+    "rust/src/attention/flash2.rs",
+    "rust/src/attention/distr.rs",
+    "rust/src/coordinator/decode.rs",
+];
 
 /// Allocation idioms banned inside `// hot-loop:` fences.
 const HOT_LOOP_BANNED: &[&str] = &[
